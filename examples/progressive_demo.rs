@@ -1,0 +1,79 @@
+//! Progressive inference, step by step, on real models: the cloud LLM
+//! writes a sketch, three edge SLMs expand each sketch sentence in
+//! parallel, the ensemble picks the most confident expansion.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example progressive_demo
+//! ```
+
+use anyhow::Result;
+use pice::corpus::Corpus;
+use pice::ensemble::{confidence, Candidate, ConfidenceWeights};
+use pice::runtime::{Generator, LoadedModel, RuntimeHandle, SamplingParams};
+use pice::sketch::{split_sketch, Prompts};
+use pice::tokenizer::Tokenizer;
+
+fn main() -> Result<()> {
+    let art = pice::artifacts_dir();
+    let tok = Tokenizer::from_file(&art.join("vocab.json")).map_err(anyhow::Error::msg)?;
+    let corpus =
+        Corpus::from_file(&art.join("corpus.json"), &tok).map_err(anyhow::Error::msg)?;
+    let rt = RuntimeHandle::cpu()?;
+
+    let cloud = LoadedModel::load(rt.clone(), &art.join("models/llama70b-sim"))?;
+    let slm_names = ["llama8b-sim", "qwen7b-sim", "qwen1.5b-sim"];
+    let slms: Vec<LoadedModel> = slm_names
+        .iter()
+        .map(|n| LoadedModel::load(rt.clone(), &art.join("models").join(n)))
+        .collect::<Result<_>>()?;
+
+    let q = corpus.eval_questions()[7];
+    println!("Q: {}\n", tok.decode(&q.question));
+    println!("reference: {}\n", tok.decode_content(&q.answer_tokens()));
+
+    // 1) cloud LLM generates the sketch
+    let cloud_gen = Generator::new(&cloud, tok.specials.eos);
+    let sk_out = cloud_gen.generate(
+        &Prompts::sketch(&tok, &q.question),
+        &SamplingParams { max_tokens: 60, ..Default::default() },
+    )?;
+    let mut sketch = sk_out.tokens.clone();
+    sketch.retain(|&t| t != tok.specials.eos);
+    println!("cloud sketch ({} tokens): {}\n", sketch.len(), tok.decode(&sketch));
+
+    // 2) edge SLMs expand each sketch sentence independently (parallel lanes
+    //    on the testbed; sequential here for clarity)
+    let sentences = split_sketch(&sketch, tok.specials.semicolon);
+    let w = ConfidenceWeights::default();
+    let mut final_answer: Vec<u32> = Vec::new();
+    for (si, sent) in sentences.iter().enumerate() {
+        println!("sentence {si}: [{}]", tok.decode(sent));
+        let mut cands = Vec::new();
+        for (name, slm) in slm_names.iter().zip(&slms) {
+            let g = Generator::new(slm, tok.specials.eos);
+            let out = g.generate(
+                &Prompts::expand(&tok, &q.question, &sketch, sent),
+                &SamplingParams {
+                    max_tokens: 24,
+                    stop_token: Some(tok.specials.period),
+                    ..Default::default()
+                },
+            )?;
+            let mut toks = out.tokens.clone();
+            toks.retain(|&t| t != tok.specials.eos);
+            let cand = Candidate { model: name.to_string(), tokens: toks, logps: out.logps };
+            let con = confidence(&cand, sent, sent.len() * 2, w);
+            println!("  {name:<14} con={con:.3}  {}", tok.decode(&cand.tokens));
+            cands.push((con, cand));
+        }
+        // 3) ensemble selection
+        let (con, best) = cands
+            .into_iter()
+            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .unwrap();
+        println!("  -> winner: {} ({con:.3})\n", best.model);
+        final_answer.extend(best.tokens);
+    }
+    println!("final progressive answer: {}", tok.decode_content(&final_answer));
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: load one picoLM variant via the PJRT runtime and answer a
+//! benchmark question end-to-end (prefill -> KV-cached decode -> text).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use pice::corpus::Corpus;
+use pice::runtime::{Generator, LoadedModel, RuntimeHandle, SamplingParams};
+use pice::sketch::Prompts;
+use pice::tokenizer::Tokenizer;
+
+fn main() -> Result<()> {
+    let art = pice::artifacts_dir();
+    let tok = Tokenizer::from_file(&art.join("vocab.json")).map_err(anyhow::Error::msg)?;
+    let corpus =
+        Corpus::from_file(&art.join("corpus.json"), &tok).map_err(anyhow::Error::msg)?;
+
+    let rt = RuntimeHandle::cpu()?;
+    let model = LoadedModel::load(rt, &art.join("models/qwen7b-sim"))?;
+    println!(
+        "loaded {} — d_model={} layers={} params={}",
+        model.art.name, model.art.d_model, model.art.n_layers, model.art.n_params
+    );
+
+    let q = corpus.eval_questions()[0];
+    println!("\nQ: {}", tok.decode(&q.question));
+
+    let gen = Generator::new(&model, tok.specials.eos);
+    let t0 = std::time::Instant::now();
+    let out = gen.generate(
+        &Prompts::full_answer(&tok, &q.question),
+        &SamplingParams { max_tokens: 80, ..Default::default() },
+    )?;
+    let dt = t0.elapsed();
+
+    println!("A: {}", tok.decode_content(&out.tokens));
+    println!(
+        "\n{} tokens in {:.0} ms ({:.0} tok/s), mean logp {:.2}",
+        out.tokens.len(),
+        dt.as_secs_f64() * 1e3,
+        out.tokens.len() as f64 / dt.as_secs_f64(),
+        out.logps.iter().sum::<f64>() / out.logps.len().max(1) as f64
+    );
+    println!("reference: {}", tok.decode_content(&q.answer_tokens()));
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! SLO explorer: how the lexicographic objective ordering (paper §IV-A1)
+//! changes the operating point — error-led vs throughput-led vs cost-led.
+//!
+//! ```sh
+//! cargo run --release --example slo_explorer        # real backend
+//! PICE_BACKEND=surrogate cargo run --release --example slo_explorer
+//! ```
+
+use pice::baselines;
+use pice::coordinator::slo::Metric;
+use pice::quality::judge::Judge;
+use pice::scenario::Env;
+use pice::util::stats;
+
+fn main() -> Result<(), String> {
+    let cloud_model = "llama70b-sim";
+    let mut env = Env::load()?;
+    let judge = Judge::fit(&env.corpus);
+    let rpm = env.paper_rpm(cloud_model);
+    let wl = env.workload(rpm, 48, 3);
+
+    let orderings: Vec<(&str, Vec<Metric>)> = vec![
+        ("throughput-led", vec![Metric::Throughput, Metric::Error, Metric::Latency, Metric::ServerCost, Metric::EdgeCost]),
+        ("error-led", vec![Metric::Error, Metric::Latency, Metric::Throughput, Metric::ServerCost, Metric::EdgeCost]),
+        ("server-cost-led", vec![Metric::ServerCost, Metric::Throughput, Metric::Error, Metric::Latency, Metric::EdgeCost]),
+        ("latency-led", vec![Metric::Latency, Metric::Throughput, Metric::Error, Metric::ServerCost, Metric::EdgeCost]),
+    ];
+
+    println!("cloud={cloud_model} rpm={rpm:.0} (SLA ordering sweep)\n");
+    println!("{:<17} {:>10} {:>8} {:>9} {:>12} {:>6}", "ordering", "thpt(q/m)", "lat(s)", "quality", "server-tok", "prog");
+    for (name, order) in orderings {
+        let mut cfg = baselines::pice(cloud_model);
+        cfg.scheduler.policy.order = order;
+        let (m, traces) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
+        let scores: Vec<f64> = traces
+            .iter()
+            .filter_map(|t| env.corpus.get(t.question_id).map(|q| judge.score(q, &t.answer).overall))
+            .collect();
+        println!(
+            "{:<17} {:>10.2} {:>8.2} {:>9.2} {:>12} {:>6}",
+            name, m.throughput_qpm, m.avg_latency_s, stats::mean(&scores), m.server_tokens, m.n_progressive
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,281 @@
+"""Synthetic categorized Q/A corpus — the MT-bench / Vicuna-bench substitute.
+
+The paper evaluates PICE on MT-bench and Vicuna-bench with a GPT judge. We
+have neither the models nor the judge, so we build a *closed synthetic
+language* with the properties the evaluation actually consumes:
+
+  * 12 question categories (the 10 of Table IV + counterfactual and
+    common-sense which appear in Figs. 7-11),
+  * per-category answer lengths (math/common-sense short, writing/roleplay
+    long) driving the scheduler's length heuristics,
+  * reference answers built from fixed sentence templates whose *content
+    words* form a semantically complete "sketch" and whose filler words are
+    a deterministic function of the template — so sketch -> expansion is a
+    learnable inverse mapping, and model capacity translates into a real
+    quality gap (exactly the gap the ensemble/judge experiments need).
+
+Everything is seeded and deterministic; the corpus is emitted to
+``artifacts/corpus.json`` and consumed by the Rust coordinator.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+from dataclasses import dataclass, field
+
+# --------------------------------------------------------------------------
+# Vocabulary
+# --------------------------------------------------------------------------
+
+# Special tokens. <q>: question start, <a>: answer / expansion output,
+# <sk>: sketch, <ex>: the single sketch-sentence to expand, ";" separates
+# sketch sentences, "." terminates answer sentences.
+PAD, BOS, EOS, Q, A, SK, EX = "<pad>", "<bos>", "<eos>", "<q>", "<a>", "<sk>", "<ex>"
+SPECIALS = [PAD, BOS, EOS, Q, A, SK, EX, ".", ";", "?"]
+
+# Filler (grammar) words shared across categories. These are the words a
+# sketch drops — the "redundancy phenomenon" of the paper's Observation 1.
+FILLERS = [
+    "the", "a", "of", "in", "to", "and", "is", "are", "with", "that",
+    "on", "for", "it", "as", "by", "can", "will", "because", "into",
+    "many", "some", "this", "very", "also", "then", "when", "about",
+    "please", "describe", "explain", "how", "what", "why", "write", "tell",
+    "me", "story", "question", "answer",
+]
+
+CATEGORIES = [
+    "generic", "knowledge", "roleplay", "fermi", "coding", "math",
+    "writing", "reasoning", "stem", "humanities", "counterfactual",
+    "common-sense",
+]
+
+# Content-word pools. Classes (noun/verb/adj/adv/place) are globally
+# disjoint so a model can infer the word class of every sketch token.
+# Each category gets its own nouns; verbs/adjs/advs/places are shared pools
+# sliced per category to keep the vocabulary compact but category-flavoured.
+_NOUN_POOLS = {
+    "generic": ["life", "habit", "plan", "goal", "idea", "choice", "routine", "balance"],
+    "knowledge": ["atom", "cell", "planet", "ocean", "climate", "energy", "virus", "genome"],
+    "roleplay": ["knight", "wizard", "dragon", "castle", "quest", "sword", "kingdom", "hero"],
+    "fermi": ["piano", "raindrop", "hair", "grain", "bulb", "brick", "leaf", "coin"],
+    "coding": ["function", "array", "loop", "stack", "pointer", "thread", "cache", "queue"],
+    "math": ["number", "fraction", "angle", "matrix", "prime", "vector", "graph", "sum"],
+    "writing": ["letter", "essay", "poem", "novel", "chapter", "draft", "plot", "scene"],
+    "reasoning": ["clue", "premise", "pattern", "motive", "paradox", "proof", "riddle", "logic"],
+    "stem": ["circuit", "enzyme", "rocket", "laser", "magnet", "turbine", "sensor", "alloy"],
+    "humanities": ["empire", "treaty", "culture", "myth", "revolution", "dynasty", "temple", "trade"],
+    "counterfactual": ["history", "timeline", "outcome", "event", "decision", "war", "invention", "discovery"],
+    "common-sense": ["umbrella", "kitchen", "ladder", "mirror", "shadow", "pocket", "window", "bridge"],
+}
+_VERBS = [
+    "moves", "shapes", "guides", "builds", "breaks", "holds", "turns", "links",
+    "grows", "drives", "forms", "lifts", "splits", "joins", "maps", "tests",
+    "sorts", "binds", "leads", "marks", "bends", "melts", "spins", "flows",
+]
+_ADJS = [
+    "bright", "steady", "hidden", "simple", "complex", "ancient", "modern", "rapid",
+    "gentle", "sharp", "quiet", "bold", "narrow", "broad", "dense", "hollow",
+    "smooth", "rough", "deep", "light", "heavy", "warm", "cold", "pure",
+]
+_ADVS = [
+    "slowly", "quickly", "carefully", "boldly", "quietly", "firmly",
+    "smoothly", "rarely", "often", "easily", "barely", "fully",
+]
+_PLACES = [
+    "garden", "valley", "market", "library", "harbor", "forest",
+    "desert", "village", "tower", "meadow", "cavern", "plaza",
+]
+
+
+def build_vocab() -> list[str]:
+    """Deterministic token list; index = token id."""
+    vocab: list[str] = list(SPECIALS) + list(FILLERS)
+    for cat in CATEGORIES:
+        vocab.extend(_NOUN_POOLS[cat])
+    vocab.extend(_VERBS)
+    vocab.extend(_ADJS)
+    vocab.extend(_ADVS)
+    vocab.extend(_PLACES)
+    assert len(vocab) == len(set(vocab)), "vocab has duplicates"
+    return vocab
+
+
+# --------------------------------------------------------------------------
+# Sentence templates
+# --------------------------------------------------------------------------
+# Each template is (full-sentence pattern, sketch pattern). Slots: N=noun,
+# N2=second noun, V=verb, V2=second verb, J=adjective, D=adverb, P=place.
+# Sketch patterns are distinguishable by length + leading word class, so
+# the inverse mapping sketch -> full sentence is well defined (and
+# learnable: that is what the SLM "expansion" has to do).
+TEMPLATES = [
+    # id 0: 5-word sketch starting with adjective
+    ("the {J} {N} {V} the {N2} in the {P} .", "{J} {N} {V} {N2} {P}"),
+    # id 1: 4-word sketch, second word verb, third adverb
+    ("a {N} can {V} {D} with the {N2} .", "{N} {V} {D} {N2}"),
+    # id 2: 4-word sketch, second word adjective
+    ("the {N} is {J} because it {V} the {N2} .", "{N} {J} {V} {N2}"),
+    # id 3: 5-word sketch starting with noun, double verb
+    ("many {N} {V} to {V2} the {J} {N2} .", "{N} {V} {V2} {J} {N2}"),
+]
+
+# Expected answer length in *sentences* per category — mirrors the paper's
+# observation that math/common-sense answers are short while writing/roleplay
+# answers are long (Fig. 7, Fig. 10).
+SENTENCES_PER_CATEGORY = {
+    "generic": 4, "knowledge": 5, "roleplay": 6, "fermi": 3, "coding": 5,
+    "math": 2, "writing": 8, "reasoning": 4, "stem": 5, "humanities": 6,
+    "counterfactual": 3, "common-sense": 2,
+}
+
+QUESTION_TEMPLATES = [
+    "please describe the {J} {N} in the {P} ?",
+    "explain how the {N} {V} the {N2} ?",
+    "why is the {N} {J} and how it {V} ?",
+    "tell me about the {N} and the {N2} in the {P} ?",
+    "write a story about the {J} {N} that {V} ?",
+]
+
+
+@dataclass
+class Sentence:
+    """One reference-answer sentence with its sketch."""
+    template_id: int
+    full: list[str] = field(default_factory=list)
+    sketch: list[str] = field(default_factory=list)
+
+
+@dataclass
+class Question:
+    qid: int
+    category: str
+    question: list[str]
+    sentences: list[Sentence]
+    split: str  # "train" | "eval"
+
+    @property
+    def answer_tokens(self) -> list[str]:
+        out: list[str] = []
+        for s in self.sentences:
+            out.extend(s.full)
+        return out
+
+    @property
+    def sketch_tokens(self) -> list[str]:
+        out: list[str] = []
+        for i, s in enumerate(self.sentences):
+            if i:
+                out.append(";")
+            out.extend(s.sketch)
+        return out
+
+
+def _fill(pattern: str, rng: random.Random, cat: str) -> dict[str, str]:
+    pool = _NOUN_POOLS[cat]
+    n = rng.choice(pool)
+    n2 = rng.choice([x for x in pool if x != n])
+    v = rng.choice(_VERBS)
+    slots = {
+        "N": n, "N2": n2, "V": v,
+        "V2": rng.choice([x for x in _VERBS if x != v]),
+        "J": rng.choice(_ADJS), "D": rng.choice(_ADVS),
+        "P": rng.choice(_PLACES),
+    }
+    return {k: v for k, v in slots.items() if "{%s}" % k in pattern}
+
+
+def make_sentence(rng: random.Random, cat: str) -> Sentence:
+    tid = rng.randrange(len(TEMPLATES))
+    full_pat, sk_pat = TEMPLATES[tid]
+    slots = _fill(full_pat + " " + sk_pat, rng, cat)
+    full = full_pat.format(**slots).split()
+    sketch = sk_pat.format(**slots).split()
+    return Sentence(template_id=tid, full=full, sketch=sketch)
+
+
+def make_question(qid: int, cat: str, rng: random.Random, split: str) -> Question:
+    qpat = QUESTION_TEMPLATES[rng.randrange(len(QUESTION_TEMPLATES))]
+    qslots = _fill(qpat, rng, cat)
+    qtoks = qpat.format(**qslots).split()
+    k = SENTENCES_PER_CATEGORY[cat]
+    # +-1 sentence of natural variation
+    k = max(1, k + rng.choice([-1, 0, 0, 1]))
+    sents = [make_sentence(rng, cat) for _ in range(k)]
+    return Question(qid=qid, category=cat, question=qtoks, sentences=sents, split=split)
+
+
+def generate_corpus(seed: int = 20250710, per_category: int = 150,
+                    eval_frac: float = 0.3) -> list[Question]:
+    rng = random.Random(seed)
+    questions: list[Question] = []
+    qid = 0
+    for cat in CATEGORIES:
+        n_eval = int(per_category * eval_frac)
+        for i in range(per_category):
+            split = "eval" if i >= per_category - n_eval else "train"
+            questions.append(make_question(qid, cat, rng, split))
+            qid += 1
+    return questions
+
+
+# --------------------------------------------------------------------------
+# Training sequences (consumed by train.py)
+# --------------------------------------------------------------------------
+
+def training_sequences(questions: list[Question]) -> list[list[str]]:
+    """Three sequence formats per train question:
+
+    1. full answer        <q> q <a> s1 . s2 . ... <eos>
+    2. sketch generation  <q> q <sk> sk1 ; sk2 ; ... <eos>
+    3. expansion          <q> q <sk> full-sketch <ex> sk_i <a> s_i <eos>
+       (one per sentence)
+    """
+    seqs: list[list[str]] = []
+    for qq in questions:
+        if qq.split != "train":
+            continue
+        q = qq.question
+        seqs.append([Q, *q, A, *qq.answer_tokens, EOS])
+        seqs.append([Q, *q, SK, *qq.sketch_tokens, EOS])
+        for s in qq.sentences:
+            seqs.append([Q, *q, SK, *qq.sketch_tokens, EX, *s.sketch, A, *s.full, EOS])
+    return seqs
+
+
+def corpus_to_json(questions: list[Question]) -> dict:
+    return {
+        "categories": CATEGORIES,
+        "specials": SPECIALS,
+        "sentences_per_category": SENTENCES_PER_CATEGORY,
+        "questions": [
+            {
+                "id": q.qid,
+                "category": q.category,
+                "split": q.split,
+                "question": q.question,
+                "sentences": [
+                    {"template": s.template_id, "full": s.full, "sketch": s.sketch}
+                    for s in q.sentences
+                ],
+            }
+            for q in questions
+        ],
+    }
+
+
+def main(out_corpus: str, out_vocab: str) -> None:
+    vocab = build_vocab()
+    questions = generate_corpus()
+    with open(out_vocab, "w") as f:
+        json.dump({"tokens": vocab}, f)
+    with open(out_corpus, "w") as f:
+        json.dump(corpus_to_json(questions), f)
+    n_train = sum(1 for q in questions if q.split == "train")
+    print(f"vocab={len(vocab)} questions={len(questions)} (train={n_train})")
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "../artifacts/corpus.json",
+         sys.argv[2] if len(sys.argv) > 2 else "../artifacts/vocab.json")

@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: fused single-query attention over the KV cache.
+
+This is the decode hot-spot the paper motivates in Sec. II-B: generating one
+token requires reading the *entire* KV cache, which dominates decode latency
+("more than 50% of the inference latency"). The paper's substrate (vLLM
+PagedAttention) tiles the KV cache into GPU pages per threadblock; the TPU
+rethink (DESIGN.md §5) expresses the same schedule with a Pallas grid:
+
+  * grid = (heads, kv_blocks): each step streams one (block_k, head_dim)
+    KV tile HBM->VMEM via BlockSpec — the analog of a threadblock's page.
+  * Q·Kᵀ and P·V are whole-tile contractions (MXU-systolic friendly),
+    not per-thread dot products.
+  * flash-style *online softmax*: running max m and denominator l are
+    carried across grid steps in revisited output blocks (sequential TPU
+    grid semantics), replacing CUDA shared-memory reductions.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU performance is an analytic estimate (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _pick_block_k(seq_len: int) -> int:
+    """Largest power-of-two KV tile <= 64 that divides seq_len."""
+    for bk in (64, 32, 16, 8, 4, 2, 1):
+        if seq_len % bk == 0:
+            return bk
+    return 1
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *, scale):
+    """One (head, kv-block) grid step of online-softmax decode attention.
+
+    q_ref    [1, Dh]   — query for this head (revisited across kv blocks)
+    k_ref    [1, BK, Dh], v_ref [1, BK, Dh] — the streamed KV tile
+    mask_ref [BK]      — 1.0 for valid cache slots, 0.0 for padding
+    o_ref    [1, Dh]   — unnormalized output accumulator (revisited)
+    m_ref    [1, 1]    — running max,   l_ref [1, 1] — running denominator
+    """
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[0, 0] = NEG_INF
+        l_ref[0, 0] = 0.0
+
+    q = q_ref[0, :].astype(jnp.float32)          # [Dh]
+    k = k_ref[0, :, :].astype(jnp.float32)       # [BK, Dh]
+    v = v_ref[0, :, :].astype(jnp.float32)       # [BK, Dh]
+    mask = mask_ref[...].astype(jnp.float32)     # [BK]
+
+    # MXU-shaped contraction: scores for the whole tile at once.
+    s = (k @ q) * scale + (mask - 1.0) * 1e9     # [BK]
+
+    m_prev = m_ref[0, 0]
+    l_prev = l_ref[0, 0]
+    m_cur = jnp.max(s)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                       # [BK]
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0, 0] = corr * l_prev + jnp.sum(p)
+    o_ref[0, :] = corr * o_ref[0, :] + p @ v
+    m_ref[0, 0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def attn_decode(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+                block_k: int | None = None) -> jax.Array:
+    """Single-token decode attention.
+
+    Args:
+      q:    [H, Dh]      query at the current position.
+      k, v: [H, S, Dh]   the full (padded) KV cache.
+      mask: [S]          1.0 where the cache slot is valid (pos <= current).
+      block_k: KV tile length; must divide S. Auto-picked when None.
+
+    Returns:
+      [H, Dh] attention output, in q's dtype.
+    """
+    h, dh = q.shape
+    _, s, _ = k.shape
+    bk = block_k or _pick_block_k(s)
+    assert s % bk == 0, f"block_k={bk} must divide seq_len={s}"
+    scale = 1.0 / (dh ** 0.5)
+
+    grid = (h, s // bk)
+    out, m, l = pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda hh, kb: (hh, 0)),        # q
+            pl.BlockSpec((1, bk, dh), lambda hh, kb: (hh, kb, 0)),  # k tile
+            pl.BlockSpec((1, bk, dh), lambda hh, kb: (hh, kb, 0)),  # v tile
+            pl.BlockSpec((bk,), lambda hh, kb: (kb,)),            # mask tile
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dh), lambda hh, kb: (hh, 0)),        # o (revisited)
+            pl.BlockSpec((1, 1), lambda hh, kb: (hh, 0)),         # m
+            pl.BlockSpec((1, 1), lambda hh, kb: (hh, 0)),         # l
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, dh), jnp.float32),
+            jax.ShapeDtypeStruct((h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((h, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, mask)
+    return (out / l).astype(q.dtype)

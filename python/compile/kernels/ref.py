@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the L1 Pallas kernels (the correctness reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attn_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                    mask: jax.Array) -> jax.Array:
+    """Reference single-query attention.
+
+    q: [H, Dh]; k, v: [H, S, Dh]; mask: [S] (1 valid / 0 pad).
+    """
+    _, dh = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("hd,hsd->hs", qf, kf) * scale          # [H, S]
+    s = s + (mask.astype(jnp.float32) - 1.0) * 1e9
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hs,hsd->hd", p, vf)
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,122 @@
+"""Build-time training of the picoLM ladder on the synthetic corpus.
+
+Hand-rolled Adam (no optax in the image). Each variant trains on the same
+next-token objective; capacity alone creates the Table-I-style quality
+ladder. The two same-size "families" (qwen72b-sim vs llama70b-sim, etc.)
+differ by init seed and a 90% data subsample — giving the genuinely
+*diverse* errors the ensemble-learning component exploits (paper §IV-C).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus as corpus_mod
+from .model import Config, MAX_SEQ, init_params, loss_fn, forward_all
+
+
+def encode(seqs: list[list[str]], tok2id: dict[str, int]) -> tuple[np.ndarray, np.ndarray]:
+    """Pad/encode token sequences to [N, MAX_SEQ] + lengths [N]."""
+    n = len(seqs)
+    out = np.zeros((n, MAX_SEQ), np.int32)  # 0 == <pad>
+    lens = np.zeros((n,), np.int32)
+    for i, s in enumerate(seqs):
+        ids = [tok2id[t] for t in s][:MAX_SEQ]
+        out[i, : len(ids)] = ids
+        lens[i] = len(ids)
+    return out, lens
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.99, eps=1e-8):
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mhat = jax.tree.map(lambda a: a / (1 - b1 ** step), m)
+    vhat = jax.tree.map(lambda a: a / (1 - b2 ** step), v)
+    params = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat)
+    return params, m, v
+
+
+def train_variant(cfg: Config, data: np.ndarray, lens: np.ndarray, *,
+                  seed: int, steps: int, batch: int = 16,
+                  lr: float = 6e-3, subsample: float = 1.0,
+                  log_every: int = 100) -> tuple[dict, dict]:
+    """Train one variant; returns (params, train report)."""
+    rng = np.random.default_rng(seed)
+    n = data.shape[0]
+    if subsample < 1.0:
+        keep = rng.permutation(n)[: int(n * subsample)]
+        data, lens = data[keep], lens[keep]
+        n = data.shape[0]
+
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step_fn(params, m, v, batch_toks, batch_lens, step, lr_t):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch_toks, batch_lens))(params)
+        params, m, v = adam_update(params, grads, m, v, step, lr_t)
+        return params, m, v, loss
+
+    t0 = time.time()
+    last_loss = float("nan")
+    for it in range(1, steps + 1):
+        idx = rng.integers(0, n, size=batch)
+        # cosine LR with short warmup
+        warm = min(1.0, it / 20)
+        lr_t = lr * warm * 0.5 * (1 + np.cos(np.pi * it / steps))
+        params, m, v, loss = step_fn(
+            params, m, v, jnp.asarray(data[idx]), jnp.asarray(lens[idx]),
+            jnp.float32(it), jnp.float32(lr_t))
+        if it % log_every == 0 or it == steps:
+            last_loss = float(loss)
+            print(f"  [{cfg.name}] step {it}/{steps} loss={last_loss:.3f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    report = {"steps": steps, "final_loss": last_loss,
+              "train_seconds": round(time.time() - t0, 1)}
+    return params, report
+
+
+def eval_accuracy(cfg: Config, params: dict, data: np.ndarray,
+                  lens: np.ndarray, max_seqs: int = 64) -> float:
+    """Held-out next-token accuracy — the MMLU-score stand-in."""
+
+    @jax.jit
+    def acc_one(tokens, length):
+        logits = forward_all(cfg, params, tokens)
+        pred = jnp.argmax(logits, axis=-1)
+        tgt = jnp.roll(tokens, -1)
+        w = (jnp.arange(tokens.shape[0]) < length - 1).astype(jnp.float32)
+        return ((pred == tgt) * w).sum(), w.sum()
+
+    hits = tot = 0.0
+    for i in range(min(max_seqs, data.shape[0])):
+        h, t = acc_one(jnp.asarray(data[i]), jnp.asarray(lens[i]))
+        hits += float(h)
+        tot += float(t)
+    return hits / max(tot, 1.0)
+
+
+def build_dataset() -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, list[str]]:
+    """Returns (train toks, train lens, eval toks, eval lens, vocab)."""
+    vocab = corpus_mod.build_vocab()
+    tok2id = {t: i for i, t in enumerate(vocab)}
+    questions = corpus_mod.generate_corpus()
+    train_seqs = corpus_mod.training_sequences(questions)
+    # held-out sequences from eval questions, same formats
+    eval_qs = [q for q in questions if q.split == "eval"]
+    for q in eval_qs:
+        q.split = "train"  # reuse generator
+    eval_seqs = corpus_mod.training_sequences(eval_qs)
+    for q in eval_qs:
+        q.split = "eval"
+    tr, trl = encode(train_seqs, tok2id)
+    ev, evl = encode(eval_seqs, tok2id)
+    return tr, trl, ev, evl, vocab

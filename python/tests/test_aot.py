@@ -1,0 +1,69 @@
+"""AOT export smoke: HLO text is emitted, parseable-looking, and the
+weights.bin layout matches meta.json. Uses a tiny random-weight variant so
+the test is independent of `make artifacts`."""
+
+import json
+import pathlib
+
+import numpy as np
+import jax
+import pytest
+
+from compile.aot import export_variant, to_hlo_text
+from compile.model import Config, init_params, make_exports, state_size
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    cfg = Config("tiny-test", d_model=16, n_layers=1, n_heads=2, vocab=30, max_seq=16)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    out = tmp_path_factory.mktemp("artifacts")
+    meta = export_variant(cfg, params, out, metrics={"eval_accuracy": 0.0})
+    return cfg, params, out, meta
+
+
+def test_hlo_files_written(exported):
+    _, _, out, meta = exported
+    for name in ("prefill", "decode", "score"):
+        text = (out / f"{name}.hlo.txt").read_text()
+        assert text.startswith("HloModule"), f"{name} missing HloModule header"
+        assert len(text) == meta["hlo_bytes"][name]
+        # flat-state interface: root is a plain array, not a tuple
+        assert "ROOT" in text
+
+
+def test_weights_bin_layout(exported):
+    cfg, params, out, meta = exported
+    blob = (out / "weights.bin").read_bytes()
+    total = sum(w["nbytes"] for w in meta["weights"])
+    assert len(blob) == total
+    for w in meta["weights"]:
+        arr = np.frombuffer(blob[w["offset"]:w["offset"] + w["nbytes"]], np.float32)
+        expect = np.asarray(params[w["name"]], np.float32).ravel()
+        np.testing.assert_array_equal(arr, expect.ravel())
+
+
+def test_meta_consistency(exported):
+    cfg, _, out, meta = exported
+    m = json.loads((out / "meta.json").read_text())
+    assert m["state_size"] == state_size(cfg)
+    assert m["kv_shape"] == list(cfg.kv_shape())
+    assert m["param_order"] == [w["name"] for w in m["weights"]]
+
+
+def test_hlo_text_is_single_array_root(exported):
+    """return_tuple=False: the entry computation root must not be a tuple
+    (the Rust runtime depends on this to keep state re-feedable)."""
+    cfg, params, _, _ = exported
+    prefill_fn, _, _ = make_exports(cfg)
+    import jax.numpy as jnp
+    pspecs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in cfg.param_shapes().values()]
+    lowered = jax.jit(prefill_fn).lower(
+        jax.ShapeDtypeStruct((1, cfg.max_seq), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.int32), *pspecs)
+    text = to_hlo_text(lowered)
+    root_lines = [l for l in text.splitlines() if l.strip().startswith("ROOT")]
+    assert root_lines, "no ROOT found"
+    entry_root = root_lines[-1]
+    declared_type = entry_root.split("=", 1)[1].strip()
+    assert not declared_type.startswith("("), f"root is a tuple: {entry_root}"

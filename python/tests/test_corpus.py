@@ -1,0 +1,89 @@
+"""Corpus generator invariants: closed vocabulary, sketch/template
+consistency, category length ladder, deterministic output."""
+
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus as C
+
+
+def test_vocab_closed_and_unique():
+    vocab = set(C.build_vocab())
+    qs = C.generate_corpus(per_category=5)
+    for q in qs:
+        for t in q.question:
+            assert t in vocab, f"question token {t} not in vocab"
+        for s in q.sentences:
+            for t in s.full + s.sketch:
+                assert t in vocab
+
+
+def test_sketch_is_subsequence_of_full():
+    for q in C.generate_corpus(per_category=5):
+        for s in q.sentences:
+            it = iter(s.full)
+            assert all(tok in it for tok in s.sketch), \
+                f"sketch {s.sketch} not a subsequence of {s.full}"
+
+
+def test_templates_distinguishable_by_sketch_shape():
+    # the (length, first-class, second-class) signature must identify the
+    # template — two leading sketch tokens disambiguate the expansion,
+    # which is what makes it a well-posed learning problem
+    sigs = set()
+    for tid, (_, sk_pat) in enumerate(C.TEMPLATES):
+        slots = sk_pat.replace("{", "").replace("}", "").split()
+        sig = (len(slots), slots[0], slots[1])
+        assert sig not in sigs, f"template {tid} collides: {sig}"
+        sigs.add(sig)
+
+
+def test_category_length_ladder():
+    qs = C.generate_corpus(per_category=30)
+    def mean_len(cat):
+        sel = [q for q in qs if q.category == cat]
+        return sum(len(q.answer_tokens) for q in sel) / len(sel)
+    assert mean_len("writing") > mean_len("math")
+    assert mean_len("roleplay") > mean_len("common-sense")
+
+
+def test_deterministic():
+    a = C.generate_corpus(seed=5, per_category=4)
+    b = C.generate_corpus(seed=5, per_category=4)
+    assert [q.answer_tokens for q in a] == [q.answer_tokens for q in b]
+    c = C.generate_corpus(seed=6, per_category=4)
+    assert [q.answer_tokens for q in a] != [q.answer_tokens for q in c]
+
+
+def test_split_fractions():
+    qs = C.generate_corpus(per_category=50, eval_frac=0.3)
+    for cat in C.CATEGORIES:
+        sel = [q for q in qs if q.category == cat]
+        n_eval = sum(1 for q in sel if q.split == "eval")
+        assert n_eval == 15
+
+
+def test_training_sequences_formats():
+    qs = C.generate_corpus(per_category=3)
+    seqs = C.training_sequences(qs)
+    assert all(s[0] == C.Q and s[-1] == C.EOS for s in seqs)
+    # the three formats all present
+    assert any(C.A in s and C.SK not in s for s in seqs)       # full answer
+    assert any(C.SK in s and C.EX not in s and C.A not in s for s in seqs)  # sketch
+    assert any(C.EX in s for s in seqs)                        # expansion
+
+
+def test_sequences_fit_max_seq():
+    from compile.model import MAX_SEQ
+    qs = C.generate_corpus()
+    for s in C.training_sequences(qs):
+        assert len(s) <= MAX_SEQ, f"sequence of {len(s)} tokens exceeds {MAX_SEQ}"
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 10_000))
+def test_any_seed_produces_valid_corpus(seed):
+    qs = C.generate_corpus(seed=seed, per_category=2)
+    assert len(qs) == 2 * len(C.CATEGORIES)
+    for q in qs:
+        assert q.sentences
+        assert all(s.sketch for s in q.sentences)

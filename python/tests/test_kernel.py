@@ -1,0 +1,128 @@
+"""L1 kernel correctness: Pallas vs the pure-jnp oracle (the CORE
+correctness signal). Hypothesis sweeps shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attn_decode import attn_decode, _pick_block_k
+from compile.kernels.ref import attn_decode_ref, rmsnorm_ref
+from compile.kernels.rmsnorm import rmsnorm
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+def _run_attn(h, s, dh, valid, dtype, block_k=None):
+    q = _rand(1, (h, dh), dtype)
+    k = _rand(2, (h, s, dh), dtype)
+    v = _rand(3, (h, s, dh), dtype)
+    mask = (jnp.arange(s) < valid).astype(jnp.float32)
+    got = attn_decode(q, k, v, mask, block_k=block_k)
+    want = attn_decode_ref(q, k, v, mask)
+    return np.asarray(got, np.float32), np.asarray(want, np.float32)
+
+
+class TestAttnDecode:
+    def test_basic_f32(self):
+        got, want = _run_attn(4, 128, 32, 100, jnp.float32)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_single_valid_token(self):
+        # softmax over one unmasked slot == that slot's V row
+        got, want = _run_attn(2, 64, 16, 1, jnp.float32)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_full_cache(self):
+        got, want = _run_attn(4, 128, 32, 128, jnp.float32)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_bf16_inputs(self):
+        got, want = _run_attn(2, 64, 32, 40, jnp.bfloat16)
+        np.testing.assert_allclose(got, want, atol=3e-2)
+
+    def test_explicit_block_sizes(self):
+        for bk in (8, 16, 32, 64):
+            got, want = _run_attn(2, 64, 16, 50, jnp.float32, block_k=bk)
+            np.testing.assert_allclose(got, want, atol=1e-5, err_msg=f"bk={bk}")
+
+    def test_block_k_must_divide(self):
+        with pytest.raises(AssertionError):
+            _run_attn(1, 60, 8, 10, jnp.float32, block_k=32)
+
+    def test_pick_block_k(self):
+        assert _pick_block_k(128) == 64
+        assert _pick_block_k(96) == 32
+        assert _pick_block_k(7) == 1
+
+    @settings(deadline=None, max_examples=25)
+    @given(
+        h=st.sampled_from([1, 2, 4]),
+        s_blocks=st.integers(1, 8),
+        dh=st.sampled_from([8, 16, 32]),
+        frac=st.floats(0.05, 1.0),
+        dtype=st.sampled_from(["f32", "bf16"]),
+    )
+    def test_hypothesis_sweep(self, h, s_blocks, dh, frac, dtype):
+        s = 16 * s_blocks
+        valid = max(1, int(s * frac))
+        dt = jnp.float32 if dtype == "f32" else jnp.bfloat16
+        got, want = _run_attn(h, s, dh, valid, dt)
+        atol = 1e-5 if dtype == "f32" else 3e-2
+        np.testing.assert_allclose(got, want, atol=atol)
+
+    def test_numerical_stability_large_logits(self):
+        # online softmax must survive large score magnitudes
+        q = 30.0 * _rand(1, (2, 16), jnp.float32)
+        k = 30.0 * _rand(2, (2, 64, 16), jnp.float32)
+        v = _rand(3, (2, 64, 16), jnp.float32)
+        mask = jnp.ones(64, jnp.float32)
+        got = np.asarray(attn_decode(q, k, v, mask))
+        want = np.asarray(attn_decode_ref(q, k, v, mask))
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+class TestRmsNorm:
+    def test_matches_ref_rows(self):
+        x = _rand(5, (8, 64), jnp.float32)
+        w = _rand(6, (64,), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(rmsnorm(x, w)), np.asarray(rmsnorm_ref(x, w)), atol=1e-5
+        )
+
+    def test_single_row_decode_shape(self):
+        x = _rand(7, (1, 48), jnp.float32)
+        w = jnp.ones((48,), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(rmsnorm(x, w)), np.asarray(rmsnorm_ref(x, w)), atol=1e-5
+        )
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        rows=st.integers(1, 17),
+        d=st.sampled_from([16, 48, 64, 128]),
+        dtype=st.sampled_from(["f32", "bf16"]),
+    )
+    def test_hypothesis_sweep(self, rows, d, dtype):
+        dt = jnp.float32 if dtype == "f32" else jnp.bfloat16
+        x = _rand(rows * 31 + d, (rows, d), dt)
+        w = _rand(rows * 7 + 1, (d,), dt)
+        atol = 1e-5 if dtype == "f32" else 5e-2
+        np.testing.assert_allclose(
+            np.asarray(rmsnorm(x, w), np.float32),
+            np.asarray(rmsnorm_ref(x, w), np.float32),
+            atol=atol,
+        )
+
+    def test_scale_invariance_property(self):
+        # rmsnorm(a*x) == rmsnorm(x) for a > 0 (up to eps effects)
+        x = _rand(9, (4, 32), jnp.float32)
+        w = jnp.ones((32,), jnp.float32)
+        a = 7.5
+        np.testing.assert_allclose(
+            np.asarray(rmsnorm(a * x, w)), np.asarray(rmsnorm(x, w)), atol=1e-4
+        )

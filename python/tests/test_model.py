@@ -1,0 +1,101 @@
+"""L2 model invariants: shapes, causality, and — critically — that the
+decode path (Pallas kernels + KV cache) agrees with teacher-forcing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    Config, MAX_SEQ, PARAM_ORDER, decode_step, forward_all, init_params,
+    ladder, loss_fn, make_exports, prefill, state_size,
+)
+
+CFG = Config("test", d_model=32, n_layers=2, n_heads=2, vocab=50, max_seq=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_param_shapes_cover_order(params):
+    assert set(params.keys()) == set(PARAM_ORDER)
+    assert CFG.n_params() == sum(int(np.prod(v.shape)) for v in params.values())
+
+
+def test_forward_shape(params):
+    toks = jnp.arange(16) % CFG.vocab
+    logits = forward_all(CFG, params, toks)
+    assert logits.shape == (16, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_causality(params):
+    """Changing a future token must not affect earlier logits."""
+    toks = jnp.arange(20) % CFG.vocab
+    base = np.asarray(forward_all(CFG, params, toks))
+    mod = toks.at[15].set((toks[15] + 7) % CFG.vocab)
+    pert = np.asarray(forward_all(CFG, params, mod))
+    np.testing.assert_allclose(base[:15], pert[:15], atol=1e-5)
+    assert np.abs(base[15:] - pert[15:]).max() > 1e-6
+
+
+def test_prefill_matches_forward_last_position(params):
+    n = 10
+    toks = (jnp.arange(n) * 3 + 1) % CFG.vocab
+    padded = jnp.zeros((1, CFG.max_seq), jnp.int32).at[0, :n].set(toks)
+    kv, logits_pre = prefill(CFG, params, padded, jnp.array([n], jnp.int32))
+    logits_fwd = forward_all(CFG, params, padded[0], jnp.array(n))[n - 1]
+    np.testing.assert_allclose(np.asarray(logits_pre), np.asarray(logits_fwd), atol=1e-4)
+    assert kv.shape == CFG.kv_shape()
+
+
+def test_decode_consistent_with_teacher_forcing(params):
+    """prefill + step-by-step decode == full forward (same logits)."""
+    n = 6
+    extra = 4
+    toks = (jnp.arange(n + extra) * 5 + 2) % CFG.vocab
+    padded = jnp.zeros((1, CFG.max_seq), jnp.int32).at[0, :n].set(toks[:n])
+    kv, logits = prefill(CFG, params, padded, jnp.array([n], jnp.int32))
+    full = forward_all(CFG, params,
+                       jnp.zeros(CFG.max_seq, jnp.int32).at[: n + extra].set(toks),
+                       jnp.array(n + extra))
+    for i in range(extra):
+        pos = n + i
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full[pos - 1]), atol=2e-3,
+            err_msg=f"logit mismatch feeding position {pos}")
+        kv, logits = decode_step(CFG, params, toks[pos][None].astype(jnp.int32),
+                                 jnp.array([pos], jnp.int32), kv)
+
+
+def test_loss_decreases_under_gradient_step(params):
+    batch = jnp.ones((2, CFG.max_seq), jnp.int32) * 3
+    lens = jnp.array([10, 12], jnp.int32)
+    l0, g = jax.value_and_grad(lambda p: loss_fn(CFG, p, batch, lens))(params)
+    p2 = jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+    l1 = loss_fn(CFG, p2, batch, lens)
+    assert float(l1) < float(l0)
+
+
+def test_exports_state_roundtrip(params):
+    prefill_fn, decode_fn, score_fn = make_exports(CFG)
+    plist = [params[k] for k in PARAM_ORDER]
+    toks = jnp.zeros((1, CFG.max_seq), jnp.int32).at[0, :5].set(jnp.arange(5))
+    state = prefill_fn(toks, jnp.array([5], jnp.int32), *plist)
+    assert state.shape == (state_size(CFG),)
+    state2 = decode_fn(jnp.array([7], jnp.int32), jnp.array([5], jnp.int32), state, *plist)
+    assert state2.shape == state.shape
+    logits_all = score_fn(toks, *plist)
+    assert logits_all.shape == (CFG.max_seq * CFG.vocab,)
+
+
+def test_ladder_is_ordered_and_exportable():
+    models = ladder(vocab=100)
+    assert len(models) == 6
+    params_count = [m.n_params() for m in models]
+    assert params_count[0] >= params_count[2] >= params_count[3] >= params_count[5]
+    for m in models:
+        assert m.max_seq == MAX_SEQ
+        assert m.d_model % m.n_heads == 0

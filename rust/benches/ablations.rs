@@ -1,0 +1,108 @@
+//! Ablations beyond the paper's figures — the design choices DESIGN.md
+//! calls out: (a) ensemble confidence weights (Eq. 3's α1/α2), (b) edge
+//! fleet size, (c) fixed sketch level vs the dynamic lexicographic choice,
+//! (d) multi-list vs single-FIFO dispatch (bucket ablation).
+
+mod common;
+
+use pice::baselines;
+use pice::ensemble::ConfidenceWeights;
+use pice::quality::judge::Judge;
+use pice::scenario::{bench_n, Env};
+use pice::sketch::SketchLevel;
+use pice::util::json::{num, obj, s, Json};
+
+fn main() -> Result<(), String> {
+    let mut env = Env::load()?;
+    let judge = Judge::fit(&env.corpus);
+    let model = "llama70b-sim";
+    let rpm = env.paper_rpm(model);
+    let n = bench_n();
+    let wl = env.workload(rpm, n, 41);
+    let mut rows = Vec::new();
+
+    common::banner("Ablation A", "ensemble confidence weights (Eq. 3)");
+    println!("{:>6} {:>6} {:>9} {:>10}", "α1", "α2", "quality", "thpt(q/m)");
+    for (a1, a2) in [(0.0, 0.0), (1.0, 0.0), (0.4, 0.2), (0.2, 0.2), (0.0, 0.5)] {
+        let mut cfg = baselines::pice(model);
+        cfg.confidence = ConfidenceWeights { alpha1: a1, alpha2: a2 };
+        let (m, traces) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
+        let q = common::mean_quality(&env, &judge, &traces);
+        println!("{a1:>6.1} {a2:>6.1} {q:>9.2} {:>10.2}", m.throughput_qpm);
+        rows.push(obj(vec![
+            ("ablation", s("confidence_weights")),
+            ("alpha1", num(a1)),
+            ("alpha2", num(a2)),
+            ("quality", num(q)),
+        ]));
+    }
+    println!("(α1=1: perplexity-only — the failure mode §IV-C motivates against)");
+
+    common::banner("Ablation B", "edge fleet size");
+    println!("{:>7} {:>10} {:>8} {:>6}", "#edges", "thpt(q/m)", "lat(s)", "prog");
+    for edges in [1usize, 2, 4, 6, 8] {
+        let mut cfg = baselines::pice(model);
+        cfg.n_edges = edges;
+        let (m, _) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
+        println!("{edges:>7} {:>10.2} {:>8.2} {:>6}", m.throughput_qpm, m.avg_latency_s, m.n_progressive);
+        rows.push(obj(vec![
+            ("ablation", s("edge_fleet")),
+            ("edges", num(edges as f64)),
+            ("throughput_qpm", num(m.throughput_qpm)),
+            ("latency_s", num(m.avg_latency_s)),
+        ]));
+    }
+
+    common::banner("Ablation C", "fixed sketch level vs dynamic selection");
+    println!("{:<22} {:>10} {:>8} {:>9}", "level policy", "thpt(q/m)", "lat(s)", "quality");
+    let fixed_levels = [
+        ("dynamic (lex policy)", None),
+        ("fixed level 1 (full)", Some(SketchLevel { level: 1, keep_frac: 1.0 })),
+        ("fixed level 3 (0.6)", Some(SketchLevel { level: 3, keep_frac: 0.6 })),
+    ];
+    for (name, lv) in fixed_levels {
+        let mut cfg = baselines::pice(model);
+        if let Some(lv) = lv {
+            cfg.scheduler.levels = vec![SketchLevel { level: 0, keep_frac: 0.0 }, lv];
+        }
+        let (m, traces) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
+        let q = common::mean_quality(&env, &judge, &traces);
+        println!("{name:<22} {:>10.2} {:>8.2} {q:>9.2}", m.throughput_qpm, m.avg_latency_s);
+        rows.push(obj(vec![
+            ("ablation", s("sketch_level")),
+            ("policy", s(name)),
+            ("throughput_qpm", num(m.throughput_qpm)),
+            ("quality", num(q)),
+        ]));
+    }
+
+    common::banner("Ablation D", "multi-list vs single-FIFO dispatch");
+    println!("{:<22} {:>10} {:>8} {:>9}", "dispatch", "thpt(q/m)", "lat(s)", "p95(s)");
+    for (name, single) in [("multi-list (Alg. 1)", false), ("single FIFO", true)] {
+        let mut cfg = baselines::pice(model);
+        if single {
+            // one bucket == plain FIFO (Algorithm 1 ablated away)
+            cfg.queue_cap = 8;
+            cfg.scheduler.levels = pice::sketch::levels();
+            cfg.seed = 41;
+            cfg.sketch_keep_frac_override = None;
+            // the engine constructs buckets from fixed bounds; a huge first
+            // bound folds everything into one list
+            std::env::set_var("PICE_SINGLE_FIFO", "1");
+        }
+        let (m, _) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
+        if single {
+            std::env::remove_var("PICE_SINGLE_FIFO");
+        }
+        println!("{name:<22} {:>10.2} {:>8.2} {:>9.2}", m.throughput_qpm, m.avg_latency_s, m.p95_latency_s);
+        rows.push(obj(vec![
+            ("ablation", s("dispatch")),
+            ("policy", s(name)),
+            ("throughput_qpm", num(m.throughput_qpm)),
+            ("p95_s", num(m.p95_latency_s)),
+        ]));
+    }
+
+    common::dump("ablations", Json::Arr(rows));
+    Ok(())
+}

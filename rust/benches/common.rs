@@ -1,0 +1,55 @@
+//! Shared plumbing for the paper-reproduction benches (one bench per table
+//! and figure of the evaluation section — see DESIGN.md §4).
+//!
+//! Benches print the paper-style rows/series and also dump machine-readable
+//! JSON into `bench_results/` for EXPERIMENTS.md.
+
+#![allow(dead_code)]
+
+use pice::quality::judge::Judge;
+use pice::scenario::Env;
+use pice::util::json::Json;
+use pice::util::stats;
+
+pub fn banner(name: &str, what: &str) {
+    println!("\n================================================================");
+    println!("{name} — {what}");
+    println!("================================================================");
+}
+
+/// Mean judge score of a run's answers.
+pub fn mean_quality(env: &Env, judge: &Judge, traces: &[pice::metrics::RequestTrace]) -> f64 {
+    let scores: Vec<f64> = traces
+        .iter()
+        .filter_map(|t| env.corpus.get(t.question_id).map(|q| judge.score(q, &t.answer).overall))
+        .collect();
+    stats::mean(&scores)
+}
+
+/// Write a bench result JSON under bench_results/.
+pub fn dump(name: &str, value: Json) {
+    let dir = std::path::Path::new("bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{name}.json"));
+    if std::fs::write(&path, value.to_string()).is_ok() {
+        println!("[saved {}]", path.display());
+    }
+}
+
+/// Quality scoring per category; returns (category -> mean overall).
+pub fn quality_by_category(
+    env: &Env,
+    judge: &Judge,
+    traces: &[pice::metrics::RequestTrace],
+) -> std::collections::BTreeMap<String, f64> {
+    let mut acc: std::collections::BTreeMap<String, (f64, usize)> = Default::default();
+    for t in traces {
+        if let Some(q) = env.corpus.get(t.question_id) {
+            let s = judge.score(q, &t.answer).overall;
+            let e = acc.entry(t.category.clone()).or_insert((0.0, 0));
+            e.0 += s;
+            e.1 += 1;
+        }
+    }
+    acc.into_iter().map(|(c, (s, n))| (c, s / n.max(1) as f64)).collect()
+}

@@ -1,0 +1,51 @@
+//! Fig. 14 — sensitivity to cloud<->edge bandwidth: throughput and latency
+//! across bandwidths for PICE / Cloud-only / Routing.
+
+mod common;
+
+use pice::baselines;
+use pice::network::Link;
+use pice::scenario::{bench_n, Env};
+use pice::util::json::{num, obj, s, Json};
+
+fn main() -> Result<(), String> {
+    let mut env = Env::load()?;
+    let model = "llama70b-sim";
+    let rpm = env.paper_rpm(model);
+    let n = bench_n();
+    let wl = env.workload(rpm, n, 23);
+    common::banner("Fig 14", "impact of bandwidth on inference efficiency");
+    println!(
+        "{:>10} | {:>10} {:>8} | {:>10} {:>8} | {:>10} {:>8}",
+        "Mbps", "cloud q/m", "lat", "routing", "lat", "PICE", "lat"
+    );
+    let mut rows = Vec::new();
+    for bw in [1.0, 10.0, 50.0, 100.0, 500.0, 1000.0] {
+        let mut cells = Vec::new();
+        for (name, mut cfg) in [
+            ("Cloud-only", baselines::cloud_only(model)),
+            ("Routing", baselines::routing(model)),
+            ("PICE", baselines::pice(model)),
+        ] {
+            cfg.link = Link::new(bw, 20.0);
+            let (m, _) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
+            rows.push(obj(vec![
+                ("bandwidth_mbps", num(bw)),
+                ("system", s(name)),
+                ("throughput_qpm", num(m.throughput_qpm)),
+                ("latency_s", num(m.avg_latency_s)),
+            ]));
+            cells.push((m.throughput_qpm, m.avg_latency_s));
+        }
+        println!(
+            "{bw:>10.0} | {:>10.1} {:>8.1} | {:>10.1} {:>8.1} | {:>10.1} {:>8.1}",
+            cells[0].0, cells[0].1, cells[1].0, cells[1].1, cells[2].0, cells[2].1
+        );
+    }
+    common::dump("fig14_bandwidth", Json::Arr(rows));
+    println!(
+        "\npaper shape: PICE leads at every bandwidth; latency barely moves with\n\
+         bandwidth (text transfers are tens of ms — inference dominates)."
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Fig. 7 — the execution optimizer's semantic-level parallelism:
+//! (a) optimal parallelism vs sketch length per task type,
+//! (b) edge inference latency vs sketch length, parallel vs serial.
+//!
+//! Driven directly through the batch planner against the Jetson memory
+//! model (the 7B-class SLM, whose KV footprint makes the ceiling bind —
+//! the paper's "limited by edge device memory" regime).
+
+mod common;
+
+use pice::cluster::DeviceSpec;
+use pice::models::Registry;
+use pice::parallel::{batch_wall, plan_batch, EdgeCostModel, Group};
+use pice::util::json::{num, obj, s, Json};
+
+fn main() -> Result<(), String> {
+    let reg = Registry::builtin();
+    let edge = DeviceSpec::jetson_orin("edge-0");
+    let slm = reg.get("qwen7b-sim").unwrap();
+    common::banner("Fig 7", "optimal parallelism & latency vs sketch length");
+
+    // task types: (label, words per sketch sentence) — longer per-sentence
+    // sketches (math/common-sense) yield fewer, longer sentences.
+    let task_types: [(&str, usize); 4] =
+        [("generic", 50), ("roleplay", 55), ("common-sense", 110), ("math", 130)];
+
+    println!("(a) optimal parallelism");
+    print!("{:>14}", "sketch tokens");
+    for (t, _) in &task_types {
+        print!(" {:>13}", t);
+    }
+    println!();
+    let mut rows = Vec::new();
+    let sweep = [100usize, 200, 300, 400, 500, 600, 700];
+    for &sk in &sweep {
+        print!("{sk:>14}");
+        for (label, per_sent) in &task_types {
+            let k = (sk / per_sent).max(1);
+            // expansion is ~2.2x the sketch; split across k sentences
+            let exp: Vec<usize> = (0..k).map(|_| (sk as f64 * 2.2 / k as f64) as usize).collect();
+            let context = sk + exp.iter().sum::<usize>() / k + 60;
+            let p_mem = edge.max_batch(slm, context).max(1);
+            let cost = EdgeCostModel {
+                token_s: edge.token_latency_s(slm, 1),
+                batch_slowdown: pice::cluster::BATCH_TOKEN_SLOWDOWN,
+                prompt_tokens: sk + 60,
+                prefill_speedup: 8.0,
+            };
+            let refs: Vec<&[usize]> = vec![&exp];
+            let (plans, wall) = plan_batch(&refs, p_mem, &cost);
+            let p = plans[0].len();
+            print!(" {:>13}", p);
+            rows.push(obj(vec![
+                ("task", s(label)),
+                ("sketch_tokens", num(sk as f64)),
+                ("parallelism", num(p as f64)),
+                ("latency_s", num(wall)),
+                ("p_mem", num(p_mem as f64)),
+            ]));
+        }
+        println!();
+    }
+
+    println!("\n(b) edge latency: parallel (PICE) vs serial expansion");
+    println!("{:>14} {:>14} {:>14} {:>10}", "sketch tokens", "parallel(s)", "serial(s)", "saved(s)");
+    for &sk in &sweep {
+        let k = (sk / 50).max(1);
+        let exp: Vec<usize> = (0..k).map(|_| (sk as f64 * 2.2 / k as f64) as usize).collect();
+        let p_mem = edge.max_batch(slm, sk + 150).max(1);
+        let cost = EdgeCostModel {
+            token_s: edge.token_latency_s(slm, 1),
+            batch_slowdown: pice::cluster::BATCH_TOKEN_SLOWDOWN,
+            prompt_tokens: sk + 60,
+            prefill_speedup: 8.0,
+        };
+        let refs: Vec<&[usize]> = vec![&exp];
+        let (_, par) = plan_batch(&refs, p_mem, &cost);
+        let serial_plan: Vec<Vec<Group>> = vec![vec![(0..k).collect()]];
+        let ser = batch_wall(&serial_plan, &refs, &cost);
+        println!("{sk:>14} {par:>14.1} {ser:>14.1} {:>10.1}", ser - par);
+    }
+    common::dump("fig7_parallelism", Json::Arr(rows));
+    println!(
+        "\npaper shape: parallelism grows with sketch length then flattens/declines at the\n\
+         memory ceiling (~500 tokens); short-answer tasks (math/common-sense) stay low;\n\
+         parallel expansion saves tens of seconds at 500+ tokens."
+    );
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! §Perf — hot-path microbenches for the optimization pass (EXPERIMENTS.md
+//! §Perf): L3 coordinator primitives, the end-to-end event loop, and the
+//! real PJRT decode step per model variant.
+
+mod common;
+
+use std::time::Instant;
+
+use pice::coordinator::dispatch::{Job, MultiListQueue};
+use pice::coordinator::scheduler::{CloudScheduler, SchedInput};
+use pice::parallel::{plan_batch, EdgeCostModel};
+use pice::profiler::LatencyFit;
+use pice::quality::rouge::{rouge1_f1, rouge_l_f1};
+use pice::runtime::{Generator, LoadedModel, RuntimeHandle, SamplingParams};
+use pice::scenario::Env;
+use pice::sketch::Prompts;
+use pice::util::json::{num, obj, s, Json};
+use pice::util::rng::Rng;
+
+fn time_it<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() -> Result<(), String> {
+    common::banner("§Perf", "hot-path microbenchmarks");
+    let mut rows = Vec::new();
+    let mut report = |name: &str, secs: f64, unit: &str| {
+        let v = if secs < 1e-3 { format!("{:.2} µs", secs * 1e6) } else { format!("{:.3} ms", secs * 1e3) };
+        println!("{name:<44} {v:>12}  ({unit})");
+        rows.push(obj(vec![("bench", s(name)), ("seconds", num(secs))]));
+    };
+
+    // --- L3 primitives -----------------------------------------------------
+    let mut rng = Rng::new(1);
+    let sched = CloudScheduler::default();
+    let inp = SchedInput {
+        predicted_len: 480,
+        f_cloud: LatencyFit { a: 0.4, b: 0.1 },
+        cost_coeff: 0.6,
+        transfer_s: |n| 0.02 + n as f64 * 5e-7,
+        backlog_s: 12.0,
+        n_edges: 4,
+        best_slm_capability: 74.0,
+        parallel_hint: 4.0,
+    };
+    report("scheduler.decide (Eq. 2 over 4 levels)", time_it(20_000, || {
+        std::hint::black_box(sched.decide(&inp));
+    }), "per request");
+
+    let mk_job = |rid: usize, len: usize| Job {
+        rid,
+        expected_len: len,
+        sentences: vec![],
+        full_sketch: vec![],
+        question: vec![],
+        enqueued_at: 0.0,
+        replicas_left: 1,
+    };
+    report("multi-list queue push+pull_batch(4)", time_it(20_000, || {
+        let mut q = MultiListQueue::standard(64);
+        for rid in 0..16 {
+            q.push(mk_job(rid, (rid * 37) % 200));
+        }
+        while !q.is_empty() {
+            std::hint::black_box(q.pull_batch(4));
+        }
+    }), "16 jobs");
+
+    let lens: Vec<usize> = (0..8).map(|i| 80 + i * 20).collect();
+    let cost = EdgeCostModel { token_s: 0.01, batch_slowdown: 0.06, prompt_tokens: 300, prefill_speedup: 8.0 };
+    report("plan_batch (8 sentences, 1 job)", time_it(20_000, || {
+        let refs: Vec<&[usize]> = vec![&lens];
+        std::hint::black_box(plan_batch(&refs, 16, &cost));
+    }), "per job");
+
+    let a: Vec<u32> = (0..120).map(|_| rng.next_u64() as u32 % 200).collect();
+    let b: Vec<u32> = (0..120).map(|_| rng.next_u64() as u32 % 200).collect();
+    report("rouge-1 (120x120 tokens)", time_it(20_000, || {
+        std::hint::black_box(rouge1_f1(&a, &b));
+    }), "per pair");
+    report("rouge-L LCS (120x120 tokens)", time_it(2_000, || {
+        std::hint::black_box(rouge_l_f1(&a, &b));
+    }), "per pair");
+
+    // --- end-to-end event loop (surrogate: coordinator cost only) ----------
+    {
+        std::env::set_var("PICE_BACKEND", "surrogate");
+        let mut env = Env::load()?;
+        std::env::remove_var("PICE_BACKEND");
+        let wl = env.workload(40.0, 60, 3);
+        let t0 = Instant::now();
+        let (m, _) = env.run(pice::baselines::pice("llama70b-sim"), &wl).map_err(|e| e.to_string())?;
+        let dt = t0.elapsed().as_secs_f64();
+        report("engine.run 60 reqs (surrogate, L3-only)", dt / 60.0, "per request");
+        println!("{:<44} {:>9.0} sim-s in {:.2} real-s", "  (simulated makespan vs real wall)", m.makespan_s, dt);
+    }
+
+    // --- real PJRT decode hot path ------------------------------------------
+    let art = pice::artifacts_dir();
+    if art.join("manifest.json").exists() {
+        let rt = RuntimeHandle::cpu().map_err(|e| e.to_string())?;
+        let env = Env::load()?;
+        for name in ["qwen1.5b-sim", "qwen7b-sim", "llama70b-sim"] {
+            let lm = LoadedModel::load(rt.clone(), &art.join("models").join(name))
+                .map_err(|e| e.to_string())?;
+            let g = Generator::new(&lm, env.tok.specials.eos);
+            let q = env.corpus.eval_questions()[0];
+            let prompt = Prompts::full_answer(&env.tok, &q.question);
+            let sp = SamplingParams { max_tokens: 32, ..Default::default() };
+            let _ = g.generate(&prompt, &sp);
+            let t0 = Instant::now();
+            let mut toks = 0usize;
+            for _ in 0..3 {
+                toks += g.generate(&prompt, &sp).map_err(|e| e.to_string())?.tokens.len();
+            }
+            let per_tok = t0.elapsed().as_secs_f64() / toks as f64;
+            report(&format!("PJRT decode step [{name}]"), per_tok, "per token");
+        }
+    } else {
+        println!("(artifacts missing — skipping real PJRT decode benches)");
+    }
+
+    common::dump("perf_hotpath", Json::Arr(rows));
+    Ok(())
+}

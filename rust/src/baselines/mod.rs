@@ -1,0 +1,58 @@
+//! Baseline configurations (paper §V-A).
+//!
+//! The baselines reuse the PICE engine's event loop with different admission
+//! policies — the same methodology as the paper, which runs all four systems
+//! on one testbed:
+//!
+//! * **Cloud-only** — every query served by the cloud vLLM-like engine.
+//! * **Edge-only** — queries load-balanced over edge devices hosting the
+//!   same model as the cloud scenario (OOM when it doesn't fit a Jetson).
+//! * **Routing** — Hybrid-LLM-style difficulty router: predicted-difficulty
+//!   thresholding between edge SLM and cloud LLM.
+
+use crate::coordinator::{EngineCfg, Policy};
+
+/// Difficulty threshold in SIM tokens (engine units; /10 for real picoLM
+/// tokens): queries with predicted answers under ~40 real words go to edge.
+pub const ROUTER_THRESHOLD: f64 = 400.0;
+
+pub fn cloud_only(cloud_model: &str) -> EngineCfg {
+    EngineCfg::pice(cloud_model).with_policy(Policy::CloudOnly)
+}
+
+pub fn edge_only(cloud_model: &str) -> EngineCfg {
+    EngineCfg::pice(cloud_model).with_policy(Policy::EdgeOnly)
+}
+
+pub fn routing(cloud_model: &str) -> EngineCfg {
+    EngineCfg::pice(cloud_model)
+        .with_policy(Policy::Routing { difficulty_threshold: ROUTER_THRESHOLD })
+}
+
+pub fn pice(cloud_model: &str) -> EngineCfg {
+    EngineCfg::pice(cloud_model)
+}
+
+/// All four systems in Table-III/IV order.
+pub fn all(cloud_model: &str) -> Vec<(&'static str, EngineCfg)> {
+    vec![
+        ("Cloud-only", cloud_only(cloud_model)),
+        ("Edge-only", edge_only(cloud_model)),
+        ("Routing", routing(cloud_model)),
+        ("PICE", pice(cloud_model)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Policy;
+
+    #[test]
+    fn four_systems() {
+        let v = all("qwen72b-sim");
+        assert_eq!(v.len(), 4);
+        assert!(matches!(v[0].1.policy, Policy::CloudOnly));
+        assert!(matches!(v[3].1.policy, Policy::Pice));
+    }
+}

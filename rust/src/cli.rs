@@ -1,0 +1,104 @@
+//! Tiny argument parser (no clap in the offline image).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(raw: impl Iterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value | --key value | --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // note: "--verbose extra" would bind "extra" as the value of
+        // --verbose (greedy option parsing); flags go last or standalone.
+        let a = parse("serve --rpm 30 --model qwen72b-sim extra --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt_f64("rpm", 0.0), 30.0);
+        assert_eq!(a.opt_str("model", "x"), "qwen72b-sim");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("bench --n=12 table3");
+        assert_eq!(a.opt_usize("n", 0), 12);
+        assert_eq!(a.positional, vec!["table3"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("eval --smoke");
+        assert!(a.has_flag("smoke"));
+        assert!(a.opt("smoke").is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.opt_f64("rpm", 42.0), 42.0);
+    }
+}

@@ -1,0 +1,261 @@
+//! Text-generation backend abstraction.
+//!
+//! The serving engine is generic over *how* tokens are produced:
+//!  * [`RealBackend`] — the production path: PJRT picoLM inference
+//!    (artifacts required; used by examples/benches).
+//!  * [`SurrogateBackend`] — a deterministic corpus-driven mock with
+//!    capacity-calibrated corruption, used by unit/property tests so the
+//!    full coordinator logic is testable without artifacts and in O(μs).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::corpus::Corpus;
+use crate::models::Registry;
+use crate::runtime::{GenOutput, Generator, LoadedModel, RuntimeHandle, SamplingParams};
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+pub trait TextBackend {
+    /// Generate a continuation of `prompt` with `model`.
+    fn generate(
+        &mut self,
+        model: &str,
+        prompt: &[u32],
+        sp: &SamplingParams,
+    ) -> Result<GenOutput, String>;
+}
+
+// ---------------------------------------------------------------------------
+// Real backend (PJRT)
+// ---------------------------------------------------------------------------
+
+pub struct RealBackend {
+    rt: Arc<RuntimeHandle>,
+    models_dir: PathBuf,
+    eos: u32,
+    loaded: HashMap<String, LoadedModel>,
+}
+
+impl RealBackend {
+    pub fn new(artifacts: &std::path::Path, eos: u32) -> Result<Self, String> {
+        let rt = RuntimeHandle::cpu().map_err(|e| e.to_string())?;
+        Ok(RealBackend { rt, models_dir: artifacts.join("models"), eos, loaded: HashMap::new() })
+    }
+
+    fn model(&mut self, name: &str) -> Result<&LoadedModel, String> {
+        if !self.loaded.contains_key(name) {
+            let m = LoadedModel::load(self.rt.clone(), &self.models_dir.join(name))
+                .map_err(|e| format!("load {name}: {e}"))?;
+            self.loaded.insert(name.to_string(), m);
+        }
+        Ok(&self.loaded[name])
+    }
+}
+
+impl TextBackend for RealBackend {
+    fn generate(
+        &mut self,
+        model: &str,
+        prompt: &[u32],
+        sp: &SamplingParams,
+    ) -> Result<GenOutput, String> {
+        let eos = self.eos;
+        let m = self.model(model)?;
+        Generator::new(m, eos).generate(prompt, sp).map_err(|e| e.to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Surrogate backend (corpus-driven, deterministic)
+// ---------------------------------------------------------------------------
+
+/// Produces reference-derived text with a per-model corruption rate tied to
+/// the Table-I MMLU ladder, so bigger models give measurably better answers
+/// — the same *shape* the real picoLM ladder exhibits.
+pub struct SurrogateBackend {
+    by_question: HashMap<Vec<u32>, usize>,
+    corpus: Arc<Corpus>,
+    specials: crate::tokenizer::Specials,
+    /// model name -> per-token corruption probability
+    err: HashMap<String, f64>,
+    /// content-word id range for corruption draws
+    vocab_lo: u32,
+    vocab_hi: u32,
+    seed: u64,
+}
+
+impl SurrogateBackend {
+    pub fn new(corpus: Arc<Corpus>, tok: &Tokenizer, registry: &Registry, seed: u64) -> Self {
+        let mut by_question = HashMap::new();
+        for q in &corpus.questions {
+            by_question.insert(q.question.clone(), q.id);
+        }
+        let err = registry
+            .models
+            .iter()
+            .map(|m| (m.name.clone(), ((88.0 - m.mmlu) * 0.008).clamp(0.01, 0.5)))
+            .collect();
+        SurrogateBackend {
+            by_question,
+            corpus,
+            specials: tok.specials,
+            err,
+            vocab_lo: 10,
+            vocab_hi: tok.vocab_size() as u32,
+            seed,
+        }
+    }
+
+    fn corrupt(&self, tokens: &[u32], err: f64, rng: &mut Rng, keep: &[u32]) -> Vec<u32> {
+        tokens
+            .iter()
+            .map(|&t| {
+                if keep.contains(&t) || !rng.bool(err) {
+                    t
+                } else {
+                    self.vocab_lo + (rng.next_u64() % (self.vocab_hi - self.vocab_lo) as u64) as u32
+                }
+            })
+            .collect()
+    }
+}
+
+impl TextBackend for SurrogateBackend {
+    fn generate(
+        &mut self,
+        model: &str,
+        prompt: &[u32],
+        sp: &SamplingParams,
+    ) -> Result<GenOutput, String> {
+        let spx = self.specials;
+        let err = *self.err.get(model).ok_or_else(|| format!("unknown model {model}"))?;
+        // locate the question span: <q> ... (<a> | <sk>)
+        let qpos = prompt.iter().position(|&t| t == spx.q).ok_or("no <q> in prompt")?;
+        let qend = prompt
+            .iter()
+            .position(|&t| t == spx.a || t == spx.sk)
+            .ok_or("no <a>/<sk> in prompt")?;
+        let question: Vec<u32> = prompt[qpos + 1..qend].to_vec();
+        let qid = *self.by_question.get(&question).ok_or("unknown question")?;
+        let q = self.corpus.get(qid).ok_or("bad qid")?;
+
+        let mut rng = Rng::new(
+            self.seed
+                ^ prompt.iter().fold(0u64, |h, &t| h.wrapping_mul(131).wrapping_add(t as u64)),
+        );
+        let structural = [spx.period, spx.semicolon];
+        let has_ex = prompt.contains(&spx.ex);
+        let last = *prompt.last().ok_or("empty prompt")?;
+
+        let mut tokens = if has_ex && last == spx.a {
+            // expansion: sentence-sketch sits between <ex> and trailing <a>
+            let ex_pos = prompt.iter().rposition(|&t| t == spx.ex).unwrap();
+            let sent_sketch = &prompt[ex_pos + 1..prompt.len() - 1];
+            let sent = q
+                .sentences
+                .iter()
+                .find(|s| s.sketch.starts_with(sent_sketch) || sent_sketch.starts_with(&s.sketch[..s.sketch.len().min(sent_sketch.len())]))
+                .or_else(|| q.sentences.first())
+                .ok_or("no sentences")?;
+            self.corrupt(&sent.full, err, &mut rng, &structural)
+        } else if last == spx.sk {
+            // sketch generation
+            let sk = q.sketch_tokens(spx.semicolon);
+            self.corrupt(&sk, err * 0.5, &mut rng, &structural)
+        } else {
+            // full answer
+            self.corrupt(&q.answer_tokens(), err, &mut rng, &structural)
+        };
+        tokens.truncate(sp.max_tokens.max(1).saturating_sub(1));
+        if let Some(stop) = sp.stop_token {
+            if let Some(i) = tokens.iter().position(|&t| t == stop) {
+                tokens.truncate(i + 1);
+            }
+        } else {
+            tokens.push(spx.eos);
+        }
+        // logp model: confident in proportion to (1 - err), with jitter
+        let logps = tokens
+            .iter()
+            .map(|_| ((1.0 - err) as f64).ln() - 0.35 + rng.range(-0.05, 0.05))
+            .collect();
+        Ok(GenOutput { tokens, logps, finished: true })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::tests_support::toy_corpus;
+    use crate::sketch::Prompts;
+
+    fn setup() -> (SurrogateBackend, Tokenizer, Arc<Corpus>) {
+        let (c, tok) = toy_corpus();
+        let c = Arc::new(c);
+        let b = SurrogateBackend::new(c.clone(), &tok, &Registry::builtin(), 1);
+        (b, tok, c)
+    }
+
+    #[test]
+    fn full_answer_resembles_reference() {
+        let (mut b, tok, c) = setup();
+        let q = &c.questions[0];
+        let p = Prompts::full_answer(&tok, &q.question);
+        let out = b
+            .generate("qwen72b-sim", &p, &SamplingParams { max_tokens: 64, ..Default::default() })
+            .unwrap();
+        let reference = q.answer_tokens();
+        let overlap = crate::quality::rouge::rouge1_f1(
+            &out.tokens[..out.tokens.len() - 1],
+            &reference,
+        );
+        assert!(overlap > 0.8, "overlap {overlap}");
+    }
+
+    #[test]
+    fn small_model_more_corrupted() {
+        let (mut b, tok, c) = setup();
+        let q = &c.questions[0];
+        let p = Prompts::full_answer(&tok, &q.question);
+        let sp = SamplingParams { max_tokens: 64, ..Default::default() };
+        let reference = q.answer_tokens();
+        let big = b.generate("qwen72b-sim", &p, &sp).unwrap();
+        let small = b.generate("qwen1.5b-sim", &p, &sp).unwrap();
+        let r_big = crate::quality::rouge::rouge1_f1(&big.tokens, &reference);
+        let r_small = crate::quality::rouge::rouge1_f1(&small.tokens, &reference);
+        assert!(r_big >= r_small, "{r_big} < {r_small}");
+    }
+
+    #[test]
+    fn expansion_stops_at_period() {
+        let (mut b, tok, c) = setup();
+        let q = &c.questions[0];
+        let full_sk = q.sketch_tokens(tok.specials.semicolon);
+        let p = Prompts::expand(&tok, &q.question, &full_sk, &q.sentences[1].sketch);
+        let out = b
+            .generate(
+                "qwen72b-sim",
+                &p,
+                &SamplingParams {
+                    max_tokens: 32,
+                    stop_token: Some(tok.specials.period),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(*out.tokens.last().unwrap(), tok.specials.period);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (mut b, tok, c) = setup();
+        let q = &c.questions[0];
+        let p = Prompts::full_answer(&tok, &q.question);
+        let sp = SamplingParams { max_tokens: 64, ..Default::default() };
+        let a = b.generate("qwen7b-sim", &p, &sp).unwrap();
+        let bb = b.generate("qwen7b-sim", &p, &sp).unwrap();
+        assert_eq!(a.tokens, bb.tokens);
+    }
+}

@@ -1,0 +1,167 @@
+//! Job dispatching (paper Algorithm 1): multi-list scheduling by expected
+//! answer length.
+//!
+//! Expansion jobs enter length-bucketed lists; an idle edge device pulls a
+//! *batch* from the currently longest list, so co-scheduled sequences have
+//! similar lengths (mitigating straggler waste — the paper's motivation for
+//! multi-list over a single FIFO).
+
+use std::collections::VecDeque;
+
+use crate::simclock::SimTime;
+
+/// One queued expansion job.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub rid: usize,
+    /// expected full-answer length l_i (the bucketing key)
+    pub expected_len: usize,
+    /// sketch sentences to expand (token ids per sentence)
+    pub sentences: Vec<Vec<u32>>,
+    /// full sketch (context for the expansion prompt)
+    pub full_sketch: Vec<u32>,
+    pub question: Vec<u32>,
+    pub enqueued_at: SimTime,
+    /// how many ensemble replicas of this job remain to be launched
+    pub replicas_left: usize,
+}
+
+/// Length-bucketed multi-list queue.
+#[derive(Clone, Debug)]
+pub struct MultiListQueue {
+    /// ascending upper bounds; last bucket is unbounded
+    bounds: Vec<usize>,
+    lists: Vec<VecDeque<Job>>,
+    /// optional total-capacity cap (Fig. 13's job-queue length knob);
+    /// pushes beyond it are rejected so the scheduler falls back to Full.
+    pub capacity: usize,
+}
+
+impl MultiListQueue {
+    pub fn new(bounds: Vec<usize>, capacity: usize) -> Self {
+        let n = bounds.len() + 1;
+        MultiListQueue { bounds, lists: (0..n).map(|_| VecDeque::new()).collect(), capacity }
+    }
+
+    /// Paper defaults: buckets at 40/80/120 tokens, queue cap 4-8.
+    pub fn standard(capacity: usize) -> Self {
+        MultiListQueue::new(vec![40, 80, 120], capacity)
+    }
+
+    pub fn bucket_of(&self, expected_len: usize) -> usize {
+        self.bounds.iter().position(|&b| expected_len < b).unwrap_or(self.bounds.len())
+    }
+
+    /// Lines 3-6 of Algorithm 1. Returns false (rejecting the job) when the
+    /// queue is at capacity.
+    pub fn push(&mut self, job: Job) -> bool {
+        if self.len() >= self.capacity {
+            return false;
+        }
+        let b = self.bucket_of(job.expected_len);
+        self.lists[b].push_back(job);
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.lists.iter().map(VecDeque::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Σ over queued jobs of expected length (for the Eq. 2 backlog term).
+    pub fn backlog_tokens(&self) -> usize {
+        self.lists.iter().flatten().map(|j| j.expected_len).sum()
+    }
+
+    /// Lines 9-10 of Algorithm 1: take up to `max_n` jobs from the longest
+    /// list (FIFO within the list).
+    pub fn pull_batch(&mut self, max_n: usize) -> Vec<Job> {
+        if max_n == 0 {
+            return Vec::new();
+        }
+        let Some(li) = (0..self.lists.len()).max_by_key(|&i| self.lists[i].len()) else {
+            return Vec::new();
+        };
+        if self.lists[li].is_empty() {
+            return Vec::new();
+        }
+        let n = max_n.min(self.lists[li].len());
+        self.lists[li].drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(rid: usize, len: usize) -> Job {
+        Job {
+            rid,
+            expected_len: len,
+            sentences: vec![],
+            full_sketch: vec![],
+            question: vec![],
+            enqueued_at: 0.0,
+            replicas_left: 1,
+        }
+    }
+
+    #[test]
+    fn buckets_by_length() {
+        let q = MultiListQueue::standard(100);
+        assert_eq!(q.bucket_of(10), 0);
+        assert_eq!(q.bucket_of(40), 1);
+        assert_eq!(q.bucket_of(100), 2);
+        assert_eq!(q.bucket_of(500), 3);
+    }
+
+    #[test]
+    fn pulls_from_longest_list() {
+        let mut q = MultiListQueue::standard(100);
+        q.push(job(1, 10));
+        q.push(job(2, 100));
+        q.push(job(3, 101));
+        q.push(job(4, 102));
+        let batch = q.pull_batch(8);
+        // bucket [80,120) has 3 jobs -> pulled first
+        assert_eq!(batch.len(), 3);
+        assert!(batch.iter().all(|j| (80..120).contains(&j.expected_len)));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn batch_is_fifo_within_list() {
+        let mut q = MultiListQueue::standard(100);
+        for rid in 0..5 {
+            q.push(job(rid, 50));
+        }
+        let batch = q.pull_batch(3);
+        assert_eq!(batch.iter().map(|j| j.rid).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn capacity_rejects() {
+        let mut q = MultiListQueue::standard(2);
+        assert!(q.push(job(1, 10)));
+        assert!(q.push(job(2, 10)));
+        assert!(!q.push(job(3, 10)));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn backlog_sums_lengths() {
+        let mut q = MultiListQueue::standard(10);
+        q.push(job(1, 30));
+        q.push(job(2, 90));
+        assert_eq!(q.backlog_tokens(), 120);
+    }
+
+    #[test]
+    fn pull_empty_is_empty() {
+        let mut q = MultiListQueue::standard(10);
+        assert!(q.pull_batch(4).is_empty());
+    }
+}

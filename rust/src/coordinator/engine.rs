@@ -1,0 +1,836 @@
+//! The PICE serving engine: a discrete-event simulation of the cloud-edge
+//! testbed in which *text is generated for real* (via the pluggable
+//! [`TextBackend`]) while *time advances virtually* per the calibrated
+//! device/network models (DESIGN.md §2).
+//!
+//! One engine runs one scenario (cloud model, N edges, workload, policy) and
+//! produces per-request traces. The baselines (cloud-only / edge-only /
+//! routing) reuse the same event loop with different admission policies —
+//! exactly how the paper runs its comparisons on a fixed testbed.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use super::backend::TextBackend;
+use super::dispatch::{Job, MultiListQueue};
+use super::scheduler::{CloudScheduler, Mode as SchedMode, SchedInput};
+use super::selection::select_model;
+use crate::cluster::Cluster;
+use crate::corpus::workload::Workload;
+use crate::corpus::Corpus;
+use crate::ensemble::{select as ensemble_select, Candidate, ConfidenceWeights};
+use crate::metrics::{Mode, RequestTrace};
+use crate::models::{ModelInfo, Registry};
+use crate::network::Link;
+use crate::parallel::{batch_wall, plan_batch, EdgeCostModel};
+use crate::profiler::OfflineProfile;
+use crate::runtime::SamplingParams;
+use crate::simclock::{EventQueue, SimTime};
+use crate::sketch::{compress, split_sketch, Prompts};
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+/// Serving policy: PICE or one of the paper's baselines (§V-A).
+#[derive(Clone, Debug)]
+pub enum Policy {
+    Pice,
+    CloudOnly,
+    EdgeOnly,
+    /// Hybrid-LLM-style difficulty router: queries with predicted length
+    /// above the threshold go to the cloud, the rest to edge SLMs.
+    Routing { difficulty_threshold: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct EngineCfg {
+    pub cloud_model: String,
+    pub n_edges: usize,
+    pub link: Link,
+    pub policy: Policy,
+    /// max ensemble replicas per expansion job (1 = ensemble off)
+    pub ensemble_k: usize,
+    /// job-queue capacity (Fig. 13)
+    pub queue_cap: usize,
+    /// cap on cloud full-answer length, in SIM tokens (Fig. 3's knob)
+    pub cloud_max_tokens: usize,
+    /// simulated tokens per real picoLM token. The picoLM corpus answers are
+    /// ~50 real tokens; the paper's serving regime is ~500-token answers, so
+    /// scale 10 puts the simulated testbed in the paper's operating point
+    /// (cloud batch ~20 saturating at ~1.5x-batch RPM) while text stays real.
+    pub sim_token_scale: f64,
+    pub seed: u64,
+    pub scheduler: CloudScheduler,
+    pub confidence: ConfidenceWeights,
+    /// apply the RLAIF-fine-tuned sketch policy (per-category keep-fraction
+    /// learned by `finetune`); None = base sketching
+    pub sketch_keep_frac_override: Option<std::collections::BTreeMap<String, f64>>,
+}
+
+impl EngineCfg {
+    pub fn pice(cloud_model: &str) -> Self {
+        let mut scheduler = CloudScheduler::default();
+        scheduler.min_progressive_len = 250; // sim tokens (25 real words)
+        EngineCfg {
+            cloud_model: cloud_model.to_string(),
+            n_edges: 4,
+            link: Link::default_wan(),
+            policy: Policy::Pice,
+            ensemble_k: 3,
+            queue_cap: 8,
+            cloud_max_tokens: 1000,
+            sim_token_scale: 12.0,
+            seed: 17,
+            scheduler,
+            confidence: ConfidenceWeights::default(),
+            sketch_keep_frac_override: None,
+        }
+    }
+
+    pub fn with_policy(mut self, p: Policy) -> Self {
+        self.policy = p;
+        self
+    }
+}
+
+#[derive(Debug)]
+pub enum RunError {
+    /// the placement is infeasible (Table III's "OOM" cells)
+    Oom(String),
+    Backend(String),
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunError::Oom(m) => write!(f, "OOM: {m}"),
+            RunError::Backend(m) => write!(f, "backend: {m}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum Ev {
+    Arrive(usize),
+    CloudAdmit,
+    CloudDone { rid: usize, kind: CloudJobKind },
+    JobArriveAtQueue { rid: usize },
+    EdgePull { eid: usize },
+    EdgeDone { eid: usize, work: EdgeWork },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum CloudJobKind {
+    Full,
+    Sketch { level: usize },
+}
+
+/// Work a single edge completed: (rid, candidate) pairs.
+#[derive(Clone, Debug)]
+struct EdgeWork {
+    items: Vec<(usize, Candidate, usize /* edge tokens */)>,
+}
+
+struct EdgeState {
+    spec: crate::cluster::DeviceSpec,
+    current_model: String,
+    busy: bool,
+}
+
+struct Pending {
+    question_id: usize,
+    category: String,
+    arrival: SimTime,
+    predicted_len: usize,
+    mode: Mode,
+    sketch_level: usize,
+    cloud_start: SimTime,
+    cloud_done: SimTime,
+    edge_start: SimTime,
+    cloud_tokens: usize,
+    edge_tokens: usize,
+    sketch: Vec<u32>,
+    expected_sketch_len: usize,
+    candidates: Vec<Candidate>,
+    replicas_out: usize,
+    parallelism: usize,
+    done: bool,
+}
+
+pub struct Engine<'a> {
+    pub cfg: EngineCfg,
+    pub corpus: Arc<Corpus>,
+    pub tok: &'a Tokenizer,
+    pub registry: &'a Registry,
+    backend: &'a mut dyn TextBackend,
+    cluster: Cluster,
+    profile: OfflineProfile,
+    cost_coeff: f64,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        cfg: EngineCfg,
+        corpus: Arc<Corpus>,
+        tok: &'a Tokenizer,
+        registry: &'a Registry,
+        backend: &'a mut dyn TextBackend,
+    ) -> Result<Self, RunError> {
+        let cluster = Cluster::testbed(cfg.n_edges);
+        let cloud_info = registry
+            .get(&cfg.cloud_model)
+            .ok_or_else(|| RunError::Backend(format!("unknown model {}", cfg.cloud_model)))?;
+        if !cluster.cloud.fits(cloud_info) {
+            return Err(RunError::Oom(format!("{} does not fit the cloud node", cfg.cloud_model)));
+        }
+        let devices: Vec<&crate::cluster::DeviceSpec> =
+            std::iter::once(&cluster.cloud).chain(cluster.edges.iter()).collect();
+        let model_refs: Vec<&ModelInfo> = registry.models.iter().collect();
+        // profile the cloud at its serving batch so Eq. 2 compares against
+        // per-sequence latency under load (vLLM continuous batching)
+        let profile = OfflineProfile::profile_batched(&devices, &model_refs, 16);
+        // cost coefficient vs the strongest edge SLM (conservative default)
+        let slms = registry.slms_for(&cfg.cloud_model);
+        let cost_coeff = slms
+            .iter()
+            .filter_map(|s| {
+                profile.cost_coefficient(
+                    &cluster.cloud.name,
+                    &cfg.cloud_model,
+                    &cluster.edges.first().map(|e| e.name.clone()).unwrap_or_default(),
+                    &s.name,
+                )
+            })
+            .fold(f64::INFINITY, f64::min)
+            .min(10.0);
+        Ok(Engine { cfg, corpus, tok, registry, backend, cluster, profile, cost_coeff })
+    }
+
+    /// SLMs deployable for this scenario, ascending capability.
+    fn slms(&self) -> Vec<&ModelInfo> {
+        let mut v = self.registry.slms_for(&self.cfg.cloud_model);
+        v.sort_by(|a, b| a.sim_params_b().partial_cmp(&b.sim_params_b()).unwrap());
+        v
+    }
+
+    fn f_cloud(&self) -> crate::profiler::LatencyFit {
+        self.profile
+            .f(&self.cluster.cloud.name, &self.cfg.cloud_model)
+            .expect("cloud model profiled")
+    }
+
+    /// The LLM's response-length perception: reference length x the model's
+    /// Table-I bias x noise (the 32B model underestimates — §V-B).
+    fn predict_len(&self, qid: usize, rng: &mut Rng) -> usize {
+        let q = self.corpus.get(qid).expect("qid");
+        let info = self.registry.get(&self.cfg.cloud_model).unwrap();
+        let noise = (rng.normal() * 0.08).exp();
+        ((q.answer_len() as f64) * self.cfg.sim_token_scale * info.length_pred_bias * noise)
+            .round()
+            .max(1.0) as usize
+    }
+
+    /// Run the workload to completion; returns per-request traces.
+    pub fn run(&mut self, workload: &Workload) -> Result<Vec<RequestTrace>, RunError> {
+        // Edge-only feasibility: the paper places the *cloud* model on edges.
+        if matches!(self.cfg.policy, Policy::EdgeOnly) {
+            let info = self.registry.get(&self.cfg.cloud_model).unwrap();
+            let fits = self.cluster.edges.first().map(|e| e.fits(info)).unwrap_or(false);
+            if !fits {
+                return Err(RunError::Oom(format!(
+                    "{} does not fit a Jetson edge",
+                    self.cfg.cloud_model
+                )));
+            }
+        }
+
+        let mut rng = Rng::new(self.cfg.seed);
+        let slm_names: Vec<String> = self.slms().iter().map(|m| m.name.clone()).collect();
+        let mut edges: Vec<EdgeState> = self
+            .cluster
+            .edges
+            .iter()
+            .map(|spec| EdgeState {
+                spec: spec.clone(),
+                // round-robin initial SLM placement (paper: one model per device)
+                current_model: if matches!(self.cfg.policy, Policy::EdgeOnly) {
+                    self.cfg.cloud_model.clone()
+                } else if slm_names.is_empty() {
+                    self.cfg.cloud_model.clone()
+                } else {
+                    slm_names[0].clone()
+                },
+                busy: false,
+            })
+            .collect();
+        for (i, e) in edges.iter_mut().enumerate() {
+            if !matches!(self.cfg.policy, Policy::EdgeOnly) && !slm_names.is_empty() {
+                e.current_model = slm_names[i % slm_names.len()].clone();
+            }
+        }
+
+        let cloud_info = self.registry.get(&self.cfg.cloud_model).unwrap().clone();
+        let cloud_slots = self.cluster.cloud.max_batch(&cloud_info, 1000).max(1);
+        let f_cloud = self.f_cloud();
+
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut pend: Vec<Pending> = Vec::with_capacity(workload.requests.len());
+        for r in &workload.requests {
+            let qq = self.corpus.get(r.question_id).expect("qid");
+            pend.push(Pending {
+                question_id: r.question_id,
+                category: qq.category.clone(),
+                arrival: r.arrival_s,
+                predicted_len: 0,
+                mode: Mode::CloudFull,
+                sketch_level: 0,
+                cloud_start: 0.0,
+                cloud_done: 0.0,
+                edge_start: 0.0,
+                cloud_tokens: 0,
+                edge_tokens: 0,
+                sketch: Vec::new(),
+                expected_sketch_len: 0,
+                candidates: Vec::new(),
+                replicas_out: 0,
+                parallelism: 0,
+                done: false,
+            });
+            q.schedule(r.arrival_s, Ev::Arrive(r.rid));
+        }
+
+        // runtime monitor: EWMA of achieved edge expansion parallelism,
+        // fed back into the dynamic scheduler's Eq. 2 estimate
+        let mut ewma_parallelism: f64 = 1.0;
+        let mut cloud_pending: VecDeque<(usize, CloudJobKind)> = VecDeque::new();
+        let mut cloud_inflight: usize = 0;
+        let scale = self.cfg.sim_token_scale;
+        // PICE_SINGLE_FIFO=1 ablates Algorithm 1 into one FIFO list
+        let bounds: Vec<usize> = if std::env::var("PICE_SINGLE_FIFO").as_deref() == Ok("1") {
+            vec![]
+        } else {
+            [40.0, 80.0, 120.0].iter().map(|b| (b * scale) as usize).collect()
+        };
+        let mut jobq = MultiListQueue::new(bounds, self.cfg.queue_cap);
+        let mut enqueue_attempts: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::new();
+        let mut traces: Vec<Option<RequestTrace>> = (0..pend.len()).map(|_| None).collect();
+        // edge-only/routing: per-edge FIFO of full-answer jobs
+        let mut edge_fifo: Vec<VecDeque<usize>> = (0..edges.len()).map(|_| VecDeque::new()).collect();
+
+        while let Some((now, ev)) = q.pop() {
+            match ev {
+                Ev::Arrive(rid) => {
+                    let predicted = self.predict_len(pend[rid].question_id, &mut rng);
+                    pend[rid].predicted_len = predicted;
+                    match &self.cfg.policy {
+                        Policy::CloudOnly => {
+                            cloud_pending.push_back((rid, CloudJobKind::Full));
+                            q.schedule(now, Ev::CloudAdmit);
+                        }
+                        Policy::EdgeOnly => {
+                            pend[rid].mode = Mode::EdgeFull;
+                            let eid = (0..edges.len())
+                                .min_by_key(|&i| edge_fifo[i].len())
+                                .unwrap_or(0);
+                            edge_fifo[eid].push_back(rid);
+                            q.schedule(now, Ev::EdgePull { eid });
+                        }
+                        Policy::Routing { difficulty_threshold } => {
+                            // difficulty proxy: predicted length + jitter (an
+                            // imperfect router, as in the paper's critique)
+                            let difficulty =
+                                predicted as f64 * (1.0 + rng.normal() * 0.25);
+                            if difficulty > *difficulty_threshold {
+                                cloud_pending.push_back((rid, CloudJobKind::Full));
+                                q.schedule(now, Ev::CloudAdmit);
+                            } else {
+                                pend[rid].mode = Mode::EdgeFull;
+                                let eid = (0..edges.len())
+                                    .min_by_key(|&i| edge_fifo[i].len())
+                                    .unwrap_or(0);
+                                edge_fifo[eid].push_back(rid);
+                                q.schedule(now, Ev::EdgePull { eid });
+                            }
+                        }
+                        Policy::Pice => {
+                            let slms = self.slms();
+                            let best_cap =
+                                slms.iter().map(|m| m.mmlu).fold(0.0, f64::max);
+                            let backlog_tokens = jobq.backlog_tokens();
+                            let backlog_s = self.cost_coeff
+                                * f_cloud.eval(backlog_tokens)
+                                * (backlog_tokens > 0) as usize as f64;
+                            let inp = SchedInput {
+                                predicted_len: predicted,
+                                f_cloud,
+                                cost_coeff: self.cost_coeff,
+                                transfer_s: |n| 0.02 + n as f64 * 5e-7,
+                                backlog_s,
+                                n_edges: edges.len(),
+                                best_slm_capability: best_cap,
+                                parallel_hint: ewma_parallelism,
+                            };
+                            let d = self.cfg.scheduler.decide(&inp);
+                            if d.mode == SchedMode::Full && predicted >= self.cfg.scheduler.min_progressive_len {
+                                crate::debug!(
+                                    "rid={rid} FULL pred={predicted} backlog={backlog_s:.1} hint={ewma_parallelism:.1} e2e_l3={:.1} budget={:.1}",
+                                    self.cfg.scheduler.e2e_estimate(&inp, self.cfg.scheduler.levels[3]),
+                                    f_cloud.eval(predicted)
+                                );
+                            }
+                            if d.mode == SchedMode::Progressive && !slms.is_empty() {
+                                pend[rid].mode = Mode::Progressive;
+                                pend[rid].sketch_level = d.level.level;
+                                pend[rid].expected_sketch_len = d.expected_sketch_len;
+                                cloud_pending
+                                    .push_back((rid, CloudJobKind::Sketch { level: d.level.level }));
+                            } else {
+                                cloud_pending.push_back((rid, CloudJobKind::Full));
+                            }
+                            q.schedule(now, Ev::CloudAdmit);
+                        }
+                    }
+                }
+
+                Ev::CloudAdmit => {
+                    while cloud_inflight < cloud_slots {
+                        let Some((rid, kind)) = cloud_pending.pop_front() else { break };
+                        pend[rid].cloud_start = now;
+                        let question = self.corpus.get(pend[rid].question_id).unwrap().question.clone();
+                        let b = cloud_inflight + 1;
+                        let (tokens, dur) = match &kind {
+                            CloudJobKind::Full => {
+                                let prompt = Prompts::full_answer(self.tok, &question);
+                                let real_cap =
+                                    ((self.cfg.cloud_max_tokens as f64 / scale).round() as usize).max(4);
+                                let out = self
+                                    .backend
+                                    .generate(
+                                        &self.cfg.cloud_model,
+                                        &prompt,
+                                        &SamplingParams {
+                                            max_tokens: real_cap,
+                                            seed: self.cfg.seed ^ rid as u64,
+                                            ..Default::default()
+                                        },
+                                    )
+                                    .map_err(RunError::Backend)?;
+                                let n_sim = (out.tokens.len() as f64 * scale) as usize;
+                                pend[rid].cloud_tokens = n_sim;
+                                // final answer = cloud output minus <eos>
+                                let mut ans = out.tokens;
+                                if ans.last() == Some(&self.tok.specials.eos) {
+                                    ans.pop();
+                                }
+                                pend[rid].candidates = vec![Candidate {
+                                    model: self.cfg.cloud_model.clone(),
+                                    tokens: ans,
+                                    logps: out.logps,
+                                }];
+                                let d = self
+                                    .cluster
+                                    .cloud
+                                    .prefill_time_s(&cloud_info, (prompt.len() as f64 * scale) as usize, b)
+                                    + self.cluster.cloud.gen_time_s(&cloud_info, n_sim, b);
+                                (n_sim, d)
+                            }
+                            CloudJobKind::Sketch { level } => {
+                                let prompt = Prompts::sketch(self.tok, &question);
+                                let out = self
+                                    .backend
+                                    .generate(
+                                        &self.cfg.cloud_model,
+                                        &prompt,
+                                        &SamplingParams {
+                                            max_tokens: 60,
+                                            seed: self.cfg.seed ^ rid as u64,
+                                            ..Default::default()
+                                        },
+                                    )
+                                    .map_err(RunError::Backend)?;
+                                let mut sk = out.tokens;
+                                if sk.last() == Some(&self.tok.specials.eos) {
+                                    sk.pop();
+                                }
+                                // apply the level compression per sentence
+                                let lv = self
+                                    .cfg
+                                    .scheduler
+                                    .levels
+                                    .iter()
+                                    .copied()
+                                    .find(|l| l.level == *level)
+                                    .unwrap_or(self.cfg.scheduler.levels[1]);
+                                let keep = self
+                                    .cfg
+                                    .sketch_keep_frac_override
+                                    .as_ref()
+                                    .and_then(|m| m.get(&pend[rid].category).copied());
+                                let sents = split_sketch(&sk, self.tok.specials.semicolon);
+                                let mut out_sk: Vec<u32> = Vec::new();
+                                for (i, s) in sents.iter().enumerate() {
+                                    if i > 0 {
+                                        out_sk.push(self.tok.specials.semicolon);
+                                    }
+                                    let lvl = match keep {
+                                        Some(kf) => crate::sketch::SketchLevel { level: lv.level, keep_frac: kf },
+                                        None => lv,
+                                    };
+                                    out_sk.extend(compress(s, lvl));
+                                }
+                                let n_sim = (out_sk.len() as f64 * scale) as usize;
+                                pend[rid].cloud_tokens = n_sim;
+                                pend[rid].sketch = out_sk;
+                                let d = self
+                                    .cluster
+                                    .cloud
+                                    .prefill_time_s(&cloud_info, (prompt.len() as f64 * scale) as usize, b)
+                                    + self.cluster.cloud.gen_time_s(&cloud_info, n_sim, b);
+                                (n_sim, d)
+                            }
+                        };
+                        let _ = tokens;
+                        cloud_inflight += 1;
+                        q.schedule(now + dur, Ev::CloudDone { rid, kind });
+                    }
+                }
+
+                Ev::CloudDone { rid, kind } => {
+                    cloud_inflight = cloud_inflight.saturating_sub(1);
+                    pend[rid].cloud_done = now;
+                    q.schedule(now, Ev::CloudAdmit);
+                    match kind {
+                        CloudJobKind::Full => {
+                            self.finalize(rid, now, &mut pend, &mut traces);
+                        }
+                        CloudJobKind::Sketch { .. } => {
+                            let delta = self
+                                .cfg
+                                .link
+                                .transfer_tokens_s((pend[rid].sketch.len() as f64 * scale) as usize);
+                            q.schedule(now + delta, Ev::JobArriveAtQueue { rid });
+                        }
+                    }
+                }
+
+                Ev::JobArriveAtQueue { rid } => {
+                    let attempts = enqueue_attempts.entry(rid).or_insert(0usize);
+                    if jobq.len() >= self.cfg.queue_cap && *attempts < 5 {
+                        // queue full: retry shortly instead of degrading
+                        // (bounded so latency can't grow unboundedly)
+                        *attempts += 1;
+                        q.schedule_in(2.0, Ev::JobArriveAtQueue { rid });
+                        continue;
+                    }
+                    let question =
+                        self.corpus.get(pend[rid].question_id).unwrap().question.clone();
+                    let sents = split_sketch(&pend[rid].sketch, self.tok.specials.semicolon);
+                    let replicas = self.cfg.ensemble_k.max(1);
+                    pend[rid].replicas_out = replicas;
+                    let job = Job {
+                        rid,
+                        expected_len: pend[rid].predicted_len,
+                        sentences: sents,
+                        full_sketch: pend[rid].sketch.clone(),
+                        question,
+                        enqueued_at: now,
+                        replicas_left: replicas,
+                    };
+                    if !jobq.push(job) {
+                        // queue full: fall back — answer is the sketch itself
+                        // (degenerate; counted against PICE's quality)
+                        pend[rid].candidates = vec![Candidate {
+                            model: self.cfg.cloud_model.clone(),
+                            tokens: pend[rid].sketch.clone(),
+                            logps: vec![-1.0; pend[rid].sketch.len()],
+                        }];
+                        self.finalize(rid, now, &mut pend, &mut traces);
+                        continue;
+                    }
+                    for eid in 0..edges.len() {
+                        if !edges[eid].busy {
+                            q.schedule(now, Ev::EdgePull { eid });
+                        }
+                    }
+                }
+
+                Ev::EdgePull { eid } => {
+                    if edges[eid].busy {
+                        continue;
+                    }
+                    // Edge-only / routed-easy full answers first.
+                    if let Some(rid) = edge_fifo[eid].pop_front() {
+                        edges[eid].busy = true;
+                        pend[rid].edge_start = now;
+                        let question =
+                            self.corpus.get(pend[rid].question_id).unwrap().question.clone();
+                        let model_name = edges[eid].current_model.clone();
+                        let info = self.registry.get(&model_name).unwrap().clone();
+                        let prompt = Prompts::full_answer(self.tok, &question);
+                        let real_cap =
+                            ((self.cfg.cloud_max_tokens as f64 / scale).round() as usize).max(4);
+                        let out = self
+                            .backend
+                            .generate(
+                                &model_name,
+                                &prompt,
+                                &SamplingParams {
+                                    max_tokens: real_cap,
+                                    seed: self.cfg.seed ^ (rid as u64) << 1,
+                                    ..Default::default()
+                                },
+                            )
+                            .map_err(RunError::Backend)?;
+                        let mut ans = out.tokens;
+                        if ans.last() == Some(&self.tok.specials.eos) {
+                            ans.pop();
+                        }
+                        let n_sim = (ans.len() as f64 * scale) as usize;
+                        let dur = edges[eid]
+                            .spec
+                            .prefill_time_s(&info, (prompt.len() as f64 * scale) as usize, 1)
+                            + edges[eid].spec.gen_time_s(&info, n_sim, 1);
+                        let work = EdgeWork {
+                            items: vec![(
+                                rid,
+                                Candidate { model: model_name, tokens: ans, logps: out.logps },
+                                n_sim,
+                            )],
+                        };
+                        q.schedule(now + dur, Ev::EdgeDone { eid, work });
+                        continue;
+                    }
+                    if jobq.is_empty() {
+                        continue;
+                    }
+                    // Algorithm 1: pull a batch from the longest list.
+                    let info0 = self.registry.get(&edges[eid].current_model).unwrap();
+                    let cap = edges[eid].spec.max_batch(info0, 600).clamp(1, 4);
+                    let mut batch = jobq.pull_batch(cap);
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    edges[eid].busy = true;
+                    // Ensemble replication: each queue entry carries the number
+                    // of pending candidate executions (replicas_left). This pull
+                    // runs ONE execution per job; surplus replicas are re-queued
+                    // only if *idle* edges can absorb them (never delaying the
+                    // primary expansion), and discarded otherwise.
+                    let idle_others: Vec<usize> =
+                        (0..edges.len()).filter(|&e2| e2 != eid && !edges[e2].busy).collect();
+                    let mut spare = idle_others.len();
+                    for job in batch.iter_mut() {
+                        let surplus = job.replicas_left.saturating_sub(1);
+                        let extra = surplus.min(spare);
+                        let mut discarded = surplus - extra;
+                        if extra > 0 {
+                            let mut rep = job.clone();
+                            rep.replicas_left = extra;
+                            if jobq.push(rep) {
+                                spare -= extra;
+                                for &e2 in &idle_others {
+                                    q.schedule(now, Ev::EdgePull { eid: e2 });
+                                }
+                            } else {
+                                discarded += extra;
+                            }
+                        }
+                        pend[job.rid].replicas_out =
+                            pend[job.rid].replicas_out.saturating_sub(discarded);
+                        job.replicas_left = 1;
+                        if pend[job.rid].edge_start == 0.0 {
+                            pend[job.rid].edge_start = now;
+                        }
+                    }
+
+                    // Algorithm 2 on the first job's budget (batch-shared model)
+                    let slm_refs = self.slms();
+                    let j0 = &batch[0];
+                    let budget = (f_cloud.eval(j0.expected_len)
+                        - f_cloud.eval((j0.full_sketch.len() as f64 * scale) as usize))
+                    .max(0.05);
+                    let sel = if slm_refs.is_empty() {
+                        super::selection::SelectionOutcome {
+                            model: edges[eid].current_model.clone(),
+                            switched: false,
+                            switch_cost_s: 0.0,
+                        }
+                    } else {
+                        select_model(
+                            &edges[eid].spec,
+                            &slm_refs,
+                            &edges[eid].current_model,
+                            j0.expected_len,
+                            ((j0.full_sketch.len() + j0.question.len()) as f64 * scale) as usize,
+                            budget,
+                            jobq.len(),
+                            self.cfg.queue_cap,
+                        )
+                    };
+                    edges[eid].current_model = sel.model.clone();
+                    let info = self.registry.get(&sel.model).unwrap().clone();
+
+                    // Execution optimizer: batch-level lane planning. All
+                    // jobs' lanes run concurrently on this device; the
+                    // binary-tree merge balances per-job parallelism against
+                    // global token-rate contention + prompt overhead (Fig. 7a).
+                    let info_cost = EdgeCostModel {
+                        token_s: edges[eid].spec.token_latency_s(&info, 1),
+                        batch_slowdown: crate::cluster::BATCH_TOKEN_SLOWDOWN,
+                        prompt_tokens: batch
+                            .iter()
+                            .map(|j| ((j.question.len() + j.full_sketch.len() + 4) as f64 * scale) as usize)
+                            .max()
+                            .unwrap_or(0),
+                        prefill_speedup: 8.0,
+                    };
+                    let est_lens: Vec<Vec<usize>> = batch
+                        .iter()
+                        .map(|job| {
+                            job.sentences
+                                .iter()
+                                .map(|s| (((s.len() as f64 * 2.2).ceil() + 2.0) * scale) as usize)
+                                .collect()
+                        })
+                        .collect();
+                    let est_refs: Vec<&[usize]> = est_lens.iter().map(|v| v.as_slice()).collect();
+                    let p_mem = edges[eid]
+                        .spec
+                        .max_batch(&info, info_cost.prompt_tokens + (40.0 * scale) as usize)
+                        .max(1);
+                    let (plans, _) = plan_batch(&est_refs, p_mem, &info_cost);
+
+                    // Generate the real expansions, then charge simulated time
+                    // using the chosen plans over the *actual* lengths.
+                    let mut items = Vec::new();
+                    let mut real_lens_per_job: Vec<Vec<usize>> = Vec::with_capacity(batch.len());
+                    for job in &batch {
+                        let mut expansion: Vec<u32> = Vec::new();
+                        let mut logps: Vec<f64> = Vec::new();
+                        let mut real_lens = vec![0usize; job.sentences.len()];
+                        for (si, sent) in job.sentences.iter().enumerate() {
+                            let prompt = Prompts::expand(
+                                self.tok,
+                                &job.question,
+                                &job.full_sketch,
+                                sent,
+                            );
+                            let out = self
+                                .backend
+                                .generate(
+                                    &sel.model,
+                                    &prompt,
+                                    &SamplingParams {
+                                        max_tokens: 24,
+                                        stop_token: Some(self.tok.specials.period),
+                                        seed: self.cfg.seed
+                                            ^ ((job.rid as u64) << 8)
+                                            ^ si as u64,
+                                        ..Default::default()
+                                    },
+                                )
+                                .map_err(RunError::Backend)?;
+                            let mut toks = out.tokens;
+                            if toks.last() == Some(&self.tok.specials.eos) {
+                                toks.pop();
+                            }
+                            real_lens[si] = (toks.len() as f64 * scale) as usize;
+                            expansion.extend_from_slice(&toks);
+                            logps.extend_from_slice(&out.logps);
+                        }
+                        let n_edge_tokens: usize = real_lens.iter().sum();
+                        items.push((
+                            job.rid,
+                            Candidate { model: sel.model.clone(), tokens: expansion, logps },
+                            n_edge_tokens,
+                        ));
+                        real_lens_per_job.push(real_lens);
+                    }
+                    let mean_lanes = plans.iter().map(Vec::len).sum::<usize>() as f64
+                        / plans.len().max(1) as f64;
+                    ewma_parallelism = 0.8 * ewma_parallelism + 0.2 * mean_lanes;
+                    for (job, plan) in batch.iter().zip(&plans) {
+                        pend[job.rid].parallelism = pend[job.rid].parallelism.max(plan.len());
+                    }
+                    let real_refs: Vec<&[usize]> =
+                        real_lens_per_job.iter().map(|v| v.as_slice()).collect();
+                    let wall = batch_wall(&plans, &real_refs, &info_cost);
+                    let total_dur = sel.switch_cost_s + wall;
+                    crate::debug!(
+                        "edge{eid} t={now:.1} batch={} model={} lanes={:?} switch={:.1} wall={wall:.1}",
+                        batch.len(), sel.model,
+                        plans.iter().map(Vec::len).collect::<Vec<_>>(), sel.switch_cost_s
+                    );
+                    q.schedule(now + total_dur, Ev::EdgeDone { eid, work: EdgeWork { items } });
+                }
+
+                Ev::EdgeDone { eid, work } => {
+                    edges[eid].busy = false;
+                    for (rid, cand, edge_tokens) in work.items {
+                        pend[rid].edge_tokens += edge_tokens;
+                        pend[rid].candidates.push(cand);
+                        pend[rid].replicas_out = pend[rid].replicas_out.saturating_sub(1);
+                        if pend[rid].replicas_out == 0 && !pend[rid].done {
+                            self.finalize(rid, now, &mut pend, &mut traces);
+                        }
+                    }
+                    q.schedule(now, Ev::EdgePull { eid });
+                }
+            }
+        }
+
+        Ok(traces.into_iter().flatten().collect())
+    }
+
+    /// Ensemble-select and close out a request.
+    fn finalize(
+        &self,
+        rid: usize,
+        now: SimTime,
+        pend: &mut [Pending],
+        traces: &mut [Option<RequestTrace>],
+    ) {
+        let p = &mut pend[rid];
+        p.done = true;
+        let expected_real =
+            ((p.predicted_len as f64 / self.cfg.sim_token_scale).round() as usize).max(1);
+        let (winner, confidence) = if p.candidates.len() > 1 {
+            let (i, c) = ensemble_select(
+                &p.candidates,
+                &p.sketch,
+                expected_real,
+                self.cfg.confidence,
+            )
+            .unwrap_or((0, 0.0));
+            (i, c)
+        } else {
+            (0, 1.0)
+        };
+        let cand = p.candidates.get(winner).cloned().unwrap_or(Candidate {
+            model: String::new(),
+            tokens: Vec::new(),
+            logps: Vec::new(),
+        });
+        traces[rid] = Some(RequestTrace {
+            rid,
+            question_id: p.question_id,
+            category: p.category.clone(),
+            mode: p.mode,
+            sketch_level: p.sketch_level,
+            predicted_len: p.predicted_len,
+            cloud_tokens: p.cloud_tokens,
+            edge_tokens: p.edge_tokens,
+            answer: cand.tokens,
+            arrival: p.arrival,
+            cloud_start: p.cloud_start,
+            cloud_done: p.cloud_done,
+            edge_start: p.edge_start,
+            done: now,
+            winner_model: cand.model,
+            confidence,
+            parallelism: p.parallelism,
+        });
+    }
+}

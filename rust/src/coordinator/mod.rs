@@ -1,0 +1,17 @@
+//! The PICE coordinator — the paper's system contribution.
+//!
+//! * [`scheduler`] — cloud-side dynamic sketch-level scheduling (Eq. 2)
+//! * [`dispatch`]  — multi-list job dispatching (Algorithm 1)
+//! * [`selection`] — edge-side online SLM selection (Algorithm 2)
+//! * [`slo`]       — lexicographic multi-objective SLO policy
+//! * [`engine`]    — the serving event loop over the simulated testbed
+//! * [`backend`]   — pluggable text generation (PJRT real / surrogate)
+
+pub mod backend;
+pub mod dispatch;
+pub mod engine;
+pub mod scheduler;
+pub mod selection;
+pub mod slo;
+
+pub use engine::{Engine, EngineCfg, Policy, RunError};

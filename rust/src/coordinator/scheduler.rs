@@ -1,0 +1,245 @@
+//! Cloud-side dynamic scheduling (paper §IV-A2).
+//!
+//! Per query, decide *whether* to run progressive inference and at *which*
+//! sketch level, using the end-to-end latency constraint (Eq. 2):
+//!
+//!   f(|r_i|) + Δ(r_i) + c·f(l_i) + Σ_{r_j∈Q} c·f(l_j) / (p·N)  ≤  f(l_i)
+//!
+//! with f(.) the offline-profiled cloud latency line, c the cost
+//! coefficient, Δ the network transfer, and the sum the job-queue backlog.
+//! Edge latency is estimated conservatively with p = 1 (paper). Among
+//! feasible levels the lexicographic SLO policy picks the operating point;
+//! more capable SLMs admit shorter sketches.
+
+use super::slo::SloPolicy;
+use crate::profiler::LatencyFit;
+use crate::simclock::SimTime;
+use crate::sketch::{expected_sketch_len, SketchLevel};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Full,
+    Progressive,
+}
+
+#[derive(Clone, Debug)]
+pub struct Decision {
+    pub mode: Mode,
+    pub level: SketchLevel,
+    pub expected_sketch_len: usize,
+}
+
+/// Runtime inputs to one scheduling decision.
+#[derive(Clone, Debug)]
+pub struct SchedInput {
+    /// predicted response length l_i (the LLM's length perception)
+    pub predicted_len: usize,
+    /// offline fit of the cloud LLM latency f(l)
+    pub f_cloud: LatencyFit,
+    /// cost coefficient c for the *current* best SLM/edge pair
+    pub cost_coeff: f64,
+    /// network transfer time for a sketch of the candidate size
+    pub transfer_s: fn(usize) -> SimTime,
+    /// backlog: Σ c·f(l_j) over queued jobs
+    pub backlog_s: SimTime,
+    /// number of edge devices N
+    pub n_edges: usize,
+    /// MMLU-like capability of the strongest available SLM (0-100)
+    pub best_slm_capability: f64,
+    /// runtime-observed edge expansion parallelism (EWMA from the profiler's
+    /// monitor). 1.0 = the paper's conservative default; the *dynamic*
+    /// scheduler feeds the achieved degree back in (Fig. 6's gap over
+    /// static scheduling comes largely from this).
+    pub parallel_hint: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct CloudScheduler {
+    pub levels: Vec<SketchLevel>,
+    pub policy: SloPolicy,
+    /// static mode (Fig. 6 ablation): fixed level-1 sketching by predicted
+    /// length only, ignoring runtime conditions.
+    pub static_mode: bool,
+    /// minimum predicted length for progressive inference to be worthwhile
+    /// (short answers are answered directly — paper workflow step 2a).
+    pub min_progressive_len: usize,
+}
+
+impl Default for CloudScheduler {
+    fn default() -> Self {
+        CloudScheduler {
+            levels: crate::sketch::levels(),
+            policy: SloPolicy::default(),
+            static_mode: false,
+            min_progressive_len: 25,
+        }
+    }
+}
+
+impl CloudScheduler {
+    /// Eq. 2 left-hand side for a candidate level.
+    pub fn e2e_estimate(&self, inp: &SchedInput, level: SketchLevel) -> SimTime {
+        let sk_len = expected_sketch_len(inp.predicted_len, level);
+        let f_sketch = inp.f_cloud.eval(sk_len);
+        let delta = (inp.transfer_s)(sk_len);
+        let p = inp.parallel_hint.max(1.0);
+        // edge pass at the observed parallelism (p = 1 when no data yet —
+        // the paper's conservative default)
+        let edge = inp.cost_coeff * inp.f_cloud.eval(inp.predicted_len) / p;
+        let wait = inp.backlog_s / (p * inp.n_edges.max(1) as f64);
+        f_sketch + delta + edge + wait
+    }
+
+    pub fn decide(&self, inp: &SchedInput) -> Decision {
+        let full = Decision {
+            mode: Mode::Full,
+            level: self.levels[0],
+            expected_sketch_len: inp.predicted_len,
+        };
+        if inp.predicted_len < self.min_progressive_len || inp.n_edges == 0 {
+            return full;
+        }
+        if self.static_mode {
+            // fixed rule: always level-1 sketch for long answers
+            let level = self.levels[1];
+            return Decision {
+                mode: Mode::Progressive,
+                level,
+                expected_sketch_len: expected_sketch_len(inp.predicted_len, level),
+            };
+        }
+
+        let budget = inp.f_cloud.eval(inp.predicted_len) * self.policy.latency_slack;
+        let feasible: Vec<SketchLevel> = self
+            .levels
+            .iter()
+            .copied()
+            .filter(|lv| lv.level > 0 && self.e2e_estimate(inp, *lv) <= budget)
+            .collect();
+        if feasible.is_empty() {
+            // "If no level above 0 meets inequality (2), forgo progressive
+            // inference and request a complete response from the LLM."
+            return full;
+        }
+        // Lexicographic choice among feasible levels. Estimated metric
+        // vectors [error, -throughput, latency, server, edge]:
+        //  error       — shorter sketches leave less signal for the SLM;
+        //                stronger SLMs (capability) dampen the effect.
+        //  throughput  — server tokens saved per request.
+        //  latency     — Eq. 2 estimate.
+        let cap = (inp.best_slm_capability / 100.0).clamp(0.0, 1.0);
+        let vecs: Vec<[f64; 5]> = feasible
+            .iter()
+            .map(|lv| {
+                let sk = expected_sketch_len(inp.predicted_len, *lv) as f64;
+                let err = (1.0 - lv.keep_frac * 0.7) * (1.0 - 0.6 * cap);
+                let served_rate = 1.0 / sk.max(1.0); // queries/server-token
+                [err, -served_rate, self.e2e_estimate(inp, *lv), sk, inp.predicted_len as f64]
+            })
+            .collect();
+        let pick = self.policy.lex_select(&vecs).unwrap_or(0);
+        let level = feasible[pick];
+        Decision {
+            mode: Mode::Progressive,
+            level,
+            expected_sketch_len: expected_sketch_len(inp.predicted_len, level),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_input() -> SchedInput {
+        SchedInput {
+            predicted_len: 100,
+            f_cloud: LatencyFit { a: 0.2, b: 0.055 }, // ~18 tok/s cloud
+            cost_coeff: 0.35,
+            transfer_s: |n| 0.02 + n as f64 * 1e-5,
+            backlog_s: 0.0,
+            n_edges: 4,
+            best_slm_capability: 74.0,
+            parallel_hint: 1.0,
+        }
+    }
+
+    #[test]
+    fn long_answers_go_progressive() {
+        let s = CloudScheduler::default();
+        let d = s.decide(&base_input());
+        assert_eq!(d.mode, Mode::Progressive);
+        assert!(d.level.level >= 1);
+        assert!(d.expected_sketch_len < 100);
+    }
+
+    #[test]
+    fn short_answers_stay_full() {
+        let s = CloudScheduler::default();
+        let d = s.decide(&SchedInput { predicted_len: 10, ..base_input() });
+        assert_eq!(d.mode, Mode::Full);
+    }
+
+    #[test]
+    fn slow_edge_forgoes_progressive() {
+        let s = CloudScheduler::default();
+        // c = 3: edge pass alone is 3x the cloud budget
+        let d = s.decide(&SchedInput { cost_coeff: 3.0, ..base_input() });
+        assert_eq!(d.mode, Mode::Full);
+    }
+
+    #[test]
+    fn deep_backlog_forgoes_progressive() {
+        let s = CloudScheduler::default();
+        let d = s.decide(&SchedInput { backlog_s: 500.0, ..base_input() });
+        assert_eq!(d.mode, Mode::Full);
+    }
+
+    #[test]
+    fn no_edges_full() {
+        let s = CloudScheduler::default();
+        let d = s.decide(&SchedInput { n_edges: 0, ..base_input() });
+        assert_eq!(d.mode, Mode::Full);
+    }
+
+    #[test]
+    fn static_mode_ignores_backlog() {
+        let s = CloudScheduler { static_mode: true, ..Default::default() };
+        let d = s.decide(&SchedInput { backlog_s: 500.0, ..base_input() });
+        assert_eq!(d.mode, Mode::Progressive);
+        assert_eq!(d.level.level, 1);
+    }
+
+    #[test]
+    fn capable_slm_gets_shorter_sketch() {
+        // with server-cost prioritized, a capable SLM admits a shorter sketch
+        let mut s = CloudScheduler::default();
+        s.policy.order = vec![
+            super::super::slo::Metric::ServerCost,
+            super::super::slo::Metric::Error,
+        ];
+        let weak = s.decide(&SchedInput { best_slm_capability: 40.0, ..base_input() });
+        let strong = s.decide(&SchedInput { best_slm_capability: 95.0, ..base_input() });
+        assert!(strong.expected_sketch_len <= weak.expected_sketch_len);
+    }
+
+    #[test]
+    fn parallel_hint_enables_progressive() {
+        // a backlog that forgoes progressive at p=1 becomes feasible once
+        // the monitor reports real parallelism
+        let s = CloudScheduler::default();
+        let slow = SchedInput { backlog_s: 40.0, cost_coeff: 0.9, ..base_input() };
+        assert_eq!(s.decide(&slow).mode, Mode::Full);
+        let fast = SchedInput { parallel_hint: 5.0, ..slow };
+        assert_eq!(s.decide(&fast).mode, Mode::Progressive);
+    }
+
+    #[test]
+    fn e2e_monotone_in_backlog() {
+        let s = CloudScheduler::default();
+        let lv = s.levels[1];
+        let a = s.e2e_estimate(&base_input(), lv);
+        let b = s.e2e_estimate(&SchedInput { backlog_s: 10.0, ..base_input() }, lv);
+        assert!(b > a);
+    }
+}

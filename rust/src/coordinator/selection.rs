@@ -1,0 +1,153 @@
+//! Edge-side online model selection (paper Algorithm 2).
+//!
+//! Each edge device keeps a *current* SLM. Before executing a task it
+//! estimates the remaining processing time τ with the current model:
+//!   * τ over budget  -> switch DOWN to a smaller SLM (hard constraint);
+//!   * τ under budget and the job queue is short -> consider upgrading to a
+//!     larger (higher-quality) SLM, accounting for the switch cost.
+//! Switch churn is bounded by only upgrading when |JobQueue| < maximum.
+
+use crate::cluster::DeviceSpec;
+use crate::models::ModelInfo;
+use crate::simclock::SimTime;
+
+#[derive(Clone, Debug)]
+pub struct SelectionOutcome {
+    pub model: String,
+    pub switched: bool,
+    /// model-loading time paid when switching
+    pub switch_cost_s: SimTime,
+}
+
+/// Estimated time for `model` on `dev` to expand a task of `tokens` output
+/// tokens (parallelism-1 conservative estimate, matching the scheduler).
+pub fn task_time_s(dev: &DeviceSpec, model: &ModelInfo, tokens: usize, prompt: usize) -> SimTime {
+    dev.prefill_time_s(model, prompt, 1) + dev.gen_time_s(model, tokens, 1)
+}
+
+/// Algorithm 2. `candidates` must be edge-deployable SLMs sorted by
+/// ascending capability (size). `budget_s` = f(l_i) − f(|r_i|).
+pub fn select_model(
+    dev: &DeviceSpec,
+    candidates: &[&ModelInfo],
+    current: &str,
+    task_tokens: usize,
+    prompt_tokens: usize,
+    budget_s: SimTime,
+    queue_len: usize,
+    queue_max: usize,
+) -> SelectionOutcome {
+    let cur_idx = candidates.iter().position(|m| m.name == current).unwrap_or(0);
+    let cur = candidates[cur_idx];
+    let tau = task_time_s(dev, cur, task_tokens, prompt_tokens);
+
+    if tau > budget_s {
+        // lines 3-4: must switch to a smaller SLM; take the largest one that
+        // meets the budget including its load cost, else the smallest.
+        for i in (0..cur_idx).rev() {
+            let m = candidates[i];
+            let cost = dev.model_load_s(m);
+            if task_time_s(dev, m, task_tokens, prompt_tokens) + cost <= budget_s {
+                return SelectionOutcome { model: m.name.clone(), switched: true, switch_cost_s: cost };
+            }
+        }
+        if cur_idx == 0 {
+            return SelectionOutcome { model: cur.name.clone(), switched: false, switch_cost_s: 0.0 };
+        }
+        let m = candidates[0];
+        return SelectionOutcome {
+            model: m.name.clone(),
+            switched: true,
+            switch_cost_s: dev.model_load_s(m),
+        };
+    }
+
+    // lines 6-12: consider upgrading only when the queue is short.
+    if queue_len < queue_max {
+        for i in (cur_idx + 1..candidates.len()).rev() {
+            let m = candidates[i];
+            if !dev.fits(m) {
+                continue;
+            }
+            let cost = dev.model_load_s(m);
+            if task_time_s(dev, m, task_tokens, prompt_tokens) + cost < budget_s {
+                return SelectionOutcome { model: m.name.clone(), switched: true, switch_cost_s: cost };
+            }
+        }
+    }
+    SelectionOutcome { model: cur.name.clone(), switched: false, switch_cost_s: 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Registry;
+
+    fn slms(r: &Registry) -> Vec<&ModelInfo> {
+        // ascending capability: 1.5b, 7b, 8b
+        vec![
+            r.get("qwen1.5b-sim").unwrap(),
+            r.get("qwen7b-sim").unwrap(),
+            r.get("llama8b-sim").unwrap(),
+        ]
+    }
+
+    #[test]
+    fn tight_budget_downgrades() {
+        let r = Registry::builtin();
+        let dev = DeviceSpec::jetson_orin("e");
+        let c = slms(&r);
+        // 8B on a Jetson ~ 8.4 tok/s; 120 tokens ~ 14 s. Budget 9 s forces a
+        // downgrade (1.5B does it in ~6 s).
+        let out = select_model(&dev, &c, "llama8b-sim", 120, 30, 9.0, 3, 8);
+        assert!(out.switched);
+        assert_ne!(out.model, "llama8b-sim");
+    }
+
+    #[test]
+    fn loose_budget_and_short_queue_upgrades() {
+        let r = Registry::builtin();
+        let dev = DeviceSpec::jetson_orin("e");
+        let c = slms(&r);
+        let out = select_model(&dev, &c, "qwen1.5b-sim", 60, 30, 500.0, 1, 8);
+        assert!(out.switched);
+        assert_eq!(out.model, "llama8b-sim");
+        assert!(out.switch_cost_s > 0.0);
+    }
+
+    #[test]
+    fn full_queue_blocks_upgrades() {
+        let r = Registry::builtin();
+        let dev = DeviceSpec::jetson_orin("e");
+        let c = slms(&r);
+        let out = select_model(&dev, &c, "qwen1.5b-sim", 60, 30, 500.0, 8, 8);
+        assert!(!out.switched);
+        assert_eq!(out.model, "qwen1.5b-sim");
+    }
+
+    #[test]
+    fn impossible_budget_keeps_smallest() {
+        let r = Registry::builtin();
+        let dev = DeviceSpec::jetson_orin("e");
+        let c = slms(&r);
+        let out = select_model(&dev, &c, "qwen1.5b-sim", 500, 30, 0.001, 3, 8);
+        assert!(!out.switched);
+        assert_eq!(out.model, "qwen1.5b-sim");
+    }
+
+    #[test]
+    fn switch_cost_counted() {
+        let r = Registry::builtin();
+        let dev = DeviceSpec::jetson_orin("e");
+        let c = slms(&r);
+        // budget fits the 7B's compute but not compute+load -> settle for a
+        // model whose total (compute + switch) meets the budget
+        let m7 = r.get("qwen7b-sim").unwrap();
+        let load = dev.model_load_s(m7);
+        let compute = task_time_s(&dev, m7, 60, 30);
+        let budget = compute + load * 0.5;
+        let out = select_model(&dev, &c, "qwen1.5b-sim", 60, 30, budget, 1, 8);
+        // upgrading to 7B would blow the budget due to load time
+        assert_ne!(out.model, "qwen7b-sim");
+    }
+}

@@ -1,0 +1,123 @@
+//! Multi-objective SLO policy (paper §IV-A1).
+//!
+//! Metrics M = {error, throughput, latency, server cost, edge cost} are
+//! split into hard constraints (latency) and soft objectives ranked by a
+//! *lexicographic* ordering: minimize M_i subject to M_j ≤ M_j(σ*_j) for all
+//! higher-ranked j (within a tolerance band, as is standard for
+//! lexicographic relaxation).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Error,
+    Throughput, // stored negated in vectors (all metrics minimized)
+    Latency,
+    ServerCost,
+    EdgeCost,
+}
+
+pub const ALL_METRICS: [Metric; 5] =
+    [Metric::Error, Metric::Throughput, Metric::Latency, Metric::ServerCost, Metric::EdgeCost];
+
+#[derive(Clone, Debug)]
+pub struct SloPolicy {
+    /// soft-objective importance order, most important first
+    pub order: Vec<Metric>,
+    /// hard end-to-end latency bound multiplier relative to f(l) (Eq. 2's
+    /// right-hand side); 1.0 = paper's "not slower than cloud-only".
+    pub latency_slack: f64,
+    /// lexicographic tolerance band (fraction of the stage optimum)
+    pub tolerance: f64,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        // paper's implied default: efficiency-led (its evaluation accepts a
+        // small quality cost on math/coding for the 1.5-2x throughput win),
+        // with error next and raw costs last
+        SloPolicy {
+            order: vec![
+                Metric::Throughput,
+                Metric::Error,
+                Metric::Latency,
+                Metric::ServerCost,
+                Metric::EdgeCost,
+            ],
+            latency_slack: 1.0,
+            tolerance: 0.15,
+        }
+    }
+}
+
+impl SloPolicy {
+    pub fn metric_index(&self, m: Metric) -> usize {
+        ALL_METRICS.iter().position(|&x| x == m).unwrap()
+    }
+
+    /// Lexicographic selection over candidate metric vectors (indexed by
+    /// ALL_METRICS; every entry is minimized — negate throughput upstream).
+    /// Returns the index of the chosen candidate.
+    pub fn lex_select(&self, candidates: &[[f64; 5]]) -> Option<usize> {
+        if candidates.is_empty() {
+            return None;
+        }
+        let mut alive: Vec<usize> = (0..candidates.len()).collect();
+        for &m in &self.order {
+            let mi = self.metric_index(m);
+            let best = alive
+                .iter()
+                .map(|&i| candidates[i][mi])
+                .fold(f64::INFINITY, f64::min);
+            let band = best.abs().max(1e-9) * self.tolerance;
+            let next: Vec<usize> =
+                alive.iter().copied().filter(|&i| candidates[i][mi] <= best + band).collect();
+            if next.len() == 1 {
+                return Some(next[0]);
+            }
+            alive = next;
+        }
+        alive.first().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_primary_metric_winner() {
+        let p = SloPolicy { order: vec![Metric::Latency], ..Default::default() };
+        // candidate 1 has the lowest latency (index 2 of the vector)
+        let c = [[0.5, -10.0, 9.0, 1.0, 1.0], [0.5, -10.0, 2.0, 1.0, 1.0]];
+        assert_eq!(p.lex_select(&c), Some(1));
+    }
+
+    #[test]
+    fn tie_broken_by_secondary() {
+        let p = SloPolicy {
+            order: vec![Metric::Error, Metric::ServerCost],
+            tolerance: 0.05,
+            ..Default::default()
+        };
+        // equal error; candidate 0 cheaper on the server
+        let c = [[0.3, -5.0, 2.0, 10.0, 3.0], [0.3, -5.0, 2.0, 90.0, 3.0]];
+        assert_eq!(p.lex_select(&c), Some(0));
+    }
+
+    #[test]
+    fn ordering_changes_choice() {
+        // A: low error, high cost. B: higher error, low cost.
+        let a = [0.1, -5.0, 2.0, 100.0, 1.0];
+        let b = [0.4, -5.0, 2.0, 5.0, 1.0];
+        let error_first =
+            SloPolicy { order: vec![Metric::Error, Metric::ServerCost], tolerance: 0.05, ..Default::default() };
+        let cost_first =
+            SloPolicy { order: vec![Metric::ServerCost, Metric::Error], tolerance: 0.05, ..Default::default() };
+        assert_eq!(error_first.lex_select(&[a, b]), Some(0));
+        assert_eq!(cost_first.lex_select(&[a, b]), Some(1));
+    }
+
+    #[test]
+    fn empty_none() {
+        assert_eq!(SloPolicy::default().lex_select(&[]), None);
+    }
+}

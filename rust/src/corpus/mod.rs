@@ -1,0 +1,202 @@
+//! Corpus loading + workload generation (the MT-bench / Vicuna-bench
+//! substitute — see DESIGN.md §2).
+//!
+//! `artifacts/corpus.json` is produced by the Python compile path; this
+//! module parses it into typed questions with reference answers/sketches,
+//! and generates request workloads (arrival processes, category mixes)
+//! for the serving experiments.
+
+pub mod synth;
+pub mod workload;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
+
+/// One reference-answer sentence: full form + its semantic sketch.
+#[derive(Clone, Debug)]
+pub struct Sentence {
+    pub template: usize,
+    pub full: Vec<u32>,
+    pub sketch: Vec<u32>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Eval,
+}
+
+/// A benchmark question with its category and reference answer.
+#[derive(Clone, Debug)]
+pub struct Question {
+    pub id: usize,
+    pub category: String,
+    pub split: Split,
+    pub question: Vec<u32>,
+    pub sentences: Vec<Sentence>,
+}
+
+impl Question {
+    /// Reference answer tokens (sentences concatenated, "." terminated).
+    pub fn answer_tokens(&self) -> Vec<u32> {
+        self.sentences.iter().flat_map(|s| s.full.iter().copied()).collect()
+    }
+
+    /// Full sketch tokens (";"-separated sentence sketches).
+    pub fn sketch_tokens(&self, semicolon: u32) -> Vec<u32> {
+        let mut out = Vec::new();
+        for (i, s) in self.sentences.iter().enumerate() {
+            if i > 0 {
+                out.push(semicolon);
+            }
+            out.extend_from_slice(&s.sketch);
+        }
+        out
+    }
+
+    /// Expected (reference) answer length in tokens — what the paper's
+    /// length-aware LLM would predict perfectly.
+    pub fn answer_len(&self) -> usize {
+        self.sentences.iter().map(|s| s.full.len()).sum()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub categories: Vec<String>,
+    pub questions: Vec<Question>,
+    /// paper's per-category expected sentence counts (scheduler heuristics)
+    pub sentences_per_category: BTreeMap<String, usize>,
+}
+
+impl Corpus {
+    pub fn from_file(path: &Path, tok: &Tokenizer) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let json = Json::parse(&text)?;
+        Self::from_json(&json, tok)
+    }
+
+    pub fn from_json(json: &Json, tok: &Tokenizer) -> Result<Self, String> {
+        let categories = json
+            .req("categories")?
+            .str_vec()
+            .ok_or("corpus.json: bad 'categories'")?;
+        let mut sentences_per_category = BTreeMap::new();
+        if let Some(Json::Obj(m)) = json.get("sentences_per_category") {
+            for (k, v) in m {
+                sentences_per_category
+                    .insert(k.clone(), v.as_usize().ok_or("bad sentence count")?);
+            }
+        }
+        let enc_list = |j: &Json| -> Result<Vec<u32>, String> {
+            j.str_vec()
+                .ok_or("expected token array".to_string())?
+                .iter()
+                .map(|t| tok.id(t).ok_or(format!("token '{t}' not in vocab")))
+                .collect()
+        };
+        let mut questions = Vec::new();
+        for qj in json.req("questions")?.as_arr().ok_or("bad 'questions'")? {
+            let split = match qj.req("split")?.as_str() {
+                Some("train") => Split::Train,
+                Some("eval") => Split::Eval,
+                other => return Err(format!("bad split {other:?}")),
+            };
+            let mut sentences = Vec::new();
+            for sj in qj.req("sentences")?.as_arr().ok_or("bad 'sentences'")? {
+                sentences.push(Sentence {
+                    template: sj.req("template")?.as_usize().ok_or("bad template id")?,
+                    full: enc_list(sj.req("full")?)?,
+                    sketch: enc_list(sj.req("sketch")?)?,
+                });
+            }
+            questions.push(Question {
+                id: qj.req("id")?.as_usize().ok_or("bad id")?,
+                category: qj.req("category")?.as_str().ok_or("bad category")?.to_string(),
+                split,
+                question: enc_list(qj.req("question")?)?,
+                sentences,
+            });
+        }
+        Ok(Corpus { categories, questions, sentences_per_category })
+    }
+
+    pub fn eval_questions(&self) -> Vec<&Question> {
+        self.questions.iter().filter(|q| q.split == Split::Eval).collect()
+    }
+
+    pub fn by_category<'a>(&'a self, cat: &str) -> Vec<&'a Question> {
+        self.questions.iter().filter(|q| q.category == cat).collect()
+    }
+
+    pub fn get(&self, id: usize) -> Option<&Question> {
+        self.questions.iter().find(|q| q.id == id)
+    }
+}
+
+/// Shared fixtures for unit tests across modules.
+#[cfg(test)]
+pub mod tests_support {
+    use super::*;
+
+    pub fn toy_corpus() -> (Corpus, Tokenizer) {
+        let tok = tests::toy_tokenizer();
+        let c = Corpus::from_json(&Json::parse(tests::toy_corpus_json()).unwrap(), &tok).unwrap();
+        (c, tok)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn toy_tokenizer() -> Tokenizer {
+        let toks = ["<pad>", "<bos>", "<eos>", "<q>", "<a>", "<sk>", "<ex>", ".", ";", "?",
+            "the", "cat", "sat", "mat", "big"];
+        Tokenizer::from_tokens(toks.iter().map(|s| s.to_string()).collect()).unwrap()
+    }
+
+    pub(crate) fn toy_corpus_json() -> &'static str {
+        r#"{
+          "categories": ["generic"],
+          "sentences_per_category": {"generic": 2},
+          "questions": [
+            {"id": 0, "category": "generic", "split": "eval",
+             "question": ["the", "cat", "?"],
+             "sentences": [
+               {"template": 0, "full": ["the", "big", "cat", "sat", "."],
+                "sketch": ["big", "cat", "sat"]},
+               {"template": 1, "full": ["the", "cat", "sat", "mat", "."],
+                "sketch": ["cat", "mat"]}
+             ]}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn parse_toy() {
+        let tok = toy_tokenizer();
+        let j = Json::parse(toy_corpus_json()).unwrap();
+        let c = Corpus::from_json(&j, &tok).unwrap();
+        assert_eq!(c.questions.len(), 1);
+        let q = &c.questions[0];
+        assert_eq!(q.answer_len(), 10);
+        let sk = q.sketch_tokens(tok.specials.semicolon);
+        assert_eq!(tok.decode(&sk), "big cat sat ; cat mat");
+    }
+
+    #[test]
+    fn unknown_token_fails() {
+        let tok = toy_tokenizer();
+        let j = Json::parse(
+            r#"{"categories": [], "questions": [{"id":0,"category":"x","split":"eval",
+              "question":["zebra"],"sentences":[]}]}"#,
+        )
+        .unwrap();
+        assert!(Corpus::from_json(&j, &tok).is_err());
+    }
+}

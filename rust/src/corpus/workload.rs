@@ -1,0 +1,134 @@
+//! Request workload generation: arrival processes + category mixes.
+//!
+//! The paper drives its testbed at a configured RPM (requests per minute,
+//! §V-B: "RPM is 1.5x the maximum batch size") with MT-bench/Vicuna-bench
+//! questions. This generator reproduces that: Poisson (or uniform) arrivals
+//! over the eval split, optionally restricted to a category mix.
+
+use super::{Corpus, Question};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arrival {
+    /// Poisson process (exponential inter-arrival).
+    Poisson,
+    /// Evenly spaced arrivals.
+    Uniform,
+    /// All requests arrive at t=0 (closed-loop batch).
+    Burst,
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub rpm: f64,
+    pub n_requests: usize,
+    pub arrival: Arrival,
+    /// Empty = all categories.
+    pub categories: Vec<String>,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            rpm: 30.0,
+            n_requests: 60,
+            arrival: Arrival::Poisson,
+            categories: Vec::new(),
+            seed: 7,
+        }
+    }
+}
+
+/// One incoming request: a question arriving at a (simulated) time.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub rid: usize,
+    pub question_id: usize,
+    pub arrival_s: f64,
+}
+
+pub struct Workload {
+    pub spec: WorkloadSpec,
+    pub requests: Vec<Request>,
+}
+
+impl Workload {
+    pub fn generate(corpus: &Corpus, spec: WorkloadSpec) -> Workload {
+        let mut rng = Rng::new(spec.seed);
+        let pool: Vec<&Question> = corpus
+            .eval_questions()
+            .into_iter()
+            .filter(|q| spec.categories.is_empty() || spec.categories.contains(&q.category))
+            .collect();
+        assert!(!pool.is_empty(), "workload: empty question pool");
+
+        let rate_per_s = spec.rpm / 60.0;
+        let mut t = 0.0;
+        let mut requests = Vec::with_capacity(spec.n_requests);
+        for rid in 0..spec.n_requests {
+            let q = pool[rng.below(pool.len())];
+            let arrival_s = match spec.arrival {
+                Arrival::Poisson => {
+                    t += rng.exp(rate_per_s);
+                    t
+                }
+                Arrival::Uniform => {
+                    t += 1.0 / rate_per_s;
+                    t
+                }
+                Arrival::Burst => 0.0,
+            };
+            requests.push(Request { rid, question_id: q.id, arrival_s });
+        }
+        Workload { spec, requests }
+    }
+
+    /// Duration over which requests arrive (for throughput accounting).
+    pub fn span_s(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival_s).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::tests::{toy_corpus_json, toy_tokenizer};
+    use crate::util::json::Json;
+
+    fn toy_corpus() -> Corpus {
+        let tok = toy_tokenizer();
+        Corpus::from_json(&Json::parse(toy_corpus_json()).unwrap(), &tok).unwrap()
+    }
+
+    #[test]
+    fn poisson_rate_approx() {
+        let c = toy_corpus();
+        let spec = WorkloadSpec { rpm: 60.0, n_requests: 2000, ..Default::default() };
+        let w = Workload::generate(&c, spec);
+        // 60 rpm = 1/s; 2000 arrivals should span ~2000s +- 10%
+        let span = w.span_s();
+        assert!((1700.0..2300.0).contains(&span), "span {span}");
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        let c = toy_corpus();
+        let w = Workload::generate(&c, WorkloadSpec::default());
+        for pair in w.requests.windows(2) {
+            assert!(pair[0].arrival_s <= pair[1].arrival_s);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let c = toy_corpus();
+        let w1 = Workload::generate(&c, WorkloadSpec::default());
+        let w2 = Workload::generate(&c, WorkloadSpec::default());
+        assert_eq!(w1.requests.len(), w2.requests.len());
+        for (a, b) in w1.requests.iter().zip(&w2.requests) {
+            assert_eq!(a.question_id, b.question_id);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-12);
+        }
+    }
+}

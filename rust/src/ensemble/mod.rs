@@ -1,0 +1,166 @@
+//! Ensemble learning over SLM outputs (paper §IV-C).
+//!
+//! Multiple edge SLMs expand the same sketch; the system returns the
+//! candidate with the highest *confidence* (Eq. 3):
+//!
+//!   con(ŷ) = α1·2^( (1/N) Σ log2 p(w_i) )            (geometric-mean prob,
+//!                                                      = 1/perplexity)
+//!          + α2·Norm(|ŷ|)                             (length score)
+//!          + (1 − α1 − α2)·Rouge-1(r, ŷ)              (sketch faithfulness)
+//!
+//! Perplexity alone is "overly dependent on the model itself" (the paper's
+//! Llama-vs-Qwen observation), hence the text-score terms.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ConfidenceWeights {
+    pub alpha1: f64,
+    pub alpha2: f64,
+}
+
+impl Default for ConfidenceWeights {
+    fn default() -> Self {
+        // paper does not publish α; chosen so all three terms matter and the
+        // sensitivity bench (fig9/ablations) can sweep them.
+        ConfidenceWeights { alpha1: 0.4, alpha2: 0.2 }
+    }
+}
+
+/// One ensemble candidate: an SLM's expansion of a sketch.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub model: String,
+    pub tokens: Vec<u32>,
+    /// per-generated-token natural-log probabilities under the generator
+    pub logps: Vec<f64>,
+}
+
+/// Normalized length score: ramps 0→1 as the answer approaches the expected
+/// length, flat beyond (more detail is better, but unboundedly long answers
+/// should not dominate).
+pub fn norm_len(answer_len: usize, expected_len: usize) -> f64 {
+    if expected_len == 0 {
+        return 0.0;
+    }
+    (answer_len as f64 / expected_len as f64).min(1.0)
+}
+
+/// Sketch-recall variant of Rouge-1: fraction of sketch unigrams covered by
+/// the answer. Recall (not F1) so added detail — the whole point of the
+/// expansion — is never penalized, while dropped sketch points are.
+pub fn sketch_recall(sketch: &[u32], answer: &[u32]) -> f64 {
+    if sketch.is_empty() {
+        return 0.0;
+    }
+    let mut have: HashMap<u32, usize> = HashMap::new();
+    for &t in answer {
+        *have.entry(t).or_insert(0) += 1;
+    }
+    let mut hit = 0usize;
+    for &t in sketch {
+        if let Some(c) = have.get_mut(&t) {
+            if *c > 0 {
+                *c -= 1;
+                hit += 1;
+            }
+        }
+    }
+    hit as f64 / sketch.len() as f64
+}
+
+/// Eq. 3 confidence of one candidate against the sketch `r`.
+pub fn confidence(
+    cand: &Candidate,
+    sketch: &[u32],
+    expected_len: usize,
+    w: ConfidenceWeights,
+) -> f64 {
+    let geo_prob = if cand.logps.is_empty() {
+        0.0
+    } else {
+        // 2^(mean log2 p) == e^(mean ln p)
+        (cand.logps.iter().sum::<f64>() / cand.logps.len() as f64).exp()
+    };
+    let len_score = norm_len(cand.tokens.len(), expected_len);
+    let rouge = sketch_recall(sketch, &cand.tokens);
+    w.alpha1 * geo_prob + w.alpha2 * len_score + (1.0 - w.alpha1 - w.alpha2) * rouge
+}
+
+/// Pick the highest-confidence candidate; returns (index, confidence).
+pub fn select(
+    candidates: &[Candidate],
+    sketch: &[u32],
+    expected_len: usize,
+    w: ConfidenceWeights,
+) -> Option<(usize, f64)> {
+    candidates
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (i, confidence(c, sketch, expected_len, w)))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(model: &str, tokens: Vec<u32>, logp: f64) -> Candidate {
+        let n = tokens.len();
+        Candidate { model: model.into(), tokens, logps: vec![logp; n] }
+    }
+
+    #[test]
+    fn faithful_beats_unfaithful() {
+        let sketch = vec![1, 2, 3, 4];
+        let good = cand("a", vec![9, 1, 2, 3, 4, 9], -0.5);
+        let bad = cand("b", vec![7, 8, 9, 10, 11, 12], -0.5);
+        let (i, _) = select(&[bad, good], &sketch, 6, ConfidenceWeights::default()).unwrap();
+        assert_eq!(i, 1);
+    }
+
+    #[test]
+    fn confident_model_wins_when_text_equal() {
+        let sketch = vec![1, 2];
+        let sure = cand("a", vec![1, 2, 3], -0.1);
+        let unsure = cand("b", vec![1, 2, 3], -3.0);
+        let (i, _) = select(&[unsure, sure], &sketch, 3, ConfidenceWeights::default()).unwrap();
+        assert_eq!(i, 1);
+    }
+
+    #[test]
+    fn longer_detail_preferred_up_to_expected() {
+        let w = ConfidenceWeights::default();
+        let sketch = vec![1, 2, 3];
+        let short = cand("a", vec![1, 2, 3], -1.0);
+        let detailed = cand("b", vec![1, 2, 3, 10, 11, 12], -1.0);
+        let cs = confidence(&short, &sketch, 6, w);
+        let cd = confidence(&detailed, &sketch, 6, w);
+        assert!(cd > cs, "{cd} <= {cs}");
+    }
+
+    #[test]
+    fn confidence_bounded() {
+        let w = ConfidenceWeights::default();
+        let c = cand("a", vec![1, 2, 3], 0.0); // p = 1
+        let v = confidence(&c, &[1, 2, 3], 3, w);
+        assert!(v <= 1.0 + 1e-9 && v >= 0.0);
+    }
+
+    #[test]
+    fn empty_candidates_none() {
+        assert!(select(&[], &[1], 1, ConfidenceWeights::default()).is_none());
+    }
+
+    #[test]
+    fn perplexity_dependence_mitigated() {
+        // the paper's motivation: a model with systematically worse ppl can
+        // still win on text quality. α weights keep rouge dominant.
+        let w = ConfidenceWeights::default();
+        let sketch = vec![1, 2, 3, 4, 5];
+        let high_ppl_good = cand("llama", vec![1, 2, 3, 4, 5, 9], -2.0);
+        let low_ppl_bad = cand("qwen", vec![9, 9, 8, 8, 7, 7], -0.3);
+        let (i, _) = select(&[low_ppl_bad, high_ppl_good], &sketch, 6, w).unwrap();
+        assert_eq!(i, 1, "text terms must outweigh raw perplexity");
+    }
+}

@@ -1,0 +1,20 @@
+//! Model fine-tuning component (paper §IV-D, Fig. 5): RLAIF for concise,
+//! semantically complete sketches.
+//!
+//! The paper fine-tunes the cloud LLM with (1) SFT, (2) a reward model
+//! trained on AI-labeled sketch preference pairs, (3) RL with a KL leash.
+//! Fine-tuning transformer weights needs GPUs we don't have; per the
+//! substitution rule the *sketch policy* — the thing the pipeline actually
+//! optimizes, and the thing Figs. 10/11 measure — is reproduced exactly:
+//!
+//! * policy: per-category keep-fraction θ_c of sketch content words;
+//! * preference labeling: score(r) = β1·(1/l_r) + β2·RougeL(expand(r), y)
+//!   where the expansion runs on the *real* backend (AI feedback);
+//! * reward model: linear pairwise-logistic on sketch features (Eq. L_R);
+//! * RL: policy-gradient ascent on R_φ − γ·KL(θ‖θ_SFT).
+
+pub mod policy;
+pub mod reward;
+
+pub use policy::{FinetuneOutcome, SketchPolicy, Trainer, TrainerCfg};
+pub use reward::{label_preference, PreferencePair, RewardModel, SketchFeatures};

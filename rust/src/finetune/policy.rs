@@ -1,0 +1,307 @@
+//! Sketch policy + the three-step RLAIF pipeline (paper Fig. 5).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::reward::{label_preference, PreferencePair, RewardModel, SketchFeatures};
+use crate::coordinator::backend::TextBackend;
+use crate::corpus::{Corpus, Question};
+use crate::runtime::SamplingParams;
+use crate::sketch::{compress, Prompts, SketchLevel};
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+/// Per-category sketch compression policy: keep-fraction θ_c of each
+/// sentence-sketch's content words (the knob the RLAIF loop tunes).
+#[derive(Clone, Debug)]
+pub struct SketchPolicy {
+    pub keep_frac: BTreeMap<String, f64>,
+    pub default_frac: f64,
+}
+
+impl SketchPolicy {
+    /// The SFT starting point: uniform full sketches.
+    pub fn sft(categories: &[String]) -> Self {
+        SketchPolicy {
+            keep_frac: categories.iter().map(|c| (c.clone(), 1.0)).collect(),
+            default_frac: 1.0,
+        }
+    }
+
+    pub fn frac(&self, category: &str) -> f64 {
+        *self.keep_frac.get(category).unwrap_or(&self.default_frac)
+    }
+
+    /// Produce the policy's sketch of a question's reference sentences.
+    pub fn sketch(&self, q: &Question, semicolon: u32) -> Vec<u32> {
+        let lv = SketchLevel { level: 1, keep_frac: self.frac(&q.category).min(1.0) };
+        let mut out = Vec::new();
+        for (i, s) in q.sentences.iter().enumerate() {
+            if i > 0 {
+                out.push(semicolon);
+            }
+            out.extend(compress(&s.sketch, lv));
+        }
+        out
+    }
+
+    /// Mean sketch length per category over a corpus (Fig. 10's metric).
+    pub fn mean_lengths(&self, corpus: &Corpus, semicolon: u32) -> BTreeMap<String, f64> {
+        let mut sums: BTreeMap<String, (f64, usize)> = BTreeMap::new();
+        for q in corpus.eval_questions() {
+            let len = self.sketch(q, semicolon).len() as f64;
+            let e = sums.entry(q.category.clone()).or_insert((0.0, 0));
+            e.0 += len;
+            e.1 += 1;
+        }
+        sums.into_iter().map(|(c, (s, n))| (c, s / n.max(1) as f64)).collect()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainerCfg {
+    /// expansion model used as "AI feedback" (the base LLM of §IV-D)
+    pub expander_model: String,
+    /// preference pairs per category
+    pub pairs_per_category: usize,
+    /// RL iterations
+    pub rl_steps: usize,
+    /// exploration stddev for candidate keep-fractions
+    pub sigma: f64,
+    /// KL leash weight γ
+    pub gamma: f64,
+    pub lr: f64,
+    pub seed: u64,
+}
+
+impl Default for TrainerCfg {
+    fn default() -> Self {
+        TrainerCfg {
+            expander_model: "qwen72b-sim".into(),
+            pairs_per_category: 12,
+            rl_steps: 40,
+            sigma: 0.18,
+            gamma: 0.25,
+            lr: 0.35,
+            seed: 23,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct FinetuneOutcome {
+    pub policy: SketchPolicy,
+    pub reward_model: RewardModel,
+    pub rm_train_loss: f64,
+    pub rm_holdout_acc: f64,
+    pub n_pairs: usize,
+}
+
+pub struct Trainer<'a> {
+    pub cfg: TrainerCfg,
+    pub corpus: Arc<Corpus>,
+    pub tok: &'a Tokenizer,
+}
+
+impl<'a> Trainer<'a> {
+    /// Expand a sketch back to a full answer with the base LLM (AI feedback).
+    fn expand(
+        &self,
+        backend: &mut dyn TextBackend,
+        q: &Question,
+        sketch: &[u32],
+    ) -> Result<Vec<u32>, String> {
+        let semicolon = self.tok.specials.semicolon;
+        let sents = crate::sketch::split_sketch(sketch, semicolon);
+        let mut out = Vec::new();
+        for s in &sents {
+            let prompt = Prompts::expand(self.tok, &q.question, sketch, s);
+            let g = backend.generate(
+                &self.cfg.expander_model,
+                &prompt,
+                &SamplingParams {
+                    max_tokens: 24,
+                    stop_token: Some(self.tok.specials.period),
+                    seed: self.cfg.seed,
+                    ..Default::default()
+                },
+            )?;
+            out.extend(g.tokens.iter().copied().filter(|&t| t != self.tok.specials.eos));
+        }
+        Ok(out)
+    }
+
+    fn features(&self, q: &Question, sketch: &[u32]) -> SketchFeatures {
+        let content: std::collections::HashSet<u32> =
+            q.sentences.iter().flat_map(|s| s.sketch.iter().copied()).collect();
+        let kept = sketch.iter().filter(|t| content.contains(t)).count();
+        SketchFeatures::compute(
+            sketch.len(),
+            kept as f64 / content.len().max(1) as f64,
+            q.answer_len(),
+        )
+    }
+
+    /// Step 2 of Fig. 5: generate sketch pairs, expand both with the base
+    /// LLM, label by the β-criterion, and fit the reward model.
+    pub fn collect_and_train_rm(
+        &self,
+        backend: &mut dyn TextBackend,
+    ) -> Result<(RewardModel, Vec<PreferencePair>, f64, f64), String> {
+        let mut rng = Rng::new(self.cfg.seed);
+        let semicolon = self.tok.specials.semicolon;
+        let mut pairs = Vec::new();
+        for cat in &self.corpus.categories {
+            let qs: Vec<&Question> = self
+                .corpus
+                .eval_questions()
+                .into_iter()
+                .filter(|q| &q.category == cat)
+                .collect();
+            for i in 0..self.cfg.pairs_per_category.min(qs.len()) {
+                let q = qs[i];
+                let f1 = rng.range(0.35, 1.0);
+                let f2 = rng.range(0.35, 1.0);
+                let p1 = SketchPolicy {
+                    keep_frac: BTreeMap::new(),
+                    default_frac: f1,
+                };
+                let p2 = SketchPolicy {
+                    keep_frac: BTreeMap::new(),
+                    default_frac: f2,
+                };
+                let r1 = p1.sketch(q, semicolon);
+                let r2 = p2.sketch(q, semicolon);
+                let y1 = self.expand(backend, q, &r1)?;
+                let y2 = self.expand(backend, q, &r2)?;
+                let reference = q.answer_tokens();
+                let first_wins = label_preference(r1.len(), &y1, r2.len(), &y2, &reference);
+                let (w, l) = if first_wins { (&r1, &r2) } else { (&r2, &r1) };
+                pairs.push(PreferencePair {
+                    winner: self.features(q, w),
+                    loser: self.features(q, l),
+                });
+            }
+        }
+        let split = (pairs.len() * 4) / 5;
+        let mut rm = RewardModel::default();
+        let loss = rm.train(&pairs[..split.max(1)], 60, 0.4, self.cfg.seed);
+        let acc = rm.accuracy(&pairs[split..]);
+        Ok((rm, pairs, loss, acc))
+    }
+
+    /// Step 3 of Fig. 5: policy-gradient ascent on R_φ − γ·KL(θ‖θ_SFT),
+    /// per category (REINFORCE with two-point baseline).
+    pub fn rl_finetune(
+        &self,
+        rm: &RewardModel,
+    ) -> SketchPolicy {
+        let mut rng = Rng::new(self.cfg.seed ^ 0xF17E);
+        let semicolon = self.tok.specials.semicolon;
+        let sft = SketchPolicy::sft(&self.corpus.categories);
+        let mut policy = sft.clone();
+        for cat in &self.corpus.categories {
+            let qs: Vec<&Question> = self
+                .corpus
+                .eval_questions()
+                .into_iter()
+                .filter(|q| &q.category == cat)
+                .collect();
+            if qs.is_empty() {
+                continue;
+            }
+            let theta0 = sft.frac(cat);
+            let mut theta = theta0;
+            for step in 0..self.cfg.rl_steps {
+                let q = qs[step % qs.len()];
+                // antithetic exploration pair
+                let eps = rng.normal() * self.cfg.sigma;
+                let objective = |th: f64| -> f64 {
+                    let p = SketchPolicy {
+                        keep_frac: BTreeMap::new(),
+                        default_frac: th.clamp(0.3, 1.25),
+                    };
+                    let sk = p.sketch(q, semicolon);
+                    let r = rm.reward(&self.features(q, &sk));
+                    // KL leash: Gaussian-policy KL reduces to a quadratic
+                    let kl = (th - theta0) * (th - theta0) / (2.0 * self.cfg.sigma * self.cfg.sigma);
+                    (1.0 - self.cfg.gamma) * r - self.cfg.gamma * kl * 0.05
+                };
+                let up = objective(theta + eps);
+                let dn = objective(theta - eps);
+                // REINFORCE gradient estimate with antithetic baseline
+                let grad = (up - dn) / (2.0 * eps.abs().max(1e-6)) * eps.signum();
+                theta = (theta + self.cfg.lr * grad / (1.0 + step as f64 * 0.1))
+                    .clamp(0.3, 1.25);
+            }
+            policy.keep_frac.insert(cat.clone(), theta);
+        }
+        policy
+    }
+
+    /// The full pipeline (Fig. 5): SFT policy -> RM -> RL.
+    pub fn run(&self, backend: &mut dyn TextBackend) -> Result<FinetuneOutcome, String> {
+        let (rm, pairs, loss, acc) = self.collect_and_train_rm(backend)?;
+        let policy = self.rl_finetune(&rm);
+        Ok(FinetuneOutcome {
+            policy,
+            reward_model: rm,
+            rm_train_loss: loss,
+            rm_holdout_acc: acc,
+            n_pairs: pairs.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SurrogateBackend;
+    use crate::corpus::tests_support::toy_corpus;
+    use crate::models::Registry;
+
+    #[test]
+    fn sft_policy_is_identity() {
+        let (c, tok) = toy_corpus();
+        let p = SketchPolicy::sft(&c.categories);
+        let q = &c.questions[0];
+        let sk = p.sketch(q, tok.specials.semicolon);
+        assert_eq!(sk, q.sketch_tokens(tok.specials.semicolon));
+    }
+
+    #[test]
+    fn compressed_policy_is_shorter() {
+        let (c, tok) = toy_corpus();
+        let mut p = SketchPolicy::sft(&c.categories);
+        p.keep_frac.insert("generic".into(), 0.5);
+        let q = &c.questions[0];
+        let sk = p.sketch(q, tok.specials.semicolon);
+        assert!(sk.len() < q.sketch_tokens(tok.specials.semicolon).len());
+    }
+
+    #[test]
+    fn pipeline_runs_on_surrogate() {
+        let (c, tok) = toy_corpus();
+        let c = Arc::new(c);
+        let reg = Registry::builtin();
+        let mut backend = SurrogateBackend::new(c.clone(), &tok, &reg, 3);
+        let trainer = Trainer {
+            cfg: TrainerCfg { pairs_per_category: 1, rl_steps: 5, ..Default::default() },
+            corpus: c.clone(),
+            tok: &tok,
+        };
+        let out = trainer.run(&mut backend).unwrap();
+        assert!(out.n_pairs >= 1);
+        let f = out.policy.frac("generic");
+        assert!((0.3..=1.25).contains(&f));
+    }
+
+    #[test]
+    fn mean_lengths_reported_per_category() {
+        let (c, tok) = toy_corpus();
+        let p = SketchPolicy::sft(&c.categories);
+        let m = p.mean_lengths(&c, tok.specials.semicolon);
+        assert!(m.contains_key("generic"));
+        assert!(m["generic"] > 0.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Preference labeling + reward model for sketch quality (paper §IV-D).
+
+use crate::quality::rouge::rouge_l_f1;
+use crate::util::rng::Rng;
+
+/// β weights of the preference labeler:
+/// score(r) = β1·(1/l_r) + β2·Rouge-L(ŷ(r), y).
+pub const BETA1: f64 = 8.0;
+pub const BETA2: f64 = 1.0;
+
+/// Features the reward model sees for one (question, sketch) pair.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SketchFeatures {
+    /// inverse sketch length (brevity)
+    pub inv_len: f64,
+    /// fraction of reference content words retained by the sketch
+    pub coverage: f64,
+    /// sketch length / reference answer length
+    pub len_ratio: f64,
+}
+
+impl SketchFeatures {
+    pub fn compute(sketch_len: usize, coverage: f64, ref_len: usize) -> Self {
+        SketchFeatures {
+            inv_len: 1.0 / sketch_len.max(1) as f64,
+            coverage,
+            len_ratio: sketch_len as f64 / ref_len.max(1) as f64,
+        }
+    }
+
+    fn vec(&self) -> [f64; 4] {
+        [self.inv_len, self.coverage, self.len_ratio, 1.0]
+    }
+}
+
+/// The paper's preference-labeling criterion: shorter is better, but the
+/// base-LLM expansion of the sketch must stay close to the SFT answer.
+pub fn label_preference(
+    len1: usize,
+    expansion1: &[u32],
+    len2: usize,
+    expansion2: &[u32],
+    reference: &[u32],
+) -> bool {
+    let s1 = BETA1 / len1.max(1) as f64 + BETA2 * rouge_l_f1(expansion1, reference);
+    let s2 = BETA1 / len2.max(1) as f64 + BETA2 * rouge_l_f1(expansion2, reference);
+    s1 >= s2
+}
+
+/// One labeled pair: winner features, loser features.
+#[derive(Clone, Copy, Debug)]
+pub struct PreferencePair {
+    pub winner: SketchFeatures,
+    pub loser: SketchFeatures,
+}
+
+/// Linear pairwise-logistic reward model, trained with the paper's loss
+/// L_R(φ) = −E log σ(R_φ(x, r_w) − R_φ(x, r_l)).
+#[derive(Clone, Debug)]
+pub struct RewardModel {
+    pub w: [f64; 4],
+}
+
+impl Default for RewardModel {
+    fn default() -> Self {
+        RewardModel { w: [0.0; 4] }
+    }
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl RewardModel {
+    pub fn reward(&self, f: &SketchFeatures) -> f64 {
+        let v = f.vec();
+        self.w.iter().zip(v.iter()).map(|(a, b)| a * b).sum()
+    }
+
+    /// SGD on the pairwise logistic loss; returns the final mean loss.
+    pub fn train(&mut self, pairs: &[PreferencePair], epochs: usize, lr: f64, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..pairs.len()).collect();
+        let mut last = f64::INFINITY;
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            let mut loss_sum = 0.0;
+            for &i in &order {
+                let p = &pairs[i];
+                let d = self.reward(&p.winner) - self.reward(&p.loser);
+                let s = sigmoid(d);
+                loss_sum += -(s.max(1e-12)).ln();
+                let g = 1.0 - s; // d/dd of -ln σ(d) is -(1-σ)
+                let (wv, lv) = (p.winner.vec(), p.loser.vec());
+                for k in 0..4 {
+                    self.w[k] += lr * g * (wv[k] - lv[k]);
+                }
+            }
+            last = loss_sum / pairs.len().max(1) as f64;
+        }
+        last
+    }
+
+    /// Pairwise accuracy on held-out pairs.
+    pub fn accuracy(&self, pairs: &[PreferencePair]) -> f64 {
+        if pairs.is_empty() {
+            return 0.0;
+        }
+        let ok = pairs
+            .iter()
+            .filter(|p| self.reward(&p.winner) > self.reward(&p.loser))
+            .count();
+        ok as f64 / pairs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair(w_cov: f64, w_len: usize, l_cov: f64, l_len: usize) -> PreferencePair {
+        PreferencePair {
+            winner: SketchFeatures::compute(w_len, w_cov, 100),
+            loser: SketchFeatures::compute(l_len, l_cov, 100),
+        }
+    }
+
+    #[test]
+    fn learns_separable_preferences() {
+        // winners: short + high coverage; losers: long + low coverage
+        let mut rng = Rng::new(5);
+        let pairs: Vec<PreferencePair> = (0..200)
+            .map(|_| {
+                pair(
+                    0.8 + rng.range(0.0, 0.2),
+                    20 + rng.below(10),
+                    0.2 + rng.range(0.0, 0.3),
+                    60 + rng.below(30),
+                )
+            })
+            .collect();
+        let mut rm = RewardModel::default();
+        let loss = rm.train(&pairs[..150], 50, 0.5, 1);
+        assert!(loss < 0.4, "loss {loss}");
+        assert!(rm.accuracy(&pairs[150..]) > 0.9);
+    }
+
+    #[test]
+    fn labeler_prefers_short_when_equal_fidelity() {
+        let expansion = [1u32, 2, 3, 4, 5];
+        let reference = [1u32, 2, 3, 4, 5];
+        assert!(label_preference(10, &expansion, 30, &expansion, &reference));
+        assert!(!label_preference(30, &expansion, 10, &expansion, &reference));
+    }
+
+    #[test]
+    fn labeler_rejects_lossy_over_short() {
+        // extreme compression that destroys the expansion loses to a
+        // moderately short sketch with a faithful expansion
+        let faithful = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        let broken = [9u32, 9, 9];
+        let reference = faithful;
+        assert!(label_preference(20, &faithful, 8, &broken, &reference));
+    }
+
+    #[test]
+    fn reward_monotone_in_trained_direction() {
+        let mut rm = RewardModel::default();
+        let pairs: Vec<PreferencePair> = (0..50).map(|_| pair(0.9, 20, 0.3, 70)).collect();
+        rm.train(&pairs, 30, 0.5, 2);
+        let good = SketchFeatures::compute(20, 0.9, 100);
+        let bad = SketchFeatures::compute(70, 0.3, 100);
+        assert!(rm.reward(&good) > rm.reward(&bad));
+    }
+}

@@ -1,0 +1,41 @@
+//! PICE: a semantic-driven progressive inference system for LLM serving in
+//! cloud-edge networks — full-system reproduction (see DESIGN.md).
+//!
+//! Layering:
+//! * substrates: [`util`], [`tokenizer`], [`corpus`], [`simclock`],
+//!   [`network`], [`cluster`], [`models`], [`profiler`], [`quality`],
+//!   [`sketch`]
+//! * runtime: [`runtime`] (PJRT; loads the AOT picoLM artifacts)
+//! * the paper's contribution: [`coordinator`] (dynamic scheduler, job
+//!   dispatching, model selection), [`parallel`] (execution optimizer),
+//!   [`ensemble`], [`finetune`] (RLAIF sketch policy), [`baselines`]
+
+pub mod baselines;
+pub mod cli;
+pub mod cluster;
+pub mod coordinator;
+pub mod finetune;
+pub mod corpus;
+pub mod ensemble;
+pub mod metrics;
+pub mod parallel;
+pub mod models;
+pub mod network;
+pub mod profiler;
+pub mod quality;
+pub mod runtime;
+pub mod scenario;
+pub mod simclock;
+pub mod sketch;
+pub mod testkit;
+pub mod tokenizer;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory (relative to the repo root / cwd).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("PICE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

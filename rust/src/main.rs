@@ -1,0 +1,168 @@
+//! `pice` — the leader binary: serve workloads, inspect the model registry,
+//! run the offline profiler, and run the RLAIF sketch fine-tuning.
+//!
+//! ```text
+//! pice serve   [--model llama70b-sim] [--rpm 30] [--n 60] [--policy pice|cloud|edge|routing]
+//! pice models
+//! pice profile [--edges 4]
+//! pice finetune [--pairs 8] [--steps 30]
+//! pice eval    [--model llama70b-sim] [--n 40]
+//! ```
+
+use pice::cli::Args;
+use pice::cluster::{Cluster, DeviceSpec};
+use pice::finetune::{Trainer, TrainerCfg};
+use pice::metrics::Mode;
+use pice::models::ModelInfo;
+use pice::profiler::OfflineProfile;
+use pice::quality::judge::Judge;
+use pice::scenario::Env;
+use pice::util::stats;
+use pice::{baselines, info};
+
+fn main() {
+    let args = Args::from_env();
+    if args.has_flag("quiet") {
+        pice::util::set_log_level(0);
+    }
+    let result = match args.subcommand.as_deref() {
+        Some("serve") => serve(&args),
+        Some("models") => models(),
+        Some("profile") => profile(&args),
+        Some("finetune") => finetune(&args),
+        Some("eval") => eval(&args),
+        _ => {
+            eprintln!(
+                "usage: pice <serve|models|profile|finetune|eval> [options]\n\
+                 see `cargo run --example quickstart` for the runtime path"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn serve(args: &Args) -> Result<(), String> {
+    let model = args.opt_str("model", "llama70b-sim").to_string();
+    let n = args.opt_usize("n", 60);
+    let mut env = Env::load()?;
+    let rpm = args.opt_f64("rpm", env.paper_rpm(&model));
+    let cfg = match args.opt_str("policy", "pice") {
+        "cloud" => baselines::cloud_only(&model),
+        "edge" => baselines::edge_only(&model),
+        "routing" => baselines::routing(&model),
+        _ => baselines::pice(&model),
+    };
+    info!("serving {n} requests at {rpm:.0} rpm on {model} ({:?})", cfg.policy);
+    let wl = env.workload(rpm, n, args.opt_usize("seed", 11) as u64);
+    let judge = Judge::fit(&env.corpus);
+    let (m, traces) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
+    let scores: Vec<f64> = traces
+        .iter()
+        .filter_map(|t| env.corpus.get(t.question_id).map(|q| judge.score(q, &t.answer).overall))
+        .collect();
+    println!("throughput      {:.2} queries/min", m.throughput_qpm);
+    println!("avg latency     {:.2} s (p50 {:.2}, p95 {:.2})", m.avg_latency_s, m.p50_latency_s, m.p95_latency_s);
+    println!("judge quality   {:.2} / 10", stats::mean(&scores));
+    println!("server tokens   {}", m.server_tokens);
+    println!("edge tokens     {}", m.edge_tokens);
+    println!(
+        "progressive     {} / {} requests",
+        traces.iter().filter(|t| t.mode == Mode::Progressive).count(),
+        m.n_requests
+    );
+    Ok(())
+}
+
+fn models() -> Result<(), String> {
+    let env = Env::load()?;
+    println!(
+        "{:<14} {:>9} {:>10} {:>6} | {:>8} {:>7} {:>8} {:>9}",
+        "model", "speed t/s", "memory GB", "MMLU", "d_model", "layers", "params", "eval acc"
+    );
+    for m in &env.registry.models {
+        println!(
+            "{:<14} {:>9.2} {:>10.2} {:>6.1} | {:>8} {:>7} {:>8} {:>9.3}",
+            m.name, m.speed_tps, m.memory_gb, m.mmlu, m.d_model, m.n_layers, m.n_params, m.eval_accuracy
+        );
+    }
+    Ok(())
+}
+
+fn profile(args: &Args) -> Result<(), String> {
+    let env = Env::load()?;
+    let cluster = Cluster::testbed(args.opt_usize("edges", 4));
+    let devices: Vec<&DeviceSpec> =
+        std::iter::once(&cluster.cloud).chain(cluster.edges.iter().take(1)).collect();
+    let models: Vec<&ModelInfo> = env.registry.models.iter().collect();
+    let prof = OfflineProfile::profile_batched(&devices, &models, 16);
+    println!("offline latency fits f(l) = a + b*l  [seconds; cloud at batch 16]");
+    for d in &devices {
+        for m in &models {
+            if let Some(fit) = prof.f(&d.name, &m.name) {
+                println!("  {:<8} {:<14} a={:>7.3}  b={:>8.5}  f(500)={:>7.1}s", d.name, m.name, fit.a, fit.b, fit.eval(500));
+            } else {
+                println!("  {:<8} {:<14} OOM", d.name, m.name);
+            }
+        }
+    }
+    for slm in env.registry.slms_for("qwen72b-sim") {
+        if let Some(c) = prof.cost_coefficient("cloud-0", "qwen72b-sim", "edge-0", &slm.name) {
+            println!("cost coefficient c (72B cloud vs {} edge) = {c:.2}", slm.name);
+        }
+    }
+    Ok(())
+}
+
+fn finetune(args: &Args) -> Result<(), String> {
+    let mut env = Env::load()?;
+    let trainer = Trainer {
+        cfg: TrainerCfg {
+            pairs_per_category: args.opt_usize("pairs", 8),
+            rl_steps: args.opt_usize("steps", 30),
+            ..Default::default()
+        },
+        corpus: env.corpus.clone(),
+        tok: &env.tok,
+    };
+    let out = trainer.run(env.backend.as_mut())?;
+    println!(
+        "reward model: {} pairs, train loss {:.3}, holdout accuracy {:.2}",
+        out.n_pairs, out.rm_train_loss, out.rm_holdout_acc
+    );
+    println!("fine-tuned keep-fractions per category:");
+    for (cat, frac) in &out.policy.keep_frac {
+        println!("  {cat:<16} {frac:.2}");
+    }
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<(), String> {
+    let model = args.opt_str("model", "llama70b-sim").to_string();
+    let n = args.opt_usize("n", 40);
+    let mut env = Env::load()?;
+    let rpm = env.paper_rpm(&model);
+    let judge = Judge::fit(&env.corpus);
+    println!("{:<11} {:>10} {:>9} {:>8}", "system", "thpt(q/m)", "lat(s)", "quality");
+    for (name, result) in env.run_all_systems(&model, rpm, n, 11) {
+        match result {
+            Err(e) => println!("{name:<11} {e}"),
+            Ok((m, traces)) => {
+                let scores: Vec<f64> = traces
+                    .iter()
+                    .filter_map(|t| {
+                        env.corpus.get(t.question_id).map(|q| judge.score(q, &t.answer).overall)
+                    })
+                    .collect();
+                println!(
+                    "{name:<11} {:>10.2} {:>9.2} {:>8.2}",
+                    m.throughput_qpm, m.avg_latency_s, stats::mean(&scores)
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Serving metrics: request traces + throughput/latency/cost aggregation.
+//!
+//! The paper's efficiency metrics (§V-A): throughput = queries/min, average
+//! end-to-end latency (cloud + waiting + transfer + edge). Cost metrics
+//! (server/edge token counts) feed the lexicographic SLO optimizer.
+
+use crate::simclock::SimTime;
+use crate::util::stats;
+
+/// How a request was served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// full answer from the cloud LLM
+    CloudFull,
+    /// progressive: cloud sketch + edge expansion
+    Progressive,
+    /// full answer from an edge SLM (edge-only / routed-easy)
+    EdgeFull,
+}
+
+/// Per-request lifecycle record.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub rid: usize,
+    pub question_id: usize,
+    pub category: String,
+    pub mode: Mode,
+    pub sketch_level: usize,
+    pub predicted_len: usize,
+    /// tokens generated on the cloud (server cost)
+    pub cloud_tokens: usize,
+    /// tokens generated on edges, summed over ensemble members (edge cost)
+    pub edge_tokens: usize,
+    /// final answer token ids
+    pub answer: Vec<u32>,
+    pub arrival: SimTime,
+    pub cloud_start: SimTime,
+    pub cloud_done: SimTime,
+    pub edge_start: SimTime,
+    pub done: SimTime,
+    /// ensemble winner (empty when not progressive)
+    pub winner_model: String,
+    pub confidence: f64,
+    /// edge expansion parallelism degree chosen by the execution optimizer
+    pub parallelism: usize,
+}
+
+impl RequestTrace {
+    pub fn latency(&self) -> f64 {
+        self.done - self.arrival
+    }
+}
+
+/// Aggregated results for one serving run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub throughput_qpm: f64,
+    pub avg_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub server_tokens: usize,
+    pub edge_tokens: usize,
+    pub n_requests: usize,
+    pub n_progressive: usize,
+    pub makespan_s: f64,
+}
+
+pub fn aggregate(traces: &[RequestTrace]) -> RunMetrics {
+    if traces.is_empty() {
+        return RunMetrics::default();
+    }
+    let lat: Vec<f64> = traces.iter().map(RequestTrace::latency).collect();
+    let first_arrival = traces.iter().map(|t| t.arrival).fold(f64::INFINITY, f64::min);
+    let last_done = traces.iter().map(|t| t.done).fold(0.0, f64::max);
+    let makespan = (last_done - first_arrival).max(1e-9);
+    RunMetrics {
+        throughput_qpm: traces.len() as f64 / makespan * 60.0,
+        avg_latency_s: stats::mean(&lat),
+        p50_latency_s: stats::percentile(&lat, 50.0),
+        p95_latency_s: stats::percentile(&lat, 95.0),
+        server_tokens: traces.iter().map(|t| t.cloud_tokens).sum(),
+        edge_tokens: traces.iter().map(|t| t.edge_tokens).sum(),
+        n_requests: traces.len(),
+        n_progressive: traces.iter().filter(|t| t.mode == Mode::Progressive).count(),
+        makespan_s: makespan,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(arrival: f64, done: f64) -> RequestTrace {
+        RequestTrace {
+            rid: 0,
+            question_id: 0,
+            category: "generic".into(),
+            mode: Mode::CloudFull,
+            sketch_level: 0,
+            predicted_len: 0,
+            cloud_tokens: 10,
+            edge_tokens: 5,
+            answer: vec![],
+            arrival,
+            cloud_start: arrival,
+            cloud_done: done,
+            edge_start: done,
+            done,
+            winner_model: String::new(),
+            confidence: 0.0,
+            parallelism: 0,
+        }
+    }
+
+    #[test]
+    fn throughput_and_latency() {
+        let traces: Vec<_> = (0..60).map(|i| trace(i as f64, i as f64 + 2.0)).collect();
+        let m = aggregate(&traces);
+        // 60 requests over 61 s makespan -> ~59 qpm
+        assert!((m.throughput_qpm - 60.0 / 61.0 * 60.0).abs() < 1e-6);
+        assert!((m.avg_latency_s - 2.0).abs() < 1e-9);
+        assert_eq!(m.server_tokens, 600);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let m = aggregate(&[]);
+        assert_eq!(m.n_requests, 0);
+        assert_eq!(m.throughput_qpm, 0.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Model registry: the Table-I model ladder and its simulation calibration.
+//!
+//! Each entry pairs (a) the *real* picoLM artifact (HLO + weights, loaded by
+//! `runtime/`) with (b) the *simulated* identity it plays on the testbed
+//! (Qwen2.5-72B, ..., Qwen2.5-1.5B) — speed, GPU memory and MMLU from the
+//! paper's Table I, plus behavioural notes from §V-B (the 32B model's poor
+//! response-length prediction).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Qwen,
+    Llama,
+}
+
+/// Static + artifact-derived description of one model variant.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub family: Family,
+    /// Table I calibration (simulated identity)
+    pub speed_tps: f64,
+    pub memory_gb: f64,
+    pub mmlu: f64,
+    /// §V-B behavioural note: multiplicative bias of length predictions
+    /// (1.0 = accurate; <1 = systematic underestimation).
+    pub length_pred_bias: f64,
+    /// picoLM reality (from artifacts meta.json; zero if registry is builtin)
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_params: usize,
+    pub eval_accuracy: f64,
+    pub artifact_dir: Option<PathBuf>,
+}
+
+impl ModelInfo {
+    /// Simulated parameter count in billions (from the name, for sizing rules).
+    pub fn sim_params_b(&self) -> f64 {
+        match self.name.as_str() {
+            "qwen72b-sim" => 72.0,
+            "llama70b-sim" => 70.0,
+            "qwen32b-sim" => 32.0,
+            "llama8b-sim" => 8.0,
+            "qwen7b-sim" => 7.0,
+            "qwen1.5b-sim" => 1.5,
+            _ => 1.0,
+        }
+    }
+
+    /// Is this a small-enough model for edge deployment (paper: < 8B class)?
+    pub fn edge_class(&self) -> bool {
+        self.sim_params_b() <= 8.0
+    }
+}
+
+/// The six Table-I entries, largest first.
+pub fn builtin_table() -> Vec<ModelInfo> {
+    let mk = |name: &str, family, speed, mem, mmlu, bias| ModelInfo {
+        name: name.to_string(),
+        family,
+        speed_tps: speed,
+        memory_gb: mem,
+        mmlu,
+        length_pred_bias: bias,
+        d_model: 0,
+        n_layers: 0,
+        n_heads: 0,
+        n_params: 0,
+        eval_accuracy: 0.0,
+        artifact_dir: None,
+    };
+    vec![
+        mk("qwen72b-sim", Family::Qwen, 18.19, 134.74, 86.1, 1.0),
+        mk("llama70b-sim", Family::Llama, 18.82, 130.64, 79.5, 1.0),
+        mk("qwen32b-sim", Family::Qwen, 22.13, 60.11, 83.3, 0.55),
+        mk("llama8b-sim", Family::Llama, 76.5, 15.83, 66.6, 1.0),
+        mk("qwen7b-sim", Family::Qwen, 84.28, 14.92, 74.2, 1.0),
+        mk("qwen1.5b-sim", Family::Qwen, 183.33, 3.44, 60.9, 0.9),
+    ]
+}
+
+#[derive(Clone, Debug)]
+pub struct Registry {
+    pub models: Vec<ModelInfo>,
+}
+
+impl Registry {
+    /// Simulation-only registry (no artifacts needed) — used by pure
+    /// scheduling/efficiency experiments and unit tests.
+    pub fn builtin() -> Self {
+        Registry { models: builtin_table() }
+    }
+
+    /// Registry backed by `make artifacts` output; enriches the builtin
+    /// table with picoLM dims + measured eval accuracy.
+    pub fn from_artifacts(dir: &Path) -> Result<Self, String> {
+        let mut models = builtin_table();
+        for m in &mut models {
+            let mdir = dir.join("models").join(&m.name);
+            let meta_path = mdir.join("meta.json");
+            let text = std::fs::read_to_string(&meta_path)
+                .map_err(|e| format!("read {}: {e} (run `make artifacts`)", meta_path.display()))?;
+            let meta = Json::parse(&text)?;
+            m.d_model = meta.req("d_model")?.as_usize().ok_or("bad d_model")?;
+            m.n_layers = meta.req("n_layers")?.as_usize().ok_or("bad n_layers")?;
+            m.n_heads = meta.req("n_heads")?.as_usize().ok_or("bad n_heads")?;
+            m.n_params = meta.req("n_params")?.as_usize().ok_or("bad n_params")?;
+            if let Some(metrics) = meta.get("metrics") {
+                m.eval_accuracy =
+                    metrics.get("eval_accuracy").and_then(Json::as_f64).unwrap_or(0.0);
+            }
+            m.artifact_dir = Some(mdir);
+        }
+        Ok(Registry { models })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelInfo> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Edge-deployable models smaller than `cloud` (paper: "the SLM at edge
+    /// is any model with fewer parameters than the cloud model").
+    pub fn slms_for(&self, cloud: &str) -> Vec<&ModelInfo> {
+        let cb = self.get(cloud).map(|m| m.sim_params_b()).unwrap_or(f64::MAX);
+        self.models
+            .iter()
+            .filter(|m| m.sim_params_b() < cb && m.edge_class())
+            .collect()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.iter().map(|m| m.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_ladder_ordered() {
+        let r = Registry::builtin();
+        assert_eq!(r.models.len(), 6);
+        // speed increases as size decreases
+        assert!(r.get("qwen1.5b-sim").unwrap().speed_tps > r.get("qwen72b-sim").unwrap().speed_tps);
+    }
+
+    #[test]
+    fn slm_selection_matches_paper() {
+        let r = Registry::builtin();
+        let slms = r.slms_for("qwen72b-sim");
+        let names: Vec<_> = slms.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, vec!["llama8b-sim", "qwen7b-sim", "qwen1.5b-sim"]);
+        // for a small cloud model, only smaller SLMs remain
+        let slms = r.slms_for("qwen7b-sim");
+        assert_eq!(slms.len(), 1);
+        assert_eq!(slms[0].name, "qwen1.5b-sim");
+    }
+
+    #[test]
+    fn edge_class_cutoff() {
+        let r = Registry::builtin();
+        assert!(!r.get("qwen32b-sim").unwrap().edge_class());
+        assert!(r.get("llama8b-sim").unwrap().edge_class());
+    }
+}

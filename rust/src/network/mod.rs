@@ -1,0 +1,82 @@
+//! Cloud<->edge network model.
+//!
+//! PICE transfers only *text* (queries + sketches); the paper observes this
+//! keeps transfer to "a few tens of milliseconds even at lower bandwidths"
+//! (Fig. 14). The model: transfer_s = RTT/2 + payload_bits / bandwidth, with
+//! an optional congestion multiplier the runtime profiler can update.
+
+use crate::simclock::SimTime;
+
+pub const BYTES_PER_TOKEN: f64 = 6.0; // avg word + separator, UTF-8
+pub const PROTOCOL_OVERHEAD_BYTES: f64 = 220.0; // headers/framing per message
+
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub bandwidth_mbps: f64,
+    pub rtt_ms: f64,
+    /// Runtime congestion factor (1.0 = uncongested), set by the profiler.
+    pub congestion: f64,
+}
+
+impl Link {
+    pub fn new(bandwidth_mbps: f64, rtt_ms: f64) -> Self {
+        Link { bandwidth_mbps, rtt_ms, congestion: 1.0 }
+    }
+
+    /// Typical cloud-edge WAN for the paper's testbed experiments.
+    pub fn default_wan() -> Self {
+        Link::new(100.0, 20.0)
+    }
+
+    /// One-way transfer time for a token payload, seconds.
+    pub fn transfer_tokens_s(&self, n_tokens: usize) -> SimTime {
+        self.transfer_bytes_s(n_tokens as f64 * BYTES_PER_TOKEN)
+    }
+
+    pub fn transfer_bytes_s(&self, bytes: f64) -> SimTime {
+        let bits = (bytes + PROTOCOL_OVERHEAD_BYTES) * 8.0;
+        let bw = (self.bandwidth_mbps * 1e6 / self.congestion).max(1e3);
+        self.rtt_ms / 2.0 / 1e3 + bits / bw
+    }
+
+    /// Round trip for request + response payloads (the Δ(r) of Eq. 2).
+    pub fn round_trip_s(&self, tokens_out: usize, tokens_back: usize) -> SimTime {
+        self.transfer_tokens_s(tokens_out) + self.transfer_tokens_s(tokens_back)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sketch_transfer_is_tens_of_ms() {
+        // paper §V-D: sketches transfer in a few tens of ms even at low bw
+        let slow = Link::new(10.0, 30.0);
+        let t = slow.transfer_tokens_s(200);
+        assert!(t < 0.1, "200-token sketch at 10 Mbps took {t}s");
+        assert!(t > 0.01);
+    }
+
+    #[test]
+    fn bandwidth_monotone() {
+        let a = Link::new(10.0, 20.0).transfer_tokens_s(500);
+        let b = Link::new(100.0, 20.0).transfer_tokens_s(500);
+        let c = Link::new(1000.0, 20.0).transfer_tokens_s(500);
+        assert!(a > b && b > c);
+    }
+
+    #[test]
+    fn congestion_slows() {
+        let mut l = Link::new(100.0, 20.0);
+        let fast = l.transfer_tokens_s(1000);
+        l.congestion = 4.0;
+        assert!(l.transfer_tokens_s(1000) > fast);
+    }
+
+    #[test]
+    fn rtt_floor() {
+        let l = Link::new(10_000.0, 40.0);
+        assert!(l.transfer_tokens_s(1) >= 0.02);
+    }
+}

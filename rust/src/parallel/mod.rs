@@ -1,0 +1,304 @@
+//! Execution optimizer: semantic-level parallelism planning for edge
+//! expansion (paper §IV-B).
+//!
+//! Each sketch sentence expands independently, so a k-sentence sketch admits
+//! up to k-way parallelism — but (1) uneven sentence lengths cause batch
+//! stragglers and (2) every parallel lane re-processes the whole sketch
+//! prompt (KV-cache overhead). The paper's fix is *binary-tree merging*:
+//! sort sentences by length, pair longest-with-shortest, and recursively
+//! halve the number of lanes while the latency constraint still holds.
+
+/// A lane: indices of sketch sentences expanded sequentially on one stream.
+pub type Group = Vec<usize>;
+
+/// Cost model for one candidate grouping, in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeCostModel {
+    /// per-token decode latency at parallelism 1
+    pub token_s: f64,
+    /// marginal per-token slowdown per extra concurrent lane
+    pub batch_slowdown: f64,
+    /// prompt (sketch) tokens re-processed per lane
+    pub prompt_tokens: usize,
+    /// prefill tokens/s relative to decode (prefill is ~8x faster)
+    pub prefill_speedup: f64,
+}
+
+impl EdgeCostModel {
+    /// Wall-clock for expanding lanes concurrently: the slowest lane's
+    /// decode tokens + one prompt prefill per lane, at batch-p token rate.
+    pub fn wall_clock(&self, groups: &[Group], exp_lens: &[usize]) -> f64 {
+        if groups.is_empty() {
+            return 0.0;
+        }
+        let p = groups.len();
+        let tok = self.token_s * (1.0 + self.batch_slowdown * (p - 1) as f64);
+        let prefill = self.prompt_tokens as f64 * tok / self.prefill_speedup;
+        groups
+            .iter()
+            .map(|g| {
+                let decode: usize = g.iter().map(|&i| exp_lens[i]).sum();
+                prefill + decode as f64 * tok
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Total device-seconds consumed (efficiency; prompt overhead included).
+    pub fn device_seconds(&self, groups: &[Group], exp_lens: &[usize]) -> f64 {
+        let p = groups.len().max(1);
+        let tok = self.token_s * (1.0 + self.batch_slowdown * (p - 1) as f64);
+        let prefill = self.prompt_tokens as f64 * tok / self.prefill_speedup;
+        groups
+            .iter()
+            .map(|g| prefill + g.iter().map(|&i| exp_lens[i]).sum::<usize>() as f64 * tok)
+            .sum()
+    }
+}
+
+/// One binary-tree merge step: sort lanes by total length, pair longest with
+/// shortest (paper: (r1, rk), (r2, r(k-1)), ...).
+pub fn merge_once(groups: &[Group], exp_lens: &[usize]) -> Vec<Group> {
+    let mut order: Vec<usize> = (0..groups.len()).collect();
+    let glen = |g: &Group| -> usize { g.iter().map(|&i| exp_lens[i]).sum() };
+    order.sort_by_key(|&gi| std::cmp::Reverse(glen(&groups[gi])));
+    let mut out = Vec::with_capacity(groups.len().div_ceil(2));
+    let (mut lo, mut hi) = (0usize, order.len());
+    while lo < hi {
+        if hi - lo == 1 {
+            out.push(groups[order[lo]].clone());
+            lo += 1;
+        } else {
+            let mut merged = groups[order[lo]].clone();
+            merged.extend_from_slice(&groups[order[hi - 1]]);
+            out.push(merged);
+            lo += 1;
+            hi -= 1;
+        }
+    }
+    out
+}
+
+/// Plan lanes for expanding `exp_lens` (predicted per-sentence expansion
+/// lengths): start fully parallel (capped by the device memory ceiling
+/// `p_max`), then merge while the wall-clock stays within `latency_budget`.
+///
+/// Returns the lane plan; `plan.len()` is the chosen parallelism degree.
+pub fn plan_groups(
+    exp_lens: &[usize],
+    p_max: usize,
+    latency_budget: f64,
+    cost: &EdgeCostModel,
+) -> Vec<Group> {
+    let k = exp_lens.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    // start: one sentence per lane, memory-capped via initial merges
+    let mut groups: Vec<Group> = (0..k).map(|i| vec![i]).collect();
+    while groups.len() > p_max.max(1) {
+        groups = merge_once(&groups, exp_lens);
+    }
+    // recursively merge while the constraint still holds (merging halves the
+    // prompt-overhead and KV footprint; stop before exceeding the budget)
+    loop {
+        if groups.len() <= 1 {
+            break;
+        }
+        let candidate = merge_once(&groups, exp_lens);
+        if cost.wall_clock(&candidate, exp_lens) <= latency_budget {
+            groups = candidate;
+        } else {
+            break;
+        }
+    }
+    groups
+}
+
+/// Batch-level wall clock: all jobs' lanes run concurrently on one device,
+/// so the token-rate slowdown is a function of the TOTAL lane count. This is
+/// the coupling the binary-tree merge exploits: merging one job's lanes
+/// speeds up every other lane on the device.
+pub fn batch_wall(plans: &[Vec<Group>], exp_lens: &[&[usize]], cost: &EdgeCostModel) -> f64 {
+    let p_total: usize = plans.iter().map(Vec::len).sum();
+    if p_total == 0 {
+        return 0.0;
+    }
+    let tok = cost.token_s * (1.0 + cost.batch_slowdown * (p_total - 1) as f64);
+    let prefill = cost.prompt_tokens as f64 * tok / cost.prefill_speedup;
+    plans
+        .iter()
+        .zip(exp_lens)
+        .map(|(groups, lens)| {
+            groups
+                .iter()
+                .map(|g| prefill + g.iter().map(|&i| lens[i]).sum::<usize>() as f64 * tok)
+                .fold(0.0, f64::max)
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Plan lanes for a *batch* of expansion jobs sharing one edge device:
+/// start fully parallel, then greedily binary-merge the job with the most
+/// lanes while that (a) is required to fit the memory ceiling `p_mem`, or
+/// (b) strictly reduces the batch wall clock (contention vs serialization —
+/// the interior optimum of the paper's Fig. 7a).
+///
+/// Returns (per-job lane plans, batch wall clock seconds).
+pub fn plan_batch(
+    exp_lens_per_job: &[&[usize]],
+    p_mem: usize,
+    cost: &EdgeCostModel,
+) -> (Vec<Vec<Group>>, f64) {
+    let mut plans: Vec<Vec<Group>> = exp_lens_per_job
+        .iter()
+        .map(|lens| (0..lens.len()).map(|i| vec![i]).collect())
+        .collect();
+    if plans.is_empty() {
+        return (plans, 0.0);
+    }
+    loop {
+        let p_total: usize = plans.iter().map(Vec::len).sum();
+        let wall = batch_wall(&plans, exp_lens_per_job, cost);
+        // candidate: merge the job with the most lanes
+        let Some(j) = (0..plans.len())
+            .filter(|&j| plans[j].len() > 1)
+            .max_by_key(|&j| plans[j].len())
+        else {
+            return (plans, wall);
+        };
+        let mut cand = plans.clone();
+        cand[j] = merge_once(&plans[j], exp_lens_per_job[j]);
+        let cand_wall = batch_wall(&cand, exp_lens_per_job, cost);
+        let over_mem = p_total > p_mem.max(1);
+        if over_mem || cand_wall < wall {
+            plans = cand;
+        } else {
+            return (plans, wall);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm(prompt: usize) -> EdgeCostModel {
+        EdgeCostModel { token_s: 0.01, batch_slowdown: 0.06, prompt_tokens: prompt, prefill_speedup: 8.0 }
+    }
+
+    #[test]
+    fn merge_pairs_longest_with_shortest() {
+        let lens = [10, 1, 5, 2];
+        let groups: Vec<Group> = (0..4).map(|i| vec![i]).collect();
+        let merged = merge_once(&groups, &lens);
+        assert_eq!(merged.len(), 2);
+        // longest (idx 0, len 10) pairs with shortest (idx 1, len 1)
+        let sums: Vec<usize> = merged.iter().map(|g| g.iter().map(|&i| lens[i]).sum()).collect();
+        assert_eq!(sums, vec![11, 7]);
+    }
+
+    #[test]
+    fn merging_balances_lanes() {
+        let lens = [20, 2, 18, 4, 16, 6];
+        let groups: Vec<Group> = (0..6).map(|i| vec![i]).collect();
+        let merged = merge_once(&groups, &lens);
+        let sums: Vec<usize> = merged.iter().map(|g| g.iter().map(|&i| lens[i]).sum()).collect();
+        let spread = sums.iter().max().unwrap() - sums.iter().min().unwrap();
+        assert!(spread <= 2, "unbalanced lanes: {sums:?}");
+    }
+
+    #[test]
+    fn plan_respects_memory_cap() {
+        let lens = vec![8; 12];
+        let plan = plan_groups(&lens, 4, 1e9, &cm(30));
+        assert!(plan.len() <= 4);
+        // all sentences covered exactly once
+        let mut seen: Vec<usize> = plan.iter().flatten().copied().collect();
+        seen.sort();
+        assert_eq!(seen, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tight_budget_keeps_parallelism() {
+        let lens = vec![10; 8];
+        // budget only fits the fully-parallel plan
+        let c = cm(4);
+        let full = c.wall_clock(&(0..8).map(|i| vec![i]).collect::<Vec<_>>(), &lens);
+        let plan = plan_groups(&lens, 16, full * 1.01, &c);
+        assert_eq!(plan.len(), 8, "should not merge under a tight budget");
+    }
+
+    #[test]
+    fn loose_budget_merges_down() {
+        let lens = vec![10; 8];
+        let plan = plan_groups(&lens, 16, 1e9, &cm(400));
+        // huge prompt overhead + no deadline -> merge all the way down
+        assert_eq!(plan.len(), 1);
+    }
+
+    #[test]
+    fn prompt_overhead_discourages_parallelism() {
+        let lens = vec![6; 6];
+        let c_small = cm(2);
+        let c_big = cm(300);
+        let budget = 3.0;
+        let p_small = plan_groups(&lens, 8, budget, &c_small).len();
+        let p_big = plan_groups(&lens, 8, budget, &c_big).len();
+        assert!(p_big <= p_small);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(plan_groups(&[], 4, 1.0, &cm(10)).is_empty());
+    }
+
+    #[test]
+    fn batch_plan_partitions_every_job() {
+        let a = vec![10, 12, 8, 14];
+        let b = vec![20, 4];
+        let (plans, wall) = plan_batch(&[&a, &b], 16, &cm(30));
+        assert_eq!(plans.len(), 2);
+        assert!(wall > 0.0);
+        for (plan, lens) in plans.iter().zip([&a, &b]) {
+            let mut all: Vec<usize> = plan.iter().flatten().copied().collect();
+            all.sort();
+            assert_eq!(all, (0..lens.len()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn batch_plan_respects_memory_ceiling() {
+        let lens: Vec<usize> = vec![10; 8];
+        let jobs: Vec<&[usize]> = vec![&lens, &lens, &lens];
+        let (plans, _) = plan_batch(&jobs, 6, &cm(20));
+        let total: usize = plans.iter().map(Vec::len).sum();
+        assert!(total <= 6, "total lanes {total}");
+    }
+
+    #[test]
+    fn batch_plan_never_worse_than_fully_merged() {
+        // min-wall planning must beat (or match) full serialization
+        let lens: Vec<usize> = vec![15; 6];
+        let jobs: Vec<&[usize]> = vec![&lens];
+        let c = cm(10);
+        let (_, wall) = plan_batch(&jobs, 64, &c);
+        let merged: Vec<Vec<Group>> = vec![vec![(0..6).collect()]];
+        let merged_wall = batch_wall(&merged, &jobs, &c);
+        assert!(wall <= merged_wall + 1e-9, "{wall} > {merged_wall}");
+    }
+
+    #[test]
+    fn heavy_prompt_overhead_prefers_fewer_lanes() {
+        let lens: Vec<usize> = vec![6; 8];
+        let jobs: Vec<&[usize]> = vec![&lens];
+        let (small_prompt, _) = plan_batch(&jobs, 64, &cm(2));
+        let (big_prompt, _) = plan_batch(&jobs, 64, &EdgeCostModel {
+            token_s: 0.01,
+            batch_slowdown: 0.5, // harsh contention
+            prompt_tokens: 500,
+            prefill_speedup: 2.0,
+        });
+        assert!(big_prompt.iter().map(Vec::len).sum::<usize>()
+            <= small_prompt.iter().map(Vec::len).sum::<usize>());
+    }
+}

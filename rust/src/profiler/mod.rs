@@ -1,0 +1,196 @@
+//! Profiler: offline latency estimation + runtime condition monitoring.
+//!
+//! Paper §III: "In the offline phase, it conducts device-specific latency
+//! estimation. During runtime, it continuously monitors device and server
+//! loads, as well as network conditions."
+//!
+//! Offline: fits the latency function f(l) (cloud LLM time to produce an
+//! l-token response) and the cost coefficient c per (SLM, edge device) —
+//! the quantities Eq. 2's admission test needs. The fit is an OLS line over
+//! sampled generation lengths, mirroring how the paper profiles a real
+//! testbed rather than reading the model's closed form.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::DeviceSpec;
+use crate::models::ModelInfo;
+use crate::simclock::SimTime;
+use crate::util::stats::linfit;
+
+/// Fitted latency line f(l) = a + b*l, seconds for an l-token response.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyFit {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl LatencyFit {
+    pub fn eval(&self, l: usize) -> SimTime {
+        (self.a + self.b * l as f64).max(0.0)
+    }
+}
+
+/// Offline profile: f(l) per (device, model) + cost coefficients.
+#[derive(Clone, Debug, Default)]
+pub struct OfflineProfile {
+    fits: BTreeMap<(String, String), LatencyFit>,
+}
+
+impl OfflineProfile {
+    /// Sample the device latency model at several lengths and fit a line —
+    /// the offline phase of the paper's profiler. Batch-1 everywhere.
+    pub fn profile(devices: &[&DeviceSpec], models: &[&ModelInfo]) -> Self {
+        Self::profile_batched(devices, models, 1)
+    }
+
+    /// Profile with the cloud measured at its *typical serving batch* (vLLM
+    /// runs continuously batched, so per-sequence cloud latency under load
+    /// is what Eq. 2 must compare against). Edge devices profile at batch 1.
+    pub fn profile_batched(
+        devices: &[&DeviceSpec],
+        models: &[&ModelInfo],
+        cloud_batch: usize,
+    ) -> Self {
+        let lengths = [32usize, 64, 128, 256, 512, 768];
+        let mut fits = BTreeMap::new();
+        for d in devices {
+            let b = match d.kind {
+                crate::cluster::DeviceKind::Cloud => cloud_batch.max(1),
+                crate::cluster::DeviceKind::Edge => 1,
+            };
+            for m in models {
+                if !d.fits(m) {
+                    continue;
+                }
+                let xs: Vec<f64> = lengths.iter().map(|&l| l as f64).collect();
+                let ys: Vec<f64> = lengths
+                    .iter()
+                    .map(|&l| d.prefill_time_s(m, 24, b) + d.gen_time_s(m, l, b))
+                    .collect();
+                let (a, bb) = linfit(&xs, &ys);
+                fits.insert((d.name.clone(), m.name.clone()), LatencyFit { a, b: bb });
+            }
+        }
+        OfflineProfile { fits }
+    }
+
+    pub fn f(&self, device: &str, model: &str) -> Option<LatencyFit> {
+        self.fits.get(&(device.to_string(), model.to_string())).copied()
+    }
+
+    /// Cost coefficient c: time ratio of a single execution on (edge, SLM)
+    /// vs (cloud, LLM) — the paper's c in Eq. 2.
+    pub fn cost_coefficient(&self, cloud_dev: &str, llm: &str, edge_dev: &str, slm: &str) -> Option<f64> {
+        let fc = self.f(cloud_dev, llm)?;
+        let fe = self.f(edge_dev, slm)?;
+        // ratio of marginal per-token costs (robust to intercepts)
+        Some(fe.b / fc.b)
+    }
+}
+
+/// Runtime monitor: rolling view of queue depths, device busy state and
+/// network condition that the dynamic scheduler consults per-query.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeMonitor {
+    pub cloud_inflight: usize,
+    pub cloud_queue: usize,
+    pub edge_busy_until: Vec<SimTime>,
+    pub job_queue_len: usize,
+    pub congestion: f64,
+    /// exponentially-weighted observed edge token rate error (observed /
+    /// predicted), used to correct offline fits online.
+    pub edge_rate_correction: f64,
+}
+
+impl RuntimeMonitor {
+    pub fn new(n_edges: usize) -> Self {
+        RuntimeMonitor {
+            cloud_inflight: 0,
+            cloud_queue: 0,
+            edge_busy_until: vec![0.0; n_edges],
+            job_queue_len: 0,
+            congestion: 1.0,
+            edge_rate_correction: 1.0,
+        }
+    }
+
+    /// Earliest time any edge device becomes idle.
+    pub fn next_idle_edge(&self, now: SimTime) -> SimTime {
+        self.edge_busy_until
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min)
+            .max(now)
+    }
+
+    pub fn idle_edges(&self, now: SimTime) -> usize {
+        self.edge_busy_until.iter().filter(|&&t| t <= now).count()
+    }
+
+    /// Update the EWMA rate correction with an observed/predicted ratio.
+    pub fn observe_edge_rate(&mut self, ratio: f64) {
+        const ALPHA: f64 = 0.2;
+        self.edge_rate_correction =
+            (1.0 - ALPHA) * self.edge_rate_correction + ALPHA * ratio.clamp(0.25, 4.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeviceSpec;
+    use crate::models::Registry;
+
+    #[test]
+    fn fit_recovers_linear_model() {
+        let r = Registry::builtin();
+        let cloud = DeviceSpec::a100_cloud("c");
+        let m = r.get("qwen72b-sim").unwrap();
+        let prof = OfflineProfile::profile(&[&cloud], &[m]);
+        let fit = prof.f("c", "qwen72b-sim").unwrap();
+        // slope should match the device token latency closely
+        let expect = cloud.token_latency_s(m, 1);
+        assert!((fit.b - expect).abs() / expect < 0.05, "slope {} vs {}", fit.b, expect);
+    }
+
+    #[test]
+    fn oom_pairs_not_profiled() {
+        let r = Registry::builtin();
+        let edge = DeviceSpec::jetson_orin("e");
+        let m = r.get("qwen72b-sim").unwrap();
+        let prof = OfflineProfile::profile(&[&edge], &[m]);
+        assert!(prof.f("e", "qwen72b-sim").is_none());
+    }
+
+    #[test]
+    fn cost_coefficient_sane() {
+        let r = Registry::builtin();
+        let cloud = DeviceSpec::a100_cloud("c");
+        let edge = DeviceSpec::jetson_orin("e");
+        let llm = r.get("qwen72b-sim").unwrap();
+        let slm = r.get("qwen7b-sim").unwrap();
+        let prof = OfflineProfile::profile(&[&cloud, &edge], &[llm, slm]);
+        let c = prof.cost_coefficient("c", "qwen72b-sim", "e", "qwen7b-sim").unwrap();
+        // a 7B SLM on a Jetson is slower per token than a 72B on 4xA100+vLLM,
+        // but within ~2x (the regime where progressive inference pays off).
+        assert!(c > 0.3 && c < 10.0, "c = {c}");
+    }
+
+    #[test]
+    fn monitor_idle_tracking() {
+        let mut mon = RuntimeMonitor::new(3);
+        mon.edge_busy_until = vec![5.0, 1.0, 9.0];
+        assert_eq!(mon.idle_edges(2.0), 1);
+        assert_eq!(mon.next_idle_edge(0.0), 1.0);
+        assert_eq!(mon.next_idle_edge(6.0), 6.0);
+    }
+
+    #[test]
+    fn ewma_bounded() {
+        let mut mon = RuntimeMonitor::new(1);
+        for _ in 0..100 {
+            mon.observe_edge_rate(100.0); // clamped to 4.0
+        }
+        assert!(mon.edge_rate_correction <= 4.0);
+    }
+}

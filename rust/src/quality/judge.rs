@@ -1,0 +1,220 @@
+//! Deterministic response-quality judge — the FastChat/LLMZoo substitute.
+//!
+//! The paper scores answers with GPT-3.5-turbo on a 1-10 scale (FastChat)
+//! and ranks four systems on five dimensions (LLMZoo: diversity, relevance,
+//! immersion, coherence, integrity). An LLM judge is itself a proxy; we
+//! substitute transparent proxies computed against the corpus:
+//!
+//!   relevance  — Rouge-1 vs the reference answer
+//!   coherence  — mean bigram log-likelihood under a corpus bigram model
+//!   diversity  — distinct-2 of the answer
+//!   immersion  — fraction of tokens in the question category's vocabulary
+//!   integrity  — fraction of reference sketch points covered by the answer
+//!   overall    — calibrated 1-10 blend of the five
+//!
+//! Rankings are computed per-question across competing systems, exactly as
+//! LLMZoo does (rank 1 = best, ties share the better rank).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use super::rouge::{distinct_n, rouge1_f1};
+use crate::corpus::{Corpus, Question};
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Scores {
+    pub overall: f64, // 1..10
+    pub relevance: f64,
+    pub coherence: f64,
+    pub diversity: f64,
+    pub immersion: f64,
+    pub integrity: f64,
+}
+
+impl Scores {
+    pub fn dims(&self) -> [f64; 5] {
+        [self.diversity, self.relevance, self.immersion, self.coherence, self.integrity]
+    }
+}
+
+pub const DIM_NAMES: [&str; 5] =
+    ["diversity", "relevance", "immersion", "coherence", "integrity"];
+
+/// Corpus-fitted judge model.
+pub struct Judge {
+    bigram_logp: HashMap<(u32, u32), f64>,
+    unigram_logp: HashMap<u32, f64>,
+    category_vocab: BTreeMap<String, HashSet<u32>>,
+    fallback_logp: f64,
+}
+
+impl Judge {
+    /// Fit bigram statistics + per-category vocabularies on the corpus
+    /// reference answers (train split only — the judge must not memorize the
+    /// eval answers it scores against; references enter only through rouge).
+    pub fn fit(corpus: &Corpus) -> Judge {
+        let mut big: HashMap<(u32, u32), usize> = HashMap::new();
+        let mut uni: HashMap<u32, usize> = HashMap::new();
+        let mut category_vocab: BTreeMap<String, HashSet<u32>> = BTreeMap::new();
+        let mut total = 0usize;
+        for q in &corpus.questions {
+            let toks = q.answer_tokens();
+            let cv = category_vocab.entry(q.category.clone()).or_default();
+            for &t in &toks {
+                *uni.entry(t).or_insert(0) += 1;
+                cv.insert(t);
+                total += 1;
+            }
+            for w in toks.windows(2) {
+                *big.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+        }
+        let fallback_logp = -8.0;
+        let bigram_logp = big
+            .iter()
+            .map(|(&k, &c)| {
+                let prior = *uni.get(&k.0).unwrap_or(&1) as f64;
+                (k, ((c as f64) / prior).ln())
+            })
+            .collect();
+        let unigram_logp = uni
+            .iter()
+            .map(|(&t, &c)| (t, ((c as f64) / (total.max(1) as f64)).ln()))
+            .collect();
+        Judge { bigram_logp, unigram_logp, category_vocab, fallback_logp }
+    }
+
+    fn coherence(&self, tokens: &[u32]) -> f64 {
+        if tokens.len() < 2 {
+            return 0.0;
+        }
+        let mut lp = 0.0;
+        for w in tokens.windows(2) {
+            lp += self
+                .bigram_logp
+                .get(&(w[0], w[1]))
+                .copied()
+                .unwrap_or(self.fallback_logp);
+        }
+        let mean = lp / (tokens.len() - 1) as f64;
+        // squash mean logp (~[-8, 0]) into [0, 1]
+        ((mean - self.fallback_logp) / -self.fallback_logp).clamp(0.0, 1.0)
+    }
+
+    fn immersion(&self, category: &str, tokens: &[u32]) -> f64 {
+        let Some(vocab) = self.category_vocab.get(category) else {
+            return 0.0;
+        };
+        if tokens.is_empty() {
+            return 0.0;
+        }
+        tokens.iter().filter(|t| vocab.contains(t)).count() as f64 / tokens.len() as f64
+    }
+
+    fn integrity(&self, q: &Question, tokens: &[u32]) -> f64 {
+        if q.sentences.is_empty() {
+            return 0.0;
+        }
+        let present: HashSet<u32> = tokens.iter().copied().collect();
+        let covered = q
+            .sentences
+            .iter()
+            .filter(|s| {
+                let hits = s.sketch.iter().filter(|t| present.contains(t)).count();
+                hits * 2 >= s.sketch.len()
+            })
+            .count();
+        covered as f64 / q.sentences.len() as f64
+    }
+
+    /// Score one answer against its question's reference.
+    pub fn score(&self, q: &Question, answer: &[u32]) -> Scores {
+        let reference = q.answer_tokens();
+        let relevance = rouge1_f1(answer, &reference);
+        let coherence = self.coherence(answer);
+        let diversity = distinct_n(answer, 2);
+        let immersion = self.immersion(&q.category, answer);
+        let integrity = self.integrity(q, answer);
+        // Length-adequacy damper: one-word answers shouldn't score well even
+        // if that word overlaps the reference.
+        let len_ok = (answer.len() as f64 / reference.len().max(1) as f64).clamp(0.0, 1.2);
+        let adequacy = len_ok.min(1.0).powf(0.5);
+        let blend = 0.34 * relevance + 0.22 * integrity + 0.16 * coherence
+            + 0.14 * immersion + 0.14 * diversity;
+        let overall = (1.0 + 9.0 * blend * adequacy).clamp(1.0, 10.0);
+        Scores { overall, relevance, coherence, diversity, immersion, integrity }
+    }
+
+    /// Unigram log-probability of a token (perplexity fallbacks, tests).
+    pub fn unigram_logp(&self, t: u32) -> f64 {
+        self.unigram_logp.get(&t).copied().unwrap_or(self.fallback_logp)
+    }
+}
+
+/// Per-question LLMZoo-style ranks across systems (1 = best; ties share the
+/// better rank, as in "rank of equal values is the min rank").
+pub fn rank_dims(per_system: &[Scores]) -> Vec<[f64; 5]> {
+    let n = per_system.len();
+    let mut ranks = vec![[0.0f64; 5]; n];
+    for d in 0..5 {
+        let vals: Vec<f64> = per_system.iter().map(|s| s.dims()[d]).collect();
+        for i in 0..n {
+            let better = vals.iter().filter(|&&v| v > vals[i] + 1e-12).count();
+            ranks[i][d] = (better + 1) as f64;
+        }
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::tests_support::toy_corpus;
+
+    #[test]
+    fn reference_scores_high() {
+        let (c, _tok) = toy_corpus();
+        let judge = Judge::fit(&c);
+        let q = &c.questions[0];
+        let reference = q.answer_tokens();
+        let s = judge.score(q, &reference);
+        assert!(s.overall > 7.0, "reference answer scored {}", s.overall);
+        assert!((s.relevance - 1.0).abs() < 1e-9);
+        assert!((s.integrity - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn garbage_scores_low() {
+        let (c, _tok) = toy_corpus();
+        let judge = Judge::fit(&c);
+        let q = &c.questions[0];
+        let garbage = vec![9u32; 3];
+        let s = judge.score(q, &garbage);
+        assert!(s.overall < 4.0, "garbage scored {}", s.overall);
+    }
+
+    #[test]
+    fn empty_answer_minimum() {
+        let (c, _tok) = toy_corpus();
+        let judge = Judge::fit(&c);
+        let q = &c.questions[0];
+        let s = judge.score(q, &[]);
+        assert!((s.overall - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ranks_order_correct() {
+        let hi = Scores { relevance: 0.9, diversity: 0.9, immersion: 0.9, coherence: 0.9, integrity: 0.9, overall: 9.0 };
+        let lo = Scores { relevance: 0.1, diversity: 0.1, immersion: 0.1, coherence: 0.1, integrity: 0.1, overall: 2.0 };
+        let ranks = rank_dims(&[lo, hi]);
+        assert_eq!(ranks[1], [1.0; 5]);
+        assert_eq!(ranks[0], [2.0; 5]);
+    }
+
+    #[test]
+    fn tied_share_best_rank() {
+        let s = Scores { relevance: 0.5, diversity: 0.5, immersion: 0.5, coherence: 0.5, integrity: 0.5, overall: 5.0 };
+        let ranks = rank_dims(&[s, s]);
+        assert_eq!(ranks[0], [1.0; 5]);
+        assert_eq!(ranks[1], [1.0; 5]);
+    }
+}

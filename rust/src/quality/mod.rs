@@ -1,0 +1,51 @@
+//! Response-quality measurement: ROUGE, perplexity accounting, and the
+//! deterministic judge (FastChat/LLMZoo substitute — DESIGN.md §2).
+
+pub mod judge;
+pub mod rouge;
+
+/// Perplexity from accumulated token log-probabilities (natural log):
+/// ppl = exp(-mean(logp)). The ensemble confidence (Eq. 3) uses the
+/// equivalent base-2 form 2^(mean log2 p) — see `ensemble::confidence`.
+pub fn perplexity(logps: &[f64]) -> f64 {
+    if logps.is_empty() {
+        return f64::INFINITY;
+    }
+    let mean = logps.iter().sum::<f64>() / logps.len() as f64;
+    (-mean).exp()
+}
+
+/// Geometric-mean token probability, 2^(1/N Σ log2 p) — the first term of
+/// the paper's confidence formula. Equal to 1/perplexity.
+pub fn mean_prob(logps: &[f64]) -> f64 {
+    if logps.is_empty() {
+        return 0.0;
+    }
+    let mean = logps.iter().sum::<f64>() / logps.len() as f64;
+    mean.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_distribution_ppl() {
+        // logp = ln(1/4) per token -> ppl = 4
+        let lp = vec![(0.25f64).ln(); 10];
+        assert!((perplexity(&lp) - 4.0).abs() < 1e-9);
+        assert!((mean_prob(&lp) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_degenerate() {
+        assert!(perplexity(&[]).is_infinite());
+        assert_eq!(mean_prob(&[]), 0.0);
+    }
+
+    #[test]
+    fn certain_model_ppl_one() {
+        let lp = vec![0.0; 5];
+        assert!((perplexity(&lp) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,126 @@
+//! ROUGE metrics over token-id sequences.
+//!
+//! Rouge-1 feeds the ensemble confidence (Eq. 3); Rouge-L feeds the
+//! fine-tuning preference labeler (§IV-D) and the judge.
+
+use std::collections::HashMap;
+
+/// Rouge-1 F1: unigram overlap between candidate and reference.
+pub fn rouge1_f1(candidate: &[u32], reference: &[u32]) -> f64 {
+    if candidate.is_empty() || reference.is_empty() {
+        return 0.0;
+    }
+    let mut ref_counts: HashMap<u32, usize> = HashMap::new();
+    for &t in reference {
+        *ref_counts.entry(t).or_insert(0) += 1;
+    }
+    let mut overlap = 0usize;
+    for &t in candidate {
+        if let Some(c) = ref_counts.get_mut(&t) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    let p = overlap as f64 / candidate.len() as f64;
+    let r = overlap as f64 / reference.len() as f64;
+    if p + r == 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// Longest common subsequence length (O(n*m) DP, rolling row).
+pub fn lcs_len(a: &[u32], b: &[u32]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for &x in a {
+        for (j, &y) in b.iter().enumerate() {
+            cur[j + 1] = if x == y { prev[j] + 1 } else { cur[j].max(prev[j + 1]) };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Rouge-L F1 (LCS-based).
+pub fn rouge_l_f1(candidate: &[u32], reference: &[u32]) -> f64 {
+    if candidate.is_empty() || reference.is_empty() {
+        return 0.0;
+    }
+    let l = lcs_len(candidate, reference) as f64;
+    let p = l / candidate.len() as f64;
+    let r = l / reference.len() as f64;
+    if p + r == 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// Distinct-n: fraction of unique n-grams (the judge's diversity proxy).
+pub fn distinct_n(tokens: &[u32], n: usize) -> f64 {
+    if tokens.len() < n {
+        return 0.0;
+    }
+    let total = tokens.len() - n + 1;
+    let mut seen = std::collections::HashSet::new();
+    for w in tokens.windows(n) {
+        seen.insert(w.to_vec());
+    }
+    seen.len() as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_one() {
+        let a = [1, 2, 3, 4];
+        assert!((rouge1_f1(&a, &a) - 1.0).abs() < 1e-12);
+        assert!((rouge_l_f1(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        assert_eq!(rouge1_f1(&[1, 2], &[3, 4]), 0.0);
+        assert_eq!(rouge_l_f1(&[1, 2], &[3, 4]), 0.0);
+    }
+
+    #[test]
+    fn rouge1_counts_clipped() {
+        // candidate repeats a token more than the reference contains it
+        let c = [5, 5, 5, 5];
+        let r = [5, 1];
+        // overlap clipped to 1; p=0.25, r=0.5 -> f1 = 1/3
+        assert!((rouge1_f1(&c, &r) - (2.0 * 0.25 * 0.5 / 0.75)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lcs_basic() {
+        assert_eq!(lcs_len(&[1, 2, 3, 4, 5], &[2, 4, 5]), 3);
+        assert_eq!(lcs_len(&[1, 2, 3], &[3, 2, 1]), 1);
+        assert_eq!(lcs_len(&[], &[1]), 0);
+    }
+
+    #[test]
+    fn order_matters_for_l_not_1() {
+        let a = [1, 2, 3, 4];
+        let rev = [4, 3, 2, 1];
+        assert!((rouge1_f1(&a, &rev) - 1.0).abs() < 1e-12);
+        assert!(rouge_l_f1(&a, &rev) < 0.5);
+    }
+
+    #[test]
+    fn distinct_bounds() {
+        assert!((distinct_n(&[1, 2, 3, 4], 1) - 1.0).abs() < 1e-12);
+        let rep = [7u32; 10];
+        assert!(distinct_n(&rep, 2) < 0.2);
+    }
+}

@@ -1,0 +1,253 @@
+//! Autoregressive generation on top of the compiled picoLM executables.
+//!
+//! Hot path: prefill once, then one `decode` execution per token with the
+//! KV cache held device-side as a `PjRtBuffer` (only a token id goes up and
+//! a logits vector comes down per step).
+
+use anyhow::{anyhow, bail, Result};
+
+use super::loader::LoadedModel;
+use crate::util::rng::Rng;
+
+/// Sampling configuration for one generation call.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingParams {
+    /// 0.0 = greedy; otherwise softmax temperature.
+    pub temperature: f64,
+    pub max_tokens: usize,
+    /// Stop when this token is produced (besides <eos>). e.g. "." for
+    /// single-sentence expansion tasks.
+    pub stop_token: Option<u32>,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, max_tokens: 64, stop_token: None, seed: 0 }
+    }
+}
+
+/// Result of one generation: tokens (without the prompt) + per-token
+/// natural-log probabilities under the generating model (the ensemble's
+/// perplexity input — Eq. 3 first term).
+#[derive(Clone, Debug, Default)]
+pub struct GenOutput {
+    pub tokens: Vec<u32>,
+    pub logps: Vec<f64>,
+    /// true if generation ended on <eos>/stop rather than max_tokens
+    pub finished: bool,
+}
+
+/// Stateless generation engine over a loaded model.
+pub struct Generator<'m> {
+    pub model: &'m LoadedModel,
+    pub eos: u32,
+}
+
+impl<'m> Generator<'m> {
+    pub fn new(model: &'m LoadedModel, eos: u32) -> Self {
+        Generator { model, eos }
+    }
+
+    /// Run prefill over `prompt`, then decode until eos/stop/max_tokens.
+    pub fn generate(&self, prompt: &[u32], sp: &SamplingParams) -> Result<GenOutput> {
+        let m = self.model;
+        let s_max = m.art.max_seq;
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() >= s_max {
+            bail!("prompt len {} >= max_seq {}", prompt.len(), s_max);
+        }
+        // ---- prefill ----
+        let mut padded = vec![0i32; s_max];
+        for (i, &t) in prompt.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let tok_buf = m.i32_buffer(&padded, &[1, s_max])?;
+        let len_buf = m.i32_buffer(&[prompt.len() as i32], &[1])?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &len_buf];
+        args.extend(m.params.iter());
+        let mut outs = m.prefill.execute_b(&args).map_err(|e| anyhow!("prefill: {e:?}"))?;
+        // state = concat(kv.ravel(), logits). The state buffer STAYS on the
+        // device and is fed back each step (execute_b); the host only reads
+        // it to extract the logits tail (TFRT CPU lacks CopyRawToHost, so
+        // the read is a full-state literal sync — download only, no upload;
+        // see EXPERIMENTS.md §Perf).
+        let mut state_buf = single_output(outs.remove(0))?;
+        let logits_off = m.art.logits_offset();
+        let mut state_host = vec![0f32; m.art.state_size];
+        read_state(&state_buf, &mut state_host)?;
+
+        // ---- decode loop ----
+        let mut rng = Rng::new(sp.seed);
+        let mut out = GenOutput::default();
+        let mut pos = prompt.len();
+        loop {
+            let logits = &state_host[logits_off..];
+            let (next, logp) = sample(logits, sp, &mut rng)?;
+            out.tokens.push(next);
+            out.logps.push(logp);
+            if next == self.eos || Some(next) == sp.stop_token {
+                out.finished = true;
+                break;
+            }
+            if out.tokens.len() >= sp.max_tokens || pos + 1 >= s_max {
+                break;
+            }
+            let tok_buf = m.i32_buffer(&[next as i32], &[1])?;
+            let pos_buf = m.i32_buffer(&[pos as i32], &[1])?;
+            let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &pos_buf, &state_buf];
+            args.extend(m.params.iter());
+            let mut outs =
+                m.decode.execute_b(&args).map_err(|e| anyhow!("decode @pos {pos}: {e:?}"))?;
+            state_buf = single_output(outs.remove(0))?;
+            read_state(&state_buf, &mut state_host)?;
+            pos += 1;
+        }
+        Ok(out)
+    }
+
+    /// Teacher-forcing log-probabilities of `tokens[1..]` given `tokens[..n-1]`
+    /// (natural log) — perplexity of arbitrary text under this model.
+    pub fn score_logps(&self, tokens: &[u32]) -> Result<Vec<f64>> {
+        let m = self.model;
+        let s_max = m.art.max_seq;
+        if tokens.len() < 2 || tokens.len() > s_max {
+            bail!("score needs 2..={s_max} tokens");
+        }
+        let mut padded = vec![0i32; s_max];
+        for (i, &t) in tokens.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let tok_buf = m.i32_buffer(&padded, &[1, s_max])?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+        args.extend(m.params.iter());
+        let mut outs = m.score.execute_b(&args).map_err(|e| anyhow!("score: {e:?}"))?;
+        let buf = single_output(outs.remove(0))?;
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        let flat: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let v = m.art.vocab;
+        if flat.len() != s_max * v {
+            bail!("score output {} != {}x{}", flat.len(), s_max, v);
+        }
+        let mut logps = Vec::with_capacity(tokens.len() - 1);
+        for i in 0..tokens.len() - 1 {
+            let row = &flat[i * v..(i + 1) * v];
+            logps.push(log_softmax_pick(row, tokens[i + 1] as usize));
+        }
+        Ok(logps)
+    }
+}
+
+/// Every export returns a single flat array (return_tuple=False), so the
+/// replica output must be exactly one plain buffer.
+fn single_output(mut replica: Vec<xla::PjRtBuffer>) -> Result<xla::PjRtBuffer> {
+    match replica.len() {
+        1 => Ok(replica.remove(0)),
+        n => bail!("expected 1 output buffer, got {n}"),
+    }
+}
+
+/// Full host read of a device-side state buffer (dst must be exactly the
+/// state size; Literal::copy_raw_to always copies the whole literal).
+fn read_state(state: &xla::PjRtBuffer, dst: &mut [f32]) -> Result<()> {
+    let lit = state.to_literal_sync().map_err(|e| anyhow!("read state: {e:?}"))?;
+    if lit.element_count() != dst.len() {
+        bail!("state size {} != {}", lit.element_count(), dst.len());
+    }
+    lit.copy_raw_to(dst).map_err(|e| anyhow!("copy state: {e:?}"))
+}
+
+/// Sample from logits (f32, unnormalized). Returns (token, ln p(token)).
+fn sample(logits: &[f32], sp: &SamplingParams, rng: &mut Rng) -> Result<(u32, f64)> {
+    if logits.is_empty() {
+        bail!("empty logits");
+    }
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    // log-softmax denominators at T=1 (for reported logp) and at T (sampling)
+    let mut z1 = 0.0f64;
+    for &l in logits {
+        z1 += ((l as f64) - mx).exp();
+    }
+    let lnz1 = z1.ln();
+    let pick = if sp.temperature <= 0.0 {
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    } else {
+        let t = sp.temperature;
+        let mut zt = 0.0f64;
+        let mut probs = Vec::with_capacity(logits.len());
+        for &l in logits {
+            let p = (((l as f64) - mx) / t).exp();
+            probs.push(p);
+            zt += p;
+        }
+        let mut u = rng.f64() * zt;
+        let mut idx = logits.len() - 1;
+        for (i, p) in probs.iter().enumerate() {
+            if u < *p {
+                idx = i;
+                break;
+            }
+            u -= p;
+        }
+        idx
+    };
+    let logp = (logits[pick] as f64) - mx - lnz1;
+    Ok((pick as u32, logp))
+}
+
+fn log_softmax_pick(row: &[f32], idx: usize) -> f64 {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut z = 0.0f64;
+    for &l in row {
+        z += ((l as f64) - mx).exp();
+    }
+    (row[idx.min(row.len() - 1)] as f64) - mx - z.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_sample_argmax() {
+        let logits = [0.1f32, 2.0, -1.0];
+        let mut rng = Rng::new(1);
+        let (t, lp) = sample(&logits, &SamplingParams::default(), &mut rng).unwrap();
+        assert_eq!(t, 1);
+        assert!(lp < 0.0);
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let logits = [1.0f32, 1.0, 1.0];
+        let sp = SamplingParams { temperature: 1.0, seed: 3, ..Default::default() };
+        let mut rng = Rng::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let (t, _) = sample(&logits, &sp, &mut rng).unwrap();
+            seen.insert(t);
+        }
+        assert_eq!(seen.len(), 3);
+    }
+
+    #[test]
+    fn logp_is_normalized() {
+        let logits = [0.0f32, 0.0, 0.0, 0.0];
+        let mut rng = Rng::new(1);
+        let (_, lp) = sample(&logits, &SamplingParams::default(), &mut rng).unwrap();
+        assert!((lp - (0.25f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_softmax_pick_uniform() {
+        let row = [1.0f32; 10];
+        assert!((log_softmax_pick(&row, 3) - (0.1f64).ln()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,156 @@
+//! Artifact loading: meta.json -> shapes, weights.bin -> device buffers,
+//! *.hlo.txt -> compiled PJRT executables.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed meta.json for one model variant.
+#[derive(Clone, Debug)]
+pub struct ModelArtifact {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub n_params: usize,
+    pub kv_shape: Vec<usize>,
+    /// flat f32 state length = kv elements + vocab (logits tail)
+    pub state_size: usize,
+    /// (name, shape, byte offset, byte length) in weights.bin, PARAM_ORDER.
+    pub weights: Vec<(String, Vec<usize>, usize, usize)>,
+}
+
+impl ModelArtifact {
+    /// Offset of the logits within the flat state vector.
+    pub fn logits_offset(&self) -> usize {
+        self.state_size - self.vocab
+    }
+}
+
+impl ModelArtifact {
+    pub fn from_meta(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let us = |k: &str| -> Result<usize> {
+            j.req(k).map_err(|e| anyhow!(e))?.as_usize().ok_or_else(|| anyhow!("bad {k}"))
+        };
+        let mut weights = Vec::new();
+        for w in j.req("weights").map_err(|e| anyhow!(e))?.as_arr().unwrap_or(&[]) {
+            let name = w.req("name").map_err(|e| anyhow!(e))?.as_str().unwrap().to_string();
+            let shape: Vec<usize> = w
+                .req("shape")
+                .map_err(|e| anyhow!(e))?
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_usize().unwrap())
+                .collect();
+            let offset = w.req("offset").map_err(|e| anyhow!(e))?.as_usize().unwrap();
+            let nbytes = w.req("nbytes").map_err(|e| anyhow!(e))?.as_usize().unwrap();
+            weights.push((name, shape, offset, nbytes));
+        }
+        let kv_shape = j
+            .req("kv_shape")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_usize().unwrap())
+            .collect();
+        Ok(ModelArtifact {
+            name: j.req("name").map_err(|e| anyhow!(e))?.as_str().unwrap().to_string(),
+            d_model: us("d_model")?,
+            n_layers: us("n_layers")?,
+            n_heads: us("n_heads")?,
+            head_dim: us("head_dim")?,
+            vocab: us("vocab")?,
+            max_seq: us("max_seq")?,
+            n_params: us("n_params")?,
+            kv_shape,
+            state_size: us("state_size")?,
+            weights,
+        })
+    }
+}
+
+/// Shared PJRT client handle. One per process; models share it.
+pub struct RuntimeHandle {
+    pub client: xla::PjRtClient,
+}
+
+impl RuntimeHandle {
+    pub fn cpu() -> Result<Arc<Self>> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Arc::new(RuntimeHandle { client }))
+    }
+
+    fn compile(&self, hlo_path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow!("compile {}: {e:?}", hlo_path.display()))
+    }
+}
+
+/// One model variant, compiled and resident: executables + device-side
+/// weight buffers (uploaded once at load).
+pub struct LoadedModel {
+    pub art: ModelArtifact,
+    pub prefill: xla::PjRtLoadedExecutable,
+    pub decode: xla::PjRtLoadedExecutable,
+    pub score: xla::PjRtLoadedExecutable,
+    pub params: Vec<xla::PjRtBuffer>,
+    pub rt: Arc<RuntimeHandle>,
+}
+
+impl LoadedModel {
+    /// Load `<dir>/{meta.json,weights.bin,prefill.hlo.txt,decode.hlo.txt,
+    /// score.hlo.txt}` and upload weights to the device.
+    pub fn load(rt: Arc<RuntimeHandle>, dir: &Path) -> Result<Self> {
+        let art = ModelArtifact::from_meta(&dir.join("meta.json"))?;
+        let blob = std::fs::read(dir.join("weights.bin"))
+            .with_context(|| format!("read {}/weights.bin", dir.display()))?;
+        let mut params = Vec::with_capacity(art.weights.len());
+        for (name, shape, offset, nbytes) in &art.weights {
+            let end = offset + nbytes;
+            if end > blob.len() {
+                bail!("weights.bin too short for {name}");
+            }
+            let bytes = &blob[*offset..end];
+            let floats: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let expect: usize = shape.iter().product();
+            if floats.len() != expect {
+                bail!("{name}: {} floats, shape wants {expect}", floats.len());
+            }
+            let buf = rt
+                .client
+                .buffer_from_host_buffer(&floats, shape, None)
+                .map_err(|e| anyhow!("upload {name}: {e:?}"))?;
+            params.push(buf);
+        }
+        let prefill = rt.compile(&dir.join("prefill.hlo.txt"))?;
+        let decode = rt.compile(&dir.join("decode.hlo.txt"))?;
+        let score = rt.compile(&dir.join("score.hlo.txt"))?;
+        Ok(LoadedModel { art, prefill, decode, score, params, rt })
+    }
+
+    /// Upload an i32 tensor.
+    pub fn i32_buffer(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.rt
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32: {e:?}"))
+    }
+}

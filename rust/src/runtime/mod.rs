@@ -1,0 +1,13 @@
+//! PJRT runtime: loads AOT artifacts and runs picoLM generation.
+//!
+//! Python is never on the request path — `make artifacts` lowered each model
+//! variant to HLO text + a raw weight blob; this module compiles the HLO on
+//! the PJRT CPU client once and keeps weights/KV caches device-side
+//! (`PjRtBuffer`) so the decode loop only moves one token + one logits
+//! vector per step.
+
+pub mod generation;
+pub mod loader;
+
+pub use generation::{GenOutput, Generator, SamplingParams};
+pub use loader::{LoadedModel, ModelArtifact, RuntimeHandle};

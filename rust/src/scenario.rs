@@ -1,0 +1,109 @@
+//! Scenario plumbing shared by the CLI, examples and benches: artifact
+//! loading, backend choice (real PJRT vs surrogate), workload construction,
+//! and one-call experiment runs.
+
+use std::sync::Arc;
+
+use crate::baselines;
+use crate::coordinator::backend::{RealBackend, SurrogateBackend, TextBackend};
+use crate::coordinator::{Engine, EngineCfg, RunError};
+use crate::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use crate::corpus::Corpus;
+use crate::metrics::{aggregate, RequestTrace, RunMetrics};
+use crate::models::Registry;
+use crate::quality::judge::Judge;
+use crate::tokenizer::Tokenizer;
+
+/// Everything a scenario needs, loaded once.
+pub struct Env {
+    pub tok: Tokenizer,
+    pub corpus: Arc<Corpus>,
+    pub registry: Registry,
+    pub backend: Box<dyn TextBackend>,
+    pub judge: Judge,
+    pub real: bool,
+}
+
+impl Env {
+    /// Load artifacts + the real PJRT backend; fall back to the Rust synth
+    /// corpus + surrogate backend when artifacts are missing or
+    /// `PICE_BACKEND=surrogate`.
+    pub fn load() -> Result<Env, String> {
+        let art = crate::artifacts_dir();
+        let force_surrogate = std::env::var("PICE_BACKEND").as_deref() == Ok("surrogate");
+        let have_artifacts = art.join("manifest.json").exists();
+        if have_artifacts && !force_surrogate {
+            let tok = Tokenizer::from_file(&art.join("vocab.json"))?;
+            let corpus = Arc::new(Corpus::from_file(&art.join("corpus.json"), &tok)?);
+            let registry = Registry::from_artifacts(&art)?;
+            let backend = Box::new(RealBackend::new(&art, tok.specials.eos)?);
+            let judge = Judge::fit(&corpus);
+            Ok(Env { tok, corpus, registry, backend, judge, real: true })
+        } else {
+            let tok = crate::corpus::synth::synth_tokenizer();
+            let corpus = Arc::new(crate::corpus::synth::synth_corpus(&tok, 30, 42));
+            let registry = Registry::builtin();
+            let backend =
+                Box::new(SurrogateBackend::new(corpus.clone(), &tok, &registry, 9));
+            let judge = Judge::fit(&corpus);
+            Ok(Env { tok, corpus, registry, backend, judge, real: false })
+        }
+    }
+
+    /// Paper §V-B workload: RPM = 1.5 x the cloud model's max batch.
+    pub fn paper_rpm(&self, cloud_model: &str) -> f64 {
+        let info = self.registry.get(cloud_model).expect("model");
+        let cloud = crate::cluster::DeviceSpec::a100_cloud("c");
+        1.5 * cloud.max_batch(info, 1000) as f64
+    }
+
+    pub fn workload(&self, rpm: f64, n: usize, seed: u64) -> Workload {
+        Workload::generate(
+            &self.corpus,
+            WorkloadSpec {
+                rpm,
+                n_requests: n,
+                arrival: Arrival::Poisson,
+                categories: vec![],
+                seed,
+            },
+        )
+    }
+
+    /// Run one engine configuration over a workload.
+    pub fn run(
+        &mut self,
+        cfg: EngineCfg,
+        wl: &Workload,
+    ) -> Result<(RunMetrics, Vec<RequestTrace>), RunError> {
+        let mut engine =
+            Engine::new(cfg, self.corpus.clone(), &self.tok, &self.registry, self.backend.as_mut())?;
+        let traces = engine.run(wl)?;
+        Ok((aggregate(&traces), traces))
+    }
+
+    /// Run all four systems (Table III/IV composition) for one cloud model.
+    #[allow(clippy::type_complexity)]
+    pub fn run_all_systems(
+        &mut self,
+        cloud_model: &str,
+        rpm: f64,
+        n: usize,
+        seed: u64,
+    ) -> Vec<(&'static str, Result<(RunMetrics, Vec<RequestTrace>), RunError>)> {
+        let wl = self.workload(rpm, n, seed);
+        baselines::all(cloud_model)
+            .into_iter()
+            .map(|(name, cfg)| (name, self.run(cfg, &wl)))
+            .collect()
+    }
+}
+
+/// Bench sizing from the environment: `PICE_BENCH_N` (requests per scenario,
+/// default 60), `PICE_BENCH_SMOKE=1` (tiny smoke sizing for CI).
+pub fn bench_n() -> usize {
+    if std::env::var("PICE_BENCH_SMOKE").as_deref() == Ok("1") {
+        return 12;
+    }
+    std::env::var("PICE_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(60)
+}

@@ -1,0 +1,144 @@
+//! Discrete-event simulation core.
+//!
+//! The paper's testbed (4x Jetson AGX Orin + 4xA100 cloud) is replaced by a
+//! simulated cluster (DESIGN.md §2). Text generation is *real* (PJRT picoLM
+//! decode); the testbed clock is *virtual*: every compute/transfer advances
+//! simulated time according to the calibrated device/network models, so
+//! throughput/latency experiments reproduce the paper's scale.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulated timestamp in seconds.
+pub type SimTime = f64;
+
+struct Entry<E> {
+    time: SimTime,
+    seq: u64, // FIFO tie-break for equal timestamps
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Earliest-first event queue with a monotonically advancing clock.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    now: SimTime,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `event` at absolute simulated time `at` (clamped to now).
+    pub fn schedule(&mut self, at: SimTime, event: E) {
+        let t = if at < self.now { self.now } else { at };
+        self.heap.push(Entry { time: t, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after a delay from the current clock.
+    pub fn schedule_in(&mut self, delay: SimTime, event: E) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        let now = self.now;
+        self.schedule(now + delay.max(0.0), event);
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|e| {
+            debug_assert!(e.time >= self.now, "time went backwards");
+            self.now = e.time;
+            (e.time, e.event)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn earliest_first() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        assert_eq!(q.pop().unwrap(), (1.0, "a"));
+        assert_eq!(q.pop().unwrap(), (2.0, "b"));
+        assert_eq!(q.pop().unwrap(), (3.0, "c"));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn fifo_on_ties() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        q.schedule(1.0, 2);
+        q.schedule(1.0, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn clock_monotone() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, ());
+        q.pop();
+        assert_eq!(q.now(), 5.0);
+        // scheduling in the past clamps to now
+        q.schedule(1.0, ());
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 5.0);
+    }
+
+    #[test]
+    fn schedule_in_relative() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, ());
+        q.pop();
+        q.schedule_in(3.0, ());
+        assert_eq!(q.pop().unwrap().0, 5.0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Sketch handling: sentence segmentation, sketch-level compression, and
+//! the progressive-inference prompt formats.
+//!
+//! A *sketch* is the LLM's semantically-complete, grammatically-minimal
+//! answer outline (paper §II-B): per sentence, the content words survive and
+//! the filler words are dropped. The scheduler picks a *sketch level*
+//! trading brevity (throughput) against completeness (quality) — paper
+//! Challenge 2 — and the edge SLMs expand each sketch sentence back into a
+//! full sentence (independently, hence in parallel).
+
+use crate::tokenizer::Tokenizer;
+
+/// How aggressively the sketch compresses the answer. Level 0 = no sketch
+/// (full answer from the LLM); higher levels keep fewer content words.
+/// `keep_frac` is the fraction of each sentence-sketch retained.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SketchLevel {
+    pub level: usize,
+    pub keep_frac: f64,
+}
+
+/// The scheduler's menu, from "no progressive inference" to "maximal
+/// compression" (paper §IV-A2: "multiple sketch length levels, from 0 to l_i").
+pub fn levels() -> Vec<SketchLevel> {
+    vec![
+        SketchLevel { level: 0, keep_frac: 0.0 }, // disabled: full LLM answer
+        SketchLevel { level: 1, keep_frac: 1.0 }, // full sketch (all content words)
+        SketchLevel { level: 2, keep_frac: 0.8 },
+        SketchLevel { level: 3, keep_frac: 0.6 },
+    ]
+}
+
+/// Split a generated token stream into sentences at "." boundaries.
+pub fn split_sentences(tokens: &[u32], period: u32) -> Vec<Vec<u32>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::new();
+    for &t in tokens {
+        cur.push(t);
+        if t == period {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Split a sketch token stream into per-sentence sketches at ";" boundaries.
+pub fn split_sketch(tokens: &[u32], semicolon: u32) -> Vec<Vec<u32>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::new();
+    for &t in tokens {
+        if t == semicolon {
+            if !cur.is_empty() {
+                out.push(std::mem::take(&mut cur));
+            }
+        } else {
+            cur.push(t);
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Apply a sketch level to a full per-sentence sketch: keep the first
+/// ceil(keep_frac * n) content words (leading words carry the head of the
+/// semantic dependency in our templates, mirroring how the paper's
+/// fine-tuned LLM drops trailing qualifiers first).
+pub fn compress(sentence_sketch: &[u32], level: SketchLevel) -> Vec<u32> {
+    if level.level == 0 {
+        return sentence_sketch.to_vec();
+    }
+    let n = sentence_sketch.len();
+    let keep = ((n as f64) * level.keep_frac).ceil().max(1.0) as usize;
+    sentence_sketch[..keep.min(n)].to_vec()
+}
+
+/// Expected sketch length in tokens for a predicted answer length, given a
+/// level (used by the scheduler's Eq. 2 feasibility test before the sketch
+/// exists). Calibrated on the corpus: sketches are ~55% of full length, and
+/// levels shave that down by keep_frac.
+pub fn expected_sketch_len(predicted_answer_len: usize, level: SketchLevel) -> usize {
+    if level.level == 0 {
+        return predicted_answer_len;
+    }
+    ((predicted_answer_len as f64) * 0.55 * level.keep_frac).ceil() as usize
+}
+
+/// Prompt assembly for the three progressive-inference stages. All prompts
+/// are pure token sequences in the picoLM training formats.
+pub struct Prompts;
+
+impl Prompts {
+    /// Cloud LLM, full answer: `<q> q <a>` — generate until <eos>.
+    pub fn full_answer(tok: &Tokenizer, question: &[u32]) -> Vec<u32> {
+        let sp = &tok.specials;
+        let mut p = vec![sp.q];
+        p.extend_from_slice(question);
+        p.push(sp.a);
+        p
+    }
+
+    /// Cloud LLM, sketch: `<q> q <sk>` — generate until <eos>.
+    pub fn sketch(tok: &Tokenizer, question: &[u32]) -> Vec<u32> {
+        let sp = &tok.specials;
+        let mut p = vec![sp.q];
+        p.extend_from_slice(question);
+        p.push(sp.sk);
+        p
+    }
+
+    /// Edge SLM expansion of one sketch sentence — the paper's template
+    /// ("I have a question about {query}. The simplification answer is as
+    /// follows: {sketch}. Now, please help me complete ... {sentence}"):
+    /// `<q> q <sk> full-sketch <ex> sentence-sketch <a>` — generate one
+    /// sentence (until "." or <eos>).
+    pub fn expand(
+        tok: &Tokenizer,
+        question: &[u32],
+        full_sketch: &[u32],
+        sentence_sketch: &[u32],
+    ) -> Vec<u32> {
+        let sp = &tok.specials;
+        let mut p = vec![sp.q];
+        p.extend_from_slice(question);
+        p.push(sp.sk);
+        p.extend_from_slice(full_sketch);
+        p.push(sp.ex);
+        p.extend_from_slice(sentence_sketch);
+        p.push(sp.a);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::tests_support::toy_corpus;
+
+    #[test]
+    fn split_sentences_at_periods() {
+        let period = 7;
+        let toks = [1, 2, period, 3, 4, period, 5];
+        let s = split_sentences(&toks, period);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], vec![1, 2, period]);
+        assert_eq!(s[2], vec![5]);
+    }
+
+    #[test]
+    fn split_sketch_at_semicolons() {
+        let semi = 8;
+        let toks = [1, 2, semi, 3, semi, semi, 4];
+        let s = split_sketch(&toks, semi);
+        assert_eq!(s, vec![vec![1, 2], vec![3], vec![4]]);
+    }
+
+    #[test]
+    fn compress_levels() {
+        let sk = [10, 11, 12, 13, 14];
+        let lv = levels();
+        assert_eq!(compress(&sk, lv[1]), sk.to_vec());
+        assert_eq!(compress(&sk, lv[2]).len(), 4); // ceil(5*0.8)
+        assert_eq!(compress(&sk, lv[3]).len(), 3); // ceil(5*0.6)
+    }
+
+    #[test]
+    fn compress_never_empty() {
+        let sk = [10];
+        for lv in levels().into_iter().skip(1) {
+            assert_eq!(compress(&sk, lv).len(), 1);
+        }
+    }
+
+    #[test]
+    fn expected_len_monotone_in_level() {
+        let lv = levels();
+        let l1 = expected_sketch_len(100, lv[1]);
+        let l2 = expected_sketch_len(100, lv[2]);
+        let l3 = expected_sketch_len(100, lv[3]);
+        assert!(l1 > l2 && l2 > l3 && l3 > 0);
+        assert_eq!(expected_sketch_len(100, lv[0]), 100);
+    }
+
+    #[test]
+    fn prompts_well_formed() {
+        let (c, tok) = toy_corpus();
+        let q = &c.questions[0];
+        let sp = &tok.specials;
+        let full_sketch = q.sketch_tokens(sp.semicolon);
+        let p = Prompts::expand(&tok, &q.question, &full_sketch, &q.sentences[0].sketch);
+        assert_eq!(p[0], sp.q);
+        assert!(p.contains(&sp.sk));
+        assert!(p.contains(&sp.ex));
+        assert_eq!(*p.last().unwrap(), sp.a);
+    }
+}

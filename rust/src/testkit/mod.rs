@@ -1,0 +1,79 @@
+//! Minimal property-testing harness (no proptest crate in the offline
+//! image). Deterministic: every failure reports the case seed so it can be
+//! replayed exactly.
+//!
+//! ```ignore
+//! use pice::testkit::forall;
+//! forall(100, |rng| {
+//!     let x = rng.below(1000) as f64;
+//!     assert!(x >= 0.0);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `f` on `n` independently-seeded RNG streams; panics with the case
+/// seed on the first failure.
+pub fn forall(n: usize, mut f: impl FnMut(&mut Rng)) {
+    forall_seeded(0xDEFA017, n, &mut f)
+}
+
+pub fn forall_seeded(base_seed: u64, n: usize, f: &mut impl FnMut(&mut Rng)) {
+    for case in 0..n {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("testkit: case {case} failed (replay with seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generators for common shapes.
+pub struct Gen;
+
+impl Gen {
+    /// Non-empty vec of usize in [lo, hi).
+    pub fn lens(rng: &mut Rng, max_n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        let n = 1 + rng.below(max_n.max(1));
+        (0..n).map(|_| lo + rng.below(hi - lo)).collect()
+    }
+
+    /// Token sequence with ids in [10, vocab).
+    pub fn tokens(rng: &mut Rng, max_n: usize, vocab: u32) -> Vec<u32> {
+        let n = 1 + rng.below(max_n.max(1));
+        (0..n).map(|_| 10 + (rng.next_u64() % (vocab as u64 - 10)) as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall(25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failures() {
+        forall(10, |rng| {
+            assert!(rng.below(10) < 5, "intentional");
+        });
+    }
+
+    #[test]
+    fn gens_in_range() {
+        forall(50, |rng| {
+            let ls = Gen::lens(rng, 8, 2, 30);
+            assert!(!ls.is_empty() && ls.len() <= 8);
+            assert!(ls.iter().all(|&l| (2..30).contains(&l)));
+            let ts = Gen::tokens(rng, 16, 100);
+            assert!(ts.iter().all(|&t| (10..100).contains(&t)));
+        });
+    }
+}

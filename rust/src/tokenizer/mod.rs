@@ -1,0 +1,140 @@
+//! Word-level tokenizer over the build-time vocabulary (`artifacts/vocab.json`).
+//!
+//! The Python compile path owns vocabulary construction; this module is the
+//! runtime mirror used by the Rust coordinator for every encode/decode on the
+//! request path.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Token ids for the special markers (fixed positions in SPECIALS).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Specials {
+    pub pad: u32,
+    pub bos: u32,
+    pub eos: u32,
+    pub q: u32,
+    pub a: u32,
+    pub sk: u32,
+    pub ex: u32,
+    pub period: u32,
+    pub semicolon: u32,
+    pub question_mark: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    tokens: Vec<String>,
+    ids: HashMap<String, u32>,
+    pub specials: Specials,
+}
+
+impl Tokenizer {
+    pub fn from_file(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let json = Json::parse(&text)?;
+        let tokens = json
+            .req("tokens")?
+            .str_vec()
+            .ok_or("vocab.json: 'tokens' must be an array of strings")?;
+        Self::from_tokens(tokens)
+    }
+
+    pub fn from_tokens(tokens: Vec<String>) -> Result<Self, String> {
+        let mut ids = HashMap::with_capacity(tokens.len());
+        for (i, t) in tokens.iter().enumerate() {
+            if ids.insert(t.clone(), i as u32).is_some() {
+                return Err(format!("duplicate token '{t}'"));
+            }
+        }
+        let need = |s: &str| -> Result<u32, String> {
+            ids.get(s).copied().ok_or(format!("vocab missing special '{s}'"))
+        };
+        let specials = Specials {
+            pad: need("<pad>")?,
+            bos: need("<bos>")?,
+            eos: need("<eos>")?,
+            q: need("<q>")?,
+            a: need("<a>")?,
+            sk: need("<sk>")?,
+            ex: need("<ex>")?,
+            period: need(".")?,
+            semicolon: need(";")?,
+            question_mark: need("?")?,
+        };
+        Ok(Tokenizer { tokens, ids, specials })
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn id(&self, tok: &str) -> Option<u32> {
+        self.ids.get(tok).copied()
+    }
+
+    pub fn token(&self, id: u32) -> &str {
+        self.tokens.get(id as usize).map(String::as_str).unwrap_or("<unk>")
+    }
+
+    /// Encode whitespace-separated text; unknown words are skipped (the
+    /// synthetic language is closed, so this only matters for user input).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace().filter_map(|w| self.id(w)).collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter().map(|&i| self.token(i)).collect::<Vec<_>>().join(" ")
+    }
+
+    /// Decode dropping special markers — for judge/rouge scoring.
+    pub fn decode_content(&self, ids: &[u32]) -> String {
+        let sp = &self.specials;
+        ids.iter()
+            .filter(|&&i| ![sp.pad, sp.bos, sp.eos, sp.q, sp.a, sp.sk, sp.ex].contains(&i))
+            .map(|&i| self.token(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Tokenizer {
+        let toks = ["<pad>", "<bos>", "<eos>", "<q>", "<a>", "<sk>", "<ex>", ".", ";", "?",
+            "the", "cat", "sat"];
+        Tokenizer::from_tokens(toks.iter().map(|s| s.to_string()).collect()).unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = toy();
+        let ids = t.encode("the cat sat .");
+        assert_eq!(t.decode(&ids), "the cat sat .");
+    }
+
+    #[test]
+    fn unknown_skipped() {
+        let t = toy();
+        assert_eq!(t.encode("the dog sat"), vec![10, 12]);
+    }
+
+    #[test]
+    fn specials_resolved() {
+        let t = toy();
+        assert_eq!(t.specials.pad, 0);
+        assert_eq!(t.specials.eos, 2);
+        assert_eq!(t.specials.period, 7);
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let toks: Vec<String> = ["<pad>", "<pad>"].iter().map(|s| s.to_string()).collect();
+        assert!(Tokenizer::from_tokens(toks).is_err());
+    }
+}

@@ -1,0 +1,267 @@
+//! Integration: the full PICE coordinator (scheduler → dispatch → selection
+//! → execution optimizer → ensemble) over the simulated testbed with the
+//! surrogate backend. Asserts the paper's headline *shapes*, not absolute
+//! numbers.
+
+use std::sync::Arc;
+
+use pice::baselines;
+use pice::coordinator::backend::SurrogateBackend;
+use pice::coordinator::{Engine, EngineCfg, RunError};
+use pice::corpus::synth::{synth_corpus, synth_tokenizer};
+use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use pice::corpus::Corpus;
+use pice::metrics::{aggregate, Mode, RunMetrics};
+use pice::models::Registry;
+use pice::tokenizer::Tokenizer;
+
+fn setup() -> (Arc<Corpus>, Tokenizer, Registry) {
+    let tok = synth_tokenizer();
+    let corpus = Arc::new(synth_corpus(&tok, 20, 42));
+    (corpus, tok, Registry::builtin())
+}
+
+fn run(
+    cfg: EngineCfg,
+    corpus: &Arc<Corpus>,
+    tok: &Tokenizer,
+    reg: &Registry,
+    rpm: f64,
+    n: usize,
+) -> Result<(RunMetrics, Vec<pice::metrics::RequestTrace>), RunError> {
+    let mut backend = SurrogateBackend::new(corpus.clone(), tok, reg, 9);
+    let mut engine = Engine::new(cfg, corpus.clone(), tok, reg, &mut backend)?;
+    let wl = Workload::generate(
+        corpus,
+        WorkloadSpec { rpm, n_requests: n, arrival: Arrival::Poisson, categories: vec![], seed: 5 },
+    );
+    let traces = engine.run(&wl)?;
+    Ok((aggregate(&traces), traces))
+}
+
+#[test]
+fn all_requests_complete_under_every_policy() {
+    let (corpus, tok, reg) = setup();
+    for (name, cfg) in baselines::all("llama70b-sim") {
+        if name == "Edge-only" {
+            continue; // OOM by design for 70B
+        }
+        let (m, traces) = run(cfg, &corpus, &tok, &reg, 30.0, 40).unwrap();
+        assert_eq!(m.n_requests, 40, "{name} dropped requests");
+        for t in &traces {
+            assert!(t.done >= t.arrival, "{name}: negative latency");
+            assert!(!t.answer.is_empty(), "{name}: empty answer rid={}", t.rid);
+        }
+    }
+}
+
+#[test]
+fn pice_beats_cloud_only_throughput_for_large_models() {
+    // Table III headline: 1.5-2x throughput for the 70B/72B class at
+    // RPM = 1.5 x cloud max batch.
+    let (corpus, tok, reg) = setup();
+    let (cloud, _) = run(baselines::cloud_only("llama70b-sim"), &corpus, &tok, &reg, 30.0, 60).unwrap();
+    let (pice, _) = run(baselines::pice("llama70b-sim"), &corpus, &tok, &reg, 30.0, 60).unwrap();
+    assert!(
+        pice.throughput_qpm > cloud.throughput_qpm * 1.2,
+        "PICE {:.1} qpm vs cloud-only {:.1} qpm",
+        pice.throughput_qpm,
+        cloud.throughput_qpm
+    );
+    assert!(
+        pice.avg_latency_s < cloud.avg_latency_s,
+        "PICE latency {:.1}s vs cloud-only {:.1}s",
+        pice.avg_latency_s,
+        cloud.avg_latency_s
+    );
+}
+
+#[test]
+fn edge_only_oom_for_big_models_runs_for_small() {
+    let (corpus, tok, reg) = setup();
+    match run(baselines::edge_only("qwen72b-sim"), &corpus, &tok, &reg, 20.0, 10) {
+        Err(RunError::Oom(_)) => {}
+        other => panic!("expected OOM, got {other:?}"),
+    }
+    let (m, _) = run(baselines::edge_only("llama8b-sim"), &corpus, &tok, &reg, 20.0, 10).unwrap();
+    assert_eq!(m.n_requests, 10);
+}
+
+#[test]
+fn pice_offloads_server_tokens() {
+    // progressive inference reduces cloud token generation (the semantic-
+    // level motivation: Fig. 3)
+    let (corpus, tok, reg) = setup();
+    let (cloud, _) = run(baselines::cloud_only("llama70b-sim"), &corpus, &tok, &reg, 30.0, 50).unwrap();
+    let (pice, traces) = run(baselines::pice("llama70b-sim"), &corpus, &tok, &reg, 30.0, 50).unwrap();
+    assert!(
+        pice.server_tokens < cloud.server_tokens,
+        "server tokens: pice {} vs cloud {}",
+        pice.server_tokens,
+        cloud.server_tokens
+    );
+    assert!(pice.n_progressive >= 20, "only {} progressive", pice.n_progressive);
+    // progressive requests actually used sketches + edge expansion
+    let prog = traces.iter().find(|t| t.mode == Mode::Progressive).unwrap();
+    assert!(prog.edge_tokens > 0);
+    assert!(!prog.winner_model.is_empty());
+}
+
+#[test]
+fn small_cloud_models_prefer_full_answers() {
+    // §V-B: for Llama3-8B-class cloud models the SLM/LLM gap is too small;
+    // PICE should mostly not engage progressive mode (c too high).
+    let (corpus, tok, reg) = setup();
+    let (m, _) = run(baselines::pice("qwen7b-sim"), &corpus, &tok, &reg, 60.0, 40).unwrap();
+    assert!(
+        (m.n_progressive as f64) < 0.5 * m.n_requests as f64,
+        "{} of {} went progressive",
+        m.n_progressive,
+        m.n_requests
+    );
+}
+
+#[test]
+fn routing_sends_easy_queries_to_edge() {
+    let (corpus, tok, reg) = setup();
+    let (_, traces) = run(baselines::routing("llama70b-sim"), &corpus, &tok, &reg, 30.0, 60).unwrap();
+    let edge = traces.iter().filter(|t| t.mode == Mode::EdgeFull).count();
+    let cloud = traces.iter().filter(|t| t.mode == Mode::CloudFull).count();
+    assert!(edge > 0, "router never used the edge");
+    assert!(cloud > 0, "router never used the cloud");
+    // short-answer categories (math/common-sense) should dominate edge traffic
+    let edge_short = traces
+        .iter()
+        .filter(|t| t.mode == Mode::EdgeFull)
+        .filter(|t| t.category == "math" || t.category == "common-sense" || t.category == "counterfactual" || t.category == "fermi")
+        .count();
+    assert!(edge_short * 2 >= edge, "edge traffic not length-biased");
+}
+
+#[test]
+fn ensemble_produces_multiple_candidates() {
+    let (corpus, tok, reg) = setup();
+    let cfg = EngineCfg { ensemble_k: 3, ..baselines::pice("llama70b-sim") };
+    let (_, traces) = run(cfg, &corpus, &tok, &reg, 10.0, 20).unwrap();
+    let with_conf = traces
+        .iter()
+        .filter(|t| t.mode == Mode::Progressive && t.confidence > 0.0 && t.confidence < 1.0)
+        .count();
+    assert!(with_conf > 0, "no ensemble selections recorded");
+}
+
+#[test]
+fn queue_cap_limits_progressive_admissions() {
+    let (corpus, tok, reg) = setup();
+    let tight = EngineCfg { queue_cap: 1, ..baselines::pice("llama70b-sim") };
+    let loose = EngineCfg { queue_cap: 16, ..baselines::pice("llama70b-sim") };
+    let (_, tt) = run(tight, &corpus, &tok, &reg, 60.0, 40).unwrap();
+    let (_, tl) = run(loose, &corpus, &tok, &reg, 60.0, 40).unwrap();
+    // a tight queue produces fewer *edge-expanded* requests (rejected jobs
+    // fall back to sketch-only answers)
+    let expanded = |ts: &[pice::metrics::RequestTrace]| ts.iter().filter(|t| t.edge_tokens > 0).count();
+    assert!(expanded(&tt) <= expanded(&tl), "{} > {}", expanded(&tt), expanded(&tl));
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let (corpus, tok, reg) = setup();
+    let (a, ta) = run(baselines::pice("llama70b-sim"), &corpus, &tok, &reg, 30.0, 30).unwrap();
+    let (b, tb) = run(baselines::pice("llama70b-sim"), &corpus, &tok, &reg, 30.0, 30).unwrap();
+    assert_eq!(a.n_requests, b.n_requests);
+    assert!((a.avg_latency_s - b.avg_latency_s).abs() < 1e-9);
+    for (x, y) in ta.iter().zip(&tb) {
+        assert_eq!(x.answer, y.answer);
+    }
+}
+
+#[test]
+fn rpm_saturation_shape() {
+    // Fig. 12: below the cloud batch cap PICE ~ cloud-only; above it,
+    // cloud-only latency blows up while PICE keeps climbing.
+    let (corpus, tok, reg) = setup();
+    let (cloud_lo, _) = run(baselines::cloud_only("llama70b-sim"), &corpus, &tok, &reg, 10.0, 30).unwrap();
+    let (cloud_hi, _) = run(baselines::cloud_only("llama70b-sim"), &corpus, &tok, &reg, 60.0, 60).unwrap();
+    let (pice_hi, _) = run(baselines::pice("llama70b-sim"), &corpus, &tok, &reg, 60.0, 60).unwrap();
+    assert!(cloud_hi.avg_latency_s > cloud_lo.avg_latency_s * 1.5, "no saturation");
+    assert!(pice_hi.throughput_qpm > cloud_hi.throughput_qpm);
+}
+
+#[test]
+fn more_edges_never_hurt_throughput_much() {
+    let (corpus, tok, reg) = setup();
+    let mut one = baselines::pice("llama70b-sim");
+    one.n_edges = 1;
+    let mut four = baselines::pice("llama70b-sim");
+    four.n_edges = 4;
+    let (m1, _) = run(one, &corpus, &tok, &reg, 40.0, 40).unwrap();
+    let (m4, _) = run(four, &corpus, &tok, &reg, 40.0, 40).unwrap();
+    assert!(
+        m4.throughput_qpm >= m1.throughput_qpm * 0.95,
+        "4 edges {:.1} < 1 edge {:.1}",
+        m4.throughput_qpm,
+        m1.throughput_qpm
+    );
+}
+
+#[test]
+fn progressive_latency_bounded_by_constraint_scale() {
+    // Eq. 2 is enforced at admission: progressive requests should not be
+    // catastrophically slower than the cloud-only estimate f(l).
+    let (corpus, tok, reg) = setup();
+    let (_, traces) = run(baselines::pice("llama70b-sim"), &corpus, &tok, &reg, 20.0, 40).unwrap();
+    for t in traces.iter().filter(|t| t.mode == Mode::Progressive) {
+        // generous bound: 4x the per-request cloud estimate at ~0.11 s/tok
+        let f_l = 0.11 * t.predicted_len as f64 + 1.0;
+        assert!(
+            t.latency() < 4.0 * f_l + 30.0,
+            "rid {} latency {:.1}s vs f(l) {:.1}s",
+            t.rid,
+            t.latency(),
+            f_l
+        );
+    }
+}
+
+#[test]
+fn trace_timestamps_ordered() {
+    let (corpus, tok, reg) = setup();
+    let (_, traces) = run(baselines::pice("llama70b-sim"), &corpus, &tok, &reg, 30.0, 40).unwrap();
+    for t in &traces {
+        assert!(t.arrival <= t.cloud_start + 1e-9, "rid {}", t.rid);
+        assert!(t.cloud_start <= t.cloud_done + 1e-9, "rid {}", t.rid);
+        if t.mode == Mode::Progressive && t.edge_tokens > 0 {
+            assert!(t.cloud_done <= t.edge_start + 1e-9, "rid {}", t.rid);
+            assert!(t.edge_start <= t.done + 1e-9, "rid {}", t.rid);
+            assert!(t.parallelism >= 1, "rid {}", t.rid);
+        }
+    }
+}
+
+#[test]
+fn edge_cost_only_charged_to_progressive_and_edgefull() {
+    let (corpus, tok, reg) = setup();
+    let (_, traces) = run(baselines::cloud_only("llama70b-sim"), &corpus, &tok, &reg, 30.0, 30).unwrap();
+    assert!(traces.iter().all(|t| t.edge_tokens == 0));
+    let (_, traces) = run(baselines::pice("llama70b-sim"), &corpus, &tok, &reg, 30.0, 30).unwrap();
+    for t in &traces {
+        if t.mode == Mode::CloudFull {
+            assert_eq!(t.edge_tokens, 0, "rid {} cloud-full charged edge cost", t.rid);
+        }
+    }
+}
+
+#[test]
+fn bandwidth_has_minimal_effect() {
+    // Fig. 14's conclusion as an invariant: 10 Mbps vs 1000 Mbps changes
+    // PICE latency by well under 10%.
+    let (corpus, tok, reg) = setup();
+    let mut slow = baselines::pice("llama70b-sim");
+    slow.link = pice::network::Link::new(10.0, 20.0);
+    let mut fast = baselines::pice("llama70b-sim");
+    fast.link = pice::network::Link::new(1000.0, 20.0);
+    let (ms, _) = run(slow, &corpus, &tok, &reg, 30.0, 40).unwrap();
+    let (mf, _) = run(fast, &corpus, &tok, &reg, 30.0, 40).unwrap();
+    let rel = (ms.avg_latency_s - mf.avg_latency_s).abs() / mf.avg_latency_s;
+    assert!(rel < 0.10, "bandwidth changed latency by {:.0}%", rel * 100.0);
+}

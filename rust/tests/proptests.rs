@@ -1,0 +1,283 @@
+//! Property tests on coordinator invariants (routing, batching, state) via
+//! the in-crate testkit harness.
+
+use pice::cluster::DeviceSpec;
+use pice::coordinator::dispatch::{Job, MultiListQueue};
+use pice::coordinator::scheduler::{CloudScheduler, Mode, SchedInput};
+use pice::coordinator::selection::select_model;
+use pice::coordinator::slo::SloPolicy;
+use pice::ensemble::{confidence, select, Candidate, ConfidenceWeights};
+use pice::models::Registry;
+use pice::parallel::{merge_once, plan_groups, EdgeCostModel, Group};
+use pice::profiler::LatencyFit;
+use pice::quality::rouge::{lcs_len, rouge1_f1, rouge_l_f1};
+use pice::sketch::{compress, levels, split_sentences, split_sketch};
+use pice::testkit::{forall, Gen};
+
+fn job(rid: usize, len: usize) -> Job {
+    Job {
+        rid,
+        expected_len: len,
+        sentences: vec![],
+        full_sketch: vec![],
+        question: vec![],
+        enqueued_at: 0.0,
+        replicas_left: 1,
+    }
+}
+
+#[test]
+fn prop_queue_conserves_jobs() {
+    forall(200, |rng| {
+        let cap = 1 + rng.below(64);
+        let mut q = MultiListQueue::standard(cap);
+        let n = rng.below(100);
+        let mut accepted = 0;
+        for rid in 0..n {
+            if q.push(job(rid, rng.below(200))) {
+                accepted += 1;
+            }
+        }
+        assert!(q.len() <= cap);
+        assert_eq!(q.len(), accepted.min(cap));
+        // drain fully; every accepted job comes out exactly once
+        let mut seen = std::collections::HashSet::new();
+        loop {
+            let batch = q.pull_batch(1 + rng.below(8));
+            if batch.is_empty() {
+                break;
+            }
+            for j in batch {
+                assert!(seen.insert(j.rid), "job {} duplicated", j.rid);
+            }
+        }
+        assert_eq!(seen.len(), accepted.min(cap));
+    });
+}
+
+#[test]
+fn prop_pull_batch_is_single_bucket() {
+    forall(200, |rng| {
+        let mut q = MultiListQueue::standard(256);
+        for rid in 0..(1 + rng.below(64)) {
+            q.push(job(rid, rng.below(200)));
+        }
+        let batch = q.pull_batch(1 + rng.below(16));
+        if batch.len() > 1 {
+            let b0 = q.bucket_of(batch[0].expected_len);
+            assert!(batch.iter().all(|j| q.bucket_of(j.expected_len) == b0));
+        }
+    });
+}
+
+#[test]
+fn prop_merge_preserves_sentences() {
+    forall(300, |rng| {
+        let lens = Gen::lens(rng, 24, 1, 40);
+        let groups: Vec<Group> = (0..lens.len()).map(|i| vec![i]).collect();
+        let merged = merge_once(&groups, &lens);
+        assert_eq!(merged.len(), lens.len().div_ceil(2));
+        let mut all: Vec<usize> = merged.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, (0..lens.len()).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn prop_plan_groups_partition_and_cap() {
+    forall(300, |rng| {
+        let lens = Gen::lens(rng, 16, 1, 30);
+        let p_max = 1 + rng.below(8);
+        let budget = rng.range(0.01, 10.0);
+        let cost = EdgeCostModel {
+            token_s: rng.range(0.001, 0.05),
+            batch_slowdown: 0.06,
+            prompt_tokens: rng.below(200),
+            prefill_speedup: 8.0,
+        };
+        let plan = plan_groups(&lens, p_max, budget, &cost);
+        assert!(!plan.is_empty());
+        assert!(plan.len() <= p_max.max(1));
+        let mut all: Vec<usize> = plan.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, (0..lens.len()).collect::<Vec<_>>(), "not a partition");
+    });
+}
+
+#[test]
+fn prop_merging_never_increases_wall_clock_budget_violation() {
+    // plan_groups only merges when the merged plan still fits the budget,
+    // so: if the fully-parallel plan fits, the final plan fits too.
+    forall(200, |rng| {
+        let lens = Gen::lens(rng, 12, 1, 25);
+        let cost = EdgeCostModel {
+            token_s: 0.01,
+            batch_slowdown: 0.06,
+            prompt_tokens: rng.below(100),
+            prefill_speedup: 8.0,
+        };
+        let full: Vec<Group> = (0..lens.len()).map(|i| vec![i]).collect();
+        let full_t = cost.wall_clock(&full, &lens);
+        let budget = full_t * rng.range(1.0, 3.0);
+        let plan = plan_groups(&lens, 64, budget, &cost);
+        assert!(cost.wall_clock(&plan, &lens) <= budget + 1e-9);
+    });
+}
+
+#[test]
+fn prop_sketch_ops_roundtrip() {
+    forall(300, |rng| {
+        let period = 7u32;
+        let semi = 8u32;
+        // random token stream without the separators, then insert them
+        let mut toks = Gen::tokens(rng, 60, 200);
+        toks.retain(|&t| t != period && t != semi);
+        if toks.is_empty() {
+            return;
+        }
+        let sents = split_sentences(&toks, period);
+        let total: usize = sents.iter().map(Vec::len).sum();
+        assert_eq!(total, toks.len());
+        let parts = split_sketch(&toks, semi);
+        let total2: usize = parts.iter().map(Vec::len).sum();
+        assert_eq!(total2, toks.len());
+    });
+}
+
+#[test]
+fn prop_compress_monotone_and_bounded() {
+    forall(300, |rng| {
+        let sk = Gen::tokens(rng, 12, 150);
+        let lv = levels();
+        let mut prev = usize::MAX;
+        for l in lv.iter().skip(1) {
+            let c = compress(&sk, *l);
+            assert!(!c.is_empty());
+            assert!(c.len() <= sk.len());
+            assert!(c.len() <= prev, "compression not monotone in level");
+            assert!(sk.starts_with(&c));
+            prev = c.len();
+        }
+    });
+}
+
+#[test]
+fn prop_rouge_bounds_and_symmetries() {
+    forall(400, |rng| {
+        let a = Gen::tokens(rng, 30, 60);
+        let b = Gen::tokens(rng, 30, 60);
+        for v in [rouge1_f1(&a, &b), rouge_l_f1(&a, &b)] {
+            assert!((0.0..=1.0 + 1e-12).contains(&v));
+        }
+        assert!(lcs_len(&a, &b) <= a.len().min(b.len()));
+        assert_eq!(lcs_len(&a, &b), lcs_len(&b, &a));
+        assert!((rouge1_f1(&a, &a) - 1.0).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_scheduler_respects_hard_constraint() {
+    forall(300, |rng| {
+        let s = CloudScheduler::default();
+        let inp = SchedInput {
+            predicted_len: 20 + rng.below(200),
+            f_cloud: LatencyFit { a: rng.range(0.0, 0.5), b: rng.range(0.01, 0.1) },
+            cost_coeff: rng.range(0.1, 3.0),
+            transfer_s: |n| 0.02 + n as f64 * 1e-6,
+            backlog_s: rng.range(0.0, 30.0),
+            n_edges: 1 + rng.below(8),
+            best_slm_capability: rng.range(40.0, 90.0),
+            parallel_hint: rng.range(1.0, 8.0),
+        };
+        let d = s.decide(&inp);
+        if d.mode == Mode::Progressive {
+            // the chosen level must satisfy Eq. 2
+            let budget = inp.f_cloud.eval(inp.predicted_len) * s.policy.latency_slack;
+            assert!(
+                s.e2e_estimate(&inp, d.level) <= budget + 1e-9,
+                "picked an infeasible level"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_selection_always_returns_candidate() {
+    let reg = Registry::builtin();
+    let dev = DeviceSpec::jetson_orin("e");
+    let c = vec![
+        reg.get("qwen1.5b-sim").unwrap(),
+        reg.get("qwen7b-sim").unwrap(),
+        reg.get("llama8b-sim").unwrap(),
+    ];
+    forall(300, |rng| {
+        let current = c[rng.below(c.len())].name.clone();
+        let out = select_model(
+            &dev,
+            &c,
+            &current,
+            10 + rng.below(300),
+            rng.below(120),
+            rng.range(0.001, 60.0),
+            rng.below(12),
+            8,
+        );
+        assert!(c.iter().any(|m| m.name == out.model), "unknown model chosen");
+        if !out.switched {
+            assert_eq!(out.model, current);
+            assert_eq!(out.switch_cost_s, 0.0);
+        } else {
+            assert!(out.switch_cost_s > 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_ensemble_confidence_bounded_and_select_argmax() {
+    forall(300, |rng| {
+        let w = ConfidenceWeights::default();
+        let sketch = Gen::tokens(rng, 10, 80);
+        let n = 1 + rng.below(5);
+        let cands: Vec<Candidate> = (0..n)
+            .map(|i| {
+                let toks = Gen::tokens(rng, 20, 80);
+                let lp = toks.iter().map(|_| -rng.range(0.0, 4.0)).collect();
+                Candidate { model: format!("m{i}"), tokens: toks, logps: lp }
+            })
+            .collect();
+        let expected = 1 + rng.below(40);
+        let (idx, best) = select(&cands, &sketch, expected, w).unwrap();
+        assert!((0.0..=1.0 + 1e-9).contains(&best));
+        for (i, c) in cands.iter().enumerate() {
+            let v = confidence(c, &sketch, expected, w);
+            assert!(v <= best + 1e-12, "select missed a better candidate {i}");
+        }
+        assert!(idx < cands.len());
+    });
+}
+
+#[test]
+fn prop_lex_select_pareto_respect() {
+    // the lexicographic winner is never strictly dominated on the primary
+    // metric beyond the tolerance band
+    forall(300, |rng| {
+        let policy = SloPolicy::default();
+        let n = 1 + rng.below(6);
+        let cands: Vec<[f64; 5]> = (0..n)
+            .map(|_| {
+                [
+                    rng.range(0.0, 1.0),
+                    -rng.range(0.0, 10.0),
+                    rng.range(0.0, 100.0),
+                    rng.range(0.0, 500.0),
+                    rng.range(0.0, 500.0),
+                ]
+            })
+            .collect();
+        let pick = policy.lex_select(&cands).unwrap();
+        let mi = policy.metric_index(policy.order[0]);
+        let best = cands.iter().map(|c| c[mi]).fold(f64::INFINITY, f64::min);
+        let band = best.abs().max(1e-9) * policy.tolerance;
+        assert!(cands[pick][mi] <= best + band + 1e-12);
+    });
+}

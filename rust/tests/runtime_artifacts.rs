@@ -1,0 +1,133 @@
+//! Integration over the *real* runtime: PJRT + AOT picoLM artifacts.
+//! Skipped (with a notice) when `make artifacts` hasn't run.
+
+use std::sync::Arc;
+
+use pice::corpus::Corpus;
+use pice::runtime::{Generator, LoadedModel, RuntimeHandle, SamplingParams};
+use pice::sketch::Prompts;
+use pice::tokenizer::Tokenizer;
+
+fn artifacts_ready() -> bool {
+    pice::artifacts_dir().join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn load_small() -> (LoadedModel, Tokenizer, Arc<Corpus>) {
+    let art = pice::artifacts_dir();
+    let rt = RuntimeHandle::cpu().expect("pjrt client");
+    let tok = Tokenizer::from_file(&art.join("vocab.json")).expect("vocab");
+    let corpus = Arc::new(Corpus::from_file(&art.join("corpus.json"), &tok).expect("corpus"));
+    let m = LoadedModel::load(rt, &art.join("models/qwen1.5b-sim")).expect("model");
+    (m, tok, corpus)
+}
+
+#[test]
+fn generate_produces_tokens_and_logps() {
+    require_artifacts!();
+    let (m, tok, corpus) = load_small();
+    let g = Generator::new(&m, tok.specials.eos);
+    let q = corpus.eval_questions()[0];
+    let out = g
+        .generate(
+            &Prompts::full_answer(&tok, &q.question),
+            &SamplingParams { max_tokens: 32, ..Default::default() },
+        )
+        .unwrap();
+    assert!(!out.tokens.is_empty());
+    assert_eq!(out.tokens.len(), out.logps.len());
+    assert!(out.logps.iter().all(|&l| l <= 0.0));
+    assert!(out.tokens.iter().all(|&t| (t as usize) < m.art.vocab));
+}
+
+#[test]
+fn greedy_generation_deterministic() {
+    require_artifacts!();
+    let (m, tok, corpus) = load_small();
+    let g = Generator::new(&m, tok.specials.eos);
+    let q = corpus.eval_questions()[1];
+    let sp = SamplingParams { max_tokens: 24, ..Default::default() };
+    let p = Prompts::full_answer(&tok, &q.question);
+    let a = g.generate(&p, &sp).unwrap();
+    let b = g.generate(&p, &sp).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+}
+
+#[test]
+fn stop_token_respected() {
+    require_artifacts!();
+    let (m, tok, corpus) = load_small();
+    let g = Generator::new(&m, tok.specials.eos);
+    let q = corpus.eval_questions()[2];
+    let full_sk = q.sketch_tokens(tok.specials.semicolon);
+    let p = Prompts::expand(&tok, &q.question, &full_sk, &q.sentences[0].sketch);
+    let out = g
+        .generate(
+            &p,
+            &SamplingParams {
+                max_tokens: 30,
+                stop_token: Some(tok.specials.period),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let last = *out.tokens.last().unwrap();
+    assert!(
+        last == tok.specials.period || last == tok.specials.eos || out.tokens.len() == 30,
+        "bad stop: {last}"
+    );
+}
+
+#[test]
+fn score_matches_generation_confidence_direction() {
+    require_artifacts!();
+    let (m, tok, corpus) = load_small();
+    let g = Generator::new(&m, tok.specials.eos);
+    // a corpus-like sequence should score better than a shuffled one
+    let q = corpus.eval_questions()[3];
+    let mut natural = vec![tok.specials.q];
+    natural.extend_from_slice(&q.question);
+    natural.push(tok.specials.a);
+    natural.extend(q.answer_tokens());
+    natural.truncate(m.art.max_seq);
+    let mut shuffled = natural.clone();
+    shuffled.reverse();
+    let lp_nat: f64 = g.score_logps(&natural).unwrap().iter().sum::<f64>()
+        / (natural.len() - 1) as f64;
+    let lp_shuf: f64 = g.score_logps(&shuffled).unwrap().iter().sum::<f64>()
+        / (shuffled.len() - 1) as f64;
+    assert!(lp_nat > lp_shuf, "natural {lp_nat} <= shuffled {lp_shuf}");
+}
+
+#[test]
+fn temperature_sampling_varies_with_seed() {
+    require_artifacts!();
+    let (m, tok, corpus) = load_small();
+    let g = Generator::new(&m, tok.specials.eos);
+    let q = corpus.eval_questions()[4];
+    let p = Prompts::full_answer(&tok, &q.question);
+    let a = g
+        .generate(&p, &SamplingParams { max_tokens: 24, temperature: 1.0, seed: 1, ..Default::default() })
+        .unwrap();
+    let b = g
+        .generate(&p, &SamplingParams { max_tokens: 24, temperature: 1.0, seed: 2, ..Default::default() })
+        .unwrap();
+    assert_ne!(a.tokens, b.tokens, "different seeds gave identical samples");
+}
+
+#[test]
+fn prompt_too_long_rejected() {
+    require_artifacts!();
+    let (m, tok, _) = load_small();
+    let g = Generator::new(&m, tok.specials.eos);
+    let p = vec![tok.specials.q; m.art.max_seq + 1];
+    assert!(g.generate(&p, &SamplingParams::default()).is_err());
+}
