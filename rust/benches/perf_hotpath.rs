@@ -1,13 +1,27 @@
 //! §Perf — hot-path microbenches for the optimization pass (EXPERIMENTS.md
-//! §Perf): L3 coordinator primitives, the end-to-end event loop, and the
-//! real PJRT decode step per model variant.
+//! §Perf): L3 coordinator primitives, the batched/parallel backend layer,
+//! the memo-cache, the end-to-end event loop (sequential vs parallel
+//! substrate), and the real PJRT decode step per model variant.
+//!
+//! Results print paper-style rows and dump machine-readable JSON to both
+//! `bench_results/perf_hotpath.json` and `BENCH_perf_hotpath.json` (repo
+//! root) so the perf trajectory is tracked across PRs — see PERF.md.
 
 mod common;
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use pice::baselines;
+use pice::coordinator::backend::{
+    GenRequest, MemoBackend, ParallelBackend, SurrogateBackend, TextBackend,
+};
 use pice::coordinator::dispatch::{Job, MultiListQueue};
 use pice::coordinator::scheduler::{CloudScheduler, SchedInput};
+use pice::coordinator::Engine;
+use pice::corpus::synth::{synth_corpus, synth_tokenizer};
+use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use pice::models::Registry;
 use pice::parallel::{plan_batch, EdgeCostModel};
 use pice::profiler::LatencyFit;
 use pice::quality::rouge::{rouge1_f1, rouge_l_f1};
@@ -25,14 +39,41 @@ fn time_it<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     t0.elapsed().as_secs_f64() / iters as f64
 }
 
+/// Expansion-shaped request batch over the synth eval split — the same
+/// (model, prompt, per-request seed) stream the engine's edge pulls emit.
+fn expansion_requests(
+    tok: &pice::tokenizer::Tokenizer,
+    corpus: &pice::corpus::Corpus,
+) -> Vec<GenRequest> {
+    let mut reqs = Vec::new();
+    for q in corpus.eval_questions() {
+        let sketch = q.sketch_tokens(tok.specials.semicolon);
+        for (si, sent) in q.sentences.iter().enumerate() {
+            reqs.push(GenRequest::new(
+                "qwen7b-sim",
+                &Prompts::expand(tok, &q.question, &sketch, &sent.sketch),
+                SamplingParams {
+                    max_tokens: 24,
+                    stop_token: Some(tok.specials.period),
+                    seed: (q.id as u64) << 8 ^ si as u64,
+                    ..Default::default()
+                },
+            ));
+        }
+    }
+    reqs
+}
+
+fn report(rows: &mut Vec<Json>, name: &str, secs: f64, unit: &str) {
+    let v = if secs < 1e-3 { format!("{:.2} µs", secs * 1e6) } else { format!("{:.3} ms", secs * 1e3) };
+    println!("{name:<44} {v:>12}  ({unit})");
+    rows.push(obj(vec![("bench", s(name)), ("seconds", num(secs))]));
+}
+
 fn main() -> Result<(), String> {
     common::banner("§Perf", "hot-path microbenchmarks");
+    let smoke = std::env::var("PICE_BENCH_SMOKE").as_deref() == Ok("1");
     let mut rows = Vec::new();
-    let mut report = |name: &str, secs: f64, unit: &str| {
-        let v = if secs < 1e-3 { format!("{:.2} µs", secs * 1e6) } else { format!("{:.3} ms", secs * 1e3) };
-        println!("{name:<44} {v:>12}  ({unit})");
-        rows.push(obj(vec![("bench", s(name)), ("seconds", num(secs))]));
-    };
 
     // --- L3 primitives -----------------------------------------------------
     let mut rng = Rng::new(1);
@@ -47,7 +88,7 @@ fn main() -> Result<(), String> {
         best_slm_capability: 74.0,
         parallel_hint: 4.0,
     };
-    report("scheduler.decide (Eq. 2 over 4 levels)", time_it(20_000, || {
+    report(&mut rows, "scheduler.decide (Eq. 2 over 4 levels)", time_it(20_000, || {
         std::hint::black_box(sched.decide(&inp));
     }), "per request");
 
@@ -55,12 +96,12 @@ fn main() -> Result<(), String> {
         rid,
         expected_len: len,
         sentences: vec![],
-        full_sketch: vec![],
-        question: vec![],
+        full_sketch: Vec::new().into(),
+        question: Vec::new().into(),
         enqueued_at: 0.0,
         replicas_left: 1,
     };
-    report("multi-list queue push+pull_batch(4)", time_it(20_000, || {
+    report(&mut rows, "multi-list queue push+pull_batch(4)", time_it(20_000, || {
         let mut q = MultiListQueue::standard(64);
         for rid in 0..16 {
             q.push(mk_job(rid, (rid * 37) % 200));
@@ -72,30 +113,142 @@ fn main() -> Result<(), String> {
 
     let lens: Vec<usize> = (0..8).map(|i| 80 + i * 20).collect();
     let cost = EdgeCostModel { token_s: 0.01, batch_slowdown: 0.06, prompt_tokens: 300, prefill_speedup: 8.0 };
-    report("plan_batch (8 sentences, 1 job)", time_it(20_000, || {
+    report(&mut rows, "plan_batch (8 sentences, 1 job)", time_it(20_000, || {
         let refs: Vec<&[usize]> = vec![&lens];
         std::hint::black_box(plan_batch(&refs, 16, &cost));
     }), "per job");
 
     let a: Vec<u32> = (0..120).map(|_| rng.next_u64() as u32 % 200).collect();
     let b: Vec<u32> = (0..120).map(|_| rng.next_u64() as u32 % 200).collect();
-    report("rouge-1 (120x120 tokens)", time_it(20_000, || {
+    report(&mut rows, "rouge-1 (120x120 tokens)", time_it(20_000, || {
         std::hint::black_box(rouge1_f1(&a, &b));
     }), "per pair");
-    report("rouge-L LCS (120x120 tokens)", time_it(2_000, || {
+    report(&mut rows, "rouge-L LCS (120x120 random)", time_it(2_000, || {
         std::hint::black_box(rouge_l_f1(&a, &b));
     }), "per pair");
+    // near-identical pair: the prefix/suffix trim collapses the DP
+    let mut a2 = a.clone();
+    a2[60] = a2[60].wrapping_add(1) % 200;
+    report(&mut rows, "rouge-L LCS (120x120 near-identical)", time_it(20_000, || {
+        std::hint::black_box(rouge_l_f1(&a, &a2));
+    }), "per pair");
 
-    // --- end-to-end event loop (surrogate: coordinator cost only) ----------
+    // --- batched parallel backend (tentpole) --------------------------------
+    let tok = synth_tokenizer();
+    let corpus = Arc::new(synth_corpus(&tok, 30, 42));
+    let reg = Registry::builtin();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let reqs = expansion_requests(&tok, &corpus);
+    let iters = if smoke { 5 } else { 40 };
+    println!("-- batched expansion: {} requests per batch --", reqs.len());
+    let mut seq = base.clone();
+    let t_seq = time_it(iters, || {
+        std::hint::black_box(seq.generate_batch(&reqs));
+    });
+    report(&mut rows, "expansion batch, sequential", t_seq, "per batch");
+    let mut speedup4 = 0.0;
+    for workers in [1usize, 2, 4] {
+        let mut par = ParallelBackend::new(workers, |_| base.clone());
+        // warm the pool once so thread startup isn't timed
+        std::hint::black_box(par.generate_batch(&reqs));
+        let t = time_it(iters, || {
+            std::hint::black_box(par.generate_batch(&reqs));
+        });
+        report(&mut rows, &format!("expansion batch, parallel x{workers}"), t, "per batch");
+        let sp = t_seq / t;
+        println!("{:<44} {sp:>11.2}x", format!("  speedup vs sequential (x{workers})"));
+        rows.push(obj(vec![
+            ("bench", s(&format!("expansion_speedup_x{workers}"))),
+            ("speedup", num(sp)),
+        ]));
+        if workers == 4 {
+            speedup4 = sp;
+        }
+    }
+
+    // --- memo-cache hit rate -------------------------------------------------
+    {
+        let mut memo = MemoBackend::new(base.clone(), 8192);
+        std::hint::black_box(memo.generate_batch(&reqs)); // cold pass: misses
+        let t_warm = time_it(iters, || {
+            std::hint::black_box(memo.generate_batch(&reqs)); // replays: hits
+        });
+        report(&mut rows, "expansion batch, memo-cached replay", t_warm, "per batch");
+        let (hits, misses) = memo.stats();
+        println!(
+            "{:<44} {:>10.1}%  ({hits} hits / {misses} misses)",
+            "  memo hit rate (bench replay)",
+            memo.hit_rate() * 100.0
+        );
+        rows.push(obj(vec![
+            ("bench", s("memo_hit_rate")),
+            ("hit_rate", num(memo.hit_rate())),
+            ("hits", num(hits as f64)),
+            ("misses", num(misses as f64)),
+        ]));
+    }
+
+    // --- end-to-end event loop: sequential vs parallel substrate ------------
+    {
+        let n = if smoke { 20 } else { 60 };
+        let wl = Workload::generate(
+            &corpus,
+            WorkloadSpec {
+                rpm: 40.0,
+                n_requests: n,
+                arrival: Arrival::Poisson,
+                categories: vec![],
+                seed: 3,
+            },
+        );
+        let mut seq_backend = base.clone();
+        let t0 = Instant::now();
+        let mut engine =
+            Engine::new(baselines::pice("llama70b-sim"), corpus.clone(), &tok, &reg, &mut seq_backend)
+                .map_err(|e| e.to_string())?;
+        let traces_seq = engine.run(&wl).map_err(|e| e.to_string())?;
+        let dt_seq = t0.elapsed().as_secs_f64();
+        report(&mut rows, &format!("engine.run {n} reqs (surrogate, seq)"), dt_seq / n as f64, "per request");
+
+        let mut par_backend = ParallelBackend::new(4, |_| base.clone());
+        let t0 = Instant::now();
+        let mut engine =
+            Engine::new(baselines::pice("llama70b-sim"), corpus.clone(), &tok, &reg, &mut par_backend)
+                .map_err(|e| e.to_string())?;
+        let traces_par = engine.run(&wl).map_err(|e| e.to_string())?;
+        let dt_par = t0.elapsed().as_secs_f64();
+        report(&mut rows, &format!("engine.run {n} reqs (surrogate, par x4)"), dt_par / n as f64, "per request");
+        let identical = traces_seq.len() == traces_par.len()
+            && traces_seq.iter().zip(&traces_par).all(|(x, y)| x.answer == y.answer);
+        println!(
+            "{:<44} {:>12}",
+            "  par traces identical to seq",
+            if identical { "yes" } else { "NO (BUG)" }
+        );
+        println!(
+            "{:<44} {:>11.2}x",
+            "  engine speedup (seq/par wall)",
+            dt_seq / dt_par.max(1e-12)
+        );
+        rows.push(obj(vec![
+            ("bench", s("engine_run_speedup_x4")),
+            ("speedup", num(dt_seq / dt_par.max(1e-12))),
+            ("traces_identical", num(identical as usize as f64)),
+        ]));
+    }
+
+    println!("batched expansion 4-worker speedup: {speedup4:.2}x (target >= 1.5x)");
+
+    // --- legacy Env-driven event loop (coordinator cost only) ---------------
     {
         std::env::set_var("PICE_BACKEND", "surrogate");
         let mut env = Env::load()?;
         std::env::remove_var("PICE_BACKEND");
         let wl = env.workload(40.0, 60, 3);
         let t0 = Instant::now();
-        let (m, _) = env.run(pice::baselines::pice("llama70b-sim"), &wl).map_err(|e| e.to_string())?;
+        let (m, _) = env.run(baselines::pice("llama70b-sim"), &wl).map_err(|e| e.to_string())?;
         let dt = t0.elapsed().as_secs_f64();
-        report("engine.run 60 reqs (surrogate, L3-only)", dt / 60.0, "per request");
+        report(&mut rows, "engine.run 60 reqs (surrogate, L3-only)", dt / 60.0, "per request");
         println!("{:<44} {:>9.0} sim-s in {:.2} real-s", "  (simulated makespan vs real wall)", m.makespan_s, dt);
     }
 
@@ -111,19 +264,36 @@ fn main() -> Result<(), String> {
             let q = env.corpus.eval_questions()[0];
             let prompt = Prompts::full_answer(&env.tok, &q.question);
             let sp = SamplingParams { max_tokens: 32, ..Default::default() };
-            let _ = g.generate(&prompt, &sp);
+            let mut scratch = pice::runtime::GenScratch::default();
+            let _ = g.generate_with(&prompt, &sp, &mut scratch);
             let t0 = Instant::now();
             let mut toks = 0usize;
             for _ in 0..3 {
-                toks += g.generate(&prompt, &sp).map_err(|e| e.to_string())?.tokens.len();
+                toks += g
+                    .generate_with(&prompt, &sp, &mut scratch)
+                    .map_err(|e| e.to_string())?
+                    .tokens
+                    .len();
             }
             let per_tok = t0.elapsed().as_secs_f64() / toks as f64;
-            report(&format!("PJRT decode step [{name}]"), per_tok, "per token");
+            report(&mut rows, &format!("PJRT decode step [{name}]"), per_tok, "per token");
         }
     } else {
         println!("(artifacts missing — skipping real PJRT decode benches)");
     }
 
-    common::dump("perf_hotpath", Json::Arr(rows));
+    let json = Json::Arr(rows);
+    common::dump("perf_hotpath", json.clone());
+    // cross-PR perf trajectory file at the repo root (see PERF.md). Bench
+    // executables run with CWD = the package root (rust/), so resolve the
+    // repo root from the manifest dir instead of relying on the CWD.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(std::path::Path::to_path_buf)
+        .unwrap_or_default();
+    let path = root.join("BENCH_perf_hotpath.json");
+    if std::fs::write(&path, json.to_string()).is_ok() {
+        println!("[saved {}]", path.display());
+    }
     Ok(())
 }

@@ -1,4 +1,5 @@
-//! Text-generation backend abstraction.
+//! Text-generation backend abstraction + the batched/parallel execution
+//! layer.
 //!
 //! The serving engine is generic over *how* tokens are produced:
 //!  * [`RealBackend`] — the production path: PJRT picoLM inference
@@ -6,16 +7,43 @@
 //!  * [`SurrogateBackend`] — a deterministic corpus-driven mock with
 //!    capacity-calibrated corruption, used by unit/property tests so the
 //!    full coordinator logic is testable without artifacts and in O(μs).
+//!
+//! Every backend speaks the batch protocol ([`TextBackend::generate_batch`])
+//! so the engine can hand all jobs co-scheduled at one sim timestamp to the
+//! substrate in one call. Two composable wrappers exploit that:
+//!  * [`ParallelBackend`] shards a batch across a fixed pool of OS threads,
+//!    each owning its own backend replica; results merge by request index,
+//!    so output is bit-identical to the sequential path.
+//!  * [`MemoBackend`] adds a bounded memo-cache keyed by
+//!    (model, prompt, sampling params) — bench workloads replay the same
+//!    questions across figures, so repeated generations become lookups.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
+use std::sync::mpsc;
 use std::sync::Arc;
+use std::thread;
 
 use crate::corpus::Corpus;
 use crate::models::Registry;
-use crate::runtime::{GenOutput, Generator, LoadedModel, RuntimeHandle, SamplingParams};
+use crate::runtime::{GenOutput, GenScratch, Generator, LoadedModel, RuntimeHandle, SamplingParams};
 use crate::tokenizer::Tokenizer;
 use crate::util::rng::Rng;
+
+/// One generation request inside a batch. Prompts are shared slices so a
+/// request can be fanned out (replicas, retries) without copying tokens.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub model: String,
+    pub prompt: Arc<[u32]>,
+    pub sp: SamplingParams,
+}
+
+impl GenRequest {
+    pub fn new(model: &str, prompt: &[u32], sp: SamplingParams) -> GenRequest {
+        GenRequest { model: model.to_string(), prompt: Arc::from(prompt), sp }
+    }
+}
 
 pub trait TextBackend {
     /// Generate a continuation of `prompt` with `model`.
@@ -25,6 +53,15 @@ pub trait TextBackend {
         prompt: &[u32],
         sp: &SamplingParams,
     ) -> Result<GenOutput, String>;
+
+    /// Execute a batch of independent generation requests; the result at
+    /// index i corresponds to `reqs[i]`. The default implementation is the
+    /// sequential loop, so every backend keeps working unchanged;
+    /// batch-aware backends override it to exploit parallel hardware or
+    /// lockstep decoding.
+    fn generate_batch(&mut self, reqs: &[GenRequest]) -> Vec<Result<GenOutput, String>> {
+        reqs.iter().map(|r| self.generate(&r.model, &r.prompt, &r.sp)).collect()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -36,12 +73,21 @@ pub struct RealBackend {
     models_dir: PathBuf,
     eos: u32,
     loaded: HashMap<String, LoadedModel>,
+    /// host-side buffers reused across every generate call (padded prompt,
+    /// state mirror, sampling probs) — no per-call allocation churn
+    scratch: GenScratch,
 }
 
 impl RealBackend {
     pub fn new(artifacts: &std::path::Path, eos: u32) -> Result<Self, String> {
         let rt = RuntimeHandle::cpu().map_err(|e| e.to_string())?;
-        Ok(RealBackend { rt, models_dir: artifacts.join("models"), eos, loaded: HashMap::new() })
+        Ok(RealBackend {
+            rt,
+            models_dir: artifacts.join("models"),
+            eos,
+            loaded: HashMap::new(),
+            scratch: GenScratch::default(),
+        })
     }
 
     fn model(&mut self, name: &str) -> Result<&LoadedModel, String> {
@@ -62,8 +108,339 @@ impl TextBackend for RealBackend {
         sp: &SamplingParams,
     ) -> Result<GenOutput, String> {
         let eos = self.eos;
-        let m = self.model(model)?;
-        Generator::new(m, eos).generate(prompt, sp).map_err(|e| e.to_string())
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let res = match self.model(model) {
+            Ok(m) => Generator::new(m, eos)
+                .generate_with(prompt, sp, &mut scratch)
+                .map_err(|e| e.to_string()),
+            Err(e) => Err(e),
+        };
+        self.scratch = scratch;
+        res
+    }
+
+    /// Runs of consecutive same-model requests decode in lockstep via
+    /// [`Generator::generate_many`]: K sequences advance one token per
+    /// round, sharing the scratch buffers, instead of K full back-to-back
+    /// generations. Lockstep width is capped at [`MAX_LOCKSTEP`] — every
+    /// in-flight sequence holds a full device-side state buffer (KV +
+    /// logits), so an uncapped batch would multiply device memory by the
+    /// batch width.
+    fn generate_batch(&mut self, reqs: &[GenRequest]) -> Vec<Result<GenOutput, String>> {
+        let eos = self.eos;
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let mut out: Vec<Result<GenOutput, String>> = Vec::with_capacity(reqs.len());
+        let mut i = 0;
+        while i < reqs.len() {
+            let mut j = i + 1;
+            while j < reqs.len() && reqs[j].model == reqs[i].model {
+                j += 1;
+            }
+            match self.model(&reqs[i].model) {
+                Err(e) => out.extend((i..j).map(|_| Err(e.clone()))),
+                Ok(m) => {
+                    let gen = Generator::new(m, eos);
+                    let mut k = i;
+                    while k < j {
+                        let kk = (k + MAX_LOCKSTEP).min(j);
+                        let run: Vec<(&[u32], SamplingParams)> =
+                            reqs[k..kk].iter().map(|r| (r.prompt.as_ref(), r.sp)).collect();
+                        match gen.generate_many(&run, &mut scratch) {
+                            Ok(v) => out.extend(v.into_iter().map(Ok)),
+                            // a run-level failure (one bad prompt poisons the
+                            // whole generate_many call) falls back to
+                            // per-request generation, so result i maps to
+                            // request i exactly like the sequential path
+                            Err(_) => {
+                                for (prompt, sp) in &run {
+                                    out.push(
+                                        gen.generate_with(prompt, sp, &mut scratch)
+                                            .map_err(|e| e.to_string()),
+                                    );
+                                }
+                            }
+                        }
+                        k = kk;
+                    }
+                }
+            }
+            i = j;
+        }
+        self.scratch = scratch;
+        out
+    }
+}
+
+/// Max sequences decoded in lockstep per [`RealBackend::generate_batch`]
+/// run — bounds the number of simultaneously-resident device state buffers.
+const MAX_LOCKSTEP: usize = 8;
+
+// ---------------------------------------------------------------------------
+// Parallel backend (thread-pool sharding)
+// ---------------------------------------------------------------------------
+
+/// Shards [`TextBackend::generate_batch`] across a fixed pool of OS
+/// threads. Each worker owns its own backend replica built by the factory
+/// at construction (its own `LoadedModel` handles / surrogate state), and a
+/// batch is split into contiguous chunks merged back by request index —
+/// so as long as each replica is a pure function of
+/// (model, prompt, sampling params), which both shipped backends are (the
+/// per-request RNG seed arrives inside [`SamplingParams`]), output is
+/// **bit-identical** to the sequential path regardless of worker count or
+/// completion order.
+pub struct ParallelBackend<B: TextBackend + Send + 'static> {
+    txs: Vec<mpsc::Sender<(usize, Vec<GenRequest>)>>,
+    rx: mpsc::Receiver<(usize, Vec<Result<GenOutput, String>>)>,
+    handles: Vec<thread::JoinHandle<()>>,
+    next: usize,
+    _marker: std::marker::PhantomData<B>,
+}
+
+impl<B: TextBackend + Send + 'static> ParallelBackend<B> {
+    /// Spawn `n_workers` threads; `factory(w)` builds worker w's replica.
+    pub fn new<F: FnMut(usize) -> B>(n_workers: usize, mut factory: F) -> Self {
+        let n = n_workers.max(1);
+        let (res_tx, rx) = mpsc::channel();
+        let mut txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for w in 0..n {
+            let (tx, wrx) = mpsc::channel::<(usize, Vec<GenRequest>)>();
+            let res_tx = res_tx.clone();
+            let mut backend = factory(w);
+            handles.push(thread::spawn(move || {
+                while let Ok((offset, chunk)) = wrx.recv() {
+                    // a panicking replica must still answer its chunk, or the
+                    // merge loop would wait forever for the missing offset
+                    let n = chunk.len();
+                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        backend.generate_batch(&chunk)
+                    }))
+                    .unwrap_or_else(|_| {
+                        (0..n)
+                            .map(|_| Err("parallel backend: worker panicked".to_string()))
+                            .collect()
+                    });
+                    if res_tx.send((offset, res)).is_err() {
+                        break;
+                    }
+                }
+            }));
+            txs.push(tx);
+        }
+        ParallelBackend { txs, rx, handles, next: 0, _marker: std::marker::PhantomData }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    fn run_chunk(&mut self, worker: usize, reqs: Vec<GenRequest>) -> Vec<Result<GenOutput, String>> {
+        let n = reqs.len();
+        if self.txs[worker].send((0, reqs)).is_err() {
+            return (0..n).map(|_| Err("parallel backend: worker died".to_string())).collect();
+        }
+        match self.rx.recv() {
+            Ok((_, res)) => res,
+            Err(_) => (0..n).map(|_| Err("parallel backend: worker died".to_string())).collect(),
+        }
+    }
+}
+
+impl<B: TextBackend + Send + 'static> TextBackend for ParallelBackend<B> {
+    fn generate(
+        &mut self,
+        model: &str,
+        prompt: &[u32],
+        sp: &SamplingParams,
+    ) -> Result<GenOutput, String> {
+        let w = self.next % self.txs.len();
+        self.next += 1;
+        self.run_chunk(w, vec![GenRequest::new(model, prompt, *sp)])
+            .pop()
+            .unwrap_or_else(|| Err("parallel backend: empty result".to_string()))
+    }
+
+    fn generate_batch(&mut self, reqs: &[GenRequest]) -> Vec<Result<GenOutput, String>> {
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        if reqs.len() == 1 || self.txs.len() == 1 {
+            let w = self.next % self.txs.len();
+            self.next += 1;
+            return self.run_chunk(w, reqs.to_vec());
+        }
+        // contiguous chunks (one per worker) keep messaging overhead at
+        // O(workers) per batch rather than O(requests)
+        let per = reqs.len().div_ceil(self.txs.len());
+        let mut sent = 0usize;
+        for (ci, chunk) in reqs.chunks(per).enumerate() {
+            // a closed channel means the worker is gone; its indices stay
+            // None and surface below as per-request errors
+            if self.txs[ci % self.txs.len()].send((ci * per, chunk.to_vec())).is_ok() {
+                sent += 1;
+            }
+        }
+        let mut out: Vec<Option<Result<GenOutput, String>>> =
+            std::iter::repeat_with(|| None).take(reqs.len()).collect();
+        for _ in 0..sent {
+            let Ok((offset, res)) = self.rx.recv() else { break };
+            for (k, r) in res.into_iter().enumerate() {
+                out[offset + k] = Some(r);
+            }
+        }
+        out.into_iter()
+            .map(|o| o.unwrap_or_else(|| Err("parallel backend: missing result".to_string())))
+            .collect()
+    }
+}
+
+impl<B: TextBackend + Send + 'static> Drop for ParallelBackend<B> {
+    fn drop(&mut self) {
+        self.txs.clear(); // closing the channels ends the worker loops
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Memoizing backend (bounded generation cache)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct MemoKey {
+    model: String,
+    prompt: Vec<u32>,
+    temperature_bits: u64,
+    max_tokens: usize,
+    stop_token: Option<u32>,
+    seed: u64,
+}
+
+impl MemoKey {
+    fn new(model: &str, prompt: &[u32], sp: &SamplingParams) -> MemoKey {
+        MemoKey {
+            model: model.to_string(),
+            prompt: prompt.to_vec(),
+            temperature_bits: sp.temperature.to_bits(),
+            max_tokens: sp.max_tokens,
+            stop_token: sp.stop_token,
+            seed: sp.seed,
+        }
+    }
+}
+
+/// Bounded FIFO memo-cache over any backend, keyed by the full generation
+/// request (model, prompt tokens, sampling params). Sound because both
+/// shipped backends are deterministic functions of that key; errors are
+/// never cached. Batch misses are forwarded to the inner backend as one
+/// batch, so the cache composes with [`ParallelBackend`] sharding.
+pub struct MemoBackend<B: TextBackend> {
+    inner: B,
+    capacity: usize,
+    // keys are Arc-shared between the map and the eviction queue so the
+    // prompt token vectors are stored once, not twice
+    map: HashMap<Arc<MemoKey>, GenOutput>,
+    order: VecDeque<Arc<MemoKey>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl<B: TextBackend> MemoBackend<B> {
+    pub fn new(inner: B, capacity: usize) -> Self {
+        MemoBackend {
+            inner,
+            capacity: capacity.max(1),
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// (hits, misses) since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn inner_mut(&mut self) -> &mut B {
+        &mut self.inner
+    }
+
+    fn insert(&mut self, key: MemoKey, out: GenOutput) {
+        let key = Arc::new(key);
+        if self.map.insert(key.clone(), out).is_none() {
+            self.order.push_back(key);
+        }
+        while self.map.len() > self.capacity {
+            let Some(old) = self.order.pop_front() else { break };
+            self.map.remove(&old);
+        }
+    }
+}
+
+impl<B: TextBackend> TextBackend for MemoBackend<B> {
+    fn generate(
+        &mut self,
+        model: &str,
+        prompt: &[u32],
+        sp: &SamplingParams,
+    ) -> Result<GenOutput, String> {
+        let key = MemoKey::new(model, prompt, sp);
+        if let Some(hit) = self.map.get(&key) {
+            self.hits += 1;
+            return Ok(hit.clone());
+        }
+        self.misses += 1;
+        let out = self.inner.generate(model, prompt, sp)?;
+        self.insert(key, out.clone());
+        Ok(out)
+    }
+
+    fn generate_batch(&mut self, reqs: &[GenRequest]) -> Vec<Result<GenOutput, String>> {
+        let mut out: Vec<Option<Result<GenOutput, String>>> =
+            std::iter::repeat_with(|| None).take(reqs.len()).collect();
+        let mut miss_idx: Vec<usize> = Vec::new();
+        let mut misses: Vec<GenRequest> = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            let key = MemoKey::new(&r.model, &r.prompt, &r.sp);
+            if let Some(hit) = self.map.get(&key) {
+                self.hits += 1;
+                out[i] = Some(Ok(hit.clone()));
+            } else {
+                self.misses += 1;
+                miss_idx.push(i);
+                misses.push(r.clone());
+            }
+        }
+        let results = self.inner.generate_batch(&misses);
+        for (i, res) in miss_idx.into_iter().zip(results) {
+            if let Ok(o) = &res {
+                let r = &reqs[i];
+                self.insert(MemoKey::new(&r.model, &r.prompt, &r.sp), o.clone());
+            }
+            out[i] = Some(res);
+        }
+        out.into_iter()
+            .map(|o| o.unwrap_or_else(|| Err("memo backend: missing result".to_string())))
+            .collect()
     }
 }
 
@@ -73,7 +450,10 @@ impl TextBackend for RealBackend {
 
 /// Produces reference-derived text with a per-model corruption rate tied to
 /// the Table-I MMLU ladder, so bigger models give measurably better answers
-/// — the same *shape* the real picoLM ladder exhibits.
+/// — the same *shape* the real picoLM ladder exhibits. Cloning yields an
+/// exact replica (all state is read-only after construction), which is what
+/// [`ParallelBackend`] workers rely on.
+#[derive(Clone)]
 pub struct SurrogateBackend {
     by_question: HashMap<Vec<u32>, usize>,
     corpus: Arc<Corpus>,
@@ -257,5 +637,123 @@ mod tests {
         let a = b.generate("qwen7b-sim", &p, &sp).unwrap();
         let bb = b.generate("qwen7b-sim", &p, &sp).unwrap();
         assert_eq!(a.tokens, bb.tokens);
+    }
+
+    fn batch_of_prompts(b: &SurrogateBackend, tok: &Tokenizer, c: &Corpus) -> Vec<GenRequest> {
+        let _ = b;
+        let mut reqs = Vec::new();
+        for q in &c.questions {
+            let p = Prompts::full_answer(tok, &q.question);
+            reqs.push(GenRequest::new(
+                "qwen7b-sim",
+                &p,
+                SamplingParams { max_tokens: 64, seed: q.id as u64, ..Default::default() },
+            ));
+            let sk = Prompts::sketch(tok, &q.question);
+            reqs.push(GenRequest::new(
+                "qwen72b-sim",
+                &sk,
+                SamplingParams { max_tokens: 60, seed: q.id as u64, ..Default::default() },
+            ));
+        }
+        reqs
+    }
+
+    #[test]
+    fn default_batch_matches_sequential_calls() {
+        let (mut b, tok, c) = setup();
+        let reqs = batch_of_prompts(&b, &tok, &c);
+        let batch = b.generate_batch(&reqs);
+        for (r, out) in reqs.iter().zip(&batch) {
+            let solo = b.generate(&r.model, &r.prompt, &r.sp).unwrap();
+            assert_eq!(solo.tokens, out.as_ref().unwrap().tokens);
+        }
+    }
+
+    #[test]
+    fn parallel_backend_bit_identical_and_index_ordered() {
+        let (b, tok, c) = setup();
+        let reqs = batch_of_prompts(&b, &tok, &c);
+        let mut seq = b.clone();
+        let expect = seq.generate_batch(&reqs);
+        for workers in [1usize, 2, 3, 4] {
+            let mut par = ParallelBackend::new(workers, |_| b.clone());
+            let got = par.generate_batch(&reqs);
+            assert_eq!(got.len(), expect.len());
+            for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+                let (g, e) = (g.as_ref().unwrap(), e.as_ref().unwrap());
+                assert_eq!(g.tokens, e.tokens, "workers={workers} idx={i}");
+                assert_eq!(g.logps, e.logps, "workers={workers} idx={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_backend_single_generate_works() {
+        let (b, tok, c) = setup();
+        let q = &c.questions[0];
+        let p = Prompts::full_answer(&tok, &q.question);
+        let sp = SamplingParams { max_tokens: 64, ..Default::default() };
+        let mut seq = b.clone();
+        let mut par = ParallelBackend::new(2, |_| b.clone());
+        let a = seq.generate("qwen7b-sim", &p, &sp).unwrap();
+        let bb = par.generate("qwen7b-sim", &p, &sp).unwrap();
+        assert_eq!(a.tokens, bb.tokens);
+        assert_eq!(par.workers(), 2);
+    }
+
+    #[test]
+    fn parallel_backend_reports_backend_errors() {
+        let (b, _tok, _c) = setup();
+        let mut par = ParallelBackend::new(2, |_| b.clone());
+        let reqs = vec![GenRequest::new("no-such-model", &[1, 2, 3], SamplingParams::default())];
+        let out = par.generate_batch(&reqs);
+        assert!(out[0].is_err());
+    }
+
+    #[test]
+    fn memo_backend_hits_and_is_transparent() {
+        let (b, tok, c) = setup();
+        let reqs = batch_of_prompts(&b, &tok, &c);
+        let mut plain = b.clone();
+        let expect = plain.generate_batch(&reqs);
+        let mut memo = MemoBackend::new(b.clone(), 1024);
+        let first = memo.generate_batch(&reqs);
+        let second = memo.generate_batch(&reqs);
+        let (hits, misses) = memo.stats();
+        assert_eq!(misses, reqs.len() as u64);
+        assert_eq!(hits, reqs.len() as u64);
+        assert!(memo.hit_rate() > 0.49 && memo.hit_rate() < 0.51);
+        for ((a, bb), e) in first.iter().zip(&second).zip(&expect) {
+            assert_eq!(a.as_ref().unwrap().tokens, e.as_ref().unwrap().tokens);
+            assert_eq!(bb.as_ref().unwrap().tokens, e.as_ref().unwrap().tokens);
+        }
+    }
+
+    #[test]
+    fn memo_backend_capacity_bounded() {
+        let (b, tok, c) = setup();
+        let mut memo = MemoBackend::new(b, 2);
+        let q = &c.questions[0];
+        let p = Prompts::full_answer(&tok, &q.question);
+        for seed in 0..10u64 {
+            let sp = SamplingParams { max_tokens: 64, seed, ..Default::default() };
+            memo.generate("qwen7b-sim", &p, &sp).unwrap();
+        }
+        assert!(memo.len() <= 2, "cache grew to {}", memo.len());
+        let (hits, misses) = memo.stats();
+        assert_eq!(hits, 0);
+        assert_eq!(misses, 10);
+    }
+
+    #[test]
+    fn memo_backend_does_not_cache_errors() {
+        let (b, _tok, _c) = setup();
+        let mut memo = MemoBackend::new(b, 8);
+        let sp = SamplingParams::default();
+        assert!(memo.generate("no-such-model", &[1, 2], &sp).is_err());
+        assert!(memo.is_empty());
+        let (hits, misses) = memo.stats();
+        assert_eq!((hits, misses), (0, 1));
     }
 }

@@ -7,20 +7,23 @@
 //! multi-list over a single FIFO).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::simclock::SimTime;
 
-/// One queued expansion job.
+/// One queued expansion job. Token payloads are shared `Arc<[u32]>` slices:
+/// jobs are cloned on every ensemble re-queue and embedded in events, so
+/// sharing turns those clones into reference bumps instead of token copies.
 #[derive(Clone, Debug)]
 pub struct Job {
     pub rid: usize,
     /// expected full-answer length l_i (the bucketing key)
     pub expected_len: usize,
     /// sketch sentences to expand (token ids per sentence)
-    pub sentences: Vec<Vec<u32>>,
+    pub sentences: Vec<Arc<[u32]>>,
     /// full sketch (context for the expansion prompt)
-    pub full_sketch: Vec<u32>,
-    pub question: Vec<u32>,
+    pub full_sketch: Arc<[u32]>,
+    pub question: Arc<[u32]>,
     pub enqueued_at: SimTime,
     /// how many ensemble replicas of this job remain to be launched
     pub replicas_left: usize,
@@ -102,8 +105,8 @@ mod tests {
             rid,
             expected_len: len,
             sentences: vec![],
-            full_sketch: vec![],
-            question: vec![],
+            full_sketch: Vec::new().into(),
+            question: Vec::new().into(),
             enqueued_at: 0.0,
             replicas_left: 1,
         }

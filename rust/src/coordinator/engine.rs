@@ -11,7 +11,7 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use super::backend::TextBackend;
+use super::backend::{GenRequest, TextBackend};
 use super::dispatch::{Job, MultiListQueue};
 use super::scheduler::{CloudScheduler, Mode as SchedMode, SchedInput};
 use super::selection::select_model;
@@ -140,6 +140,8 @@ struct EdgeState {
 
 struct Pending {
     question_id: usize,
+    /// question tokens, shared with every prompt/job built for this request
+    question_toks: Arc<[u32]>,
     category: String,
     arrival: SimTime,
     predicted_len: usize,
@@ -150,7 +152,7 @@ struct Pending {
     edge_start: SimTime,
     cloud_tokens: usize,
     edge_tokens: usize,
-    sketch: Vec<u32>,
+    sketch: Arc<[u32]>,
     expected_sketch_len: usize,
     candidates: Vec<Candidate>,
     replicas_out: usize,
@@ -280,6 +282,7 @@ impl<'a> Engine<'a> {
             let qq = self.corpus.get(r.question_id).expect("qid");
             pend.push(Pending {
                 question_id: r.question_id,
+                question_toks: Arc::from(qq.question.as_slice()),
                 category: qq.category.clone(),
                 arrival: r.arrival_s,
                 predicted_len: 0,
@@ -290,7 +293,7 @@ impl<'a> Engine<'a> {
                 edge_start: 0.0,
                 cloud_tokens: 0,
                 edge_tokens: 0,
-                sketch: Vec::new(),
+                sketch: Vec::new().into(),
                 expected_sketch_len: 0,
                 candidates: Vec::new(),
                 replicas_out: 0,
@@ -395,28 +398,53 @@ impl<'a> Engine<'a> {
                 }
 
                 Ev::CloudAdmit => {
-                    while cloud_inflight < cloud_slots {
-                        let Some((rid, kind)) = cloud_pending.pop_front() else { break };
+                    // Drain every job admissible at this timestamp, then issue
+                    // all of their generations as ONE backend batch — the
+                    // parallel/lockstep backends shard it across workers while
+                    // results stay index-aligned with the admission order.
+                    let mut admitted: Vec<(usize, CloudJobKind)> = Vec::new();
+                    while cloud_inflight + admitted.len() < cloud_slots {
+                        let Some(j) = cloud_pending.pop_front() else { break };
+                        admitted.push(j);
+                    }
+                    if admitted.is_empty() {
+                        continue;
+                    }
+                    let real_cap =
+                        ((self.cfg.cloud_max_tokens as f64 / scale).round() as usize).max(4);
+                    let reqs: Vec<GenRequest> = admitted
+                        .iter()
+                        .map(|(rid, kind)| {
+                            let question = &pend[*rid].question_toks;
+                            let (prompt, max_tokens) = match kind {
+                                CloudJobKind::Full => {
+                                    (Prompts::full_answer(self.tok, question), real_cap)
+                                }
+                                CloudJobKind::Sketch { .. } => {
+                                    (Prompts::sketch(self.tok, question), 60)
+                                }
+                            };
+                            GenRequest {
+                                model: self.cfg.cloud_model.clone(),
+                                prompt: prompt.into(),
+                                sp: SamplingParams {
+                                    max_tokens,
+                                    seed: self.cfg.seed ^ *rid as u64,
+                                    ..Default::default()
+                                },
+                            }
+                        })
+                        .collect();
+                    let outs = self.backend.generate_batch(&reqs);
+                    for (k, ((rid, kind), out)) in
+                        admitted.into_iter().zip(outs).enumerate()
+                    {
+                        let out = out.map_err(RunError::Backend)?;
                         pend[rid].cloud_start = now;
-                        let question = self.corpus.get(pend[rid].question_id).unwrap().question.clone();
                         let b = cloud_inflight + 1;
-                        let (tokens, dur) = match &kind {
+                        let prompt_sim = (reqs[k].prompt.len() as f64 * scale) as usize;
+                        let dur = match &kind {
                             CloudJobKind::Full => {
-                                let prompt = Prompts::full_answer(self.tok, &question);
-                                let real_cap =
-                                    ((self.cfg.cloud_max_tokens as f64 / scale).round() as usize).max(4);
-                                let out = self
-                                    .backend
-                                    .generate(
-                                        &self.cfg.cloud_model,
-                                        &prompt,
-                                        &SamplingParams {
-                                            max_tokens: real_cap,
-                                            seed: self.cfg.seed ^ rid as u64,
-                                            ..Default::default()
-                                        },
-                                    )
-                                    .map_err(RunError::Backend)?;
                                 let n_sim = (out.tokens.len() as f64 * scale) as usize;
                                 pend[rid].cloud_tokens = n_sim;
                                 // final answer = cloud output minus <eos>
@@ -429,27 +457,10 @@ impl<'a> Engine<'a> {
                                     tokens: ans,
                                     logps: out.logps,
                                 }];
-                                let d = self
-                                    .cluster
-                                    .cloud
-                                    .prefill_time_s(&cloud_info, (prompt.len() as f64 * scale) as usize, b)
-                                    + self.cluster.cloud.gen_time_s(&cloud_info, n_sim, b);
-                                (n_sim, d)
+                                self.cluster.cloud.prefill_time_s(&cloud_info, prompt_sim, b)
+                                    + self.cluster.cloud.gen_time_s(&cloud_info, n_sim, b)
                             }
                             CloudJobKind::Sketch { level } => {
-                                let prompt = Prompts::sketch(self.tok, &question);
-                                let out = self
-                                    .backend
-                                    .generate(
-                                        &self.cfg.cloud_model,
-                                        &prompt,
-                                        &SamplingParams {
-                                            max_tokens: 60,
-                                            seed: self.cfg.seed ^ rid as u64,
-                                            ..Default::default()
-                                        },
-                                    )
-                                    .map_err(RunError::Backend)?;
                                 let mut sk = out.tokens;
                                 if sk.last() == Some(&self.tok.specials.eos) {
                                     sk.pop();
@@ -482,16 +493,11 @@ impl<'a> Engine<'a> {
                                 }
                                 let n_sim = (out_sk.len() as f64 * scale) as usize;
                                 pend[rid].cloud_tokens = n_sim;
-                                pend[rid].sketch = out_sk;
-                                let d = self
-                                    .cluster
-                                    .cloud
-                                    .prefill_time_s(&cloud_info, (prompt.len() as f64 * scale) as usize, b)
-                                    + self.cluster.cloud.gen_time_s(&cloud_info, n_sim, b);
-                                (n_sim, d)
+                                pend[rid].sketch = out_sk.into();
+                                self.cluster.cloud.prefill_time_s(&cloud_info, prompt_sim, b)
+                                    + self.cluster.cloud.gen_time_s(&cloud_info, n_sim, b)
                             }
                         };
-                        let _ = tokens;
                         cloud_inflight += 1;
                         q.schedule(now + dur, Ev::CloudDone { rid, kind });
                     }
@@ -524,9 +530,11 @@ impl<'a> Engine<'a> {
                         q.schedule_in(2.0, Ev::JobArriveAtQueue { rid });
                         continue;
                     }
-                    let question =
-                        self.corpus.get(pend[rid].question_id).unwrap().question.clone();
-                    let sents = split_sketch(&pend[rid].sketch, self.tok.specials.semicolon);
+                    let sents: Vec<Arc<[u32]>> =
+                        split_sketch(&pend[rid].sketch, self.tok.specials.semicolon)
+                            .into_iter()
+                            .map(Arc::from)
+                            .collect();
                     let replicas = self.cfg.ensemble_k.max(1);
                     pend[rid].replicas_out = replicas;
                     let job = Job {
@@ -534,7 +542,7 @@ impl<'a> Engine<'a> {
                         expected_len: pend[rid].predicted_len,
                         sentences: sents,
                         full_sketch: pend[rid].sketch.clone(),
-                        question,
+                        question: pend[rid].question_toks.clone(),
                         enqueued_at: now,
                         replicas_left: replicas,
                     };
@@ -543,7 +551,7 @@ impl<'a> Engine<'a> {
                         // (degenerate; counted against PICE's quality)
                         pend[rid].candidates = vec![Candidate {
                             model: self.cfg.cloud_model.clone(),
-                            tokens: pend[rid].sketch.clone(),
+                            tokens: pend[rid].sketch.to_vec(),
                             logps: vec![-1.0; pend[rid].sketch.len()],
                         }];
                         self.finalize(rid, now, &mut pend, &mut traces);
@@ -564,11 +572,9 @@ impl<'a> Engine<'a> {
                     if let Some(rid) = edge_fifo[eid].pop_front() {
                         edges[eid].busy = true;
                         pend[rid].edge_start = now;
-                        let question =
-                            self.corpus.get(pend[rid].question_id).unwrap().question.clone();
                         let model_name = edges[eid].current_model.clone();
                         let info = self.registry.get(&model_name).unwrap().clone();
-                        let prompt = Prompts::full_answer(self.tok, &question);
+                        let prompt = Prompts::full_answer(self.tok, &pend[rid].question_toks);
                         let real_cap =
                             ((self.cfg.cloud_max_tokens as f64 / scale).round() as usize).max(4);
                         let out = self
@@ -702,35 +708,44 @@ impl<'a> Engine<'a> {
                         .max(1);
                     let (plans, _) = plan_batch(&est_refs, p_mem, &info_cost);
 
-                    // Generate the real expansions, then charge simulated time
-                    // using the chosen plans over the *actual* lengths.
+                    // Generate the real expansions — every sentence of every
+                    // job in the pulled batch goes out as ONE backend batch
+                    // (sharded across workers by ParallelBackend), then charge
+                    // simulated time using the chosen plans over the *actual*
+                    // lengths. Flattened order is job-major, sentence-minor,
+                    // so results realign positionally.
+                    let reqs: Vec<GenRequest> = batch
+                        .iter()
+                        .flat_map(|job| {
+                            job.sentences.iter().enumerate().map(|(si, sent)| GenRequest {
+                                model: sel.model.clone(),
+                                prompt: Prompts::expand(
+                                    self.tok,
+                                    &job.question,
+                                    &job.full_sketch,
+                                    sent,
+                                )
+                                .into(),
+                                sp: SamplingParams {
+                                    max_tokens: 24,
+                                    stop_token: Some(self.tok.specials.period),
+                                    seed: self.cfg.seed ^ ((job.rid as u64) << 8) ^ si as u64,
+                                    ..Default::default()
+                                },
+                            })
+                        })
+                        .collect();
+                    let mut outs = self.backend.generate_batch(&reqs).into_iter();
                     let mut items = Vec::new();
                     let mut real_lens_per_job: Vec<Vec<usize>> = Vec::with_capacity(batch.len());
                     for job in &batch {
                         let mut expansion: Vec<u32> = Vec::new();
                         let mut logps: Vec<f64> = Vec::new();
                         let mut real_lens = vec![0usize; job.sentences.len()];
-                        for (si, sent) in job.sentences.iter().enumerate() {
-                            let prompt = Prompts::expand(
-                                self.tok,
-                                &job.question,
-                                &job.full_sketch,
-                                sent,
-                            );
-                            let out = self
-                                .backend
-                                .generate(
-                                    &sel.model,
-                                    &prompt,
-                                    &SamplingParams {
-                                        max_tokens: 24,
-                                        stop_token: Some(self.tok.specials.period),
-                                        seed: self.cfg.seed
-                                            ^ ((job.rid as u64) << 8)
-                                            ^ si as u64,
-                                        ..Default::default()
-                                    },
-                                )
+                        for si in 0..job.sentences.len() {
+                            let out = outs
+                                .next()
+                                .expect("batch result per sentence")
                                 .map_err(RunError::Backend)?;
                             let mut toks = out.tokens;
                             if toks.last() == Some(&self.tok.specials.eos) {

@@ -32,7 +32,9 @@ pub fn rouge1_f1(candidate: &[u32], reference: &[u32]) -> f64 {
     }
 }
 
-/// Longest common subsequence length (O(n*m) DP, rolling row).
+/// Longest common subsequence length (O(n*m) DP, rolling row). This is the
+/// naive reference implementation; the hot path goes through
+/// [`lcs_len_trimmed`], which strips the shared prefix/suffix first.
 pub fn lcs_len(a: &[u32], b: &[u32]) -> usize {
     if a.is_empty() || b.is_empty() {
         return 0;
@@ -48,12 +50,32 @@ pub fn lcs_len(a: &[u32], b: &[u32]) -> usize {
     prev[b.len()]
 }
 
-/// Rouge-L F1 (LCS-based).
+/// LCS length with the shared prefix and suffix stripped before the DP:
+/// `LCS(p·x·s, p·y·s) = |p| + LCS(x, y) + |s|`, so near-identical pairs —
+/// the common case when scoring high-quality candidates against their
+/// reference — collapse from O(n·m) to near-linear. Equals [`lcs_len`] on
+/// every input.
+pub fn lcs_len_trimmed(a: &[u32], b: &[u32]) -> usize {
+    let n = a.len().min(b.len());
+    let mut p = 0usize;
+    while p < n && a[p] == b[p] {
+        p += 1;
+    }
+    let (a, b) = (&a[p..], &b[p..]);
+    let m = a.len().min(b.len());
+    let mut s = 0usize;
+    while s < m && a[a.len() - 1 - s] == b[b.len() - 1 - s] {
+        s += 1;
+    }
+    p + s + lcs_len(&a[..a.len() - s], &b[..b.len() - s])
+}
+
+/// Rouge-L F1 (LCS-based, via the prefix/suffix-trimmed DP).
 pub fn rouge_l_f1(candidate: &[u32], reference: &[u32]) -> f64 {
     if candidate.is_empty() || reference.is_empty() {
         return 0.0;
     }
-    let l = lcs_len(candidate, reference) as f64;
+    let l = lcs_len_trimmed(candidate, reference) as f64;
     let p = l / candidate.len() as f64;
     let r = l / reference.len() as f64;
     if p + r == 0.0 {
@@ -107,6 +129,23 @@ mod tests {
         assert_eq!(lcs_len(&[1, 2, 3, 4, 5], &[2, 4, 5]), 3);
         assert_eq!(lcs_len(&[1, 2, 3], &[3, 2, 1]), 1);
         assert_eq!(lcs_len(&[], &[1]), 0);
+    }
+
+    #[test]
+    fn trimmed_lcs_equals_naive() {
+        let cases: [(&[u32], &[u32]); 7] = [
+            (&[1, 2, 3, 4, 5], &[2, 4, 5]),
+            (&[1, 2, 3], &[3, 2, 1]),
+            (&[1, 2, 3, 4], &[1, 2, 3, 4]),
+            (&[1, 2, 9, 4, 5], &[1, 2, 7, 4, 5]),
+            (&[1, 1, 1], &[1, 1]),
+            (&[5, 6], &[7, 8]),
+            (&[], &[1, 2]),
+        ];
+        for (a, b) in cases {
+            assert_eq!(lcs_len_trimmed(a, b), lcs_len(a, b), "a={a:?} b={b:?}");
+            assert_eq!(lcs_len_trimmed(b, a), lcs_len(b, a), "b={b:?} a={a:?}");
+        }
     }
 
     #[test]

@@ -2,7 +2,10 @@
 //!
 //! Hot path: prefill once, then one `decode` execution per token with the
 //! KV cache held device-side as a `PjRtBuffer` (only a token id goes up and
-//! a logits vector comes down per step).
+//! a logits vector comes down per step). Host-side buffers (padded prompt,
+//! state mirror, sampling probabilities) live in a [`GenScratch`] that the
+//! backend reuses across calls, so steady-state decoding allocates nothing
+//! per token.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -38,6 +41,18 @@ pub struct GenOutput {
     pub finished: bool,
 }
 
+/// Reusable host-side scratch for the generation hot path: the padded
+/// prompt upload buffer, the full-state host mirror (TFRT CPU lacks
+/// CopyRawToHost, so every step syncs the whole state down), and the
+/// temperature-sampling probability buffer. One per backend worker; reuse
+/// across calls removes the per-call (and per-sampled-token) allocations.
+#[derive(Debug, Default)]
+pub struct GenScratch {
+    padded: Vec<i32>,
+    state_host: Vec<f32>,
+    probs: Vec<f64>,
+}
+
 /// Stateless generation engine over a loaded model.
 pub struct Generator<'m> {
     pub model: &'m LoadedModel,
@@ -50,42 +65,33 @@ impl<'m> Generator<'m> {
     }
 
     /// Run prefill over `prompt`, then decode until eos/stop/max_tokens.
+    /// Convenience wrapper around [`Generator::generate_with`] with a
+    /// throwaway scratch; hot paths should hold a [`GenScratch`] instead.
     pub fn generate(&self, prompt: &[u32], sp: &SamplingParams) -> Result<GenOutput> {
+        self.generate_with(prompt, sp, &mut GenScratch::default())
+    }
+
+    /// Prefill + decode reusing `scratch` across calls.
+    pub fn generate_with(
+        &self,
+        prompt: &[u32],
+        sp: &SamplingParams,
+        scratch: &mut GenScratch,
+    ) -> Result<GenOutput> {
         let m = self.model;
         let s_max = m.art.max_seq;
-        if prompt.is_empty() {
-            bail!("empty prompt");
-        }
-        if prompt.len() >= s_max {
-            bail!("prompt len {} >= max_seq {}", prompt.len(), s_max);
-        }
-        // ---- prefill ----
-        let mut padded = vec![0i32; s_max];
-        for (i, &t) in prompt.iter().enumerate() {
-            padded[i] = t as i32;
-        }
-        let tok_buf = m.i32_buffer(&padded, &[1, s_max])?;
-        let len_buf = m.i32_buffer(&[prompt.len() as i32], &[1])?;
-        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &len_buf];
-        args.extend(m.params.iter());
-        let mut outs = m.prefill.execute_b(&args).map_err(|e| anyhow!("prefill: {e:?}"))?;
-        // state = concat(kv.ravel(), logits). The state buffer STAYS on the
-        // device and is fed back each step (execute_b); the host only reads
-        // it to extract the logits tail (TFRT CPU lacks CopyRawToHost, so
-        // the read is a full-state literal sync — download only, no upload;
-        // see EXPERIMENTS.md §Perf).
-        let mut state_buf = single_output(outs.remove(0))?;
+        let mut state_buf = self.prefill(prompt, scratch)?;
         let logits_off = m.art.logits_offset();
-        let mut state_host = vec![0f32; m.art.state_size];
-        read_state(&state_buf, &mut state_host)?;
+        scratch.state_host.resize(m.art.state_size, 0.0);
+        read_state(&state_buf, &mut scratch.state_host)?;
 
         // ---- decode loop ----
         let mut rng = Rng::new(sp.seed);
         let mut out = GenOutput::default();
         let mut pos = prompt.len();
         loop {
-            let logits = &state_host[logits_off..];
-            let (next, logp) = sample(logits, sp, &mut rng)?;
+            let (next, logp) =
+                sample(&scratch.state_host[logits_off..], sp, &mut rng, &mut scratch.probs)?;
             out.tokens.push(next);
             out.logps.push(logp);
             if next == self.eos || Some(next) == sp.stop_token {
@@ -102,10 +108,114 @@ impl<'m> Generator<'m> {
             let mut outs =
                 m.decode.execute_b(&args).map_err(|e| anyhow!("decode @pos {pos}: {e:?}"))?;
             state_buf = single_output(outs.remove(0))?;
-            read_state(&state_buf, &mut state_host)?;
+            read_state(&state_buf, &mut scratch.state_host)?;
             pos += 1;
         }
         Ok(out)
+    }
+
+    /// Lockstep decoding of K independent sequences: every round steps each
+    /// still-active sequence once, so K decode executions are issued per
+    /// token round-trip instead of running whole sequences back-to-back.
+    /// Output i corresponds to `reqs[i]` and is bit-identical to a
+    /// standalone [`Generator::generate`] call with the same parameters
+    /// (per-sequence RNG streams, independent KV states).
+    pub fn generate_many(
+        &self,
+        reqs: &[(&[u32], SamplingParams)],
+        scratch: &mut GenScratch,
+    ) -> Result<Vec<GenOutput>> {
+        struct Seq {
+            state: xla::PjRtBuffer,
+            state_host: Vec<f32>,
+            rng: Rng,
+            out: GenOutput,
+            pos: usize,
+            done: bool,
+        }
+        let m = self.model;
+        let s_max = m.art.max_seq;
+        let mut seqs: Vec<Seq> = Vec::with_capacity(reqs.len());
+        for (prompt, sp) in reqs {
+            let state = self.prefill(prompt, scratch)?;
+            let mut state_host = vec![0f32; m.art.state_size];
+            read_state(&state, &mut state_host)?;
+            seqs.push(Seq {
+                state,
+                state_host,
+                rng: Rng::new(sp.seed),
+                out: GenOutput::default(),
+                pos: prompt.len(),
+                done: false,
+            });
+        }
+        let logits_off = m.art.logits_offset();
+        loop {
+            let mut stepped = false;
+            for (sq, (_, sp)) in seqs.iter_mut().zip(reqs) {
+                if sq.done {
+                    continue;
+                }
+                let (next, logp) =
+                    sample(&sq.state_host[logits_off..], sp, &mut sq.rng, &mut scratch.probs)?;
+                sq.out.tokens.push(next);
+                sq.out.logps.push(logp);
+                if next == self.eos || Some(next) == sp.stop_token {
+                    sq.out.finished = true;
+                    sq.done = true;
+                    continue;
+                }
+                if sq.out.tokens.len() >= sp.max_tokens || sq.pos + 1 >= s_max {
+                    sq.done = true;
+                    continue;
+                }
+                let tok_buf = m.i32_buffer(&[next as i32], &[1])?;
+                let pos_buf = m.i32_buffer(&[sq.pos as i32], &[1])?;
+                let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &pos_buf, &sq.state];
+                args.extend(m.params.iter());
+                let mut outs = m
+                    .decode
+                    .execute_b(&args)
+                    .map_err(|e| anyhow!("decode @pos {}: {e:?}", sq.pos))?;
+                sq.state = single_output(outs.remove(0))?;
+                read_state(&sq.state, &mut sq.state_host)?;
+                sq.pos += 1;
+                stepped = true;
+            }
+            if !stepped {
+                break;
+            }
+        }
+        Ok(seqs.into_iter().map(|s| s.out).collect())
+    }
+
+    /// Upload the padded prompt and run the prefill executable; returns the
+    /// device-side state buffer.
+    fn prefill(&self, prompt: &[u32], scratch: &mut GenScratch) -> Result<xla::PjRtBuffer> {
+        let m = self.model;
+        let s_max = m.art.max_seq;
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() >= s_max {
+            bail!("prompt len {} >= max_seq {}", prompt.len(), s_max);
+        }
+        scratch.padded.clear();
+        scratch.padded.resize(s_max, 0);
+        for (i, &t) in prompt.iter().enumerate() {
+            scratch.padded[i] = t as i32;
+        }
+        let tok_buf = m.i32_buffer(&scratch.padded, &[1, s_max])?;
+        let len_buf = m.i32_buffer(&[prompt.len() as i32], &[1])?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &len_buf];
+        args.extend(m.params.iter());
+        // state = concat(kv.ravel(), logits). The state buffer STAYS on the
+        // device and is fed back each step (execute_b); the host only reads
+        // it to extract the logits tail (TFRT CPU lacks CopyRawToHost, so
+        // the read is a full-state literal sync — download only, no upload;
+        // see EXPERIMENTS.md §Perf).
+        let mut outs = m.prefill.execute_b(&args).map_err(|e| anyhow!("prefill: {e:?}"))?;
+        single_output(outs.remove(0))
     }
 
     /// Teacher-forcing log-probabilities of `tokens[1..]` given `tokens[..n-1]`
@@ -160,46 +270,66 @@ fn read_state(state: &xla::PjRtBuffer, dst: &mut [f32]) -> Result<()> {
 }
 
 /// Sample from logits (f32, unnormalized). Returns (token, ln p(token)).
-fn sample(logits: &[f32], sp: &SamplingParams, rng: &mut Rng) -> Result<(u32, f64)> {
+///
+/// Greedy path: a single fused sweep computes the running max (with
+/// on-the-fly partition rescaling), the T=1 log-partition for the reported
+/// logp, and the argmax together. Temperature path: one cheap max sweep,
+/// then one fused sweep filling `probs` — a scratch buffer reused across
+/// decode steps — together with both partition sums.
+fn sample(
+    logits: &[f32],
+    sp: &SamplingParams,
+    rng: &mut Rng,
+    probs: &mut Vec<f64>,
+) -> Result<(u32, f64)> {
     if logits.is_empty() {
         bail!("empty logits");
     }
+    if sp.temperature <= 0.0 {
+        let mut mx = f64::NEG_INFINITY;
+        let mut z1 = 0.0f64;
+        let mut best = 0usize;
+        let mut best_l = f32::NEG_INFINITY;
+        for (i, &l) in logits.iter().enumerate() {
+            let lf = l as f64;
+            if lf > mx {
+                // rescale the partial partition sum to the new reference max
+                z1 = z1 * (mx - lf).exp() + 1.0;
+                mx = lf;
+            } else {
+                z1 += (lf - mx).exp();
+            }
+            if l >= best_l {
+                best_l = l;
+                best = i;
+            }
+        }
+        return Ok((best as u32, (logits[best] as f64) - mx - z1.ln()));
+    }
+    let t = sp.temperature;
     let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    probs.clear();
+    probs.reserve(logits.len());
     // log-softmax denominators at T=1 (for reported logp) and at T (sampling)
     let mut z1 = 0.0f64;
+    let mut zt = 0.0f64;
     for &l in logits {
-        z1 += ((l as f64) - mx).exp();
+        let d = (l as f64) - mx;
+        z1 += d.exp();
+        let p = (d / t).exp();
+        probs.push(p);
+        zt += p;
     }
-    let lnz1 = z1.ln();
-    let pick = if sp.temperature <= 0.0 {
-        logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap()
-    } else {
-        let t = sp.temperature;
-        let mut zt = 0.0f64;
-        let mut probs = Vec::with_capacity(logits.len());
-        for &l in logits {
-            let p = (((l as f64) - mx) / t).exp();
-            probs.push(p);
-            zt += p;
+    let mut u = rng.f64() * zt;
+    let mut idx = logits.len() - 1;
+    for (i, p) in probs.iter().enumerate() {
+        if u < *p {
+            idx = i;
+            break;
         }
-        let mut u = rng.f64() * zt;
-        let mut idx = logits.len() - 1;
-        for (i, p) in probs.iter().enumerate() {
-            if u < *p {
-                idx = i;
-                break;
-            }
-            u -= p;
-        }
-        idx
-    };
-    let logp = (logits[pick] as f64) - mx - lnz1;
-    Ok((pick as u32, logp))
+        u -= p;
+    }
+    Ok((idx as u32, (logits[idx] as f64) - mx - z1.ln()))
 }
 
 fn log_softmax_pick(row: &[f32], idx: usize) -> f64 {
@@ -219,9 +349,21 @@ mod tests {
     fn greedy_sample_argmax() {
         let logits = [0.1f32, 2.0, -1.0];
         let mut rng = Rng::new(1);
-        let (t, lp) = sample(&logits, &SamplingParams::default(), &mut rng).unwrap();
+        let mut probs = Vec::new();
+        let (t, lp) = sample(&logits, &SamplingParams::default(), &mut rng, &mut probs).unwrap();
         assert_eq!(t, 1);
         assert!(lp < 0.0);
+    }
+
+    #[test]
+    fn fused_greedy_matches_two_pass_log_softmax() {
+        // the running-rescale partition must agree with the exact-max form
+        let logits = [0.3f32, -1.2, 2.0, 0.7, 1.9, -4.0];
+        let mut rng = Rng::new(1);
+        let mut probs = Vec::new();
+        let (t, lp) = sample(&logits, &SamplingParams::default(), &mut rng, &mut probs).unwrap();
+        assert_eq!(t, 2);
+        assert!((lp - log_softmax_pick(&logits, 2)).abs() < 1e-9, "{lp}");
     }
 
     #[test]
@@ -229,9 +371,10 @@ mod tests {
         let logits = [1.0f32, 1.0, 1.0];
         let sp = SamplingParams { temperature: 1.0, seed: 3, ..Default::default() };
         let mut rng = Rng::new(3);
+        let mut probs = Vec::new();
         let mut seen = std::collections::HashSet::new();
         for _ in 0..200 {
-            let (t, _) = sample(&logits, &sp, &mut rng).unwrap();
+            let (t, _) = sample(&logits, &sp, &mut rng, &mut probs).unwrap();
             seen.insert(t);
         }
         assert_eq!(seen.len(), 3);
@@ -241,8 +384,23 @@ mod tests {
     fn logp_is_normalized() {
         let logits = [0.0f32, 0.0, 0.0, 0.0];
         let mut rng = Rng::new(1);
-        let (_, lp) = sample(&logits, &SamplingParams::default(), &mut rng).unwrap();
+        let mut probs = Vec::new();
+        let (_, lp) = sample(&logits, &SamplingParams::default(), &mut rng, &mut probs).unwrap();
         assert!((lp - (0.25f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scratch_probs_reused_across_calls() {
+        let logits = [0.5f32; 8];
+        let sp = SamplingParams { temperature: 0.7, seed: 1, ..Default::default() };
+        let mut rng = Rng::new(1);
+        let mut probs = Vec::new();
+        sample(&logits, &sp, &mut rng, &mut probs).unwrap();
+        let cap = probs.capacity();
+        for _ in 0..10 {
+            sample(&logits, &sp, &mut rng, &mut probs).unwrap();
+        }
+        assert_eq!(probs.capacity(), cap, "probs buffer must not reallocate");
     }
 
     #[test]

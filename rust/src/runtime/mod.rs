@@ -9,5 +9,5 @@
 pub mod generation;
 pub mod loader;
 
-pub use generation::{GenOutput, Generator, SamplingParams};
+pub use generation::{GenOutput, GenScratch, Generator, SamplingParams};
 pub use loader::{LoadedModel, ModelArtifact, RuntimeHandle};

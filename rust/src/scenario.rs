@@ -5,7 +5,9 @@
 use std::sync::Arc;
 
 use crate::baselines;
-use crate::coordinator::backend::{RealBackend, SurrogateBackend, TextBackend};
+use crate::coordinator::backend::{
+    MemoBackend, ParallelBackend, RealBackend, SurrogateBackend, TextBackend,
+};
 use crate::coordinator::{Engine, EngineCfg, RunError};
 use crate::corpus::workload::{Arrival, Workload, WorkloadSpec};
 use crate::corpus::Corpus;
@@ -28,23 +30,52 @@ impl Env {
     /// Load artifacts + the real PJRT backend; fall back to the Rust synth
     /// corpus + surrogate backend when artifacts are missing or
     /// `PICE_BACKEND=surrogate`.
+    ///
+    /// Execution-layer knobs (both preserve bit-identical outputs):
+    /// * `PICE_WORKERS=N` (default 1) — shard backend batches over N OS
+    ///   threads via [`ParallelBackend`], each worker owning its own backend
+    ///   replica (surrogate clone / separately-loaded PJRT models).
+    /// * `PICE_MEMO_CAP=N` (default 4096; 0 disables) — bound of the
+    ///   generation memo-cache wrapped around the stack.
     pub fn load() -> Result<Env, String> {
         let art = crate::artifacts_dir();
         let force_surrogate = std::env::var("PICE_BACKEND").as_deref() == Ok("surrogate");
         let have_artifacts = art.join("manifest.json").exists();
+        let env_usize = |key: &str, default: usize| {
+            std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+        };
+        let workers = env_usize("PICE_WORKERS", 1);
+        let memo_cap = env_usize("PICE_MEMO_CAP", 4096);
         if have_artifacts && !force_surrogate {
             let tok = Tokenizer::from_file(&art.join("vocab.json"))?;
             let corpus = Arc::new(Corpus::from_file(&art.join("corpus.json"), &tok)?);
             let registry = Registry::from_artifacts(&art)?;
-            let backend = Box::new(RealBackend::new(&art, tok.specials.eos)?);
+            let backend = if workers > 1 {
+                let art2 = art.clone();
+                let eos = tok.specials.eos;
+                // probe once so a broken setup fails here, not inside a worker
+                RealBackend::new(&art, eos)?;
+                wrap_memo(
+                    ParallelBackend::new(workers, move |_| {
+                        RealBackend::new(&art2, eos).expect("worker backend")
+                    }),
+                    memo_cap,
+                )
+            } else {
+                wrap_memo(RealBackend::new(&art, tok.specials.eos)?, memo_cap)
+            };
             let judge = Judge::fit(&corpus);
             Ok(Env { tok, corpus, registry, backend, judge, real: true })
         } else {
             let tok = crate::corpus::synth::synth_tokenizer();
             let corpus = Arc::new(crate::corpus::synth::synth_corpus(&tok, 30, 42));
             let registry = Registry::builtin();
-            let backend =
-                Box::new(SurrogateBackend::new(corpus.clone(), &tok, &registry, 9));
+            let base = SurrogateBackend::new(corpus.clone(), &tok, &registry, 9);
+            let backend = if workers > 1 {
+                wrap_memo(ParallelBackend::new(workers, move |_| base.clone()), memo_cap)
+            } else {
+                wrap_memo(base, memo_cap)
+            };
             let judge = Judge::fit(&corpus);
             Ok(Env { tok, corpus, registry, backend, judge, real: false })
         }
@@ -96,6 +127,15 @@ impl Env {
             .into_iter()
             .map(|(name, cfg)| (name, self.run(cfg, &wl)))
             .collect()
+    }
+}
+
+/// Wrap a backend in the bounded memo-cache unless `memo_cap` is 0.
+fn wrap_memo<B: TextBackend + 'static>(backend: B, memo_cap: usize) -> Box<dyn TextBackend> {
+    if memo_cap > 0 {
+        Box::new(MemoBackend::new(backend, memo_cap))
+    } else {
+        Box::new(backend)
     }
 }
 

@@ -1,0 +1,143 @@
+//! Determinism of the batched/parallel execution layer: running the full
+//! PICE engine over [`ParallelBackend`] (per-worker surrogate replicas,
+//! index-ordered merge) must produce byte-identical request traces to the
+//! sequential surrogate for the same seed — the engine's contract that
+//! parallelism is a pure execution-substrate change. Same for the memo
+//! cache, alone and stacked on top.
+
+use std::sync::Arc;
+
+use pice::baselines;
+use pice::coordinator::backend::{
+    GenRequest, MemoBackend, ParallelBackend, SurrogateBackend, TextBackend,
+};
+use pice::coordinator::Engine;
+use pice::corpus::synth::{synth_corpus, synth_tokenizer};
+use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use pice::corpus::Corpus;
+use pice::metrics::RequestTrace;
+use pice::models::Registry;
+use pice::runtime::SamplingParams;
+use pice::sketch::Prompts;
+use pice::tokenizer::Tokenizer;
+
+fn setup() -> (Arc<Corpus>, Tokenizer, Registry, Workload) {
+    let tok = synth_tokenizer();
+    let corpus = Arc::new(synth_corpus(&tok, 20, 42));
+    let reg = Registry::builtin();
+    let wl = Workload::generate(
+        &corpus,
+        WorkloadSpec {
+            rpm: 40.0,
+            n_requests: 40,
+            arrival: Arrival::Poisson,
+            categories: vec![],
+            seed: 5,
+        },
+    );
+    (corpus, tok, reg, wl)
+}
+
+fn run_with(
+    backend: &mut dyn TextBackend,
+    corpus: &Arc<Corpus>,
+    tok: &Tokenizer,
+    reg: &Registry,
+    wl: &Workload,
+) -> Vec<RequestTrace> {
+    let cfg = baselines::pice("llama70b-sim");
+    let mut engine = Engine::new(cfg, corpus.clone(), tok, reg, backend).unwrap();
+    engine.run(wl).unwrap()
+}
+
+fn assert_traces_identical(label: &str, a: &[RequestTrace], b: &[RequestTrace]) {
+    assert_eq!(a.len(), b.len(), "{label}: trace count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.rid, y.rid, "{label}: rid");
+        assert_eq!(x.mode, y.mode, "{label}: mode rid={}", x.rid);
+        assert_eq!(x.answer, y.answer, "{label}: answer rid={}", x.rid);
+        assert_eq!(x.winner_model, y.winner_model, "{label}: winner rid={}", x.rid);
+        assert_eq!(x.cloud_tokens, y.cloud_tokens, "{label}: cloud tokens rid={}", x.rid);
+        assert_eq!(x.edge_tokens, y.edge_tokens, "{label}: edge tokens rid={}", x.rid);
+        assert_eq!(x.sketch_level, y.sketch_level, "{label}: level rid={}", x.rid);
+        assert_eq!(x.parallelism, y.parallelism, "{label}: parallelism rid={}", x.rid);
+        assert!((x.done - y.done).abs() < 1e-12, "{label}: done time rid={}", x.rid);
+        assert!((x.confidence - y.confidence).abs() < 1e-12, "{label}: confidence rid={}", x.rid);
+    }
+}
+
+#[test]
+fn parallel_backend_traces_identical_to_sequential() {
+    let (corpus, tok, reg, wl) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let mut seq = base.clone();
+    let reference = run_with(&mut seq, &corpus, &tok, &reg, &wl);
+    assert!(!reference.is_empty());
+    for workers in [2usize, 4] {
+        let mut par = ParallelBackend::new(workers, |_| base.clone());
+        let got = run_with(&mut par, &corpus, &tok, &reg, &wl);
+        assert_traces_identical(&format!("{workers} workers"), &reference, &got);
+    }
+}
+
+#[test]
+fn memo_cache_traces_identical_to_sequential() {
+    let (corpus, tok, reg, wl) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let mut seq = base.clone();
+    let reference = run_with(&mut seq, &corpus, &tok, &reg, &wl);
+
+    let mut memo = MemoBackend::new(base.clone(), 4096);
+    let first = run_with(&mut memo, &corpus, &tok, &reg, &wl);
+    assert_traces_identical("memo cold", &reference, &first);
+    // replaying the same workload must be served largely from cache, with
+    // identical traces
+    let second = run_with(&mut memo, &corpus, &tok, &reg, &wl);
+    assert_traces_identical("memo warm", &reference, &second);
+    let (hits, misses) = memo.stats();
+    assert!(hits >= misses, "expected a warm replay to hit: {hits} hits / {misses} misses");
+
+    // memo stacked on the parallel pool
+    let mut stacked = MemoBackend::new(ParallelBackend::new(4, |_| base.clone()), 4096);
+    let got = run_with(&mut stacked, &corpus, &tok, &reg, &wl);
+    assert_traces_identical("memo+parallel", &reference, &got);
+}
+
+#[test]
+fn parallel_batch_results_are_index_aligned() {
+    // direct protocol-level check: shuffled-size batches over every prompt
+    // kind keep results positionally aligned with requests
+    let (corpus, tok, reg, _) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let mut reqs: Vec<GenRequest> = Vec::new();
+    for q in corpus.eval_questions().into_iter().take(24) {
+        let sketch = q.sketch_tokens(tok.specials.semicolon);
+        reqs.push(GenRequest::new(
+            "llama70b-sim",
+            &Prompts::sketch(&tok, &q.question),
+            SamplingParams { max_tokens: 60, seed: q.id as u64, ..Default::default() },
+        ));
+        for (si, sent) in q.sentences.iter().enumerate() {
+            reqs.push(GenRequest::new(
+                "qwen7b-sim",
+                &Prompts::expand(&tok, &q.question, &sketch, &sent.sketch),
+                SamplingParams {
+                    max_tokens: 24,
+                    stop_token: Some(tok.specials.period),
+                    seed: (q.id as u64) << 8 | si as u64,
+                    ..Default::default()
+                },
+            ));
+        }
+    }
+    let mut seq = base.clone();
+    let expect = seq.generate_batch(&reqs);
+    let mut par = ParallelBackend::new(3, |_| base.clone());
+    let got = par.generate_batch(&reqs);
+    assert_eq!(expect.len(), got.len());
+    for (i, (e, g)) in expect.iter().zip(&got).enumerate() {
+        let (e, g) = (e.as_ref().unwrap(), g.as_ref().unwrap());
+        assert_eq!(e.tokens, g.tokens, "idx {i}");
+        assert_eq!(e.logps, g.logps, "idx {i}");
+    }
+}

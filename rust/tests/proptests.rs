@@ -10,7 +10,7 @@ use pice::ensemble::{confidence, select, Candidate, ConfidenceWeights};
 use pice::models::Registry;
 use pice::parallel::{merge_once, plan_groups, EdgeCostModel, Group};
 use pice::profiler::LatencyFit;
-use pice::quality::rouge::{lcs_len, rouge1_f1, rouge_l_f1};
+use pice::quality::rouge::{lcs_len, lcs_len_trimmed, rouge1_f1, rouge_l_f1};
 use pice::sketch::{compress, levels, split_sentences, split_sketch};
 use pice::testkit::{forall, Gen};
 
@@ -19,8 +19,8 @@ fn job(rid: usize, len: usize) -> Job {
         rid,
         expected_len: len,
         sentences: vec![],
-        full_sketch: vec![],
-        question: vec![],
+        full_sketch: Vec::new().into(),
+        question: Vec::new().into(),
         enqueued_at: 0.0,
         replicas_left: 1,
     }
@@ -172,6 +172,43 @@ fn prop_rouge_bounds_and_symmetries() {
         assert!(lcs_len(&a, &b) <= a.len().min(b.len()));
         assert_eq!(lcs_len(&a, &b), lcs_len(&b, &a));
         assert!((rouge1_f1(&a, &a) - 1.0).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_trimmed_rouge_l_equals_naive_dp() {
+    // the trimmed LCS fast path must be observationally identical to the
+    // naive O(n*m) DP, on random pairs and on the near-identical pairs the
+    // trim was built for
+    let naive_f1 = |c: &[u32], r: &[u32]| -> f64 {
+        if c.is_empty() || r.is_empty() {
+            return 0.0;
+        }
+        let l = lcs_len(c, r) as f64;
+        let p = l / c.len() as f64;
+        let rr = l / r.len() as f64;
+        if p + rr == 0.0 {
+            0.0
+        } else {
+            2.0 * p * rr / (p + rr)
+        }
+    };
+    forall(400, |rng| {
+        // fully random pair
+        let a = Gen::tokens(rng, 30, 60);
+        let b = Gen::tokens(rng, 30, 60);
+        assert_eq!(lcs_len_trimmed(&a, &b), lcs_len(&a, &b));
+        assert!((rouge_l_f1(&a, &b) - naive_f1(&a, &b)).abs() < 1e-12);
+        // near-identical pair: copy with a few point mutations (the common
+        // case for high-quality candidates vs their reference)
+        let mut c = a.clone();
+        for _ in 0..rng.below(4) {
+            let i = rng.below(c.len());
+            c[i] = 10 + (rng.next_u64() % 50) as u32;
+        }
+        assert_eq!(lcs_len_trimmed(&a, &c), lcs_len(&a, &c));
+        assert!((rouge_l_f1(&a, &c) - naive_f1(&a, &c)).abs() < 1e-12);
+        assert!((rouge_l_f1(&a, &a) - 1.0).abs() < 1e-12);
     });
 }
 

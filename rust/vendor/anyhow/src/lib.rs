@@ -1,0 +1,112 @@
+//! Offline shim of the `anyhow` crate: the build image has no crates.io
+//! access, so this vendored crate provides the (small) API subset the rest
+//! of the workspace uses — `Error`, `Result`, `anyhow!`, `bail!`, `Context`.
+//!
+//! Semantics match upstream for that subset: `Error` is an opaque,
+//! `Display`/`Debug`-printable error value; `Context` prefixes the message.
+
+use std::fmt;
+
+/// Opaque error type carrying a rendered message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct an error from any displayable message (like `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Attach context to an error, prefixing its message.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_forms() {
+        let a: Error = anyhow!("plain");
+        let n = 3;
+        let b: Error = anyhow!("formatted {n} and {}", 4);
+        let c: Error = anyhow!(String::from("from expr"));
+        assert_eq!(a.to_string(), "plain");
+        assert_eq!(b.to_string(), "formatted 3 and 4");
+        assert_eq!(c.to_string(), "from expr");
+        assert_eq!(format!("{c:?}"), "from expr");
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("boom {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(e.to_string(), "ctx: inner");
+    }
+}

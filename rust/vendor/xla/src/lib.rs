@@ -1,0 +1,134 @@
+//! Offline stub of the XLA/PJRT Rust bindings.
+//!
+//! The build image carries no XLA shared libraries, so this vendored crate
+//! provides the exact type/API surface `pice::runtime` compiles against
+//! while every runtime entry point returns an "unavailable" error. All
+//! real-backend paths in the workspace are gated on `artifacts/manifest.json`
+//! existing, so the stub is never executed by the tier-1 tests or the
+//! surrogate benches; linking a real PJRT build back in only requires
+//! swapping this path dependency for the actual bindings.
+
+use std::fmt;
+
+/// Error type for every stub operation.
+pub struct XlaError(pub String);
+
+impl XlaError {
+    fn unavailable(what: &str) -> XlaError {
+        XlaError(format!("{what}: PJRT unavailable (offline xla stub build)"))
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// Parsed HLO module (stub: never constructible at runtime).
+pub struct HloModuleProto {
+    _p: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(XlaError::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper around an HLO module.
+pub struct XlaComputation {
+    _p: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _p: () }
+    }
+}
+
+/// Device-resident buffer handle.
+pub struct PjRtBuffer {
+    _p: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host-side literal (stub: zero elements).
+pub struct Literal {
+    _p: (),
+}
+
+impl Literal {
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(XlaError::unavailable("Literal::to_vec"))
+    }
+
+    pub fn copy_raw_to<T>(&self, _dst: &mut [T]) -> Result<()> {
+        Err(XlaError::unavailable("Literal::copy_raw_to"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _p: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed argument buffers; returns per-replica outputs.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _p: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(XlaError::unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e:?}").contains("unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
