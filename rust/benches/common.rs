@@ -36,6 +36,33 @@ pub fn dump(name: &str, value: Json) {
     }
 }
 
+/// Default the persistent-cache path for figure benches: if `PICE_MEMO_PATH`
+/// is unset, point it at the shared `bench_results/memo_cache.json` so the
+/// figure benches warm each other's caches across processes (the snapshot
+/// is stamp-guarded and semantically transparent, so this never changes
+/// results). Export `PICE_MEMO_PATH=` (empty) to disable persistence.
+pub fn default_memo_path() {
+    if std::env::var_os("PICE_MEMO_PATH").is_none() {
+        std::env::set_var("PICE_MEMO_PATH", "bench_results/memo_cache.json");
+    }
+}
+
+/// Print the memo-cache hit/miss line for a bench's env, if a cache layer
+/// is active and saw traffic. With `PICE_MEMO_PATH` set, the hits include
+/// entries restored from a previous process — the cross-run cache the
+/// figure benches share (PERF.md §Persistent cache).
+pub fn report_memo_stats(env: &Env) {
+    if let Some((hits, misses)) = env.memo_stats() {
+        let total = hits + misses;
+        if total > 0 {
+            println!(
+                "memo cache: {hits} hits / {misses} misses ({:.1}% hit rate)",
+                hits as f64 / total as f64 * 100.0
+            );
+        }
+    }
+}
+
 /// Quality scoring per category; returns (category -> mean overall).
 pub fn quality_by_category(
     env: &Env,

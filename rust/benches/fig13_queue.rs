@@ -8,6 +8,7 @@ use pice::scenario::{bench_n, Env};
 use pice::util::json::{num, obj, Json};
 
 fn main() -> Result<(), String> {
+    common::default_memo_path();
     let mut env = Env::load()?;
     let model = "llama70b-sim";
     let rpm = env.paper_rpm(model) * 1.3; // pressure so the queue matters
@@ -33,5 +34,6 @@ fn main() -> Result<(), String> {
         "\npaper shape: best throughput near cap = #edges (4); beyond ~8 the waiting\n\
          time inflates latency with no throughput gain."
     );
+    common::report_memo_stats(&env);
     Ok(())
 }

@@ -12,6 +12,7 @@ use pice::scenario::{bench_n, Env};
 use pice::util::json::{num, obj, s, Json};
 
 fn main() -> Result<(), String> {
+    common::default_memo_path();
     let mut env = Env::load()?;
     let judge = Judge::fit(&env.corpus);
     let model = "llama70b-sim";
@@ -84,5 +85,6 @@ fn main() -> Result<(), String> {
          most categories (paper: 69%) — here {improved}/{total_cats} categories improved."
     );
     common::dump("fig6_scheduler", Json::Arr(json_rows));
+    common::report_memo_stats(&env);
     Ok(())
 }

@@ -14,7 +14,7 @@ use std::time::Instant;
 
 use pice::baselines;
 use pice::coordinator::backend::{
-    GenRequest, MemoBackend, ParallelBackend, SurrogateBackend, TextBackend,
+    GenRequest, MemoBackend, ParallelBackend, PersistentMemoBackend, SurrogateBackend, TextBackend,
 };
 use pice::coordinator::dispatch::{Job, MultiListQueue};
 use pice::coordinator::scheduler::{CloudScheduler, SchedInput};
@@ -72,6 +72,7 @@ fn report(rows: &mut Vec<Json>, name: &str, secs: f64, unit: &str) {
 
 fn main() -> Result<(), String> {
     common::banner("§Perf", "hot-path microbenchmarks");
+    common::default_memo_path();
     let smoke = std::env::var("PICE_BENCH_SMOKE").as_deref() == Ok("1");
     let mut rows = Vec::new();
 
@@ -137,7 +138,10 @@ fn main() -> Result<(), String> {
     let tok = synth_tokenizer();
     let corpus = Arc::new(synth_corpus(&tok, 30, 42));
     let reg = Registry::builtin();
-    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    // same seed as Env::load's surrogate, so the persistent-cache section
+    // below shares entries (and a stamp) with Env-driven bench runs
+    let base =
+        SurrogateBackend::new(corpus.clone(), &tok, &reg, pice::scenario::SURROGATE_SEED);
     let reqs = expansion_requests(&tok, &corpus);
     let iters = if smoke { 5 } else { 40 };
     println!("-- batched expansion: {} requests per batch --", reqs.len());
@@ -186,6 +190,44 @@ fn main() -> Result<(), String> {
             ("hits", num(hits as f64)),
             ("misses", num(misses as f64)),
         ]));
+    }
+
+    // --- persistent cross-run memo cache ------------------------------------
+    // One pass of the expansion batch against the snapshot-backed cache:
+    // the first process reports 0% and writes the snapshot, every later
+    // process replays it at ~100% — the CI warm-cache step asserts this.
+    // default_memo_path() above guarantees PICE_MEMO_PATH is set unless the
+    // user exported it empty to disable persistence.
+    if let Some(cache_path) = std::env::var("PICE_MEMO_PATH").ok().filter(|p| !p.is_empty()) {
+        let stamp = pice::scenario::surrogate_cache_stamp(
+            &tok,
+            &corpus,
+            &reg,
+            pice::scenario::SURROGATE_SEED,
+        );
+        let mut pmemo = PersistentMemoBackend::load(base.clone(), 8192, &cache_path, &stamp);
+        let restored = pmemo.restored_entries();
+        let t_run = time_it(1, || {
+            std::hint::black_box(pmemo.generate_batch(&reqs));
+        });
+        report(&mut rows, "expansion batch, persistent cache", t_run, "per batch");
+        let (hits, misses) = pmemo.stats();
+        println!(
+            "{:<44} {:>10.1}%  ({hits} hits / {misses} misses, {restored} restored)",
+            "  persistent memo hit rate (vs prior run)",
+            pmemo.hit_rate() * 100.0
+        );
+        rows.push(obj(vec![
+            ("bench", s("persistent_memo_hit_rate")),
+            ("hit_rate", num(pmemo.hit_rate())),
+            ("hits", num(hits as f64)),
+            ("misses", num(misses as f64)),
+            ("restored_entries", num(restored as f64)),
+        ]));
+        pmemo.save().map_err(|e| format!("persist memo cache: {e}"))?;
+        println!("[persistent cache at {cache_path}]");
+    } else {
+        println!("(PICE_MEMO_PATH exported empty — skipping persistent-cache bench)");
     }
 
     // --- end-to-end event loop: sequential vs parallel substrate ------------

@@ -10,6 +10,7 @@ use pice::sketch::Prompts;
 use pice::util::json::{arr, num, obj, s, Json};
 
 fn main() -> Result<(), String> {
+    common::default_memo_path();
     let env = Env::load()?;
     common::banner("Table I", "model performance comparison (paper calibration + measured)");
     println!(
@@ -49,6 +50,7 @@ fn main() -> Result<(), String> {
     }
     common::dump("table1_models", Json::Arr(rows));
     println!("\npaper shape check: speed and memory are inversely ordered; MMLU rises with size.");
+    common::report_memo_stats(&env);
     let _ = arr(vec![]);
     Ok(())
 }

@@ -9,6 +9,7 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
+use crate::profiler::LatencyFit;
 use crate::simclock::SimTime;
 
 /// One queued expansion job. Token payloads are shared `Arc<[u32]>` slices:
@@ -77,6 +78,14 @@ impl MultiListQueue {
     /// Σ over queued jobs of expected length (for the Eq. 2 backlog term).
     pub fn backlog_tokens(&self) -> usize {
         self.lists.iter().flatten().map(|j| j.expected_len).sum()
+    }
+
+    /// Eq. 2 backlog cost: Σ over queued jobs of f(l_j), the affine latency
+    /// fit evaluated *per job* (times the caller's constant c). Evaluating
+    /// f(Σ l_j) instead would drop one intercept `a` per queued job and
+    /// undercount backlog at deep queues. Empty queue costs exactly 0.
+    pub fn backlog_cost(&self, fit: &LatencyFit) -> SimTime {
+        self.lists.iter().flatten().map(|j| fit.eval(j.expected_len)).sum()
     }
 
     /// Lines 9-10 of Algorithm 1: take up to `max_n` jobs from the longest
@@ -160,6 +169,25 @@ mod tests {
         q.push(job(1, 30));
         q.push(job(2, 90));
         assert_eq!(q.backlog_tokens(), 120);
+    }
+
+    #[test]
+    fn backlog_cost_is_per_job_sum() {
+        // regression: backlog must be Σ f(l_j), not f(Σ l_j) — the latter
+        // drops one intercept per queued job
+        let fit = LatencyFit { a: 0.5, b: 0.01 };
+        let mut q = MultiListQueue::standard(10);
+        assert_eq!(q.backlog_cost(&fit), 0.0);
+        q.push(job(1, 30));
+        q.push(job(2, 90));
+        q.push(job(3, 200));
+        let per_job = fit.eval(30) + fit.eval(90) + fit.eval(200);
+        assert!((q.backlog_cost(&fit) - per_job).abs() < 1e-12);
+        let summed_tokens = fit.eval(q.backlog_tokens());
+        assert!(
+            q.backlog_cost(&fit) > summed_tokens + 2.0 * fit.a - 1e-9,
+            "per-job sum must carry one intercept per job"
+        );
     }
 
     #[test]

@@ -149,7 +149,10 @@ struct Pending {
     sketch_level: usize,
     cloud_start: SimTime,
     cloud_done: SimTime,
-    edge_start: SimTime,
+    /// first time an edge began serving this request; None until then (a
+    /// plain 0.0 sentinel would let a later replica pull overwrite a
+    /// legitimate t=0 start)
+    edge_start: Option<SimTime>,
     cloud_tokens: usize,
     edge_tokens: usize,
     sketch: Arc<[u32]>,
@@ -290,7 +293,7 @@ impl<'a> Engine<'a> {
                 sketch_level: 0,
                 cloud_start: 0.0,
                 cloud_done: 0.0,
-                edge_start: 0.0,
+                edge_start: None,
                 cloud_tokens: 0,
                 edge_tokens: 0,
                 sketch: Vec::new().into(),
@@ -342,9 +345,14 @@ impl<'a> Engine<'a> {
                         }
                         Policy::Routing { difficulty_threshold } => {
                             // difficulty proxy: predicted length + jitter (an
-                            // imperfect router, as in the paper's critique)
+                            // imperfect router, as in the paper's critique).
+                            // The multiplier is clamped at 0 to keep the
+                            // proxy in its valid non-negative domain — an
+                            // extreme draw still misroutes to the edge
+                            // (that inaccuracy is the router's modeled flaw),
+                            // but it can no longer go *negative*.
                             let difficulty =
-                                predicted as f64 * (1.0 + rng.normal() * 0.25);
+                                predicted as f64 * (1.0 + rng.normal() * 0.25).max(0.0);
                             if difficulty > *difficulty_threshold {
                                 cloud_pending.push_back((rid, CloudJobKind::Full));
                                 q.schedule(now, Ev::CloudAdmit);
@@ -361,10 +369,10 @@ impl<'a> Engine<'a> {
                             let slms = self.slms();
                             let best_cap =
                                 slms.iter().map(|m| m.mmlu).fold(0.0, f64::max);
-                            let backlog_tokens = jobq.backlog_tokens();
-                            let backlog_s = self.cost_coeff
-                                * f_cloud.eval(backlog_tokens)
-                                * (backlog_tokens > 0) as usize as f64;
+                            // Eq. 2 backlog: Σ_j c·f(l_j) over queued jobs —
+                            // the affine fit is summed per job, so each queued
+                            // job carries its own intercept
+                            let backlog_s = self.cost_coeff * jobq.backlog_cost(&f_cloud);
                             let inp = SchedInput {
                                 predicted_len: predicted,
                                 f_cloud,
@@ -436,12 +444,16 @@ impl<'a> Engine<'a> {
                         })
                         .collect();
                     let outs = self.backend.generate_batch(&reqs);
+                    // every member of this admission batch runs concurrently
+                    // with the jobs already in flight AND with each other, so
+                    // all are priced at the final concurrent batch size — not
+                    // the ascending sizes an in-loop `inflight + 1` would see
+                    let b = cloud_inflight + admitted.len();
                     for (k, ((rid, kind), out)) in
                         admitted.into_iter().zip(outs).enumerate()
                     {
                         let out = out.map_err(RunError::Backend)?;
                         pend[rid].cloud_start = now;
-                        let b = cloud_inflight + 1;
                         let prompt_sim = (reqs[k].prompt.len() as f64 * scale) as usize;
                         let dur = match &kind {
                             CloudJobKind::Full => {
@@ -571,7 +583,7 @@ impl<'a> Engine<'a> {
                     // Edge-only / routed-easy full answers first.
                     if let Some(rid) = edge_fifo[eid].pop_front() {
                         edges[eid].busy = true;
-                        pend[rid].edge_start = now;
+                        pend[rid].edge_start.get_or_insert(now);
                         let model_name = edges[eid].current_model.clone();
                         let info = self.registry.get(&model_name).unwrap().clone();
                         let prompt = Prompts::full_answer(self.tok, &pend[rid].question_toks);
@@ -634,6 +646,10 @@ impl<'a> Engine<'a> {
                         if extra > 0 {
                             let mut rep = job.clone();
                             rep.replicas_left = extra;
+                            // the replica enters the queue NOW — keeping the
+                            // original enqueue time would misattribute the
+                            // primary's queue delay to the replica
+                            rep.enqueued_at = now;
                             if jobq.push(rep) {
                                 spare -= extra;
                                 for &e2 in &idle_others {
@@ -646,9 +662,7 @@ impl<'a> Engine<'a> {
                         pend[job.rid].replicas_out =
                             pend[job.rid].replicas_out.saturating_sub(discarded);
                         job.replicas_left = 1;
-                        if pend[job.rid].edge_start == 0.0 {
-                            pend[job.rid].edge_start = now;
-                        }
+                        pend[job.rid].edge_start.get_or_insert(now);
                     }
 
                     // Algorithm 2 on the first job's budget (batch-shared model)
@@ -841,7 +855,7 @@ impl<'a> Engine<'a> {
             arrival: p.arrival,
             cloud_start: p.cloud_start,
             cloud_done: p.cloud_done,
-            edge_start: p.edge_start,
+            edge_start: p.edge_start.unwrap_or(0.0),
             done: now,
             winner_model: cand.model,
             confidence,

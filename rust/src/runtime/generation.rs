@@ -114,7 +114,10 @@ impl<'m> Generator<'m> {
         Ok(out)
     }
 
-    /// Lockstep decoding of K independent sequences: every round steps each
+    /// Lockstep decoding of K independent sequences: prompts prefill as ONE
+    /// padded batched execution when the artifact exports a batched entry
+    /// point (falling back to per-prompt prefill otherwise — see
+    /// [`Generator::prefill_many`]), then every round steps each
     /// still-active sequence once, so K decode executions are issued per
     /// token round-trip instead of running whole sequences back-to-back.
     /// Output i corresponds to `reqs[i]` and is bit-identical to a
@@ -136,10 +139,9 @@ impl<'m> Generator<'m> {
         let m = self.model;
         let s_max = m.art.max_seq;
         let mut seqs: Vec<Seq> = Vec::with_capacity(reqs.len());
-        for (prompt, sp) in reqs {
-            let state = self.prefill(prompt, scratch)?;
-            let mut state_host = vec![0f32; m.art.state_size];
-            read_state(&state, &mut state_host)?;
+        for ((state, state_host), (prompt, sp)) in
+            self.prefill_many(reqs, scratch)?.into_iter().zip(reqs)
+        {
             seqs.push(Seq {
                 state,
                 state_host,
@@ -187,6 +189,90 @@ impl<'m> Generator<'m> {
             }
         }
         Ok(seqs.into_iter().map(|s| s.out).collect())
+    }
+
+    /// Prefill every prompt of `reqs`, returning each sequence's device-side
+    /// state buffer + host mirror. When the artifact ships a batched prefill
+    /// entry point ([`LoadedModel::prefill_batch`]) and there is more than
+    /// one prompt, all prompts go up as ONE padded `[K, max_seq]` execution;
+    /// any failure on that path (stub runtime, shape drift in the export,
+    /// mid-batch execution error) falls back to the per-prompt path, which
+    /// stays the correctness reference.
+    fn prefill_many(
+        &self,
+        reqs: &[(&[u32], SamplingParams)],
+        scratch: &mut GenScratch,
+    ) -> Result<Vec<(xla::PjRtBuffer, Vec<f32>)>> {
+        if reqs.len() > 1 {
+            if let Some(exec) = &self.model.prefill_batch {
+                if let Ok(states) = self.prefill_batched(exec, reqs, scratch) {
+                    return Ok(states);
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(reqs.len());
+        for (prompt, _) in reqs {
+            let state = self.prefill(prompt, scratch)?;
+            let mut state_host = vec![0f32; self.model.art.state_size];
+            read_state(&state, &mut state_host)?;
+            out.push((state, state_host));
+        }
+        Ok(out)
+    }
+
+    /// One padded batched prefill execution over K prompts: tokens
+    /// `[K, max_seq]` + lens `[K]` -> flat `[K * state_size]` states, then
+    /// each sequence's state slice is re-uploaded as its own device buffer
+    /// so the (batch-1) decode loop sees exactly the buffer a solo prefill
+    /// would have produced.
+    fn prefill_batched(
+        &self,
+        exec: &xla::PjRtLoadedExecutable,
+        reqs: &[(&[u32], SamplingParams)],
+        scratch: &mut GenScratch,
+    ) -> Result<Vec<(xla::PjRtBuffer, Vec<f32>)>> {
+        let m = self.model;
+        let s_max = m.art.max_seq;
+        let k = reqs.len();
+        scratch.padded.clear();
+        scratch.padded.resize(k * s_max, 0);
+        let mut lens = Vec::with_capacity(k);
+        for (i, (prompt, _)) in reqs.iter().enumerate() {
+            if prompt.is_empty() {
+                bail!("empty prompt");
+            }
+            if prompt.len() >= s_max {
+                bail!("prompt len {} >= max_seq {s_max}", prompt.len());
+            }
+            for (j, &t) in prompt.iter().enumerate() {
+                scratch.padded[i * s_max + j] = t as i32;
+            }
+            lens.push(prompt.len() as i32);
+        }
+        let tok_buf = m.i32_buffer(&scratch.padded, &[k, s_max])?;
+        let len_buf = m.i32_buffer(&lens, &[k])?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &len_buf];
+        args.extend(m.params.iter());
+        let mut outs = exec.execute_b(&args).map_err(|e| anyhow!("prefill_batch: {e:?}"))?;
+        let buf = single_output(outs.remove(0))?;
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("read batched states: {e:?}"))?;
+        let state_size = m.art.state_size;
+        if lit.element_count() != k * state_size {
+            bail!("batched state size {} != {k}x{state_size}", lit.element_count());
+        }
+        let mut flat = vec![0f32; k * state_size];
+        lit.copy_raw_to(&mut flat).map_err(|e| anyhow!("copy batched states: {e:?}"))?;
+        let mut out = Vec::with_capacity(k);
+        for (i, chunk) in flat.chunks_exact(state_size).enumerate() {
+            let host = chunk.to_vec();
+            let state = m
+                .rt
+                .client
+                .buffer_from_host_buffer(&host, &[state_size], None)
+                .map_err(|e| anyhow!("upload state {i}: {e:?}"))?;
+            out.push((state, host));
+        }
+        Ok(out)
     }
 
     /// Upload the padded prompt and run the prefill executable; returns the

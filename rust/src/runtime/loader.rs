@@ -106,6 +106,11 @@ impl RuntimeHandle {
 pub struct LoadedModel {
     pub art: ModelArtifact,
     pub prefill: xla::PjRtLoadedExecutable,
+    /// optional batched prefill entry point (`prefill_batch.hlo.txt`):
+    /// tokens [K, max_seq] + lens [K] -> flat [K * state_size] states.
+    /// Absent from older artifact exports; `Generator::generate_many`
+    /// falls back to per-prompt prefill when it's missing (or fails).
+    pub prefill_batch: Option<xla::PjRtLoadedExecutable>,
     pub decode: xla::PjRtLoadedExecutable,
     pub score: xla::PjRtLoadedExecutable,
     pub params: Vec<xla::PjRtBuffer>,
@@ -114,7 +119,8 @@ pub struct LoadedModel {
 
 impl LoadedModel {
     /// Load `<dir>/{meta.json,weights.bin,prefill.hlo.txt,decode.hlo.txt,
-    /// score.hlo.txt}` and upload weights to the device.
+    /// score.hlo.txt}` (+ optional `prefill_batch.hlo.txt`) and upload
+    /// weights to the device.
     pub fn load(rt: Arc<RuntimeHandle>, dir: &Path) -> Result<Self> {
         let art = ModelArtifact::from_meta(&dir.join("meta.json"))?;
         let blob = std::fs::read(dir.join("weights.bin"))
@@ -141,9 +147,14 @@ impl LoadedModel {
             params.push(buf);
         }
         let prefill = rt.compile(&dir.join("prefill.hlo.txt"))?;
+        let pb_path = dir.join("prefill_batch.hlo.txt");
+        // a broken batched export should not take the model down — the
+        // runtime still has the per-prompt path
+        let prefill_batch =
+            if pb_path.exists() { rt.compile(&pb_path).ok() } else { None };
         let decode = rt.compile(&dir.join("decode.hlo.txt"))?;
         let score = rt.compile(&dir.join("score.hlo.txt"))?;
-        Ok(LoadedModel { art, prefill, decode, score, params, rt })
+        Ok(LoadedModel { art, prefill, prefill_batch, decode, score, params, rt })
     }
 
     /// Upload an i32 tensor.

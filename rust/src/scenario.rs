@@ -6,7 +6,8 @@ use std::sync::Arc;
 
 use crate::baselines;
 use crate::coordinator::backend::{
-    MemoBackend, ParallelBackend, RealBackend, SurrogateBackend, TextBackend,
+    MemoBackend, ParallelBackend, PersistentMemoBackend, RealBackend, SurrogateBackend,
+    TextBackend,
 };
 use crate::coordinator::{Engine, EngineCfg, RunError};
 use crate::corpus::workload::{Arrival, Workload, WorkloadSpec};
@@ -31,12 +32,16 @@ impl Env {
     /// corpus + surrogate backend when artifacts are missing or
     /// `PICE_BACKEND=surrogate`.
     ///
-    /// Execution-layer knobs (both preserve bit-identical outputs):
-    /// * `PICE_WORKERS=N` (default 1) — shard backend batches over N OS
-    ///   threads via [`ParallelBackend`], each worker owning its own backend
-    ///   replica (surrogate clone / separately-loaded PJRT models).
+    /// Execution-layer knobs (all preserve bit-identical outputs):
+    /// * `PICE_WORKERS=N` — shard backend batches over N OS threads via
+    ///   [`ParallelBackend`], each worker owning its own backend replica
+    ///   (surrogate clone / separately-loaded PJRT models). Unset (or
+    ///   unparsable) auto-sizes from the host — see [`auto_workers`].
     /// * `PICE_MEMO_CAP=N` (default 4096; 0 disables) — bound of the
     ///   generation memo-cache wrapped around the stack.
+    /// * `PICE_MEMO_PATH=path` — persist the memo-cache to a stamp-guarded
+    ///   snapshot at `path` via [`PersistentMemoBackend`], so separate
+    ///   bench processes share one cache (see PERF.md §Persistent cache).
     pub fn load() -> Result<Env, String> {
         let art = crate::artifacts_dir();
         let force_surrogate = std::env::var("PICE_BACKEND").as_deref() == Ok("surrogate");
@@ -44,12 +49,18 @@ impl Env {
         let env_usize = |key: &str, default: usize| {
             std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
         };
-        let workers = env_usize("PICE_WORKERS", 1);
+        let workers = std::env::var("PICE_WORKERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(auto_workers);
         let memo_cap = env_usize("PICE_MEMO_CAP", 4096);
+        let memo_path = std::env::var("PICE_MEMO_PATH").ok().filter(|p| !p.is_empty());
         if have_artifacts && !force_surrogate {
             let tok = Tokenizer::from_file(&art.join("vocab.json"))?;
             let corpus = Arc::new(Corpus::from_file(&art.join("corpus.json"), &tok)?);
             let registry = Registry::from_artifacts(&art)?;
+            let stamp = real_cache_stamp(&art);
+            let persist = memo_path.map(|p| (p, stamp));
             let backend = if workers > 1 {
                 let art2 = art.clone();
                 let eos = tok.specials.eos;
@@ -60,9 +71,10 @@ impl Env {
                         RealBackend::new(&art2, eos).expect("worker backend")
                     }),
                     memo_cap,
+                    persist,
                 )
             } else {
-                wrap_memo(RealBackend::new(&art, tok.specials.eos)?, memo_cap)
+                wrap_memo(RealBackend::new(&art, tok.specials.eos)?, memo_cap, persist)
             };
             let judge = Judge::fit(&corpus);
             Ok(Env { tok, corpus, registry, backend, judge, real: true })
@@ -70,15 +82,22 @@ impl Env {
             let tok = crate::corpus::synth::synth_tokenizer();
             let corpus = Arc::new(crate::corpus::synth::synth_corpus(&tok, 30, 42));
             let registry = Registry::builtin();
-            let base = SurrogateBackend::new(corpus.clone(), &tok, &registry, 9);
+            let base = SurrogateBackend::new(corpus.clone(), &tok, &registry, SURROGATE_SEED);
+            let stamp = surrogate_cache_stamp(&tok, &corpus, &registry, SURROGATE_SEED);
+            let persist = memo_path.map(|p| (p, stamp));
             let backend = if workers > 1 {
-                wrap_memo(ParallelBackend::new(workers, move |_| base.clone()), memo_cap)
+                wrap_memo(ParallelBackend::new(workers, move |_| base.clone()), memo_cap, persist)
             } else {
-                wrap_memo(base, memo_cap)
+                wrap_memo(base, memo_cap, persist)
             };
             let judge = Judge::fit(&corpus);
             Ok(Env { tok, corpus, registry, backend, judge, real: false })
         }
+    }
+
+    /// (hits, misses) of the memo-cache layer, if one wraps the backend.
+    pub fn memo_stats(&self) -> Option<(u64, u64)> {
+        self.backend.memo_stats()
     }
 
     /// Paper §V-B workload: RPM = 1.5 x the cloud model's max batch.
@@ -130,12 +149,140 @@ impl Env {
     }
 }
 
-/// Wrap a backend in the bounded memo-cache unless `memo_cap` is 0.
-fn wrap_memo<B: TextBackend + 'static>(backend: B, memo_cap: usize) -> Box<dyn TextBackend> {
-    if memo_cap > 0 {
-        Box::new(MemoBackend::new(backend, memo_cap))
-    } else {
-        Box::new(backend)
+/// Seed of the surrogate backend built by [`Env::load`]. Exported so
+/// benches/tests constructing their own [`SurrogateBackend`] can share the
+/// persistent cache with `Env`-driven runs — the seed shapes every
+/// surrogate output, so it is part of the cache stamp.
+pub const SURROGATE_SEED: u64 = 9;
+
+/// Bump to invalidate every persistent generation cache (e.g. when backend
+/// output semantics change without the artifacts changing).
+pub const CACHE_STAMP_SALT: &str = "pice-gen-v1";
+
+/// Auto-sized [`ParallelBackend`] pool: one worker per available hardware
+/// thread, capped at 8 — each worker owns a full backend replica (its own
+/// `LoadedModel` device buffers on the real path), so the cap bounds
+/// resident memory. Determinism is unaffected by the count: the
+/// index-ordered merge keeps output bit-identical at any size (PERF.md
+/// §Worker-pool determinism rules).
+pub fn auto_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 8)
+}
+
+/// FNV-1a over length-delimited byte chunks -> printable stamp.
+fn fnv_stamp(parts: &[&[u8]]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for p in parts {
+        eat(&(p.len() as u64).to_le_bytes());
+        eat(p);
+    }
+    format!("{CACHE_STAMP_SALT}-{h:016x}")
+}
+
+/// Invalidation stamp for the real-backend cache: fingerprints the artifact
+/// manifest, vocab, and every model's meta/weights/HLO files, so
+/// regenerated artifacts orphan old cache sections. The manifest alone is
+/// NOT enough — `aot.py` writes only shapes and model names there, so a
+/// retrain leaves it byte-identical while changing every generation.
+pub fn real_cache_stamp(art: &std::path::Path) -> String {
+    // length + head/tail sample per file rather than a full hash: cheap at
+    // bench startup, and any regeneration perturbs the sampled regions
+    fn eat_sampled(content: &mut Vec<u8>, path: &std::path::Path) {
+        use std::io::{Read, Seek, SeekFrom};
+        let Ok(mut f) = std::fs::File::open(path) else { return };
+        let len = f.metadata().map(|m| m.len()).unwrap_or(0);
+        content.extend_from_slice(&len.to_le_bytes());
+        let k = (len as usize).min(4096);
+        let mut head = vec![0u8; k];
+        if f.read_exact(&mut head).is_ok() {
+            content.extend_from_slice(&head);
+        }
+        if len > 4096 {
+            let mut tail = vec![0u8; 4096];
+            if f.seek(SeekFrom::End(-4096)).is_ok() && f.read_exact(&mut tail).is_ok() {
+                content.extend_from_slice(&tail);
+            }
+        }
+    }
+    let mut content: Vec<u8> = Vec::new();
+    eat_sampled(&mut content, &art.join("manifest.json"));
+    eat_sampled(&mut content, &art.join("vocab.json"));
+    let mut model_dirs: Vec<std::path::PathBuf> = std::fs::read_dir(art.join("models"))
+        .map(|rd| rd.filter_map(|e| e.ok().map(|e| e.path())).collect())
+        .unwrap_or_default();
+    model_dirs.sort();
+    for dir in model_dirs {
+        let name = dir.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        content.extend_from_slice(name.as_bytes());
+        for f in [
+            "meta.json",
+            "weights.bin",
+            "prefill.hlo.txt",
+            "prefill_batch.hlo.txt",
+            "decode.hlo.txt",
+            "score.hlo.txt",
+        ] {
+            eat_sampled(&mut content, &dir.join(f));
+        }
+    }
+    fnv_stamp(&[b"real", &content])
+}
+
+/// Invalidation stamp for the surrogate cache: fingerprints everything the
+/// surrogate's outputs are a function of — the tokenizer size, the backend
+/// `seed`, the registry's model names + MMLU values (they set each model's
+/// corruption rate), and the full question/answer token content. Pass the
+/// same registry and seed the [`SurrogateBackend`] was constructed with —
+/// a mismatch would serve another backend's outputs as cache hits.
+pub fn surrogate_cache_stamp(
+    tok: &Tokenizer,
+    corpus: &Corpus,
+    registry: &Registry,
+    seed: u64,
+) -> String {
+    let mut content: Vec<u8> = Vec::new();
+    content.extend_from_slice(&(tok.vocab_size() as u64).to_le_bytes());
+    content.extend_from_slice(&seed.to_le_bytes());
+    for m in &registry.models {
+        content.extend_from_slice(m.name.as_bytes());
+        content.extend_from_slice(&m.mmlu.to_bits().to_le_bytes());
+    }
+    for q in &corpus.questions {
+        content.extend_from_slice(&(q.id as u64).to_le_bytes());
+        for &t in &q.question {
+            content.extend_from_slice(&t.to_le_bytes());
+        }
+        for sent in &q.sentences {
+            for &t in &sent.full {
+                content.extend_from_slice(&t.to_le_bytes());
+            }
+            for &t in &sent.sketch {
+                content.extend_from_slice(&t.to_le_bytes());
+            }
+        }
+    }
+    fnv_stamp(&[b"surrogate", &content])
+}
+
+/// Wrap a backend in the bounded memo-cache unless `memo_cap` is 0; with a
+/// `(path, stamp)` the cache is the persistent cross-run variant.
+fn wrap_memo<B: TextBackend + 'static>(
+    backend: B,
+    memo_cap: usize,
+    persist: Option<(String, String)>,
+) -> Box<dyn TextBackend> {
+    match (memo_cap > 0, persist) {
+        (true, Some((path, stamp))) => {
+            Box::new(PersistentMemoBackend::load(backend, memo_cap, path, &stamp))
+        }
+        (true, None) => Box::new(MemoBackend::new(backend, memo_cap)),
+        (false, _) => Box::new(backend),
     }
 }
 

@@ -9,7 +9,7 @@ use pice::baselines;
 use pice::coordinator::backend::SurrogateBackend;
 use pice::coordinator::{Engine, EngineCfg, RunError};
 use pice::corpus::synth::{synth_corpus, synth_tokenizer};
-use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use pice::corpus::workload::{Arrival, Request, Workload, WorkloadSpec};
 use pice::corpus::Corpus;
 use pice::metrics::{aggregate, Mode, RunMetrics};
 use pice::models::Registry;
@@ -52,6 +52,51 @@ fn all_requests_complete_under_every_policy() {
             assert!(t.done >= t.arrival, "{name}: negative latency");
             assert!(!t.answer.is_empty(), "{name}: empty answer rid={}", t.rid);
         }
+    }
+}
+
+#[test]
+fn cloud_admission_batch_members_share_final_batch_size() {
+    // regression: jobs admitted in one Ev::CloudAdmit batch used to be
+    // charged ascending batch sizes (inflight+1 inside the admission loop),
+    // pricing the first member of a burst as if it ran alone; every member
+    // must be charged the final concurrent batch size
+    let (corpus, tok, reg) = setup();
+    let qid = corpus.eval_questions()[0].id;
+    let n = 6;
+    let wl = Workload {
+        spec: WorkloadSpec {
+            rpm: 60.0,
+            n_requests: n,
+            arrival: Arrival::Burst,
+            categories: vec![],
+            seed: 1,
+        },
+        requests: (0..n).map(|rid| Request { rid, question_id: qid, arrival_s: 0.0 }).collect(),
+    };
+    let mut backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let mut engine = Engine::new(
+        baselines::cloud_only("llama70b-sim"),
+        corpus.clone(),
+        &tok,
+        &reg,
+        &mut backend,
+    )
+    .unwrap();
+    let traces = engine.run(&wl).unwrap();
+    assert_eq!(traces.len(), n);
+    // same question + deterministic decode => same token count for every
+    // member, so equal cloud durations iff they share one batch size
+    let dur0 = traces[0].cloud_done - traces[0].cloud_start;
+    assert!(dur0 > 0.0);
+    for t in &traces {
+        assert_eq!(t.cloud_tokens, traces[0].cloud_tokens, "rid {}", t.rid);
+        let dur = t.cloud_done - t.cloud_start;
+        assert!(
+            (dur - dur0).abs() < 1e-9,
+            "rid {} priced at a different batch size: {dur} vs {dur0}",
+            t.rid
+        );
     }
 }
 

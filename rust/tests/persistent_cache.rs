@@ -1,0 +1,114 @@
+//! Cross-process persistence of the generation cache: replaying a scenario
+//! through a *fresh* [`PersistentMemoBackend`] over the same snapshot file
+//! must produce bit-identical request traces to the cold-cache run, with a
+//! nonzero cross-process hit rate — at every worker-pool size, since the
+//! cache and the pool are both pure execution-substrate layers.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pice::baselines;
+use pice::coordinator::backend::{
+    ParallelBackend, PersistentMemoBackend, SurrogateBackend, TextBackend,
+};
+use pice::coordinator::Engine;
+use pice::corpus::synth::{synth_corpus, synth_tokenizer};
+use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use pice::corpus::Corpus;
+use pice::metrics::RequestTrace;
+use pice::models::Registry;
+use pice::scenario;
+use pice::tokenizer::Tokenizer;
+
+fn setup() -> (Arc<Corpus>, Tokenizer, Registry, Workload) {
+    let tok = synth_tokenizer();
+    let corpus = Arc::new(synth_corpus(&tok, 20, 42));
+    let reg = Registry::builtin();
+    let wl = Workload::generate(
+        &corpus,
+        WorkloadSpec {
+            rpm: 40.0,
+            n_requests: 40,
+            arrival: Arrival::Poisson,
+            categories: vec![],
+            seed: 5,
+        },
+    );
+    (corpus, tok, reg, wl)
+}
+
+fn run_with(
+    backend: &mut dyn TextBackend,
+    corpus: &Arc<Corpus>,
+    tok: &Tokenizer,
+    reg: &Registry,
+    wl: &Workload,
+) -> Vec<RequestTrace> {
+    let cfg = baselines::pice("llama70b-sim");
+    let mut engine = Engine::new(cfg, corpus.clone(), tok, reg, backend).unwrap();
+    engine.run(wl).unwrap()
+}
+
+fn assert_traces_identical(label: &str, a: &[RequestTrace], b: &[RequestTrace]) {
+    assert_eq!(a.len(), b.len(), "{label}: trace count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.rid, y.rid, "{label}: rid");
+        assert_eq!(x.mode, y.mode, "{label}: mode rid={}", x.rid);
+        assert_eq!(x.answer, y.answer, "{label}: answer rid={}", x.rid);
+        assert_eq!(x.winner_model, y.winner_model, "{label}: winner rid={}", x.rid);
+        assert_eq!(x.cloud_tokens, y.cloud_tokens, "{label}: cloud tokens rid={}", x.rid);
+        assert_eq!(x.edge_tokens, y.edge_tokens, "{label}: edge tokens rid={}", x.rid);
+        assert_eq!(x.sketch_level, y.sketch_level, "{label}: level rid={}", x.rid);
+        assert!((x.done - y.done).abs() < 1e-12, "{label}: done time rid={}", x.rid);
+        assert!((x.confidence - y.confidence).abs() < 1e-12, "{label}: confidence rid={}", x.rid);
+    }
+}
+
+fn tmp_cache(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pice_persist_{}_{name}.json", std::process::id()))
+}
+
+#[test]
+fn persisted_cache_replay_bit_identical_across_worker_counts() {
+    let (corpus, tok, reg, wl) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, scenario::SURROGATE_SEED);
+    let mut plain = base.clone();
+    let reference = run_with(&mut plain, &corpus, &tok, &reg, &wl);
+    assert!(!reference.is_empty());
+    let stamp = scenario::surrogate_cache_stamp(&tok, &corpus, &reg, scenario::SURROGATE_SEED);
+    let path = tmp_cache("engine_roundtrip");
+    let _ = std::fs::remove_file(&path);
+
+    // "process" 1: cold cache — populates and saves the snapshot
+    {
+        let mut cold = PersistentMemoBackend::load(base.clone(), 4096, &path, &stamp);
+        assert_eq!(cold.restored_entries(), 0);
+        let t = run_with(&mut cold, &corpus, &tok, &reg, &wl);
+        assert_traces_identical("cold", &reference, &t);
+        cold.save().unwrap();
+    }
+    // later "processes": fresh backend instances restore the snapshot and
+    // must replay it — identically — over any worker-pool size
+    for workers in [1usize, 2, 4] {
+        let mut warm = PersistentMemoBackend::load(
+            ParallelBackend::new(workers, |_| base.clone()),
+            4096,
+            &path,
+            &stamp,
+        );
+        assert!(warm.restored_entries() > 0, "x{workers}: nothing restored");
+        let t = run_with(&mut warm, &corpus, &tok, &reg, &wl);
+        assert_traces_identical(&format!("warm x{workers}"), &reference, &t);
+        let (hits, misses) = warm.stats();
+        assert!(hits > 0, "x{workers}: no cross-process hits");
+        assert_eq!(misses, 0, "x{workers}: deterministic replay must miss nothing");
+        assert!(warm.hit_rate() > 0.5, "x{workers}: hit rate {}", warm.hit_rate());
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn auto_workers_in_bounds() {
+    let w = scenario::auto_workers();
+    assert!((1..=8).contains(&w), "auto_workers() = {w}");
+}
