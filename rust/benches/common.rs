@@ -63,6 +63,29 @@ pub fn report_memo_stats(env: &Env) {
     }
 }
 
+/// Print the shared-cache line for a sweep-driven bench: hit rate plus the
+/// cross-variant fraction (lookups served by an entry another scenario —
+/// or a restored snapshot — inserted). Superset of [`report_memo_stats`];
+/// use it for benches that ran through `Env::run_sweep`.
+pub fn report_sweep_stats(env: &Env) {
+    if let Some(s) = env.cache_stats() {
+        if s.lookups() > 0 {
+            println!(
+                "shared cache: {} hits / {} misses ({:.1}% hit rate, {:.1}% cross-variant)",
+                s.hits,
+                s.misses,
+                s.hit_rate() * 100.0,
+                s.cross_hit_rate() * 100.0
+            );
+        }
+    }
+    if let Some(restored) = env.restored_entries() {
+        if restored > 0 {
+            println!("  ({restored} entries restored from the persistent snapshot)");
+        }
+    }
+}
+
 /// Quality scoring per category; returns (category -> mean overall).
 pub fn quality_by_category(
     env: &Env,

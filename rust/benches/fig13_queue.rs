@@ -1,27 +1,44 @@
 //! Fig. 13 — sensitivity to the job-queue length: throughput and latency
-//! vs the expansion queue capacity.
+//! vs the expansion queue capacity. The six capacity variants run as one
+//! concurrent sweep over a shared workload + generation cache.
 
 mod common;
 
+use std::sync::Arc;
+
 use pice::baselines;
 use pice::scenario::{bench_n, Env};
+use pice::sweep::SweepScenario;
 use pice::util::json::{num, obj, Json};
 
 fn main() -> Result<(), String> {
     common::default_memo_path();
-    let mut env = Env::load()?;
+    let env = Env::load()?;
     let model = "llama70b-sim";
     let rpm = env.paper_rpm(model) * 1.3; // pressure so the queue matters
     let n = bench_n();
-    let wl = env.workload(rpm, n, 19);
+    let wl = Arc::new(env.workload(rpm, n, 19));
     common::banner("Fig 13", "impact of the job queue length");
     println!("{:>9} {:>12} {:>9} {:>9}", "queue cap", "thpt(q/m)", "lat(s)", "p95(s)");
+
+    let caps = [1usize, 2, 4, 8, 12, 16];
+    let scenarios: Vec<SweepScenario> = caps
+        .iter()
+        .map(|&cap| {
+            let mut cfg = baselines::pice(model);
+            cfg.queue_cap = cap;
+            SweepScenario::new(format!("cap{cap}"), cfg, wl.clone())
+        })
+        .collect();
+    let outcomes = env.run_sweep(&scenarios);
+
     let mut rows = Vec::new();
-    for cap in [1usize, 2, 4, 8, 12, 16] {
-        let mut cfg = baselines::pice(model);
-        cfg.queue_cap = cap;
-        let (m, _) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
-        println!("{cap:>9} {:>12.2} {:>9.2} {:>9.2}", m.throughput_qpm, m.avg_latency_s, m.p95_latency_s);
+    for (&cap, outcome) in caps.iter().zip(outcomes) {
+        let (m, _) = outcome.map_err(|e| e.to_string())?;
+        println!(
+            "{cap:>9} {:>12.2} {:>9.2} {:>9.2}",
+            m.throughput_qpm, m.avg_latency_s, m.p95_latency_s
+        );
         rows.push(obj(vec![
             ("queue_cap", num(cap as f64)),
             ("throughput_qpm", num(m.throughput_qpm)),
@@ -34,6 +51,6 @@ fn main() -> Result<(), String> {
         "\npaper shape: best throughput near cap = #edges (4); beyond ~8 the waiting\n\
          time inflates latency with no throughput gain."
     );
-    common::report_memo_stats(&env);
+    common::report_sweep_stats(&env);
     Ok(())
 }

@@ -1,27 +1,34 @@
 //! Fig. 6 — dynamic vs static scheduling: (a) throughput + latency,
 //! (b) overall response quality, (c) per-category net win rate of the
 //! dynamic scheduler over the static one.
+//!
+//! The four variants run concurrently through the scenario-sweep runner
+//! over one shared generation cache — same numbers as the old sequential
+//! loop (the sweep is bit-identical by construction), but the grid runs in
+//! parallel and the variants serve each other's repeated generations.
 
 mod common;
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use pice::baselines;
 use pice::quality::judge::Judge;
 use pice::scenario::{bench_n, Env};
+use pice::sweep::SweepScenario;
 use pice::util::json::{num, obj, s, Json};
 
 fn main() -> Result<(), String> {
     common::default_memo_path();
-    let mut env = Env::load()?;
+    let env = Env::load()?;
     let judge = Judge::fit(&env.corpus);
     let model = "llama70b-sim";
     let rpm = env.paper_rpm(model);
     let n = bench_n();
-    let wl = env.workload(rpm, n, 13);
+    let wl = Arc::new(env.workload(rpm, n, 13));
     common::banner("Fig 6", "efficiency + quality impact of the dynamic scheduler");
 
-    let mut variants: Vec<(&str, pice::coordinator::EngineCfg)> = vec![
+    let variants: Vec<(&str, pice::coordinator::EngineCfg)> = vec![
         ("Cloud-only", baselines::cloud_only(model)),
         ("Routing", baselines::routing(model)),
         ("PICE-static", {
@@ -31,12 +38,18 @@ fn main() -> Result<(), String> {
         }),
         ("PICE-dynamic", baselines::pice(model)),
     ];
+    let scenarios: Vec<SweepScenario> = variants
+        .iter()
+        .map(|(name, cfg)| SweepScenario::new(*name, cfg.clone(), wl.clone()))
+        .collect();
+    let outcomes = env.run_sweep(&scenarios);
 
     let mut results = Vec::new();
     println!("(a,b) {:<13} {:>10} {:>8} {:>9}", "system", "thpt(q/m)", "lat(s)", "quality");
     let mut json_rows = Vec::new();
-    for (name, cfg) in variants.drain(..) {
-        let (m, traces) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
+    for (sc, outcome) in scenarios.iter().zip(outcomes) {
+        let (m, traces) = outcome.map_err(|e| e.to_string())?;
+        let name = sc.label.as_str();
         let q = common::mean_quality(&env, &judge, &traces);
         println!("      {name:<13} {:>10.2} {:>8.2} {:>9.2}", m.throughput_qpm, m.avg_latency_s, q);
         json_rows.push(obj(vec![
@@ -45,12 +58,12 @@ fn main() -> Result<(), String> {
             ("latency_s", num(m.avg_latency_s)),
             ("quality", num(q)),
         ]));
-        results.push((name, traces));
+        results.push(traces);
     }
 
     // (c) net win rate per category: dynamic vs static judge scores per rid
-    let stat = &results[2].1;
-    let dynm = &results[3].1;
+    let stat = &results[2];
+    let dynm = &results[3];
     let by_rid: BTreeMap<usize, &pice::metrics::RequestTrace> =
         stat.iter().map(|t| (t.rid, t)).collect();
     let mut win: BTreeMap<String, (usize, usize, usize)> = BTreeMap::new();
@@ -85,6 +98,6 @@ fn main() -> Result<(), String> {
          most categories (paper: 69%) — here {improved}/{total_cats} categories improved."
     );
     common::dump("fig6_scheduler", Json::Arr(json_rows));
-    common::report_memo_stats(&env);
+    common::report_sweep_stats(&env);
     Ok(())
 }

@@ -37,7 +37,7 @@ fn main() -> Result<(), String> {
                         ..Default::default()
                     },
                 )?;
-                let cand = Candidate { model: m.to_string(), tokens: out.tokens, logps: out.logps };
+                let cand = Candidate { model: (*m).into(), tokens: out.tokens, logps: out.logps };
                 let con = confidence(&cand, &sent.sketch, sent.full.len(), w);
                 let e = acc.entry((m.to_string(), q.category.clone())).or_insert((0.0, 0));
                 e.0 += con;

@@ -28,6 +28,7 @@ use pice::quality::rouge::{rouge1_f1, rouge_l_f1};
 use pice::runtime::{Generator, LoadedModel, RuntimeHandle, SamplingParams};
 use pice::scenario::Env;
 use pice::sketch::Prompts;
+use pice::sweep::{SharedMemoCache, SweepRunner, SweepScenario};
 use pice::util::json::{num, obj, s, Json};
 use pice::util::rng::Rng;
 
@@ -189,6 +190,116 @@ fn main() -> Result<(), String> {
             ("hit_rate", num(memo.hit_rate())),
             ("hits", num(hits as f64)),
             ("misses", num(misses as f64)),
+        ]));
+    }
+
+    // --- scenario-sweep runner (tentpole) -----------------------------------
+    {
+        let n = if smoke { 16 } else { 40 };
+        let wl = Arc::new(Workload::generate(
+            &corpus,
+            WorkloadSpec {
+                rpm: 40.0,
+                n_requests: n,
+                arrival: Arrival::Poisson,
+                categories: vec![],
+                seed: 7,
+            },
+        ));
+        // distinct engine seeds -> disjoint generation keys, so the speedup
+        // rows isolate the thread-pool win from cache effects
+        let grid: Vec<SweepScenario> = (0..8)
+            .map(|i| {
+                let mut cfg = baselines::pice("llama70b-sim");
+                cfg.seed = 1_000 + 7 * i as u64;
+                SweepScenario::new(format!("s{i}"), cfg, wl.clone())
+            })
+            .collect();
+        println!("-- scenario sweep: {} scenarios x {n} requests --", grid.len());
+        let run_grid = |threads: usize| {
+            SweepRunner::new(threads).run(&grid, &corpus, &tok, &reg, |_| {
+                Box::new(base.clone()) as Box<dyn TextBackend>
+            })
+        };
+        let iters = if smoke { 1 } else { 3 };
+        let reference = run_grid(1); // warm + determinism reference
+        let t_seq = time_it(iters, || {
+            std::hint::black_box(run_grid(1));
+        });
+        report(&mut rows, "scenario sweep, sequential (1 thread)", t_seq, "per sweep");
+        let same_traces = |a: &[pice::sweep::ScenarioResult], b: &[pice::sweep::ScenarioResult]| {
+            a.len() == b.len()
+                && a.iter().zip(b).all(|(x, y)| match (x, y) {
+                    (Ok((_, ta)), Ok((_, tb))) => {
+                        ta.len() == tb.len()
+                            && ta
+                                .iter()
+                                .zip(tb)
+                                .all(|(u, v)| u.answer == v.answer && u.done == v.done)
+                    }
+                    _ => false,
+                })
+        };
+        for threads in [2usize, 4] {
+            let t = time_it(iters, || {
+                std::hint::black_box(run_grid(threads));
+            });
+            report(&mut rows, &format!("scenario sweep, {threads} threads"), t, "per sweep");
+            let identical = same_traces(&reference, &run_grid(threads));
+            let sp = t_seq / t.max(1e-12);
+            println!(
+                "{:<44} {sp:>11.2}x  (identical: {})",
+                format!("  sweep speedup vs sequential (x{threads})"),
+                if identical { "yes" } else { "NO (BUG)" }
+            );
+            rows.push(obj(vec![
+                ("bench", s(&format!("sweep_speedup_x{threads}"))),
+                ("speedup", num(sp)),
+                ("traces_identical", num(identical as usize as f64)),
+            ]));
+        }
+
+        // cross-variant shared cache: the Fig. 6 variant grid over ONE
+        // SharedMemoCache — the four systems replay the same questions with
+        // the same derived seeds, so they serve each other's generations
+        let variants: Vec<SweepScenario> = vec![
+            SweepScenario::new("Cloud-only", baselines::cloud_only("llama70b-sim"), wl.clone()),
+            SweepScenario::new("Routing", baselines::routing("llama70b-sim"), wl.clone()),
+            SweepScenario::new(
+                "PICE-static",
+                {
+                    let mut c = baselines::pice("llama70b-sim");
+                    c.scheduler.static_mode = true;
+                    c
+                },
+                wl.clone(),
+            ),
+            SweepScenario::new("PICE-dynamic", baselines::pice("llama70b-sim"), wl.clone()),
+        ];
+        let plain = SweepRunner::new(1).run(&variants, &corpus, &tok, &reg, |_| {
+            Box::new(base.clone()) as Box<dyn TextBackend>
+        });
+        let cache = Arc::new(SharedMemoCache::new(1 << 15));
+        let shared = SweepRunner::new(4).run(&variants, &corpus, &tok, &reg, |i| {
+            Box::new(MemoBackend::shared(base.clone(), cache.clone(), i as u32))
+                as Box<dyn TextBackend>
+        });
+        let identical = same_traces(&plain, &shared);
+        let cs = cache.stats();
+        println!(
+            "{:<44} {:>10.1}%  ({} cross / {} lookups, identical: {})",
+            "  cross-variant shared-cache hit rate",
+            cs.cross_hit_rate() * 100.0,
+            cs.cross_hits,
+            cs.lookups(),
+            if identical { "yes" } else { "NO (BUG)" }
+        );
+        rows.push(obj(vec![
+            ("bench", s("cross_variant_hit_rate")),
+            ("hit_rate", num(cs.cross_hit_rate())),
+            ("cross_hits", num(cs.cross_hits as f64)),
+            ("lookups", num(cs.lookups() as f64)),
+            ("traces_identical", num(identical as usize as f64)),
         ]));
     }
 

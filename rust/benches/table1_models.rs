@@ -1,12 +1,19 @@
 //! Table I — the model ladder: serving speed, memory, MMLU, plus the
 //! picoLM reality behind each simulated identity (measured decode tok/s on
-//! this host and held-out next-token accuracy as the MMLU stand-in).
+//! this host and held-out next-token accuracy as the MMLU stand-in), and a
+//! per-model serving sanity sweep: one small PICE scenario per registry
+//! model as the cloud LLM, executed concurrently by the scenario-sweep
+//! runner over the shared generation cache.
 
 mod common;
 
+use std::sync::Arc;
+
+use pice::baselines;
 use pice::runtime::{Generator, LoadedModel, RuntimeHandle, SamplingParams};
-use pice::scenario::Env;
+use pice::scenario::{bench_n, Env};
 use pice::sketch::Prompts;
+use pice::sweep::SweepScenario;
 use pice::util::json::{arr, num, obj, s, Json};
 
 fn main() -> Result<(), String> {
@@ -50,7 +57,49 @@ fn main() -> Result<(), String> {
     }
     common::dump("table1_models", Json::Arr(rows));
     println!("\npaper shape check: speed and memory are inversely ordered; MMLU rises with size.");
-    common::report_memo_stats(&env);
+
+    // Per-model serving sweep: every registry model takes the cloud-LLM
+    // role in a small PICE scenario; the grid runs concurrently via the
+    // sweep runner (one cache-owner per model, shared generation cache).
+    let n = (bench_n() / 2).max(6);
+    let scenarios: Vec<SweepScenario> = env
+        .registry
+        .models
+        .iter()
+        .map(|m| {
+            let rpm = env.paper_rpm(&m.name);
+            let wl = Arc::new(env.workload(rpm, n, 23));
+            SweepScenario::new(m.name.clone(), baselines::pice(&m.name), wl)
+        })
+        .collect();
+    let outcomes = env.run_sweep(&scenarios);
+    println!("\nserving sweep ({} reqs each, PICE policy, concurrent grid):", n);
+    println!("{:<15} | {:>10} {:>8} {:>8}", "cloud model", "thpt(q/m)", "lat(s)", "p95(s)");
+    let mut serve_rows = Vec::new();
+    for (sc, outcome) in scenarios.iter().zip(outcomes) {
+        match outcome {
+            Ok((m, _)) => {
+                println!(
+                    "{:<15} | {:>10.2} {:>8.2} {:>8.2}",
+                    sc.label, m.throughput_qpm, m.avg_latency_s, m.p95_latency_s
+                );
+                serve_rows.push(obj(vec![
+                    ("model", s(&sc.label)),
+                    ("throughput_qpm", num(m.throughput_qpm)),
+                    ("latency_s", num(m.avg_latency_s)),
+                    ("p95_s", num(m.p95_latency_s)),
+                ]));
+            }
+            Err(e) => {
+                // Table-III-style infeasible cells (e.g. a model too big
+                // for the simulated cloud node) — report, don't abort
+                println!("{:<15} | {e}", sc.label);
+                serve_rows.push(obj(vec![("model", s(&sc.label)), ("error", s(&e.to_string()))]));
+            }
+        }
+    }
+    common::dump("table1_serving", Json::Arr(serve_rows));
+    common::report_sweep_stats(&env);
     let _ = arr(vec![]);
     Ok(())
 }

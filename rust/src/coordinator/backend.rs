@@ -17,12 +17,15 @@
 //!  * [`MemoBackend`] adds a bounded memo-cache keyed by
 //!    (model, prompt, sampling params) — bench workloads replay the same
 //!    questions across figures, so repeated generations become lookups.
+//!    The store itself is a lock-sharded, `Arc`-shareable
+//!    [`SharedMemoCache`](crate::sweep::cache::SharedMemoCache): N
+//!    concurrent engines (sweep scenarios) can hit ONE in-process cache.
 //!  * [`PersistentMemoBackend`] extends the memo-cache across *processes*:
 //!    the cache is restored from a versioned, stamp-guarded JSON snapshot at
 //!    construction and written back on save/drop, so separate bench runs
 //!    share one cache.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -31,22 +34,24 @@ use std::thread;
 use crate::corpus::Corpus;
 use crate::models::Registry;
 use crate::runtime::{GenOutput, GenScratch, Generator, LoadedModel, RuntimeHandle, SamplingParams};
+use crate::sweep::cache::{load_snapshot, MemoKey, SharedMemoCache, SnapshotState};
 use crate::tokenizer::Tokenizer;
-use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 
 /// One generation request inside a batch. Prompts are shared slices so a
-/// request can be fanned out (replicas, retries) without copying tokens.
+/// request can be fanned out (replicas, retries) without copying tokens;
+/// model names are interned `Arc<str>` so per-request fan-out (one request
+/// per sentence per job) bumps a refcount instead of allocating a String.
 #[derive(Clone, Debug)]
 pub struct GenRequest {
-    pub model: String,
+    pub model: Arc<str>,
     pub prompt: Arc<[u32]>,
     pub sp: SamplingParams,
 }
 
 impl GenRequest {
     pub fn new(model: &str, prompt: &[u32], sp: SamplingParams) -> GenRequest {
-        GenRequest { model: model.to_string(), prompt: Arc::from(prompt), sp }
+        GenRequest { model: Arc::from(model), prompt: Arc::from(prompt), sp }
     }
 }
 
@@ -73,6 +78,28 @@ pub trait TextBackend {
     /// without knowing the concrete wrapper stack.
     fn memo_stats(&self) -> Option<(u64, u64)> {
         None
+    }
+}
+
+/// Boxed backends are backends, so wrapper stacks can be composed from
+/// trait objects (e.g. `MemoBackend<Box<dyn TextBackend + Send>>` over
+/// whichever substrate `Env::load` picked).
+impl<T: TextBackend + ?Sized> TextBackend for Box<T> {
+    fn generate(
+        &mut self,
+        model: &str,
+        prompt: &[u32],
+        sp: &SamplingParams,
+    ) -> Result<GenOutput, String> {
+        (**self).generate(model, prompt, sp)
+    }
+
+    fn generate_batch(&mut self, reqs: &[GenRequest]) -> Vec<Result<GenOutput, String>> {
+        (**self).generate_batch(reqs)
+    }
+
+    fn memo_stats(&self) -> Option<(u64, u64)> {
+        (**self).memo_stats()
     }
 }
 
@@ -319,92 +346,63 @@ impl<B: TextBackend + Send + 'static> Drop for ParallelBackend<B> {
 // Memoizing backend (bounded generation cache)
 // ---------------------------------------------------------------------------
 
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
-struct MemoKey {
-    model: String,
-    prompt: Vec<u32>,
-    temperature_bits: u64,
-    max_tokens: usize,
-    stop_token: Option<u32>,
-    seed: u64,
-}
-
-impl MemoKey {
-    fn new(model: &str, prompt: &[u32], sp: &SamplingParams) -> MemoKey {
-        MemoKey {
-            model: model.to_string(),
-            prompt: prompt.to_vec(),
-            temperature_bits: sp.temperature.to_bits(),
-            max_tokens: sp.max_tokens,
-            stop_token: sp.stop_token,
-            seed: sp.seed,
-        }
-    }
-}
-
 /// Bounded FIFO memo-cache over any backend, keyed by the full generation
 /// request (model, prompt tokens, sampling params). Sound because both
 /// shipped backends are deterministic functions of that key; errors are
 /// never cached. Batch misses are forwarded to the inner backend as one
 /// batch, so the cache composes with [`ParallelBackend`] sharding.
+///
+/// The store is a [`SharedMemoCache`]: [`MemoBackend::new`] makes a
+/// private one (classic single-engine memoization), while
+/// [`MemoBackend::shared`] attaches to an existing `Arc`-shared cache with
+/// an `owner` id — the sweep layer gives each concurrent scenario its own
+/// owner so hits across scenarios are counted as cross-variant hits.
 pub struct MemoBackend<B: TextBackend> {
     inner: B,
-    capacity: usize,
-    // keys are Arc-shared between the map and the eviction queue so the
-    // prompt token vectors are stored once, not twice
-    map: HashMap<Arc<MemoKey>, GenOutput>,
-    order: VecDeque<Arc<MemoKey>>,
-    hits: u64,
-    misses: u64,
+    cache: Arc<SharedMemoCache>,
+    owner: u32,
 }
 
 impl<B: TextBackend> MemoBackend<B> {
     pub fn new(inner: B, capacity: usize) -> Self {
-        MemoBackend {
-            inner,
-            capacity: capacity.max(1),
-            map: HashMap::new(),
-            order: VecDeque::new(),
-            hits: 0,
-            misses: 0,
-        }
+        MemoBackend { inner, cache: Arc::new(SharedMemoCache::new(capacity)), owner: 0 }
     }
 
-    /// (hits, misses) since construction.
+    /// Wrap `inner` over an existing shared cache; `owner` tags this
+    /// handle's insertions for cross-variant hit accounting.
+    pub fn shared(inner: B, cache: Arc<SharedMemoCache>, owner: u32) -> Self {
+        MemoBackend { inner, cache, owner }
+    }
+
+    /// (hits, misses) of the underlying cache — process-global when the
+    /// cache is shared.
     pub fn stats(&self) -> (u64, u64) {
-        (self.hits, self.misses)
+        let s = self.cache.stats();
+        (s.hits, s.misses)
     }
 
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
-        if total == 0 {
-            0.0
-        } else {
-            self.hits as f64 / total as f64
-        }
+        self.cache.stats().hit_rate()
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.cache.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.cache.is_empty()
     }
 
     pub fn inner_mut(&mut self) -> &mut B {
         &mut self.inner
     }
 
+    pub fn cache(&self) -> &Arc<SharedMemoCache> {
+        &self.cache
+    }
+
     fn insert(&mut self, key: MemoKey, out: GenOutput) {
-        let key = Arc::new(key);
-        if self.map.insert(key.clone(), out).is_none() {
-            self.order.push_back(key);
-        }
-        while self.map.len() > self.capacity {
-            let Some(old) = self.order.pop_front() else { break };
-            self.map.remove(&old);
-        }
+        self.cache.insert(key, out, self.owner);
     }
 }
 
@@ -416,11 +414,9 @@ impl<B: TextBackend> TextBackend for MemoBackend<B> {
         sp: &SamplingParams,
     ) -> Result<GenOutput, String> {
         let key = MemoKey::new(model, prompt, sp);
-        if let Some(hit) = self.map.get(&key) {
-            self.hits += 1;
-            return Ok(hit.clone());
+        if let Some(hit) = self.cache.get(&key, self.owner) {
+            return Ok(hit);
         }
-        self.misses += 1;
         let out = self.inner.generate(model, prompt, sp)?;
         self.insert(key, out.clone());
         Ok(out)
@@ -433,11 +429,9 @@ impl<B: TextBackend> TextBackend for MemoBackend<B> {
         let mut misses: Vec<GenRequest> = Vec::new();
         for (i, r) in reqs.iter().enumerate() {
             let key = MemoKey::new(&r.model, &r.prompt, &r.sp);
-            if let Some(hit) = self.map.get(&key) {
-                self.hits += 1;
-                out[i] = Some(Ok(hit.clone()));
+            if let Some(hit) = self.cache.get(&key, self.owner) {
+                out[i] = Some(Ok(hit));
             } else {
-                self.misses += 1;
                 miss_idx.push(i);
                 misses.push(r.clone());
             }
@@ -464,39 +458,20 @@ impl<B: TextBackend> TextBackend for MemoBackend<B> {
 // Persistent memo backend (cross-run generation cache)
 // ---------------------------------------------------------------------------
 
-/// On-disk snapshot format version; bump when the entry layout changes.
-const CACHE_VERSION: usize = 1;
-
 /// A [`MemoBackend`] whose contents survive the process: the bounded cache
 /// is restored from a versioned JSON snapshot at construction and written
 /// back on [`PersistentMemoBackend::save`] (or drop). Figure benches replay
 /// the same questions across separate processes, so one bench warms the
 /// cache for the next.
 ///
-/// Foreign-stamp sections retained in a snapshot file — bounds file growth
-/// when many differently-stamped runs share one path.
-const FOREIGN_STAMP_LIMIT: usize = 8;
-
-/// The snapshot is keyed by the same full generation request as the
-/// in-memory cache (model, prompt tokens, sampling params — f64 fields as
-/// exact bit patterns), so a restored hit is byte-identical to a live
-/// generation. A `stamp` string (hash of the artifact/vocab identity —
-/// `scenario::{real,surrogate}_cache_stamp`) guards staleness: the file
-/// stores one entry section *per stamp*, this instance restores only the
-/// section matching its own stamp (cold start if absent) and re-emits the
-/// other sections verbatim on save — so differently-stamped runs sharing
-/// one path never clobber each other. Writes go to a temp file + rename,
-/// so a crashed process never leaves a torn snapshot.
+/// The snapshot machinery (entry serde, per-stamp sections, temp+rename
+/// writes) lives in [`crate::sweep::cache`] — this type is the standalone
+/// wrapper binding one private cache to one file. `Env::load` instead binds
+/// its process-wide [`SharedMemoCache`] to the snapshot directly, so a
+/// whole sweep costs ONE load and ONE save.
 pub struct PersistentMemoBackend<B: TextBackend> {
     memo: MemoBackend<B>,
-    path: PathBuf,
-    stamp: String,
-    /// entry sections of OTHER stamps found in the snapshot, preserved
-    /// across save (bounded at [`FOREIGN_STAMP_LIMIT`])
-    foreign: Vec<(String, Json)>,
-    /// entries restored from the snapshot at construction
-    restored: usize,
-    dirty: bool,
+    snapshot: SnapshotState,
 }
 
 impl<B: TextBackend> PersistentMemoBackend<B> {
@@ -505,82 +480,20 @@ impl<B: TextBackend> PersistentMemoBackend<B> {
     /// unreadable, or stale snapshot just means a cold start — never an
     /// error.
     pub fn load(inner: B, capacity: usize, path: impl Into<PathBuf>, stamp: &str) -> Self {
-        let path = path.into();
-        let mut memo = MemoBackend::new(inner, capacity);
-        let mut restored = 0usize;
-        let mut foreign: Vec<(String, Json)> = Vec::new();
-        if let Ok(text) = std::fs::read_to_string(&path) {
-            if let Ok(snap) = Json::parse(&text) {
-                if snap.get("version").and_then(Json::as_usize) == Some(CACHE_VERSION) {
-                    if let Some(Json::Obj(caches)) = snap.get("caches") {
-                        for (st, entries) in caches {
-                            if st == stamp {
-                                for e in entries.as_arr().unwrap_or(&[]) {
-                                    if let Some((key, out)) = entry_from_json(e) {
-                                        memo.insert(key, out);
-                                        restored += 1;
-                                    }
-                                }
-                            } else if foreign.len() < FOREIGN_STAMP_LIMIT {
-                                foreign.push((st.clone(), entries.clone()));
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        PersistentMemoBackend {
-            memo,
-            path,
-            stamp: stamp.to_string(),
-            foreign,
-            restored,
-            dirty: false,
-        }
+        let memo = MemoBackend::new(inner, capacity);
+        let snapshot = load_snapshot(memo.cache(), path, stamp);
+        PersistentMemoBackend { memo, snapshot }
     }
 
-    /// Snapshot the cache to `self.path` (FIFO order preserved, so a
-    /// restored cache evicts in the same order a live one would); other
-    /// stamps' sections are written back untouched.
+    /// Snapshot the cache to its bound path; other stamps' sections are
+    /// written back untouched.
     pub fn save(&mut self) -> Result<(), String> {
-        let mut entries = Vec::with_capacity(self.memo.order.len());
-        for key in &self.memo.order {
-            if let Some(out) = self.memo.map.get(key) {
-                // a non-finite logp (e.g. -inf from a zero-probability
-                // token) has no JSON representation — skip the entry
-                // rather than write an unparseable file
-                if out.logps.iter().all(|x| x.is_finite()) {
-                    entries.push(entry_json(key, out));
-                }
-            }
-        }
-        let mut caches = std::collections::BTreeMap::new();
-        for (st, ent) in &self.foreign {
-            caches.insert(st.clone(), ent.clone());
-        }
-        caches.insert(self.stamp.clone(), Json::Arr(entries));
-        let snap = json::obj(vec![
-            ("version", json::num(CACHE_VERSION as f64)),
-            ("caches", Json::Obj(caches)),
-        ]);
-        if let Some(dir) = self.path.parent() {
-            if !dir.as_os_str().is_empty() {
-                let _ = std::fs::create_dir_all(dir);
-            }
-        }
-        // write-then-rename so concurrent readers never see a torn file
-        let tmp = self.path.with_extension(format!("tmp{}", std::process::id()));
-        std::fs::write(&tmp, snap.to_string())
-            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, &self.path)
-            .map_err(|e| format!("rename to {}: {e}", self.path.display()))?;
-        self.dirty = false;
-        Ok(())
+        self.snapshot.save(self.memo.cache())
     }
 
     /// Entries restored from disk at construction (0 on a cold start).
     pub fn restored_entries(&self) -> usize {
-        self.restored
+        self.snapshot.restored_entries()
     }
 
     /// (hits, misses) since construction — hits against restored entries
@@ -602,7 +515,7 @@ impl<B: TextBackend> PersistentMemoBackend<B> {
     }
 
     pub fn path(&self) -> &std::path::Path {
-        &self.path
+        self.snapshot.path()
     }
 }
 
@@ -613,21 +526,11 @@ impl<B: TextBackend> TextBackend for PersistentMemoBackend<B> {
         prompt: &[u32],
         sp: &SamplingParams,
     ) -> Result<GenOutput, String> {
-        let misses_before = self.memo.misses;
-        let res = self.memo.generate(model, prompt, sp);
-        if self.memo.misses != misses_before {
-            self.dirty = true;
-        }
-        res
+        self.memo.generate(model, prompt, sp)
     }
 
     fn generate_batch(&mut self, reqs: &[GenRequest]) -> Vec<Result<GenOutput, String>> {
-        let misses_before = self.memo.misses;
-        let res = self.memo.generate_batch(reqs);
-        if self.memo.misses != misses_before {
-            self.dirty = true;
-        }
-        res
+        self.memo.generate_batch(reqs)
     }
 
     fn memo_stats(&self) -> Option<(u64, u64)> {
@@ -637,69 +540,10 @@ impl<B: TextBackend> TextBackend for PersistentMemoBackend<B> {
 
 impl<B: TextBackend> Drop for PersistentMemoBackend<B> {
     fn drop(&mut self) {
-        if self.dirty {
+        if self.snapshot.dirty(self.memo.cache()) {
             let _ = self.save();
         }
     }
-}
-
-fn u64_hex(v: u64) -> Json {
-    Json::Str(format!("{v:016x}"))
-}
-
-fn parse_u64_hex(j: &Json) -> Option<u64> {
-    u64::from_str_radix(j.as_str()?, 16).ok()
-}
-
-fn u32s_json(v: &[u32]) -> Json {
-    Json::Arr(v.iter().map(|&t| Json::Num(t as f64)).collect())
-}
-
-fn parse_u32s(j: &Json) -> Option<Vec<u32>> {
-    j.as_arr()?.iter().map(|x| x.as_f64().map(|f| f as u32)).collect()
-}
-
-/// One snapshot entry: the full memo key + the cached output. u64 fields
-/// (seed, temperature bit pattern) are hex strings — JSON numbers are f64
-/// and can't represent all 64-bit patterns exactly.
-fn entry_json(key: &MemoKey, out: &GenOutput) -> Json {
-    json::obj(vec![
-        ("model", json::s(&key.model)),
-        ("prompt", u32s_json(&key.prompt)),
-        ("t_bits", u64_hex(key.temperature_bits)),
-        ("max_tokens", json::num(key.max_tokens as f64)),
-        (
-            "stop",
-            match key.stop_token {
-                Some(t) => json::num(t as f64),
-                None => Json::Null,
-            },
-        ),
-        ("seed", u64_hex(key.seed)),
-        ("tokens", u32s_json(&out.tokens)),
-        ("logps", Json::Arr(out.logps.iter().map(|&x| Json::Num(x)).collect())),
-        ("finished", Json::Bool(out.finished)),
-    ])
-}
-
-fn entry_from_json(j: &Json) -> Option<(MemoKey, GenOutput)> {
-    let key = MemoKey {
-        model: j.get("model")?.as_str()?.to_string(),
-        prompt: parse_u32s(j.get("prompt")?)?,
-        temperature_bits: parse_u64_hex(j.get("t_bits")?)?,
-        max_tokens: j.get("max_tokens")?.as_usize()?,
-        stop_token: match j.get("stop")? {
-            Json::Null => None,
-            x => Some(x.as_f64()? as u32),
-        },
-        seed: parse_u64_hex(j.get("seed")?)?,
-    };
-    let out = GenOutput {
-        tokens: parse_u32s(j.get("tokens")?)?,
-        logps: j.get("logps")?.as_arr()?.iter().map(Json::as_f64).collect::<Option<Vec<f64>>>()?,
-        finished: j.get("finished")?.as_bool()?,
-    };
-    Some((key, out))
 }
 
 // ---------------------------------------------------------------------------
@@ -1128,28 +972,23 @@ mod tests {
     }
 
     #[test]
-    fn persistent_memo_entry_json_round_trip_exact() {
-        // direct serde check, including u64 bit patterns beyond 2^53 and
-        // negative fractional logps
-        let key = MemoKey {
-            model: "m".to_string(),
-            prompt: vec![1, 2, 4_000_000_000],
-            temperature_bits: 0.7f64.to_bits(),
-            max_tokens: 24,
-            stop_token: Some(7),
-            seed: u64::MAX - 12345,
-        };
-        let out = GenOutput {
-            tokens: vec![9, 8, 7],
-            logps: vec![-0.123456789012345, -3.5e-7, 0.0],
-            finished: true,
-        };
-        let j = entry_json(&key, &out);
-        let reparsed = Json::parse(&j.to_string()).unwrap();
-        let (k2, o2) = entry_from_json(&reparsed).unwrap();
-        assert_eq!(k2, key);
-        assert_eq!(o2.tokens, out.tokens);
-        assert_eq!(o2.logps, out.logps);
-        assert_eq!(o2.finished, out.finished);
+    fn shared_cache_counts_cross_variant_hits_through_memo_handles() {
+        // two memo handles over one shared cache: variant 1 replays what
+        // variant 0 generated, entirely as cross-variant hits
+        let (b, tok, c) = setup();
+        let reqs = batch_of_prompts(&b, &tok, &c);
+        let cache = Arc::new(SharedMemoCache::new(4096));
+        let mut v0 = MemoBackend::shared(b.clone(), cache.clone(), 0);
+        let mut v1 = MemoBackend::shared(b.clone(), cache.clone(), 1);
+        let first = v0.generate_batch(&reqs);
+        let second = v1.generate_batch(&reqs);
+        for (a, bb) in first.iter().zip(&second) {
+            assert_eq!(a.as_ref().unwrap().tokens, bb.as_ref().unwrap().tokens);
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, reqs.len() as u64);
+        assert_eq!(s.hits, reqs.len() as u64);
+        assert_eq!(s.cross_hits, reqs.len() as u64, "all of variant 1's hits are cross-variant");
+        assert!(s.cross_hit_rate() > 0.49 && s.cross_hit_rate() < 0.51);
     }
 }

@@ -134,7 +134,9 @@ struct EdgeWork {
 
 struct EdgeState {
     spec: crate::cluster::DeviceSpec,
-    current_model: String,
+    /// interned model name — reassignment and every per-event read are
+    /// refcount bumps, never String allocations
+    current_model: Arc<str>,
     busy: bool,
 }
 
@@ -215,7 +217,8 @@ impl<'a> Engine<'a> {
     /// SLMs deployable for this scenario, ascending capability.
     fn slms(&self) -> Vec<&ModelInfo> {
         let mut v = self.registry.slms_for(&self.cfg.cloud_model);
-        v.sort_by(|a, b| a.sim_params_b().partial_cmp(&b.sim_params_b()).unwrap());
+        // total_cmp: a degenerate fit (NaN params) must order, not panic
+        v.sort_by(|a, b| a.sim_params_b().total_cmp(&b.sim_params_b()));
         v
     }
 
@@ -251,7 +254,26 @@ impl<'a> Engine<'a> {
         }
 
         let mut rng = Rng::new(self.cfg.seed);
-        let slm_names: Vec<String> = self.slms().iter().map(|m| m.name.clone()).collect();
+        // Interned model names, hoisted out of the event loop: per-arrival
+        // and per-sentence GenRequest/Candidate construction clones an
+        // Arc<str> (refcount bump) instead of allocating a String.
+        let cloud_model: Arc<str> = Arc::from(self.cfg.cloud_model.as_str());
+        let slm_names: Vec<Arc<str>> =
+            self.slms().iter().map(|m| Arc::from(m.name.as_str())).collect();
+        // map a selection outcome back onto its interned name
+        let intern = |name: &str| -> Arc<str> {
+            slm_names
+                .iter()
+                .find(|n| ***n == *name)
+                .cloned()
+                .unwrap_or_else(|| {
+                    if *cloud_model == *name {
+                        cloud_model.clone()
+                    } else {
+                        Arc::from(name)
+                    }
+                })
+        };
         let mut edges: Vec<EdgeState> = self
             .cluster
             .edges
@@ -259,10 +281,10 @@ impl<'a> Engine<'a> {
             .map(|spec| EdgeState {
                 spec: spec.clone(),
                 // round-robin initial SLM placement (paper: one model per device)
-                current_model: if matches!(self.cfg.policy, Policy::EdgeOnly) {
-                    self.cfg.cloud_model.clone()
-                } else if slm_names.is_empty() {
-                    self.cfg.cloud_model.clone()
+                current_model: if matches!(self.cfg.policy, Policy::EdgeOnly)
+                    || slm_names.is_empty()
+                {
+                    cloud_model.clone()
                 } else {
                     slm_names[0].clone()
                 },
@@ -275,8 +297,8 @@ impl<'a> Engine<'a> {
             }
         }
 
-        let cloud_info = self.registry.get(&self.cfg.cloud_model).unwrap().clone();
-        let cloud_slots = self.cluster.cloud.max_batch(&cloud_info, 1000).max(1);
+        let cloud_info = self.registry.get(&self.cfg.cloud_model).unwrap();
+        let cloud_slots = self.cluster.cloud.max_batch(cloud_info, 1000).max(1);
         let f_cloud = self.f_cloud();
 
         let mut q: EventQueue<Ev> = EventQueue::new();
@@ -433,7 +455,7 @@ impl<'a> Engine<'a> {
                                 }
                             };
                             GenRequest {
-                                model: self.cfg.cloud_model.clone(),
+                                model: cloud_model.clone(),
                                 prompt: prompt.into(),
                                 sp: SamplingParams {
                                     max_tokens,
@@ -465,12 +487,12 @@ impl<'a> Engine<'a> {
                                     ans.pop();
                                 }
                                 pend[rid].candidates = vec![Candidate {
-                                    model: self.cfg.cloud_model.clone(),
+                                    model: cloud_model.clone(),
                                     tokens: ans,
                                     logps: out.logps,
                                 }];
-                                self.cluster.cloud.prefill_time_s(&cloud_info, prompt_sim, b)
-                                    + self.cluster.cloud.gen_time_s(&cloud_info, n_sim, b)
+                                self.cluster.cloud.prefill_time_s(cloud_info, prompt_sim, b)
+                                    + self.cluster.cloud.gen_time_s(cloud_info, n_sim, b)
                             }
                             CloudJobKind::Sketch { level } => {
                                 let mut sk = out.tokens;
@@ -506,8 +528,8 @@ impl<'a> Engine<'a> {
                                 let n_sim = (out_sk.len() as f64 * scale) as usize;
                                 pend[rid].cloud_tokens = n_sim;
                                 pend[rid].sketch = out_sk.into();
-                                self.cluster.cloud.prefill_time_s(&cloud_info, prompt_sim, b)
-                                    + self.cluster.cloud.gen_time_s(&cloud_info, n_sim, b)
+                                self.cluster.cloud.prefill_time_s(cloud_info, prompt_sim, b)
+                                    + self.cluster.cloud.gen_time_s(cloud_info, n_sim, b)
                             }
                         };
                         cloud_inflight += 1;
@@ -562,7 +584,7 @@ impl<'a> Engine<'a> {
                         // queue full: fall back — answer is the sketch itself
                         // (degenerate; counted against PICE's quality)
                         pend[rid].candidates = vec![Candidate {
-                            model: self.cfg.cloud_model.clone(),
+                            model: cloud_model.clone(),
                             tokens: pend[rid].sketch.to_vec(),
                             logps: vec![-1.0; pend[rid].sketch.len()],
                         }];
@@ -585,7 +607,7 @@ impl<'a> Engine<'a> {
                         edges[eid].busy = true;
                         pend[rid].edge_start.get_or_insert(now);
                         let model_name = edges[eid].current_model.clone();
-                        let info = self.registry.get(&model_name).unwrap().clone();
+                        let info = self.registry.get(&model_name).unwrap();
                         let prompt = Prompts::full_answer(self.tok, &pend[rid].question_toks);
                         let real_cap =
                             ((self.cfg.cloud_max_tokens as f64 / scale).round() as usize).max(4);
@@ -608,8 +630,8 @@ impl<'a> Engine<'a> {
                         let n_sim = (ans.len() as f64 * scale) as usize;
                         let dur = edges[eid]
                             .spec
-                            .prefill_time_s(&info, (prompt.len() as f64 * scale) as usize, 1)
-                            + edges[eid].spec.gen_time_s(&info, n_sim, 1);
+                            .prefill_time_s(info, (prompt.len() as f64 * scale) as usize, 1)
+                            + edges[eid].spec.gen_time_s(info, n_sim, 1);
                         let work = EdgeWork {
                             items: vec![(
                                 rid,
@@ -673,7 +695,7 @@ impl<'a> Engine<'a> {
                     .max(0.05);
                     let sel = if slm_refs.is_empty() {
                         super::selection::SelectionOutcome {
-                            model: edges[eid].current_model.clone(),
+                            model: edges[eid].current_model.to_string(),
                             switched: false,
                             switch_cost_s: 0.0,
                         }
@@ -689,15 +711,16 @@ impl<'a> Engine<'a> {
                             self.cfg.queue_cap,
                         )
                     };
-                    edges[eid].current_model = sel.model.clone();
-                    let info = self.registry.get(&sel.model).unwrap().clone();
+                    let sel_model = intern(&sel.model);
+                    edges[eid].current_model = sel_model.clone();
+                    let info = self.registry.get(&sel.model).unwrap();
 
                     // Execution optimizer: batch-level lane planning. All
                     // jobs' lanes run concurrently on this device; the
                     // binary-tree merge balances per-job parallelism against
                     // global token-rate contention + prompt overhead (Fig. 7a).
                     let info_cost = EdgeCostModel {
-                        token_s: edges[eid].spec.token_latency_s(&info, 1),
+                        token_s: edges[eid].spec.token_latency_s(info, 1),
                         batch_slowdown: crate::cluster::BATCH_TOKEN_SLOWDOWN,
                         prompt_tokens: batch
                             .iter()
@@ -718,7 +741,7 @@ impl<'a> Engine<'a> {
                     let est_refs: Vec<&[usize]> = est_lens.iter().map(|v| v.as_slice()).collect();
                     let p_mem = edges[eid]
                         .spec
-                        .max_batch(&info, info_cost.prompt_tokens + (40.0 * scale) as usize)
+                        .max_batch(info, info_cost.prompt_tokens + (40.0 * scale) as usize)
                         .max(1);
                     let (plans, _) = plan_batch(&est_refs, p_mem, &info_cost);
 
@@ -732,7 +755,7 @@ impl<'a> Engine<'a> {
                         .iter()
                         .flat_map(|job| {
                             job.sentences.iter().enumerate().map(|(si, sent)| GenRequest {
-                                model: sel.model.clone(),
+                                model: sel_model.clone(),
                                 prompt: Prompts::expand(
                                     self.tok,
                                     &job.question,
@@ -772,7 +795,7 @@ impl<'a> Engine<'a> {
                         let n_edge_tokens: usize = real_lens.iter().sum();
                         items.push((
                             job.rid,
-                            Candidate { model: sel.model.clone(), tokens: expansion, logps },
+                            Candidate { model: sel_model.clone(), tokens: expansion, logps },
                             n_edge_tokens,
                         ));
                         real_lens_per_job.push(real_lens);
@@ -838,7 +861,7 @@ impl<'a> Engine<'a> {
             (0, 1.0)
         };
         let cand = p.candidates.get(winner).cloned().unwrap_or(Candidate {
-            model: String::new(),
+            model: Arc::from(""),
             tokens: Vec::new(),
             logps: Vec::new(),
         });
@@ -857,7 +880,7 @@ impl<'a> Engine<'a> {
             cloud_done: p.cloud_done,
             edge_start: p.edge_start.unwrap_or(0.0),
             done: now,
-            winner_model: cand.model,
+            winner_model: cand.model.to_string(),
             confidence,
             parallelism: p.parallelism,
         });

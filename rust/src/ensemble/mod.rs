@@ -12,6 +12,7 @@
 //! Llama-vs-Qwen observation), hence the text-score terms.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug)]
 pub struct ConfidenceWeights {
@@ -27,10 +28,11 @@ impl Default for ConfidenceWeights {
     }
 }
 
-/// One ensemble candidate: an SLM's expansion of a sketch.
+/// One ensemble candidate: an SLM's expansion of a sketch. The model name
+/// is the engine's interned `Arc<str>`, so replica fan-out never copies it.
 #[derive(Clone, Debug)]
 pub struct Candidate {
-    pub model: String,
+    pub model: Arc<str>,
     pub tokens: Vec<u32>,
     /// per-generated-token natural-log probabilities under the generator
     pub logps: Vec<f64>,

@@ -9,6 +9,8 @@
 //! * the paper's contribution: [`coordinator`] (dynamic scheduler, job
 //!   dispatching, model selection), [`parallel`] (execution optimizer),
 //!   [`ensemble`], [`finetune`] (RLAIF sketch policy), [`baselines`]
+//! * evaluation scale-out: [`sweep`] (shared generation cache + the
+//!   concurrent scenario-sweep runner), [`scenario`] (env wiring)
 
 pub mod baselines;
 pub mod cli;
@@ -27,6 +29,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod simclock;
 pub mod sketch;
+pub mod sweep;
 pub mod testkit;
 pub mod tokenizer;
 pub mod util;

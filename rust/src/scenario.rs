@@ -1,23 +1,38 @@
 //! Scenario plumbing shared by the CLI, examples and benches: artifact
 //! loading, backend choice (real PJRT vs surrogate), workload construction,
-//! and one-call experiment runs.
+//! one-call experiment runs, and the concurrent scenario-sweep entry point.
 
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
 use crate::baselines;
 use crate::coordinator::backend::{
-    MemoBackend, ParallelBackend, PersistentMemoBackend, RealBackend, SurrogateBackend,
-    TextBackend,
+    MemoBackend, ParallelBackend, RealBackend, SurrogateBackend, TextBackend,
 };
-use crate::coordinator::{Engine, EngineCfg, RunError};
+use crate::coordinator::{EngineCfg, RunError};
 use crate::corpus::workload::{Arrival, Workload, WorkloadSpec};
 use crate::corpus::Corpus;
-use crate::metrics::{aggregate, RequestTrace, RunMetrics};
+use crate::metrics::{RequestTrace, RunMetrics};
 use crate::models::Registry;
 use crate::quality::judge::Judge;
+use crate::sweep::cache::{load_snapshot, CacheStats, SharedMemoCache, SnapshotState};
+use crate::sweep::{ScenarioResult, SweepRunner, SweepScenario};
 use crate::tokenizer::Tokenizer;
 
-/// Everything a scenario needs, loaded once.
+/// Builds a fresh replica of the substrate backend (real PJRT or surrogate)
+/// — no cache layer. Called once per `ParallelBackend` worker and once per
+/// sweep scenario.
+type ReplicaFactory = dyn Fn() -> Box<dyn TextBackend + Send> + Send + Sync;
+
+/// Everything a scenario needs, loaded once per process.
+///
+/// The generation cache is a process-wide [`SharedMemoCache`]: the
+/// sequential [`Env::run`] path and every concurrent [`Env::run_sweep`]
+/// scenario all hit the same store, so cross-variant replays (Fig. 6's four
+/// systems answering the same questions with the same derived seeds) are
+/// hits no matter which variant generated first. With `PICE_MEMO_PATH` set
+/// the snapshot is loaded ONCE here and saved ONCE when the `Env` drops —
+/// not once per run.
 pub struct Env {
     pub tok: Tokenizer,
     pub corpus: Arc<Corpus>,
@@ -25,6 +40,18 @@ pub struct Env {
     pub backend: Box<dyn TextBackend>,
     pub judge: Judge,
     pub real: bool,
+    cache: Option<Arc<SharedMemoCache>>,
+    snapshot: Option<SnapshotState>,
+    replica: Arc<ReplicaFactory>,
+    /// `PICE_WORKERS` when the user set it explicitly. Sweep scenarios
+    /// honor an explicit worker count (each scenario's backend becomes its
+    /// own pool); auto-sizing applies only to the sequential backend —
+    /// during a sweep, cross-scenario parallelism already fills the host.
+    explicit_workers: Option<usize>,
+    /// next cache-owner id handed to a sweep scenario — monotone across
+    /// `run_sweep` calls, so variants of successive sweeps never share an
+    /// owner and cross-variant hits are attributed correctly.
+    next_owner: AtomicU32,
 }
 
 impl Env {
@@ -37,11 +64,13 @@ impl Env {
     ///   [`ParallelBackend`], each worker owning its own backend replica
     ///   (surrogate clone / separately-loaded PJRT models). Unset (or
     ///   unparsable) auto-sizes from the host — see [`auto_workers`].
-    /// * `PICE_MEMO_CAP=N` (default 4096; 0 disables) — bound of the
-    ///   generation memo-cache wrapped around the stack.
-    /// * `PICE_MEMO_PATH=path` — persist the memo-cache to a stamp-guarded
-    ///   snapshot at `path` via [`PersistentMemoBackend`], so separate
-    ///   bench processes share one cache (see PERF.md §Persistent cache).
+    /// * `PICE_SWEEP_THREADS=N` — scenario-sweep pool size for
+    ///   [`Env::run_sweep`] (unset auto-sizes the same way).
+    /// * `PICE_MEMO_CAP=N` (default 4096; 0 disables) — bound of the shared
+    ///   generation memo-cache.
+    /// * `PICE_MEMO_PATH=path` — persist the shared cache to a
+    ///   stamp-guarded snapshot at `path`, so separate bench processes
+    ///   share one cache (see PERF.md §Persistent cache).
     pub fn load() -> Result<Env, String> {
         let art = crate::artifacts_dir();
         let force_surrogate = std::env::var("PICE_BACKEND").as_deref() == Ok("surrogate");
@@ -49,55 +78,108 @@ impl Env {
         let env_usize = |key: &str, default: usize| {
             std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
         };
-        let workers = std::env::var("PICE_WORKERS")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or_else(auto_workers);
+        let explicit_workers: Option<usize> =
+            std::env::var("PICE_WORKERS").ok().and_then(|v| v.parse().ok());
+        let workers = explicit_workers.unwrap_or_else(auto_workers);
         let memo_cap = env_usize("PICE_MEMO_CAP", 4096);
         let memo_path = std::env::var("PICE_MEMO_PATH").ok().filter(|p| !p.is_empty());
-        if have_artifacts && !force_surrogate {
+
+        let (tok, corpus, registry, real, stamp, first, replica) = if have_artifacts
+            && !force_surrogate
+        {
             let tok = Tokenizer::from_file(&art.join("vocab.json"))?;
             let corpus = Arc::new(Corpus::from_file(&art.join("corpus.json"), &tok)?);
             let registry = Registry::from_artifacts(&art)?;
             let stamp = real_cache_stamp(&art);
-            let persist = memo_path.map(|p| (p, stamp));
-            let backend = if workers > 1 {
-                let art2 = art.clone();
-                let eos = tok.specials.eos;
-                // probe once so a broken setup fails here, not inside a worker
-                RealBackend::new(&art, eos)?;
-                wrap_memo(
-                    ParallelBackend::new(workers, move |_| {
-                        RealBackend::new(&art2, eos).expect("worker backend")
-                    }),
-                    memo_cap,
-                    persist,
-                )
-            } else {
-                wrap_memo(RealBackend::new(&art, tok.specials.eos)?, memo_cap, persist)
-            };
-            let judge = Judge::fit(&corpus);
-            Ok(Env { tok, corpus, registry, backend, judge, real: true })
+            let eos = tok.specials.eos;
+            // the probe doubles as the first replica: a broken setup fails
+            // here (not inside a worker thread), and the model load is
+            // reused instead of repeated
+            let first: Box<dyn TextBackend + Send> = Box::new(RealBackend::new(&art, eos)?);
+            let art2 = art.clone();
+            let replica: Arc<ReplicaFactory> = Arc::new(move || {
+                Box::new(RealBackend::new(&art2, eos).expect("backend replica"))
+                    as Box<dyn TextBackend + Send>
+            });
+            (tok, corpus, registry, true, stamp, first, replica)
         } else {
             let tok = crate::corpus::synth::synth_tokenizer();
             let corpus = Arc::new(crate::corpus::synth::synth_corpus(&tok, 30, 42));
             let registry = Registry::builtin();
             let base = SurrogateBackend::new(corpus.clone(), &tok, &registry, SURROGATE_SEED);
             let stamp = surrogate_cache_stamp(&tok, &corpus, &registry, SURROGATE_SEED);
-            let persist = memo_path.map(|p| (p, stamp));
-            let backend = if workers > 1 {
-                wrap_memo(ParallelBackend::new(workers, move |_| base.clone()), memo_cap, persist)
-            } else {
-                wrap_memo(base, memo_cap, persist)
-            };
-            let judge = Judge::fit(&corpus);
-            Ok(Env { tok, corpus, registry, backend, judge, real: false })
-        }
+            let first: Box<dyn TextBackend + Send> = Box::new(base.clone());
+            let replica: Arc<ReplicaFactory> =
+                Arc::new(move || Box::new(base.clone()) as Box<dyn TextBackend + Send>);
+            (tok, corpus, registry, false, stamp, first, replica)
+        };
+
+        let cache = (memo_cap > 0).then(|| Arc::new(SharedMemoCache::new(memo_cap)));
+        let snapshot = match (&cache, memo_path) {
+            (Some(c), Some(p)) => Some(load_snapshot(c, p, &stamp)),
+            _ => None,
+        };
+        // The sequential backend stack: (memo over) parallel pool or the
+        // probe replica. Sweep scenarios build their own stacks over the
+        // same shared cache — see run_sweep.
+        let inner: Box<dyn TextBackend + Send> = if workers > 1 {
+            let r = replica.clone();
+            let mut first = Some(first);
+            // the probe serves as worker 0's replica — `workers` loads
+            // total, not workers + 1
+            Box::new(ParallelBackend::new(workers, move |_| {
+                first.take().unwrap_or_else(|| r())
+            }))
+        } else {
+            first
+        };
+        let backend: Box<dyn TextBackend> = match &cache {
+            Some(c) => Box::new(MemoBackend::shared(inner, c.clone(), ENV_SEQ_OWNER)),
+            None => inner,
+        };
+        let judge = Judge::fit(&corpus);
+        Ok(Env {
+            tok,
+            corpus,
+            registry,
+            backend,
+            judge,
+            real,
+            cache,
+            snapshot,
+            replica,
+            explicit_workers,
+            next_owner: AtomicU32::new(1),
+        })
     }
 
-    /// (hits, misses) of the memo-cache layer, if one wraps the backend.
+    /// (hits, misses) of the shared generation cache, if enabled.
     pub fn memo_stats(&self) -> Option<(u64, u64)> {
-        self.backend.memo_stats()
+        self.cache_stats().map(|s| (s.hits, s.misses))
+    }
+
+    /// Full lookup counters of the shared cache, including cross-variant
+    /// hits (entries inserted by one sweep scenario and served to another).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Entries restored from the `PICE_MEMO_PATH` snapshot at load (None
+    /// when persistence is off).
+    pub fn restored_entries(&self) -> Option<usize> {
+        self.snapshot.as_ref().map(SnapshotState::restored_entries)
+    }
+
+    /// Write the shared cache back to its snapshot, if persistence is on
+    /// and the cache gained entries. Called automatically on drop; call
+    /// explicitly to flush earlier.
+    pub fn save_cache(&mut self) -> Result<(), String> {
+        if let (Some(cache), Some(snap)) = (&self.cache, &mut self.snapshot) {
+            if snap.dirty(cache) {
+                snap.save(cache)?;
+            }
+        }
+        Ok(())
     }
 
     /// Paper §V-B workload: RPM = 1.5 x the cloud model's max batch.
@@ -120,19 +202,74 @@ impl Env {
         )
     }
 
-    /// Run one engine configuration over a workload.
+    /// Run one engine configuration over a workload (the sequential path).
     pub fn run(
         &mut self,
         cfg: EngineCfg,
         wl: &Workload,
     ) -> Result<(RunMetrics, Vec<RequestTrace>), RunError> {
-        let mut engine =
-            Engine::new(cfg, self.corpus.clone(), &self.tok, &self.registry, self.backend.as_mut())?;
+        let mut engine = crate::coordinator::Engine::new(
+            cfg,
+            self.corpus.clone(),
+            &self.tok,
+            &self.registry,
+            self.backend.as_mut(),
+        )?;
         let traces = engine.run(wl)?;
-        Ok((aggregate(&traces), traces))
+        Ok((crate::metrics::aggregate(&traces), traces))
     }
 
-    /// Run all four systems (Table III/IV composition) for one cloud model.
+    /// Run a grid of independent scenarios across the sweep thread pool
+    /// (`PICE_SWEEP_THREADS`, auto-sized when unset). `results[i]`
+    /// corresponds to `scenarios[i]`, and the output is bit-identical to
+    /// calling [`Env::run`] in a loop — each scenario is a pure function of
+    /// `(cfg, workload, seed)` and the shared cache is transparent.
+    ///
+    /// Every scenario gets its own backend replica tagged with its own
+    /// cache-owner id, so [`Env::cache_stats`] afterwards reports how much
+    /// the variants served each other (`cross_hits`).
+    pub fn run_sweep(&self, scenarios: &[SweepScenario]) -> Vec<ScenarioResult> {
+        self.run_sweep_with(&SweepRunner::from_env(), scenarios)
+    }
+
+    /// [`Env::run_sweep`] with an explicit runner (thread-count control for
+    /// benches measuring sweep scaling).
+    ///
+    /// An *explicitly set* `PICE_WORKERS > 1` stacks: each scenario's
+    /// backend becomes its own worker pool under the shared memo handle
+    /// (sweep threads × workers OS threads — the user asked for it). When
+    /// `PICE_WORKERS` is unset, scenarios run single-replica backends:
+    /// auto-sized batch sharding would only oversubscribe a host the sweep
+    /// pool already fills.
+    pub fn run_sweep_with(
+        &self,
+        runner: &SweepRunner,
+        scenarios: &[SweepScenario],
+    ) -> Vec<ScenarioResult> {
+        let replica = self.replica.clone();
+        let cache = self.cache.clone();
+        let workers = self.explicit_workers.unwrap_or(1);
+        // owner 0 is the Env's own sequential backend; sweep owners are
+        // allocated monotonically so scenarios of DIFFERENT sweeps never
+        // alias and cross-variant attribution stays exact
+        let base = self.next_owner.fetch_add(scenarios.len().max(1) as u32, Ordering::Relaxed);
+        let factory = move |i: usize| -> Box<dyn TextBackend> {
+            let inner: Box<dyn TextBackend + Send> = if workers > 1 {
+                let r = replica.clone();
+                Box::new(ParallelBackend::new(workers, move |_| r()))
+            } else {
+                replica()
+            };
+            match &cache {
+                Some(c) => Box::new(MemoBackend::shared(inner, c.clone(), base + i as u32)),
+                None => inner,
+            }
+        };
+        runner.run(scenarios, &self.corpus, &self.tok, &self.registry, factory)
+    }
+
+    /// Run all four systems (Table III/IV composition) for one cloud model
+    /// — one sweep over a shared workload.
     #[allow(clippy::type_complexity)]
     pub fn run_all_systems(
         &mut self,
@@ -141,13 +278,26 @@ impl Env {
         n: usize,
         seed: u64,
     ) -> Vec<(&'static str, Result<(RunMetrics, Vec<RequestTrace>), RunError>)> {
-        let wl = self.workload(rpm, n, seed);
-        baselines::all(cloud_model)
-            .into_iter()
-            .map(|(name, cfg)| (name, self.run(cfg, &wl)))
-            .collect()
+        let wl = Arc::new(self.workload(rpm, n, seed));
+        let systems = baselines::all(cloud_model);
+        let scenarios: Vec<SweepScenario> = systems
+            .iter()
+            .map(|(name, cfg)| SweepScenario::new(*name, cfg.clone(), wl.clone()))
+            .collect();
+        let results = self.run_sweep(&scenarios);
+        systems.into_iter().map(|(name, _)| name).zip(results).collect()
     }
 }
+
+impl Drop for Env {
+    fn drop(&mut self) {
+        let _ = self.save_cache();
+    }
+}
+
+/// Cache-owner id of the `Env`'s own sequential backend; sweep scenarios
+/// use ids starting at 1.
+const ENV_SEQ_OWNER: u32 = 0;
 
 /// Seed of the surrogate backend built by [`Env::load`]. Exported so
 /// benches/tests constructing their own [`SurrogateBackend`] can share the
@@ -159,11 +309,12 @@ pub const SURROGATE_SEED: u64 = 9;
 /// output semantics change without the artifacts changing).
 pub const CACHE_STAMP_SALT: &str = "pice-gen-v1";
 
-/// Auto-sized [`ParallelBackend`] pool: one worker per available hardware
-/// thread, capped at 8 — each worker owns a full backend replica (its own
-/// `LoadedModel` device buffers on the real path), so the cap bounds
-/// resident memory. Determinism is unaffected by the count: the
-/// index-ordered merge keeps output bit-identical at any size (PERF.md
+/// Auto-sized worker/sweep pools: one thread per available hardware
+/// thread, capped at 8 — each [`ParallelBackend`] worker owns a full
+/// backend replica (its own `LoadedModel` device buffers on the real
+/// path), so the cap bounds resident memory. Determinism is unaffected by
+/// the count: the index-ordered merge (workers) and submission-order
+/// collection (sweep) keep output bit-identical at any size (PERF.md
 /// §Worker-pool determinism rules).
 pub fn auto_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 8)
@@ -268,22 +419,6 @@ pub fn surrogate_cache_stamp(
         }
     }
     fnv_stamp(&[b"surrogate", &content])
-}
-
-/// Wrap a backend in the bounded memo-cache unless `memo_cap` is 0; with a
-/// `(path, stamp)` the cache is the persistent cross-run variant.
-fn wrap_memo<B: TextBackend + 'static>(
-    backend: B,
-    memo_cap: usize,
-    persist: Option<(String, String)>,
-) -> Box<dyn TextBackend> {
-    match (memo_cap > 0, persist) {
-        (true, Some((path, stamp))) => {
-            Box::new(PersistentMemoBackend::load(backend, memo_cap, path, &stamp))
-        }
-        (true, None) => Box::new(MemoBackend::new(backend, memo_cap)),
-        (false, _) => Box::new(backend),
-    }
 }
 
 /// Bench sizing from the environment: `PICE_BENCH_N` (requests per scenario,

@@ -1,0 +1,535 @@
+//! The shared in-process generation cache: the bounded memo store factored
+//! out of `MemoBackend`/`PersistentMemoBackend` into a lock-sharded,
+//! `Arc`-shared structure, so N concurrent engines (sweep scenarios, worker
+//! pools, the `Env` sequential path) all hit ONE cache.
+//!
+//! Soundness is unchanged from the single-owner memo cache: every entry is
+//! keyed by the full generation request ([`MemoKey`]: model, prompt tokens,
+//! sampling params) and both shipped backends are pure functions of that
+//! key, so a hit — no matter which scenario inserted the entry or in which
+//! order threads interleave — returns exactly the bytes a live generation
+//! would. That purity is what makes the cache *transparent*: parallel sweep
+//! results stay bit-identical to the sequential loop with the cache on,
+//! off, or shared.
+//!
+//! Each handle is tagged with an `owner` id (one per sweep scenario); a hit
+//! on an entry inserted under a different owner is a **cross-variant hit**
+//! — the Fig. 6 variants replay the same questions with the same derived
+//! seeds, so cross-variant hits are the common case and are reported as
+//! `cross_variant_hit_rate` in the perf bench.
+//!
+//! The on-disk snapshot (previously private to `PersistentMemoBackend`)
+//! also lives here, as [`load_snapshot`]/[`SnapshotState::save`] over a
+//! cache — so a process loads the snapshot ONCE into the shared cache and
+//! saves ONCE at exit, instead of one round-trip per run.
+
+use std::collections::{HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::{GenOutput, SamplingParams};
+use crate::util::json::{self, Json};
+
+/// Full generation-request identity: the memo key. f64 sampling fields are
+/// stored as exact bit patterns so keys hash/compare exactly.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct MemoKey {
+    pub model: String,
+    pub prompt: Vec<u32>,
+    pub temperature_bits: u64,
+    pub max_tokens: usize,
+    pub stop_token: Option<u32>,
+    pub seed: u64,
+}
+
+impl MemoKey {
+    pub fn new(model: &str, prompt: &[u32], sp: &SamplingParams) -> MemoKey {
+        MemoKey {
+            model: model.to_string(),
+            prompt: prompt.to_vec(),
+            temperature_bits: sp.temperature.to_bits(),
+            max_tokens: sp.max_tokens,
+            stop_token: sp.stop_token,
+            seed: sp.seed,
+        }
+    }
+}
+
+/// Owner id recorded on entries restored from a snapshot — distinct from
+/// every live scenario id, so warm-start hits also count as cross hits
+/// (they were produced outside the requesting scenario).
+pub const SNAPSHOT_OWNER: u32 = u32::MAX;
+
+/// Lookup counters of a [`SharedMemoCache`] since construction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// hits served by an entry inserted under a *different* owner id than
+    /// the requester's — cross-variant (or cross-process, for restored
+    /// entries) sharing
+    pub cross_hits: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// Fraction of ALL lookups served by another variant's entry.
+    pub fn cross_hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.cross_hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+struct Entry {
+    out: GenOutput,
+    owner: u32,
+}
+
+/// One lock domain: a bounded FIFO map, exactly the old `MemoBackend`
+/// store. Keys are `Arc`-shared between the map and the eviction queue so
+/// prompt token vectors are stored once.
+struct Shard {
+    map: HashMap<Arc<MemoKey>, Entry>,
+    order: VecDeque<Arc<MemoKey>>,
+}
+
+/// Shard scaling: one lock domain per [`SHARD_GRAIN`] entries of capacity,
+/// capped at [`MAX_SHARDS`]. Small caches collapse to a single shard —
+/// exact global-FIFO semantics, matching the old single-owner memo store
+/// (a per-shard bound of 1-2 entries would let same-shard keys evict each
+/// other far below nominal capacity) — while large ones spread contention.
+/// Each shard holds `capacity / shards` entries, so the resident total
+/// never exceeds `capacity`.
+const SHARD_GRAIN: usize = 64;
+const MAX_SHARDS: usize = 16;
+
+/// Lock-sharded bounded generation cache, shared via `Arc` across every
+/// engine in the process. All methods take `&self`; contention is bounded
+/// to one shard per lookup.
+pub struct SharedMemoCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    cross_hits: AtomicU64,
+    insertions: AtomicU64,
+}
+
+impl SharedMemoCache {
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        let n = (cap / SHARD_GRAIN).clamp(1, MAX_SHARDS);
+        SharedMemoCache {
+            shards: (0..n)
+                .map(|_| Mutex::new(Shard { map: HashMap::new(), order: VecDeque::new() }))
+                .collect(),
+            per_shard_cap: cap / n,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            cross_hits: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, key: &MemoKey) -> usize {
+        // DefaultHasher::new() uses fixed keys — deterministic within a
+        // process, which keeps export order reproducible
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// Look up `key` on behalf of scenario `owner`; counts hit/miss and
+    /// cross-variant provenance.
+    pub fn get(&self, key: &MemoKey, owner: u32) -> Option<GenOutput> {
+        let shard = self.shards[self.shard_of(key)].lock().unwrap();
+        match shard.map.get(key) {
+            Some(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                if e.owner != owner {
+                    self.cross_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(e.out.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert an entry produced by scenario `owner`; FIFO-evicts within the
+    /// key's shard beyond the per-shard bound.
+    pub fn insert(&self, key: MemoKey, out: GenOutput, owner: u32) {
+        let si = self.shard_of(&key);
+        let mut shard = self.shards[si].lock().unwrap();
+        let key = Arc::new(key);
+        if shard.map.insert(key.clone(), Entry { out, owner }).is_none() {
+            shard.order.push_back(key);
+            self.insertions.fetch_add(1, Ordering::Relaxed);
+        }
+        while shard.map.len() > self.per_shard_cap {
+            let Some(old) = shard.order.pop_front() else { break };
+            shard.map.remove(&old);
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            cross_hits: self.cross_hits.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Total distinct keys ever inserted (monotone; drives dirty checks for
+    /// the snapshot layer).
+    pub fn insertions(&self) -> u64 {
+        self.insertions.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All resident entries, shard-major in per-shard FIFO order — the
+    /// snapshot serialization order. Deterministic for a deterministic fill
+    /// sequence.
+    pub fn export(&self) -> Vec<(MemoKey, GenOutput)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let shard = s.lock().unwrap();
+            for key in &shard.order {
+                if let Some(e) = shard.map.get(key) {
+                    out.push(((**key).clone(), e.out.clone()));
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// On-disk snapshot (cross-process persistence)
+// ---------------------------------------------------------------------------
+
+/// On-disk snapshot format version; bump when the entry layout changes.
+pub const CACHE_VERSION: usize = 1;
+
+/// Foreign-stamp sections retained in a snapshot file — bounds file growth
+/// when many differently-stamped runs share one path.
+const FOREIGN_STAMP_LIMIT: usize = 8;
+
+/// One process-wide binding of a [`SharedMemoCache`] to a snapshot file:
+/// where to save, which stamp section is ours, the other stamps' sections
+/// to re-emit verbatim, and the insertion watermark for dirty checks.
+/// Produced by [`load_snapshot`]; call [`SnapshotState::save`] (typically
+/// once, at process exit) to write back.
+pub struct SnapshotState {
+    path: PathBuf,
+    stamp: String,
+    /// entry sections of OTHER stamps found in the snapshot, preserved
+    /// across save (bounded at [`FOREIGN_STAMP_LIMIT`])
+    foreign: Vec<(String, Json)>,
+    restored: usize,
+    /// cache insertion count at load / after the last save
+    clean_insertions: u64,
+}
+
+impl SnapshotState {
+    /// Entries restored from disk at construction (0 on a cold start).
+    pub fn restored_entries(&self) -> usize {
+        self.restored
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Has the cache gained entries since load / the last save?
+    pub fn dirty(&self, cache: &SharedMemoCache) -> bool {
+        cache.insertions() != self.clean_insertions
+    }
+
+    /// Snapshot `cache` to `self.path` (shard-major FIFO order, so a
+    /// restored cache evicts in the same order a live one would); other
+    /// stamps' sections are written back untouched. Temp-file + rename, so
+    /// a crashed process never leaves a torn snapshot.
+    pub fn save(&mut self, cache: &SharedMemoCache) -> Result<(), String> {
+        let insertions = cache.insertions();
+        let mut entries = Vec::new();
+        for (key, out) in cache.export() {
+            // a non-finite logp (e.g. -inf from a zero-probability token)
+            // has no JSON representation — skip the entry rather than write
+            // an unparseable file
+            if out.logps.iter().all(|x| x.is_finite()) {
+                entries.push(entry_json(&key, &out));
+            }
+        }
+        let mut caches = std::collections::BTreeMap::new();
+        for (st, ent) in &self.foreign {
+            caches.insert(st.clone(), ent.clone());
+        }
+        caches.insert(self.stamp.clone(), Json::Arr(entries));
+        let snap = json::obj(vec![
+            ("version", json::num(CACHE_VERSION as f64)),
+            ("caches", Json::Obj(caches)),
+        ]);
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+        }
+        let tmp = self.path.with_extension(format!("tmp{}", std::process::id()));
+        std::fs::write(&tmp, snap.to_string())
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path)
+            .map_err(|e| format!("rename to {}: {e}", self.path.display()))?;
+        self.clean_insertions = insertions;
+        Ok(())
+    }
+}
+
+/// Restore `stamp`'s section of any matching-version snapshot at `path`
+/// into `cache` (entries land under [`SNAPSHOT_OWNER`]); other stamps'
+/// sections are retained for re-emission on save. A missing, unreadable,
+/// or stale snapshot just means a cold start — never an error.
+pub fn load_snapshot(
+    cache: &SharedMemoCache,
+    path: impl Into<PathBuf>,
+    stamp: &str,
+) -> SnapshotState {
+    let path = path.into();
+    let mut restored = 0usize;
+    let mut foreign: Vec<(String, Json)> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        if let Ok(snap) = Json::parse(&text) {
+            if snap.get("version").and_then(Json::as_usize) == Some(CACHE_VERSION) {
+                if let Some(Json::Obj(caches)) = snap.get("caches") {
+                    for (st, entries) in caches {
+                        if st == stamp {
+                            for e in entries.as_arr().unwrap_or(&[]) {
+                                if let Some((key, out)) = entry_from_json(e) {
+                                    cache.insert(key, out, SNAPSHOT_OWNER);
+                                    restored += 1;
+                                }
+                            }
+                        } else if foreign.len() < FOREIGN_STAMP_LIMIT {
+                            foreign.push((st.clone(), entries.clone()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    SnapshotState {
+        path,
+        stamp: stamp.to_string(),
+        foreign,
+        restored,
+        clean_insertions: cache.insertions(),
+    }
+}
+
+fn u64_hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn parse_u64_hex(j: &Json) -> Option<u64> {
+    u64::from_str_radix(j.as_str()?, 16).ok()
+}
+
+fn u32s_json(v: &[u32]) -> Json {
+    Json::Arr(v.iter().map(|&t| Json::Num(t as f64)).collect())
+}
+
+fn parse_u32s(j: &Json) -> Option<Vec<u32>> {
+    j.as_arr()?.iter().map(|x| x.as_f64().map(|f| f as u32)).collect()
+}
+
+/// One snapshot entry: the full memo key + the cached output. u64 fields
+/// (seed, temperature bit pattern) are hex strings — JSON numbers are f64
+/// and can't represent all 64-bit patterns exactly.
+fn entry_json(key: &MemoKey, out: &GenOutput) -> Json {
+    json::obj(vec![
+        ("model", json::s(&key.model)),
+        ("prompt", u32s_json(&key.prompt)),
+        ("t_bits", u64_hex(key.temperature_bits)),
+        ("max_tokens", json::num(key.max_tokens as f64)),
+        (
+            "stop",
+            match key.stop_token {
+                Some(t) => json::num(t as f64),
+                None => Json::Null,
+            },
+        ),
+        ("seed", u64_hex(key.seed)),
+        ("tokens", u32s_json(&out.tokens)),
+        ("logps", Json::Arr(out.logps.iter().map(|&x| Json::Num(x)).collect())),
+        ("finished", Json::Bool(out.finished)),
+    ])
+}
+
+fn entry_from_json(j: &Json) -> Option<(MemoKey, GenOutput)> {
+    let key = MemoKey {
+        model: j.get("model")?.as_str()?.to_string(),
+        prompt: parse_u32s(j.get("prompt")?)?,
+        temperature_bits: parse_u64_hex(j.get("t_bits")?)?,
+        max_tokens: j.get("max_tokens")?.as_usize()?,
+        stop_token: match j.get("stop")? {
+            Json::Null => None,
+            x => Some(x.as_f64()? as u32),
+        },
+        seed: parse_u64_hex(j.get("seed")?)?,
+    };
+    let out = GenOutput {
+        tokens: parse_u32s(j.get("tokens")?)?,
+        logps: j.get("logps")?.as_arr()?.iter().map(Json::as_f64).collect::<Option<Vec<f64>>>()?,
+        finished: j.get("finished")?.as_bool()?,
+    };
+    Some((key, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(model: &str, seed: u64) -> MemoKey {
+        MemoKey::new(model, &[seed as u32, 7], &SamplingParams { seed, ..Default::default() })
+    }
+
+    fn out(t: u32) -> GenOutput {
+        GenOutput { tokens: vec![t], logps: vec![-0.25], finished: true }
+    }
+
+    #[test]
+    fn capacity_bounded_across_shards() {
+        // 256 -> 4 shards x 64: the resident total stays under the nominal
+        // capacity no matter how keys hash
+        let c = SharedMemoCache::new(256);
+        for i in 0..1000u64 {
+            c.insert(key("m", i), out(i as u32), 0);
+        }
+        assert!(c.len() <= 256, "cache grew to {}", c.len());
+        assert_eq!(c.insertions(), 1000);
+    }
+
+    #[test]
+    fn tiny_capacity_single_shard_exact_fifo() {
+        // caps below the shard grain collapse to ONE shard, so a cap of 2
+        // holds exactly the 2 newest entries (old global-FIFO semantics) —
+        // not one entry per shard with hash-dependent thrashing
+        let c = SharedMemoCache::new(2);
+        for i in 0..10u64 {
+            c.insert(key("m", i), out(i as u32), 0);
+        }
+        assert_eq!(c.len(), 2, "single-shard cap must be exact");
+        assert!(c.get(&key("m", 8), 0).is_some());
+        assert!(c.get(&key("m", 9), 0).is_some());
+        assert!(c.get(&key("m", 0), 0).is_none());
+    }
+
+    #[test]
+    fn cross_variant_hits_accounted() {
+        let c = SharedMemoCache::new(64);
+        let k = key("m", 1);
+        assert!(c.get(&k, 0).is_none());
+        c.insert(k.clone(), out(9), 0);
+        // same owner: plain hit
+        assert_eq!(c.get(&k, 0).unwrap().tokens, vec![9]);
+        // different owner: cross-variant hit
+        assert_eq!(c.get(&k, 1).unwrap().tokens, vec![9]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.cross_hits), (2, 1, 1));
+        assert!(s.hit_rate() > 0.6 && s.hit_rate() < 0.7);
+        assert!(s.cross_hit_rate() > 0.3 && s.cross_hit_rate() < 0.4);
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let fill = || {
+            let c = SharedMemoCache::new(256);
+            for i in 0..40u64 {
+                c.insert(key("m", i), out(i as u32), 0);
+            }
+            c.export()
+        };
+        let a = fill();
+        let b = fill();
+        assert_eq!(a.len(), 40);
+        let ka: Vec<_> = a.iter().map(|(k, _)| k.seed).collect();
+        let kb: Vec<_> = b.iter().map(|(k, _)| k.seed).collect();
+        assert_eq!(ka, kb);
+    }
+
+    #[test]
+    fn snapshot_round_trip() {
+        let path =
+            std::env::temp_dir().join(format!("pice_sweep_cache_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let c = SharedMemoCache::new(256);
+        for i in 0..10u64 {
+            c.insert(key("m", i), out(i as u32), 3);
+        }
+        let mut st = load_snapshot(&c, &path, "stamp-x");
+        assert_eq!(st.restored_entries(), 0);
+        assert!(st.dirty(&c), "fresh inserts must mark the snapshot dirty");
+        st.save(&c).unwrap();
+        assert!(!st.dirty(&c));
+
+        let c2 = SharedMemoCache::new(256);
+        let st2 = load_snapshot(&c2, &path, "stamp-x");
+        assert_eq!(st2.restored_entries(), 10);
+        // restored entries carry the snapshot owner, so any scenario's hit
+        // on them counts as a cross hit
+        assert_eq!(c2.get(&key("m", 4), 3).unwrap().tokens, vec![4]);
+        assert_eq!(c2.stats().cross_hits, 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn entry_json_round_trip_exact() {
+        // direct serde check, including u64 bit patterns beyond 2^53 and
+        // negative fractional logps
+        let key = MemoKey {
+            model: "m".to_string(),
+            prompt: vec![1, 2, 4_000_000_000],
+            temperature_bits: 0.7f64.to_bits(),
+            max_tokens: 24,
+            stop_token: Some(7),
+            seed: u64::MAX - 12345,
+        };
+        let out = GenOutput {
+            tokens: vec![9, 8, 7],
+            logps: vec![-0.123456789012345, -3.5e-7, 0.0],
+            finished: true,
+        };
+        let j = entry_json(&key, &out);
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        let (k2, o2) = entry_from_json(&reparsed).unwrap();
+        assert_eq!(k2, key);
+        assert_eq!(o2.tokens, out.tokens);
+        assert_eq!(o2.logps, out.logps);
+        assert_eq!(o2.finished, out.finished);
+    }
+}

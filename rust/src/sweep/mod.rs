@@ -1,0 +1,21 @@
+//! Scenario-sweep execution layer: PICE's evaluation is a *grid* of
+//! scenarios (policies × loads × queue caps × model registries — Fig. 6,
+//! Fig. 13, Table I), and this module makes the grid itself a first-class
+//! parallel subsystem instead of a `for` loop:
+//!
+//! * [`cache::SharedMemoCache`] — the bounded generation memo store,
+//!   factored out of the backend wrappers into a lock-sharded `Arc`-shared
+//!   structure, so N concurrent engines hit ONE in-process cache (and the
+//!   on-disk snapshot is loaded/saved once per process, not per run).
+//! * [`SweepRunner`] — runs independent `(EngineCfg, Workload)` scenarios
+//!   over an OS-thread pool with submission-order result collection;
+//!   results are bit-identical to the sequential loop at any thread count.
+//!
+//! `scenario::Env::run_sweep` wires both together for benches; see PERF.md
+//! §Scenario-sweep layer.
+
+pub mod cache;
+pub mod runner;
+
+pub use cache::{CacheStats, SharedMemoCache};
+pub use runner::{sweep_threads, ScenarioResult, SweepRunner, SweepScenario};

@@ -1,0 +1,138 @@
+//! The scenario-sweep runner: executes independent `(EngineCfg, Workload)`
+//! scenarios across an OS-thread pool with deterministic, submission-order
+//! result collection.
+//!
+//! Each scenario is a pure function of `(cfg, workload, seed)` — every
+//! random draw inside the engine flows from `cfg.seed`, and every backend
+//! generation is a pure function of its `(model, prompt, sampling-params)`
+//! key — so the parallel sweep is **bit-identical** to the sequential
+//! `for` loop regardless of thread count, scheduling order, or whether the
+//! scenarios share a [`SharedMemoCache`](super::cache::SharedMemoCache)
+//! (enforced by `rust/tests/sweep_determinism.rs`).
+//!
+//! Work distribution is a single atomic cursor over the scenario list
+//! (dynamic load balancing: a thread that finishes a cheap scenario
+//! immediately pulls the next one); results are written into their
+//! submission slot, so `results[i]` always corresponds to `scenarios[i]`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::backend::TextBackend;
+use crate::coordinator::{Engine, EngineCfg, RunError};
+use crate::corpus::workload::Workload;
+use crate::corpus::Corpus;
+use crate::metrics::{aggregate, RequestTrace, RunMetrics};
+use crate::models::Registry;
+use crate::tokenizer::Tokenizer;
+
+/// One cell of a sweep grid. Workloads are `Arc`-shared: a grid typically
+/// replays one workload across many `EngineCfg` variants.
+#[derive(Clone)]
+pub struct SweepScenario {
+    pub label: String,
+    pub cfg: EngineCfg,
+    pub workload: Arc<Workload>,
+}
+
+impl SweepScenario {
+    pub fn new(label: impl Into<String>, cfg: EngineCfg, workload: Arc<Workload>) -> Self {
+        SweepScenario { label: label.into(), cfg, workload }
+    }
+}
+
+pub type ScenarioResult = Result<(RunMetrics, Vec<RequestTrace>), RunError>;
+
+/// Sweep-pool size: `PICE_SWEEP_THREADS` when set and parsable (min 1),
+/// else auto-sized from the host like the backend worker pool
+/// ([`crate::scenario::auto_workers`]). Orthogonal to `PICE_WORKERS`: that
+/// knob shards one engine's generation batches, this one runs whole
+/// scenarios concurrently. `Env::run_sweep` stacks the two when
+/// `PICE_WORKERS` is set explicitly (each scenario gets its own pool).
+pub fn sweep_threads() -> usize {
+    std::env::var("PICE_SWEEP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or_else(crate::scenario::auto_workers)
+}
+
+/// Executes scenario grids over a fixed-size OS-thread pool.
+pub struct SweepRunner {
+    threads: usize,
+}
+
+impl SweepRunner {
+    pub fn new(threads: usize) -> Self {
+        SweepRunner { threads: threads.max(1) }
+    }
+
+    pub fn from_env() -> Self {
+        SweepRunner::new(sweep_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every scenario; `results[i]` corresponds to `scenarios[i]`.
+    ///
+    /// `factory(i)` builds scenario i's backend stack *inside the worker
+    /// thread that runs it* — typically a memo wrapper sharing one
+    /// [`SharedMemoCache`](super::cache::SharedMemoCache) with owner id
+    /// `i`, over a fresh replica of the substrate backend. One backend per
+    /// scenario (not per thread) keeps owner attribution per-variant, which
+    /// is what the cross-variant hit metric counts.
+    pub fn run<F>(
+        &self,
+        scenarios: &[SweepScenario],
+        corpus: &Arc<Corpus>,
+        tok: &Tokenizer,
+        registry: &Registry,
+        factory: F,
+    ) -> Vec<ScenarioResult>
+    where
+        F: Fn(usize) -> Box<dyn TextBackend> + Sync,
+    {
+        let n = scenarios.len();
+        if self.threads <= 1 || n <= 1 {
+            return scenarios
+                .iter()
+                .enumerate()
+                .map(|(i, sc)| run_one(sc, corpus, tok, registry, factory(i).as_mut()))
+                .collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<ScenarioResult>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..self.threads.min(n) {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::SeqCst);
+                    if i >= n {
+                        break;
+                    }
+                    let mut backend = factory(i);
+                    let res = run_one(&scenarios[i], corpus, tok, registry, backend.as_mut());
+                    *slots[i].lock().unwrap() = Some(res);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("every scenario slot filled"))
+            .collect()
+    }
+}
+
+fn run_one(
+    sc: &SweepScenario,
+    corpus: &Arc<Corpus>,
+    tok: &Tokenizer,
+    registry: &Registry,
+    backend: &mut dyn TextBackend,
+) -> ScenarioResult {
+    let mut engine = Engine::new(sc.cfg.clone(), corpus.clone(), tok, registry, backend)?;
+    let traces = engine.run(&sc.workload)?;
+    Ok((aggregate(&traces), traces))
+}

@@ -1,0 +1,220 @@
+//! Determinism of the scenario-sweep layer: running a grid of scenarios
+//! through [`SweepRunner`] must produce byte-identical results to the
+//! sequential `for` loop — at 1/2/4 sweep threads, with the shared
+//! in-process cache enabled or disabled, and stacked on `PICE_WORKERS`
+//! backend parallelism (each scenario's backend itself a worker pool).
+//! Each scenario is a pure function of `(cfg, workload, seed)` and the
+//! cache is transparent, so no interleaving may change a single byte.
+
+use std::sync::Arc;
+
+use pice::baselines;
+use pice::coordinator::backend::{MemoBackend, ParallelBackend, SurrogateBackend, TextBackend};
+use pice::coordinator::Engine;
+use pice::corpus::synth::{synth_corpus, synth_tokenizer};
+use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use pice::corpus::Corpus;
+use pice::metrics::RequestTrace;
+use pice::models::Registry;
+use pice::sweep::{ScenarioResult, SharedMemoCache, SweepRunner, SweepScenario};
+use pice::tokenizer::Tokenizer;
+
+fn setup() -> (Arc<Corpus>, Tokenizer, Registry) {
+    let tok = synth_tokenizer();
+    let corpus = Arc::new(synth_corpus(&tok, 20, 42));
+    let reg = Registry::builtin();
+    (corpus, tok, reg)
+}
+
+fn workload(corpus: &Arc<Corpus>, n: usize, seed: u64) -> Arc<Workload> {
+    Arc::new(Workload::generate(
+        corpus,
+        WorkloadSpec {
+            rpm: 40.0,
+            n_requests: n,
+            arrival: Arrival::Poisson,
+            categories: vec![],
+            seed,
+        },
+    ))
+}
+
+/// A mixed grid: shared workload across policy variants (the cross-variant
+/// cache case) plus distinct-seed/workload cells (the disjoint case).
+fn grid(corpus: &Arc<Corpus>) -> Vec<SweepScenario> {
+    let wl_a = workload(corpus, 30, 5);
+    let wl_b = workload(corpus, 24, 9);
+    let mut v = vec![
+        SweepScenario::new("pice", baselines::pice("llama70b-sim"), wl_a.clone()),
+        SweepScenario::new("cloud", baselines::cloud_only("llama70b-sim"), wl_a.clone()),
+        SweepScenario::new("routing", baselines::routing("llama70b-sim"), wl_a.clone()),
+    ];
+    let mut tight = baselines::pice("llama70b-sim");
+    tight.queue_cap = 2;
+    v.push(SweepScenario::new("pice-q2", tight, wl_a));
+    let mut reseeded = baselines::pice("qwen72b-sim");
+    reseeded.seed = 1234;
+    v.push(SweepScenario::new("pice-reseed", reseeded, wl_b.clone()));
+    let mut stat = baselines::pice("llama70b-sim");
+    stat.scheduler.static_mode = true;
+    v.push(SweepScenario::new("pice-static", stat, wl_b));
+    v
+}
+
+/// The reference semantics: a plain sequential loop, one fresh backend per
+/// scenario, no sweep machinery at all.
+fn sequential_loop(
+    scenarios: &[SweepScenario],
+    corpus: &Arc<Corpus>,
+    tok: &Tokenizer,
+    reg: &Registry,
+    base: &SurrogateBackend,
+) -> Vec<ScenarioResult> {
+    scenarios
+        .iter()
+        .map(|sc| {
+            let mut backend = base.clone();
+            let mut engine =
+                Engine::new(sc.cfg.clone(), corpus.clone(), tok, reg, &mut backend)?;
+            let traces = engine.run(&sc.workload)?;
+            Ok((pice::metrics::aggregate(&traces), traces))
+        })
+        .collect()
+}
+
+fn assert_traces_identical(label: &str, a: &[RequestTrace], b: &[RequestTrace]) {
+    assert_eq!(a.len(), b.len(), "{label}: trace count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.rid, y.rid, "{label}: rid");
+        assert_eq!(x.mode, y.mode, "{label}: mode rid={}", x.rid);
+        assert_eq!(x.answer, y.answer, "{label}: answer rid={}", x.rid);
+        assert_eq!(x.winner_model, y.winner_model, "{label}: winner rid={}", x.rid);
+        assert_eq!(x.cloud_tokens, y.cloud_tokens, "{label}: cloud tokens rid={}", x.rid);
+        assert_eq!(x.edge_tokens, y.edge_tokens, "{label}: edge tokens rid={}", x.rid);
+        assert_eq!(x.sketch_level, y.sketch_level, "{label}: level rid={}", x.rid);
+        assert_eq!(x.parallelism, y.parallelism, "{label}: parallelism rid={}", x.rid);
+        assert!(x.done == y.done, "{label}: done time rid={}", x.rid);
+        assert!(x.confidence == y.confidence, "{label}: confidence rid={}", x.rid);
+    }
+}
+
+fn assert_results_identical(label: &str, a: &[ScenarioResult], b: &[ScenarioResult]) {
+    assert_eq!(a.len(), b.len(), "{label}: result count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        match (x, y) {
+            (Ok((ma, ta)), Ok((mb, tb))) => {
+                assert_traces_identical(&format!("{label} scenario {i}"), ta, tb);
+                assert!(ma.throughput_qpm == mb.throughput_qpm, "{label} {i}: thpt");
+                assert!(ma.avg_latency_s == mb.avg_latency_s, "{label} {i}: latency");
+                assert_eq!(ma.server_tokens, mb.server_tokens, "{label} {i}: server tokens");
+                assert_eq!(ma.edge_tokens, mb.edge_tokens, "{label} {i}: edge tokens");
+            }
+            (Err(ea), Err(eb)) => {
+                assert_eq!(ea.to_string(), eb.to_string(), "{label} {i}: error text")
+            }
+            _ => panic!("{label} {i}: Ok/Err mismatch"),
+        }
+    }
+}
+
+#[test]
+fn sweep_bit_identical_to_sequential_loop_at_any_thread_count() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let scenarios = grid(&corpus);
+    let reference = sequential_loop(&scenarios, &corpus, &tok, &reg, &base);
+    assert!(reference.iter().all(|r| r.is_ok()));
+    for threads in [1usize, 2, 4] {
+        let got = SweepRunner::new(threads).run(&scenarios, &corpus, &tok, &reg, |_| {
+            Box::new(base.clone()) as Box<dyn TextBackend>
+        });
+        assert_results_identical(&format!("{threads} threads, no cache"), &reference, &got);
+    }
+}
+
+#[test]
+fn shared_cache_is_transparent_and_produces_cross_variant_hits() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let scenarios = grid(&corpus);
+    let reference = sequential_loop(&scenarios, &corpus, &tok, &reg, &base);
+    for threads in [1usize, 2, 4] {
+        let cache = Arc::new(SharedMemoCache::new(1 << 15));
+        let got = SweepRunner::new(threads).run(&scenarios, &corpus, &tok, &reg, |i| {
+            Box::new(MemoBackend::shared(base.clone(), cache.clone(), i as u32))
+                as Box<dyn TextBackend>
+        });
+        assert_results_identical(&format!("{threads} threads, shared cache"), &reference, &got);
+        let s = cache.stats();
+        assert!(s.hits > 0, "{threads} threads: no cache hits at all");
+        assert!(
+            s.cross_hits > 0,
+            "{threads} threads: policy variants over one workload must share generations"
+        );
+    }
+}
+
+#[test]
+fn sweep_stacks_on_backend_worker_pools() {
+    // each scenario's backend is itself a 2-worker ParallelBackend (the
+    // PICE_WORKERS layer), under a shared memo handle — sweep threads on
+    // top must still be bit-identical
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let scenarios = grid(&corpus);
+    let reference = sequential_loop(&scenarios, &corpus, &tok, &reg, &base);
+    let cache = Arc::new(SharedMemoCache::new(1 << 15));
+    let got = SweepRunner::new(2).run(&scenarios, &corpus, &tok, &reg, |i| {
+        let pool = ParallelBackend::new(2, |_| base.clone());
+        Box::new(MemoBackend::shared(pool, cache.clone(), i as u32)) as Box<dyn TextBackend>
+    });
+    assert_results_identical("sweep x2 over workers x2", &reference, &got);
+}
+
+#[test]
+fn results_arrive_in_submission_order() {
+    // scenarios with distinct workload sizes: slot i must hold scenario
+    // i's result regardless of which thread finished first
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let sizes = [6usize, 18, 10, 26, 8, 14];
+    let scenarios: Vec<SweepScenario> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            SweepScenario::new(
+                format!("n{n}"),
+                baselines::pice("llama70b-sim"),
+                workload(&corpus, n, 100 + i as u64),
+            )
+        })
+        .collect();
+    let got = SweepRunner::new(4).run(&scenarios, &corpus, &tok, &reg, |_| {
+        Box::new(base.clone()) as Box<dyn TextBackend>
+    });
+    for (i, (res, &n)) in got.iter().zip(&sizes).enumerate() {
+        let (m, traces) = res.as_ref().expect("scenario ok");
+        assert_eq!(traces.len(), n, "slot {i} holds the wrong scenario");
+        assert_eq!(m.n_requests, n, "slot {i} metrics mismatch");
+    }
+}
+
+#[test]
+fn runner_reports_infeasible_scenarios_in_place() {
+    // an OOM cell (cloud model too big for an edge in edge-only mode) must
+    // land as Err in its own slot without poisoning the rest
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let wl = workload(&corpus, 8, 3);
+    let scenarios = vec![
+        SweepScenario::new("ok", baselines::pice("llama70b-sim"), wl.clone()),
+        SweepScenario::new("oom", baselines::edge_only("llama70b-sim"), wl.clone()),
+        SweepScenario::new("ok2", baselines::cloud_only("llama70b-sim"), wl),
+    ];
+    let got = SweepRunner::new(2).run(&scenarios, &corpus, &tok, &reg, |_| {
+        Box::new(base.clone()) as Box<dyn TextBackend>
+    });
+    assert!(got[0].is_ok());
+    assert!(got[1].is_err(), "edge-only 70B must OOM on a Jetson");
+    assert!(got[2].is_ok());
+}
