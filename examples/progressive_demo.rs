@@ -1,79 +1,93 @@
-//! Progressive inference, step by step, on real models: the cloud LLM
-//! writes a sketch, three edge SLMs expand each sketch sentence in
-//! parallel, the ensemble picks the most confident expansion.
+//! Progressive inference as the client streams it: the cloud LLM's sketch
+//! arrives early, edge SLM expansions stream in behind it, the ensemble
+//! picks a winner — all observed through the serving API's per-request
+//! response events rather than by calling the runtime layers directly.
+//!
+//! Works on the real PJRT artifacts or the surrogate backend:
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example progressive_demo
+//! cargo run --release --example progressive_demo
 //! ```
 
-use anyhow::Result;
-use pice::corpus::Corpus;
-use pice::ensemble::{confidence, Candidate, ConfidenceWeights};
-use pice::runtime::{Generator, LoadedModel, RuntimeHandle, SamplingParams};
-use pice::sketch::{split_sketch, Prompts};
-use pice::tokenizer::Tokenizer;
+use pice::baselines;
+use pice::metrics::Mode;
+use pice::scenario::Env;
+use pice::serve::{RequestHandle, ResponseEvent, ResponseEventKind, ServeCfg};
 
-fn main() -> Result<()> {
-    let art = pice::artifacts_dir();
-    let tok = Tokenizer::from_file(&art.join("vocab.json")).map_err(anyhow::Error::msg)?;
-    let corpus =
-        Corpus::from_file(&art.join("corpus.json"), &tok).map_err(anyhow::Error::msg)?;
-    let rt = RuntimeHandle::cpu()?;
+fn main() -> Result<(), String> {
+    let mut env = Env::load()?;
+    println!(
+        "backend: {}\n",
+        if env.real { "REAL (PJRT picoLM)" } else { "surrogate" }
+    );
+    let corpus = env.corpus.clone();
+    let questions: Vec<usize> = corpus.eval_questions().iter().map(|q| q.id).take(10).collect();
 
-    let cloud = LoadedModel::load(rt.clone(), &art.join("models/llama70b-sim"))?;
-    let slm_names = ["llama8b-sim", "qwen7b-sim", "qwen1.5b-sim"];
-    let slms: Vec<LoadedModel> = slm_names
-        .iter()
-        .map(|n| LoadedModel::load(rt.clone(), &art.join("models").join(n)))
-        .collect::<Result<_>>()?;
-
-    let q = corpus.eval_questions()[7];
-    println!("Q: {}\n", tok.decode(&q.question));
-    println!("reference: {}\n", tok.decode_content(&q.answer_tokens()));
-
-    // 1) cloud LLM generates the sketch
-    let cloud_gen = Generator::new(&cloud, tok.specials.eos);
-    let sk_out = cloud_gen.generate(
-        &Prompts::sketch(&tok, &q.question),
-        &SamplingParams { max_tokens: 60, ..Default::default() },
-    )?;
-    let mut sketch = sk_out.tokens.clone();
-    sketch.retain(|&t| t != tok.specials.eos);
-    println!("cloud sketch ({} tokens): {}\n", sketch.len(), tok.decode(&sketch));
-
-    // 2) edge SLMs expand each sketch sentence independently (parallel lanes
-    //    on the testbed; sequential here for clarity)
-    let sentences = split_sketch(&sketch, tok.specials.semicolon);
-    let w = ConfidenceWeights::default();
-    let mut final_answer: Vec<u32> = Vec::new();
-    for (si, sent) in sentences.iter().enumerate() {
-        println!("sentence {si}: [{}]", tok.decode(sent));
-        let mut cands = Vec::new();
-        for (name, slm) in slm_names.iter().zip(&slms) {
-            let g = Generator::new(slm, tok.specials.eos);
-            let out = g.generate(
-                &Prompts::expand(&tok, &q.question, &sketch, sent),
-                &SamplingParams {
-                    max_tokens: 24,
-                    stop_token: Some(tok.specials.period),
-                    ..Default::default()
-                },
-            )?;
-            let mut toks = out.tokens.clone();
-            toks.retain(|&t| t != tok.specials.eos);
-            let cand = Candidate { model: name.to_string(), tokens: toks, logps: out.logps };
-            let con = confidence(&cand, sent, sent.len() * 2, w);
-            println!("  {name:<14} con={con:.3}  {}", tok.decode(&cand.tokens));
-            cands.push((con, cand));
-        }
-        // 3) ensemble selection
-        let (con, best) = cands
-            .into_iter()
-            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
-            .unwrap();
-        println!("  -> winner: {} ({con:.3})\n", best.model);
-        final_answer.extend(best.tokens);
+    // serve a small trickle so the scheduler sees realistic conditions
+    let mut svc = env.service(baselines::pice("llama70b-sim"), ServeCfg::default())
+        .map_err(|e| e.to_string())?;
+    let mut handles: Vec<RequestHandle> = Vec::new();
+    for (i, qid) in questions.iter().enumerate() {
+        let arrival = i as f64 * 2.0;
+        svc.pump_until(arrival).map_err(|e| e.to_string())?;
+        handles.push(svc.submit(*qid, arrival).map_err(|e| e.to_string())?);
     }
-    println!("final progressive answer: {}", tok.decode_content(&final_answer));
+    svc.pump_all().map_err(|e| e.to_string())?;
+
+    // walk the streams; show the first session that went progressive
+    let mut streams: Vec<Vec<ResponseEvent>> = Vec::new();
+    for h in &handles {
+        streams.push(svc.drain(h));
+    }
+    let traces = svc.finish().map_err(|e| e.to_string())?;
+
+    let Some(star) = traces.iter().find(|t| t.mode == Mode::Progressive) else {
+        println!(
+            "(no request went progressive under this workload — \
+             {} served, all full answers)",
+            traces.len()
+        );
+        return Ok(());
+    };
+    let q = corpus.get(star.question_id).ok_or("question")?;
+    println!("Q: {}\n", env.tok.decode(&q.question));
+    println!("reference: {}\n", env.tok.decode_content(&q.answer_tokens()));
+
+    println!("progressive delivery for request {} (sketch level {}):", star.rid, star.sketch_level);
+    for ev in &streams[star.rid] {
+        let dt = ev.t - star.arrival;
+        match &ev.kind {
+            ResponseEventKind::Admitted { mode } => println!(
+                "  +{dt:6.2}s admitted ({mode:?}, predicted {} sim tokens)",
+                star.predicted_len
+            ),
+            ResponseEventKind::SketchReady { text } => {
+                println!("  +{dt:6.2}s cloud sketch : {text}")
+            }
+            ResponseEventKind::ExpansionChunk { slot, text } => {
+                println!("  +{dt:6.2}s expansion #{slot}: {text}")
+            }
+            ResponseEventKind::Final { trace } => println!(
+                "  +{dt:6.2}s FINAL (winner {}, confidence {:.2}, {} parallel lanes)",
+                trace.winner_model,
+                trace.confidence,
+                trace.parallelism.max(1)
+            ),
+            ResponseEventKind::Rejected { reason } => println!("  +{dt:6.2}s rejected: {reason}"),
+        }
+    }
+    println!("\nfinal progressive answer: {}", env.tok.decode_content(&star.answer));
+    if let (Some(ttfs), latency) = (star.ttfs(), star.latency()) {
+        println!(
+            "sketch streamed after {ttfs:.2} sim-s of a {latency:.2} sim-s response \
+             ({:.0}% early)",
+            100.0 * (1.0 - ttfs / latency.max(1e-9))
+        );
+    }
+    println!(
+        "\nserved {} requests total, {} progressive",
+        traces.len(),
+        traces.iter().filter(|t| t.mode == Mode::Progressive).count()
+    );
     Ok(())
 }

@@ -1,48 +1,76 @@
-//! Quickstart: load one picoLM variant via the PJRT runtime and answer a
-//! benchmark question end-to-end (prefill -> KV-cached decode -> text).
+//! Quickstart: one request end-to-end through the online serving API —
+//! submit, stream the progressive response events, read the final trace.
+//!
+//! Runs against the real PJRT picoLM artifacts when present, otherwise the
+//! deterministic surrogate backend (so `PICE_BACKEND=surrogate cargo run
+//! --release --example quickstart` works in any environment):
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
-use anyhow::Result;
-use pice::corpus::Corpus;
-use pice::runtime::{Generator, LoadedModel, RuntimeHandle, SamplingParams};
-use pice::sketch::Prompts;
-use pice::tokenizer::Tokenizer;
+use pice::baselines;
+use pice::scenario::Env;
+use pice::serve::{ResponseEventKind, ServeCfg};
 
-fn main() -> Result<()> {
-    let art = pice::artifacts_dir();
-    let tok = Tokenizer::from_file(&art.join("vocab.json")).map_err(anyhow::Error::msg)?;
-    let corpus =
-        Corpus::from_file(&art.join("corpus.json"), &tok).map_err(anyhow::Error::msg)?;
-
-    let rt = RuntimeHandle::cpu()?;
-    let model = LoadedModel::load(rt, &art.join("models/qwen7b-sim"))?;
+fn main() -> Result<(), String> {
+    let mut env = Env::load()?;
     println!(
-        "loaded {} — d_model={} layers={} params={}",
-        model.art.name, model.art.d_model, model.art.n_layers, model.art.n_params
+        "backend: {}\n",
+        if env.real { "REAL (PJRT picoLM)" } else { "surrogate" }
     );
-
+    let corpus = env.corpus.clone();
     let q = corpus.eval_questions()[0];
-    println!("\nQ: {}", tok.decode(&q.question));
+    let qid = q.id;
+    println!("Q: {}\n", env.tok.decode(&q.question));
+    let reference = env.tok.decode_content(&q.answer_tokens());
 
-    let gen = Generator::new(&model, tok.specials.eos);
-    let t0 = std::time::Instant::now();
-    let out = gen.generate(
-        &Prompts::full_answer(&tok, &q.question),
-        &SamplingParams { max_tokens: 80, ..Default::default() },
-    )?;
-    let dt = t0.elapsed();
+    // open a serving session: one request, arriving at t=0
+    let mut svc = env.service(baselines::pice("llama70b-sim"), ServeCfg::default())
+        .map_err(|e| e.to_string())?;
+    let h = svc.submit(qid, 0.0).map_err(|e| e.to_string())?;
+    svc.pump_all().map_err(|e| e.to_string())?;
 
-    println!("A: {}", tok.decode_content(&out.tokens));
-    println!(
-        "\n{} tokens in {:.0} ms ({:.0} tok/s), mean logp {:.2}",
-        out.tokens.len(),
-        dt.as_secs_f64() * 1e3,
-        out.tokens.len() as f64 / dt.as_secs_f64(),
-        out.logps.iter().sum::<f64>() / out.logps.len().max(1) as f64
+    println!("response event stream (simulated time):");
+    let mut final_trace = None;
+    while let Some(ev) = svc.poll(&h) {
+        match ev.kind {
+            ResponseEventKind::Admitted { mode } => {
+                println!("  [t={:6.2}s] admitted, mode {mode:?}", ev.t)
+            }
+            ResponseEventKind::SketchReady { text } => {
+                println!("  [t={:6.2}s] sketch ready: {text}", ev.t)
+            }
+            ResponseEventKind::ExpansionChunk { slot, text } => {
+                println!("  [t={:6.2}s] expansion #{slot}: {text}", ev.t)
+            }
+            ResponseEventKind::Final { trace } => {
+                println!("  [t={:6.2}s] final answer selected", ev.t);
+                final_trace = Some(trace);
+            }
+            ResponseEventKind::Rejected { reason } => {
+                println!("  [t={:6.2}s] rejected: {reason}", ev.t)
+            }
+        }
+    }
+    let traces = svc.finish().map_err(|e| e.to_string())?;
+    let t = final_trace.or_else(|| traces.into_iter().next()).ok_or("no trace")?;
+
+    println!("\nA: {}", env.tok.decode_content(&t.answer));
+    match t.ttfs() {
+        Some(ttfs) => println!(
+            "\nfirst sketch after {ttfs:.2} sim-s, final after {:.2} sim-s \
+             (early response at {:.0}% of e2e latency)",
+            t.latency(),
+            100.0 * ttfs / t.latency().max(1e-9)
+        ),
+        None => println!("\nserved as a full answer in {:.2} sim-s", t.latency()),
+    }
+    println!("winner: {} | cloud {} + edge {} sim tokens",
+        if t.winner_model.is_empty() { "cloud".to_string() } else { t.winner_model.clone() },
+        t.cloud_tokens,
+        t.edge_tokens
     );
-    println!("reference: {}", tok.decode_content(&q.answer_tokens()));
+    println!("reference: {reference}");
     Ok(())
 }

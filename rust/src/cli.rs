@@ -59,6 +59,42 @@ impl Args {
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// Strict validation: every parsed `--key value` must name a known
+    /// option and every bare `--flag` a known flag. Typos error out with
+    /// the valid set listed instead of being silently ignored; a known flag
+    /// given a value (or a known option missing one) gets a targeted
+    /// message.
+    pub fn validate(&self, options: &[&str], flags: &[&str]) -> Result<(), String> {
+        let valid_list = || {
+            let mut v: Vec<String> = options.iter().map(|o| format!("--{o} <value>")).collect();
+            v.extend(flags.iter().map(|f| format!("--{f}")));
+            if v.is_empty() {
+                "none".to_string()
+            } else {
+                v.join(", ")
+            }
+        };
+        for k in self.options.keys() {
+            if options.contains(&k.as_str()) {
+                continue;
+            }
+            if flags.contains(&k.as_str()) {
+                return Err(format!("flag --{k} does not take a value"));
+            }
+            return Err(format!("unknown option --{k}; valid options: {}", valid_list()));
+        }
+        for f in &self.flags {
+            if flags.contains(&f.as_str()) {
+                continue;
+            }
+            if options.contains(&f.as_str()) {
+                return Err(format!("option --{f} requires a value"));
+            }
+            return Err(format!("unknown flag --{f}; valid options: {}", valid_list()));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -100,5 +136,40 @@ mod tests {
         let a = parse("");
         assert!(a.subcommand.is_none());
         assert_eq!(a.opt_f64("rpm", 42.0), 42.0);
+    }
+
+    #[test]
+    fn validate_accepts_known_names() {
+        let a = parse("serve --rpm 30 --model qwen72b-sim --quiet");
+        assert!(a.validate(&["rpm", "model", "n"], &["quiet"]).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_option_listing_valid_set() {
+        let a = parse("serve --rmp 30");
+        let err = a.validate(&["rpm", "model"], &["quiet"]).unwrap_err();
+        assert!(err.contains("--rmp"), "{err}");
+        assert!(err.contains("--rpm"), "error must list valid options: {err}");
+        assert!(err.contains("--quiet"), "error must list valid flags: {err}");
+    }
+
+    #[test]
+    fn validate_rejects_unknown_flag() {
+        let a = parse("eval --smoek");
+        let err = a.validate(&[], &["smoke"]).unwrap_err();
+        assert!(err.contains("--smoek"), "{err}");
+        assert!(err.contains("--smoke"), "{err}");
+    }
+
+    #[test]
+    fn validate_flags_option_value_mismatches() {
+        // a known flag handed a value (greedy parse binds it)
+        let a = parse("serve --quiet yes");
+        let err = a.validate(&["rpm"], &["quiet"]).unwrap_err();
+        assert!(err.contains("does not take a value"), "{err}");
+        // a known option left bare
+        let a = parse("serve --rpm");
+        let err = a.validate(&["rpm"], &["quiet"]).unwrap_err();
+        assert!(err.contains("requires a value"), "{err}");
     }
 }

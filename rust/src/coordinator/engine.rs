@@ -3,12 +3,29 @@
 //! [`TextBackend`]) while *time advances virtually* per the calibrated
 //! device/network models (DESIGN.md §2).
 //!
-//! One engine runs one scenario (cloud model, N edges, workload, policy) and
-//! produces per-request traces. The baselines (cloud-only / edge-only /
-//! routing) reuse the same event loop with different admission policies —
-//! exactly how the paper runs its comparisons on a fixed testbed.
+//! One engine runs one scenario (cloud model, N edges, policy) and produces
+//! per-request traces. The baselines (cloud-only / edge-only / routing)
+//! reuse the same event loop with different admission policies — exactly
+//! how the paper runs its comparisons on a fixed testbed.
+//!
+//! ## Step-driven core
+//!
+//! The engine is **re-entrant**: requests enter via [`Engine::submit`] while
+//! earlier ones are still in flight, and the event queue drains under caller
+//! control ([`Engine::pump_one`] / [`Engine::pump_until`] /
+//! [`Engine::pump_all`]). [`Engine::run`] is the thin closed-loop driver
+//! (submit every workload arrival, drain to quiescence) and is bit-identical
+//! to the pre-refactor monolithic loop. Submissions injected mid-run order
+//! ahead of same-instant internal events ([`crate::simclock::FIRST_CLASS`]),
+//! so open-loop driving through [`crate::serve::PiceService`] reproduces the
+//! closed-loop traces byte for byte.
+//!
+//! With streaming enabled ([`Engine::enable_events`]) the core additionally
+//! emits per-request [`ResponseEvent`]s — `Admitted`, `SketchReady`,
+//! `ExpansionChunk`, `Final` — at the simulated instant each becomes client
+//! visible; the sink is off by default so batch runs pay nothing for it.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use super::backend::{GenRequest, TextBackend};
@@ -23,9 +40,10 @@ use crate::metrics::{Mode, RequestTrace};
 use crate::models::{ModelInfo, Registry};
 use crate::network::Link;
 use crate::parallel::{batch_wall, plan_batch, EdgeCostModel};
-use crate::profiler::OfflineProfile;
+use crate::profiler::{LatencyFit, OfflineProfile};
 use crate::runtime::SamplingParams;
-use crate::simclock::{EventQueue, SimTime};
+use crate::serve::{ResponseEvent, ResponseEventKind};
+use crate::simclock::{EventQueue, FIRST_CLASS, SimTime};
 use crate::sketch::{compress, split_sketch, Prompts};
 use crate::tokenizer::Tokenizer;
 use crate::util::rng::Rng;
@@ -155,6 +173,11 @@ struct Pending {
     /// plain 0.0 sentinel would let a later replica pull overwrite a
     /// legitimate t=0 start)
     edge_start: Option<SimTime>,
+    /// sim time the sketch finished on the cloud (progressive only) —
+    /// the client-visible time-to-first-sketch instant
+    sketch_ready: Option<SimTime>,
+    /// sim time the first edge expansion chunk was delivered
+    first_expansion: Option<SimTime>,
     cloud_tokens: usize,
     edge_tokens: usize,
     sketch: Arc<[u32]>,
@@ -163,6 +186,120 @@ struct Pending {
     replicas_out: usize,
     parallelism: usize,
     done: bool,
+}
+
+/// The step-driven loop state: everything the monolithic `run()` used to
+/// keep in locals, lifted so the event queue can drain incrementally while
+/// new requests keep arriving.
+struct Core {
+    rng: Rng,
+    q: EventQueue<Ev>,
+    pend: Vec<Pending>,
+    traces: Vec<Option<RequestTrace>>,
+    /// interned cloud-model name (refcount bumps instead of String allocs)
+    cloud_model: Arc<str>,
+    /// interned SLM names, ascending capability
+    slm_names: Vec<Arc<str>>,
+    edges: Vec<EdgeState>,
+    /// edge-only/routing: per-edge FIFO of full-answer jobs
+    edge_fifo: Vec<VecDeque<usize>>,
+    cloud_pending: VecDeque<(usize, CloudJobKind)>,
+    cloud_inflight: usize,
+    cloud_slots: usize,
+    f_cloud: LatencyFit,
+    jobq: MultiListQueue,
+    enqueue_attempts: HashMap<usize, usize>,
+    /// runtime monitor: EWMA of achieved edge expansion parallelism,
+    /// fed back into the dynamic scheduler's Eq. 2 estimate
+    ewma_parallelism: f64,
+    /// edge-only feasibility verdict, precomputed (the paper places the
+    /// *cloud* model on edges); Some(msg) = every submit/run fails with OOM
+    edge_oom: Option<String>,
+    /// streaming sink: Some = emit client-visible [`ResponseEvent`]s
+    /// (enabled by [`Engine::enable_events`]); None = zero-cost
+    events: Option<Vec<ResponseEvent>>,
+}
+
+impl Core {
+    /// Map a selection outcome back onto its interned name.
+    fn intern(&self, name: &str) -> Arc<str> {
+        self.slm_names.iter().find(|n| ***n == *name).cloned().unwrap_or_else(|| {
+            if *self.cloud_model == *name {
+                self.cloud_model.clone()
+            } else {
+                Arc::from(name)
+            }
+        })
+    }
+}
+
+fn make_core(
+    cfg: &EngineCfg,
+    registry: &Registry,
+    cluster: &Cluster,
+    profile: &OfflineProfile,
+) -> Core {
+    // Interned model names, hoisted out of the event loop: per-arrival and
+    // per-sentence GenRequest/Candidate construction clones an Arc<str>
+    // (refcount bump) instead of allocating a String.
+    let cloud_model: Arc<str> = Arc::from(cfg.cloud_model.as_str());
+    let mut slms = registry.slms_for(&cfg.cloud_model);
+    // total_cmp: a degenerate fit (NaN params) must order, not panic
+    slms.sort_by(|a, b| a.sim_params_b().total_cmp(&b.sim_params_b()));
+    let slm_names: Vec<Arc<str>> = slms.iter().map(|m| Arc::from(m.name.as_str())).collect();
+    let edges: Vec<EdgeState> = cluster
+        .edges
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| EdgeState {
+            spec: spec.clone(),
+            // round-robin initial SLM placement (paper: one model per device)
+            current_model: if matches!(cfg.policy, Policy::EdgeOnly) || slm_names.is_empty() {
+                cloud_model.clone()
+            } else {
+                slm_names[i % slm_names.len()].clone()
+            },
+            busy: false,
+        })
+        .collect();
+
+    let cloud_info = registry.get(&cfg.cloud_model).expect("cloud model in registry");
+    let cloud_slots = cluster.cloud.max_batch(cloud_info, 1000).max(1);
+    let f_cloud = profile.f(&cluster.cloud.name, &cfg.cloud_model).expect("cloud model profiled");
+
+    let scale = cfg.sim_token_scale;
+    // PICE_SINGLE_FIFO=1 ablates Algorithm 1 into one FIFO list
+    let bounds: Vec<usize> = if std::env::var("PICE_SINGLE_FIFO").as_deref() == Ok("1") {
+        vec![]
+    } else {
+        [40.0, 80.0, 120.0].iter().map(|b| (b * scale) as usize).collect()
+    };
+    let edge_oom = if matches!(cfg.policy, Policy::EdgeOnly) {
+        let fits = cluster.edges.first().map(|e| e.fits(cloud_info)).unwrap_or(false);
+        (!fits).then(|| format!("{} does not fit a Jetson edge", cfg.cloud_model))
+    } else {
+        None
+    };
+    let n_edges = edges.len();
+    Core {
+        rng: Rng::new(cfg.seed),
+        q: EventQueue::new(),
+        pend: Vec::new(),
+        traces: Vec::new(),
+        cloud_model,
+        slm_names,
+        edges,
+        edge_fifo: (0..n_edges).map(|_| VecDeque::new()).collect(),
+        cloud_pending: VecDeque::new(),
+        cloud_inflight: 0,
+        cloud_slots,
+        f_cloud,
+        jobq: MultiListQueue::new(bounds, cfg.queue_cap),
+        enqueue_attempts: HashMap::new(),
+        ewma_parallelism: 1.0,
+        edge_oom,
+        events: None,
+    }
 }
 
 pub struct Engine<'a> {
@@ -174,6 +311,7 @@ pub struct Engine<'a> {
     cluster: Cluster,
     profile: OfflineProfile,
     cost_coeff: f64,
+    core: Core,
 }
 
 impl<'a> Engine<'a> {
@@ -211,678 +349,754 @@ impl<'a> Engine<'a> {
             })
             .fold(f64::INFINITY, f64::min)
             .min(10.0);
-        Ok(Engine { cfg, corpus, tok, registry, backend, cluster, profile, cost_coeff })
+        let core = make_core(&cfg, registry, &cluster, &profile);
+        Ok(Engine { cfg, corpus, tok, registry, backend, cluster, profile, cost_coeff, core })
     }
 
     /// SLMs deployable for this scenario, ascending capability.
-    fn slms(&self) -> Vec<&ModelInfo> {
-        let mut v = self.registry.slms_for(&self.cfg.cloud_model);
+    fn slms(&self) -> Vec<&'a ModelInfo> {
+        let reg: &'a Registry = self.registry;
+        let mut v = reg.slms_for(&self.cfg.cloud_model);
         // total_cmp: a degenerate fit (NaN params) must order, not panic
         v.sort_by(|a, b| a.sim_params_b().total_cmp(&b.sim_params_b()));
         v
     }
 
-    fn f_cloud(&self) -> crate::profiler::LatencyFit {
-        self.profile
-            .f(&self.cluster.cloud.name, &self.cfg.cloud_model)
-            .expect("cloud model profiled")
+    fn cloud_info(&self) -> &'a ModelInfo {
+        let reg: &'a Registry = self.registry;
+        reg.get(&self.cfg.cloud_model).expect("cloud model in registry")
+    }
+
+    fn model_info(&self, name: &str) -> &'a ModelInfo {
+        let reg: &'a Registry = self.registry;
+        reg.get(name).expect("model in registry")
     }
 
     /// The LLM's response-length perception: reference length x the model's
     /// Table-I bias x noise (the 32B model underestimates — §V-B).
-    fn predict_len(&self, qid: usize, rng: &mut Rng) -> usize {
-        let q = self.corpus.get(qid).expect("qid");
-        let info = self.registry.get(&self.cfg.cloud_model).unwrap();
-        let noise = (rng.normal() * 0.08).exp();
-        ((q.answer_len() as f64) * self.cfg.sim_token_scale * info.length_pred_bias * noise)
-            .round()
-            .max(1.0) as usize
+    fn predict_len(&mut self, qid: usize) -> usize {
+        let answer_len = self.corpus.get(qid).expect("qid").answer_len() as f64;
+        let bias = self.cloud_info().length_pred_bias;
+        let noise = (self.core.rng.normal() * 0.08).exp();
+        (answer_len * self.cfg.sim_token_scale * bias * noise).round().max(1.0) as usize
     }
 
-    /// Run the workload to completion; returns per-request traces.
+    // -- step-driven serving API --------------------------------------------
+
+    /// Current simulated time.
+    pub fn now(&self) -> SimTime {
+        self.core.q.now()
+    }
+
+    /// True when no scheduled work remains.
+    pub fn is_idle(&self) -> bool {
+        self.core.q.is_empty()
+    }
+
+    /// Requests submitted so far (accepted submissions only).
+    pub fn submitted(&self) -> usize {
+        self.core.pend.len()
+    }
+
+    /// Turn on the streaming [`ResponseEvent`] sink (off by default — batch
+    /// drivers pay nothing for the serving-event machinery).
+    pub fn enable_events(&mut self) {
+        if self.core.events.is_none() {
+            self.core.events = Some(Vec::new());
+        }
+    }
+
+    /// Drain every event emitted since the last call (empty when the sink
+    /// is disabled). Events are in emission order: per request, timestamps
+    /// are monotone and the terminal `Final` comes last.
+    pub fn take_events(&mut self) -> Vec<ResponseEvent> {
+        self.core.events.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    /// Submit one request arriving at simulated time `arrival` (clamped to
+    /// `now()` if in the past) and return its request id. Re-entrant: call
+    /// while earlier requests are mid-flight. A submission at time t orders
+    /// ahead of every already-scheduled internal event at t, so interleaved
+    /// submit/pump driving is bit-identical to scheduling all arrivals
+    /// up-front (the open-loop determinism guarantee).
+    pub fn submit(&mut self, question_id: usize, arrival: SimTime) -> Result<usize, RunError> {
+        if let Some(msg) = &self.core.edge_oom {
+            return Err(RunError::Oom(msg.clone()));
+        }
+        // the trace must record the *effective* arrival: a past timestamp
+        // enters the system now, not retroactively (latency/TTFS would
+        // otherwise count phantom wait)
+        let arrival = arrival.max(self.core.q.now());
+        let qq = self
+            .corpus
+            .get(question_id)
+            .ok_or_else(|| RunError::Backend(format!("unknown question id {question_id}")))?;
+        let question_toks: Arc<[u32]> = Arc::from(qq.question.as_slice());
+        let category = qq.category.clone();
+        let rid = self.core.pend.len();
+        self.core.pend.push(Pending {
+            question_id,
+            question_toks,
+            category,
+            arrival,
+            predicted_len: 0,
+            mode: Mode::CloudFull,
+            sketch_level: 0,
+            cloud_start: 0.0,
+            cloud_done: 0.0,
+            edge_start: None,
+            sketch_ready: None,
+            first_expansion: None,
+            cloud_tokens: 0,
+            edge_tokens: 0,
+            sketch: Vec::new().into(),
+            expected_sketch_len: 0,
+            candidates: Vec::new(),
+            replicas_out: 0,
+            parallelism: 0,
+            done: false,
+        });
+        self.core.traces.push(None);
+        self.core.q.schedule_class(arrival, FIRST_CLASS, Ev::Arrive(rid));
+        Ok(rid)
+    }
+
+    /// Process the next scheduled event; `Ok(false)` when the queue is idle.
+    pub fn pump_one(&mut self) -> Result<bool, RunError> {
+        let Some((now, ev)) = self.core.q.pop() else {
+            return Ok(false);
+        };
+        match ev {
+            Ev::Arrive(rid) => self.ev_arrive(now, rid),
+            Ev::CloudAdmit => self.ev_cloud_admit(now)?,
+            Ev::CloudDone { rid, kind } => self.ev_cloud_done(now, rid, kind),
+            Ev::JobArriveAtQueue { rid } => self.ev_job_arrive(now, rid),
+            Ev::EdgePull { eid } => self.ev_edge_pull(now, eid)?,
+            Ev::EdgeDone { eid, work } => self.ev_edge_done(now, eid, work),
+        }
+        Ok(true)
+    }
+
+    /// Drain every event scheduled *strictly before* `horizon` (the clock
+    /// ends at the last processed event, not at `horizon`). Strict so a
+    /// caller can submit an arrival at `horizon` *before* pumping past it —
+    /// the order the closed-loop driver would have produced.
+    pub fn pump_until(&mut self, horizon: SimTime) -> Result<(), RunError> {
+        while let Some(t) = self.core.q.next_time() {
+            if t >= horizon {
+                break;
+            }
+            self.pump_one()?;
+        }
+        Ok(())
+    }
+
+    /// Drain the event queue to quiescence.
+    pub fn pump_all(&mut self) -> Result<(), RunError> {
+        while self.pump_one()? {}
+        Ok(())
+    }
+
+    /// Take the completed traces (request-id order), leaving slots for any
+    /// still-in-flight requests untouched.
+    pub fn take_traces(&mut self) -> Vec<RequestTrace> {
+        self.core.traces.iter_mut().filter_map(Option::take).collect()
+    }
+
+    /// Reset the loop state (fresh RNG, queues, placements) while keeping
+    /// the profile/cluster. [`Engine::run`] calls this so repeated runs are
+    /// independent, exactly like the pre-refactor per-run locals.
+    pub fn reset(&mut self) {
+        let events_on = self.core.events.is_some();
+        self.core = make_core(&self.cfg, self.registry, &self.cluster, &self.profile);
+        if events_on {
+            self.core.events = Some(Vec::new());
+        }
+    }
+
+    /// Run the workload to completion; returns per-request traces. This is
+    /// the closed-loop driver over the step core: submit every arrival,
+    /// drain the queue.
     pub fn run(&mut self, workload: &Workload) -> Result<Vec<RequestTrace>, RunError> {
-        // Edge-only feasibility: the paper places the *cloud* model on edges.
-        if matches!(self.cfg.policy, Policy::EdgeOnly) {
-            let info = self.registry.get(&self.cfg.cloud_model).unwrap();
-            let fits = self.cluster.edges.first().map(|e| e.fits(info)).unwrap_or(false);
-            if !fits {
-                return Err(RunError::Oom(format!(
-                    "{} does not fit a Jetson edge",
-                    self.cfg.cloud_model
-                )));
+        // a pristine core (no submissions, nothing pumped) is already the
+        // state reset() would rebuild — don't construct it twice per run
+        if !(self.core.pend.is_empty() && self.core.q.is_empty()) {
+            self.reset();
+        }
+        // infeasible placements fail up front, even for empty workloads
+        if let Some(msg) = &self.core.edge_oom {
+            return Err(RunError::Oom(msg.clone()));
+        }
+        for r in &workload.requests {
+            self.submit(r.question_id, r.arrival_s)?;
+        }
+        self.pump_all()?;
+        Ok(self.take_traces())
+    }
+
+    // -- event handlers ------------------------------------------------------
+
+    fn emit(&mut self, t: SimTime, rid: usize, kind: ResponseEventKind) {
+        if let Some(events) = self.core.events.as_mut() {
+            events.push(ResponseEvent { rid, t, kind });
+        }
+    }
+
+    fn ev_arrive(&mut self, now: SimTime, rid: usize) {
+        let qid = self.core.pend[rid].question_id;
+        let predicted = self.predict_len(qid);
+        self.core.pend[rid].predicted_len = predicted;
+        let policy = self.cfg.policy.clone();
+        match &policy {
+            Policy::CloudOnly => {
+                self.core.cloud_pending.push_back((rid, CloudJobKind::Full));
+                self.core.q.schedule(now, Ev::CloudAdmit);
+            }
+            Policy::EdgeOnly => {
+                self.core.pend[rid].mode = Mode::EdgeFull;
+                let eid = (0..self.core.edges.len())
+                    .min_by_key(|&i| self.core.edge_fifo[i].len())
+                    .unwrap_or(0);
+                self.core.edge_fifo[eid].push_back(rid);
+                self.core.q.schedule(now, Ev::EdgePull { eid });
+            }
+            Policy::Routing { difficulty_threshold } => {
+                // difficulty proxy: predicted length + jitter (an imperfect
+                // router, as in the paper's critique). The multiplier is
+                // clamped at 0 to keep the proxy in its valid non-negative
+                // domain — an extreme draw still misroutes to the edge (that
+                // inaccuracy is the router's modeled flaw), but it can no
+                // longer go *negative*.
+                let difficulty =
+                    predicted as f64 * (1.0 + self.core.rng.normal() * 0.25).max(0.0);
+                if difficulty > *difficulty_threshold {
+                    self.core.cloud_pending.push_back((rid, CloudJobKind::Full));
+                    self.core.q.schedule(now, Ev::CloudAdmit);
+                } else {
+                    self.core.pend[rid].mode = Mode::EdgeFull;
+                    let eid = (0..self.core.edges.len())
+                        .min_by_key(|&i| self.core.edge_fifo[i].len())
+                        .unwrap_or(0);
+                    self.core.edge_fifo[eid].push_back(rid);
+                    self.core.q.schedule(now, Ev::EdgePull { eid });
+                }
+            }
+            Policy::Pice => {
+                let slms = self.slms();
+                let best_cap = slms.iter().map(|m| m.mmlu).fold(0.0, f64::max);
+                let f_cloud = self.core.f_cloud;
+                // Eq. 2 backlog: Σ_j c·f(l_j) over queued jobs — the affine
+                // fit is summed per job, so each queued job carries its own
+                // intercept
+                let backlog_s = self.cost_coeff * self.core.jobq.backlog_cost(&f_cloud);
+                let inp = SchedInput {
+                    predicted_len: predicted,
+                    f_cloud,
+                    cost_coeff: self.cost_coeff,
+                    transfer_s: |n| 0.02 + n as f64 * 5e-7,
+                    backlog_s,
+                    n_edges: self.core.edges.len(),
+                    best_slm_capability: best_cap,
+                    parallel_hint: self.core.ewma_parallelism,
+                };
+                let d = self.cfg.scheduler.decide(&inp);
+                if d.mode == SchedMode::Full && predicted >= self.cfg.scheduler.min_progressive_len
+                {
+                    crate::debug!(
+                        "rid={rid} FULL pred={predicted} backlog={backlog_s:.1} hint={:.1} e2e_l3={:.1} budget={:.1}",
+                        self.core.ewma_parallelism,
+                        self.cfg.scheduler.e2e_estimate(&inp, self.cfg.scheduler.levels[3]),
+                        f_cloud.eval(predicted)
+                    );
+                }
+                if d.mode == SchedMode::Progressive && !slms.is_empty() {
+                    self.core.pend[rid].mode = Mode::Progressive;
+                    self.core.pend[rid].sketch_level = d.level.level;
+                    self.core.pend[rid].expected_sketch_len = d.expected_sketch_len;
+                    self.core
+                        .cloud_pending
+                        .push_back((rid, CloudJobKind::Sketch { level: d.level.level }));
+                } else {
+                    self.core.cloud_pending.push_back((rid, CloudJobKind::Full));
+                }
+                self.core.q.schedule(now, Ev::CloudAdmit);
             }
         }
+        if self.core.events.is_some() {
+            let mode = self.core.pend[rid].mode;
+            self.emit(now, rid, ResponseEventKind::Admitted { mode });
+        }
+    }
 
-        let mut rng = Rng::new(self.cfg.seed);
-        // Interned model names, hoisted out of the event loop: per-arrival
-        // and per-sentence GenRequest/Candidate construction clones an
-        // Arc<str> (refcount bump) instead of allocating a String.
-        let cloud_model: Arc<str> = Arc::from(self.cfg.cloud_model.as_str());
-        let slm_names: Vec<Arc<str>> =
-            self.slms().iter().map(|m| Arc::from(m.name.as_str())).collect();
-        // map a selection outcome back onto its interned name
-        let intern = |name: &str| -> Arc<str> {
-            slm_names
-                .iter()
-                .find(|n| ***n == *name)
-                .cloned()
-                .unwrap_or_else(|| {
-                    if *cloud_model == *name {
-                        cloud_model.clone()
-                    } else {
-                        Arc::from(name)
-                    }
-                })
-        };
-        let mut edges: Vec<EdgeState> = self
-            .cluster
-            .edges
+    fn ev_cloud_admit(&mut self, now: SimTime) -> Result<(), RunError> {
+        // Drain every job admissible at this timestamp, then issue all of
+        // their generations as ONE backend batch — the parallel/lockstep
+        // backends shard it across workers while results stay index-aligned
+        // with the admission order.
+        let mut admitted: Vec<(usize, CloudJobKind)> = Vec::new();
+        while self.core.cloud_inflight + admitted.len() < self.core.cloud_slots {
+            let Some(j) = self.core.cloud_pending.pop_front() else { break };
+            admitted.push(j);
+        }
+        if admitted.is_empty() {
+            return Ok(());
+        }
+        let scale = self.cfg.sim_token_scale;
+        let real_cap = ((self.cfg.cloud_max_tokens as f64 / scale).round() as usize).max(4);
+        let cloud_model = self.core.cloud_model.clone();
+        let reqs: Vec<GenRequest> = admitted
             .iter()
-            .map(|spec| EdgeState {
-                spec: spec.clone(),
-                // round-robin initial SLM placement (paper: one model per device)
-                current_model: if matches!(self.cfg.policy, Policy::EdgeOnly)
-                    || slm_names.is_empty()
-                {
-                    cloud_model.clone()
-                } else {
-                    slm_names[0].clone()
-                },
-                busy: false,
+            .map(|(rid, kind)| {
+                let question = &self.core.pend[*rid].question_toks;
+                let (prompt, max_tokens) = match kind {
+                    CloudJobKind::Full => (Prompts::full_answer(self.tok, question), real_cap),
+                    CloudJobKind::Sketch { .. } => (Prompts::sketch(self.tok, question), 60),
+                };
+                GenRequest {
+                    model: cloud_model.clone(),
+                    prompt: prompt.into(),
+                    sp: SamplingParams {
+                        max_tokens,
+                        seed: self.cfg.seed ^ *rid as u64,
+                        ..Default::default()
+                    },
+                }
             })
             .collect();
-        for (i, e) in edges.iter_mut().enumerate() {
-            if !matches!(self.cfg.policy, Policy::EdgeOnly) && !slm_names.is_empty() {
-                e.current_model = slm_names[i % slm_names.len()].clone();
+        let outs = self.backend.generate_batch(&reqs);
+        // every member of this admission batch runs concurrently with the
+        // jobs already in flight AND with each other, so all are priced at
+        // the final concurrent batch size — not the ascending sizes an
+        // in-loop `inflight + 1` would see
+        let b = self.core.cloud_inflight + admitted.len();
+        let cloud_info = self.cloud_info();
+        for (k, ((rid, kind), out)) in admitted.into_iter().zip(outs).enumerate() {
+            let out = out.map_err(RunError::Backend)?;
+            self.core.pend[rid].cloud_start = now;
+            let prompt_sim = (reqs[k].prompt.len() as f64 * scale) as usize;
+            let dur = match &kind {
+                CloudJobKind::Full => {
+                    let n_sim = (out.tokens.len() as f64 * scale) as usize;
+                    self.core.pend[rid].cloud_tokens = n_sim;
+                    // final answer = cloud output minus <eos>
+                    let mut ans = out.tokens;
+                    if ans.last() == Some(&self.tok.specials.eos) {
+                        ans.pop();
+                    }
+                    self.core.pend[rid].candidates = vec![Candidate {
+                        model: cloud_model.clone(),
+                        tokens: ans,
+                        logps: out.logps,
+                    }];
+                    self.cluster.cloud.prefill_time_s(cloud_info, prompt_sim, b)
+                        + self.cluster.cloud.gen_time_s(cloud_info, n_sim, b)
+                }
+                CloudJobKind::Sketch { level } => {
+                    let mut sk = out.tokens;
+                    if sk.last() == Some(&self.tok.specials.eos) {
+                        sk.pop();
+                    }
+                    // apply the level compression per sentence
+                    let lv = self
+                        .cfg
+                        .scheduler
+                        .levels
+                        .iter()
+                        .copied()
+                        .find(|l| l.level == *level)
+                        .unwrap_or(self.cfg.scheduler.levels[1]);
+                    let keep = self
+                        .cfg
+                        .sketch_keep_frac_override
+                        .as_ref()
+                        .and_then(|m| m.get(&self.core.pend[rid].category).copied());
+                    let sents = split_sketch(&sk, self.tok.specials.semicolon);
+                    let mut out_sk: Vec<u32> = Vec::new();
+                    for (i, s) in sents.iter().enumerate() {
+                        if i > 0 {
+                            out_sk.push(self.tok.specials.semicolon);
+                        }
+                        let lvl = match keep {
+                            Some(kf) => {
+                                crate::sketch::SketchLevel { level: lv.level, keep_frac: kf }
+                            }
+                            None => lv,
+                        };
+                        out_sk.extend(compress(s, lvl));
+                    }
+                    let n_sim = (out_sk.len() as f64 * scale) as usize;
+                    self.core.pend[rid].cloud_tokens = n_sim;
+                    self.core.pend[rid].sketch = out_sk.into();
+                    self.cluster.cloud.prefill_time_s(cloud_info, prompt_sim, b)
+                        + self.cluster.cloud.gen_time_s(cloud_info, n_sim, b)
+                }
+            };
+            self.core.cloud_inflight += 1;
+            self.core.q.schedule(now + dur, Ev::CloudDone { rid, kind });
+        }
+        Ok(())
+    }
+
+    fn ev_cloud_done(&mut self, now: SimTime, rid: usize, kind: CloudJobKind) {
+        self.core.cloud_inflight = self.core.cloud_inflight.saturating_sub(1);
+        self.core.pend[rid].cloud_done = now;
+        self.core.q.schedule(now, Ev::CloudAdmit);
+        match kind {
+            CloudJobKind::Full => {
+                self.finalize(rid, now);
+            }
+            CloudJobKind::Sketch { .. } => {
+                // the sketch is the early partial response: client-visible now
+                self.core.pend[rid].sketch_ready = Some(now);
+                if self.core.events.is_some() {
+                    let text = self.tok.decode_content(&self.core.pend[rid].sketch);
+                    self.emit(now, rid, ResponseEventKind::SketchReady { text });
+                }
+                let delta = self.cfg.link.transfer_tokens_s(
+                    (self.core.pend[rid].sketch.len() as f64 * self.cfg.sim_token_scale) as usize,
+                );
+                self.core.q.schedule(now + delta, Ev::JobArriveAtQueue { rid });
             }
         }
+    }
 
-        let cloud_info = self.registry.get(&self.cfg.cloud_model).unwrap();
-        let cloud_slots = self.cluster.cloud.max_batch(cloud_info, 1000).max(1);
-        let f_cloud = self.f_cloud();
-
-        let mut q: EventQueue<Ev> = EventQueue::new();
-        let mut pend: Vec<Pending> = Vec::with_capacity(workload.requests.len());
-        for r in &workload.requests {
-            let qq = self.corpus.get(r.question_id).expect("qid");
-            pend.push(Pending {
-                question_id: r.question_id,
-                question_toks: Arc::from(qq.question.as_slice()),
-                category: qq.category.clone(),
-                arrival: r.arrival_s,
-                predicted_len: 0,
-                mode: Mode::CloudFull,
-                sketch_level: 0,
-                cloud_start: 0.0,
-                cloud_done: 0.0,
-                edge_start: None,
-                cloud_tokens: 0,
-                edge_tokens: 0,
-                sketch: Vec::new().into(),
-                expected_sketch_len: 0,
-                candidates: Vec::new(),
-                replicas_out: 0,
-                parallelism: 0,
-                done: false,
-            });
-            q.schedule(r.arrival_s, Ev::Arrive(r.rid));
+    fn ev_job_arrive(&mut self, now: SimTime, rid: usize) {
+        let attempts = self.core.enqueue_attempts.get(&rid).copied().unwrap_or(0);
+        if self.core.jobq.len() >= self.cfg.queue_cap && attempts < 5 {
+            // queue full: retry shortly instead of degrading (bounded so
+            // latency can't grow unboundedly)
+            self.core.enqueue_attempts.insert(rid, attempts + 1);
+            self.core.q.schedule_in(2.0, Ev::JobArriveAtQueue { rid });
+            return;
         }
-
-        // runtime monitor: EWMA of achieved edge expansion parallelism,
-        // fed back into the dynamic scheduler's Eq. 2 estimate
-        let mut ewma_parallelism: f64 = 1.0;
-        let mut cloud_pending: VecDeque<(usize, CloudJobKind)> = VecDeque::new();
-        let mut cloud_inflight: usize = 0;
-        let scale = self.cfg.sim_token_scale;
-        // PICE_SINGLE_FIFO=1 ablates Algorithm 1 into one FIFO list
-        let bounds: Vec<usize> = if std::env::var("PICE_SINGLE_FIFO").as_deref() == Ok("1") {
-            vec![]
-        } else {
-            [40.0, 80.0, 120.0].iter().map(|b| (b * scale) as usize).collect()
+        let sents: Vec<Arc<[u32]>> =
+            split_sketch(&self.core.pend[rid].sketch, self.tok.specials.semicolon)
+                .into_iter()
+                .map(Arc::from)
+                .collect();
+        let replicas = self.cfg.ensemble_k.max(1);
+        self.core.pend[rid].replicas_out = replicas;
+        let job = Job {
+            rid,
+            expected_len: self.core.pend[rid].predicted_len,
+            sentences: sents,
+            full_sketch: self.core.pend[rid].sketch.clone(),
+            question: self.core.pend[rid].question_toks.clone(),
+            enqueued_at: now,
+            replicas_left: replicas,
         };
-        let mut jobq = MultiListQueue::new(bounds, self.cfg.queue_cap);
-        let mut enqueue_attempts: std::collections::HashMap<usize, usize> =
-            std::collections::HashMap::new();
-        let mut traces: Vec<Option<RequestTrace>> = (0..pend.len()).map(|_| None).collect();
-        // edge-only/routing: per-edge FIFO of full-answer jobs
-        let mut edge_fifo: Vec<VecDeque<usize>> = (0..edges.len()).map(|_| VecDeque::new()).collect();
-
-        while let Some((now, ev)) = q.pop() {
-            match ev {
-                Ev::Arrive(rid) => {
-                    let predicted = self.predict_len(pend[rid].question_id, &mut rng);
-                    pend[rid].predicted_len = predicted;
-                    match &self.cfg.policy {
-                        Policy::CloudOnly => {
-                            cloud_pending.push_back((rid, CloudJobKind::Full));
-                            q.schedule(now, Ev::CloudAdmit);
-                        }
-                        Policy::EdgeOnly => {
-                            pend[rid].mode = Mode::EdgeFull;
-                            let eid = (0..edges.len())
-                                .min_by_key(|&i| edge_fifo[i].len())
-                                .unwrap_or(0);
-                            edge_fifo[eid].push_back(rid);
-                            q.schedule(now, Ev::EdgePull { eid });
-                        }
-                        Policy::Routing { difficulty_threshold } => {
-                            // difficulty proxy: predicted length + jitter (an
-                            // imperfect router, as in the paper's critique).
-                            // The multiplier is clamped at 0 to keep the
-                            // proxy in its valid non-negative domain — an
-                            // extreme draw still misroutes to the edge
-                            // (that inaccuracy is the router's modeled flaw),
-                            // but it can no longer go *negative*.
-                            let difficulty =
-                                predicted as f64 * (1.0 + rng.normal() * 0.25).max(0.0);
-                            if difficulty > *difficulty_threshold {
-                                cloud_pending.push_back((rid, CloudJobKind::Full));
-                                q.schedule(now, Ev::CloudAdmit);
-                            } else {
-                                pend[rid].mode = Mode::EdgeFull;
-                                let eid = (0..edges.len())
-                                    .min_by_key(|&i| edge_fifo[i].len())
-                                    .unwrap_or(0);
-                                edge_fifo[eid].push_back(rid);
-                                q.schedule(now, Ev::EdgePull { eid });
-                            }
-                        }
-                        Policy::Pice => {
-                            let slms = self.slms();
-                            let best_cap =
-                                slms.iter().map(|m| m.mmlu).fold(0.0, f64::max);
-                            // Eq. 2 backlog: Σ_j c·f(l_j) over queued jobs —
-                            // the affine fit is summed per job, so each queued
-                            // job carries its own intercept
-                            let backlog_s = self.cost_coeff * jobq.backlog_cost(&f_cloud);
-                            let inp = SchedInput {
-                                predicted_len: predicted,
-                                f_cloud,
-                                cost_coeff: self.cost_coeff,
-                                transfer_s: |n| 0.02 + n as f64 * 5e-7,
-                                backlog_s,
-                                n_edges: edges.len(),
-                                best_slm_capability: best_cap,
-                                parallel_hint: ewma_parallelism,
-                            };
-                            let d = self.cfg.scheduler.decide(&inp);
-                            if d.mode == SchedMode::Full && predicted >= self.cfg.scheduler.min_progressive_len {
-                                crate::debug!(
-                                    "rid={rid} FULL pred={predicted} backlog={backlog_s:.1} hint={ewma_parallelism:.1} e2e_l3={:.1} budget={:.1}",
-                                    self.cfg.scheduler.e2e_estimate(&inp, self.cfg.scheduler.levels[3]),
-                                    f_cloud.eval(predicted)
-                                );
-                            }
-                            if d.mode == SchedMode::Progressive && !slms.is_empty() {
-                                pend[rid].mode = Mode::Progressive;
-                                pend[rid].sketch_level = d.level.level;
-                                pend[rid].expected_sketch_len = d.expected_sketch_len;
-                                cloud_pending
-                                    .push_back((rid, CloudJobKind::Sketch { level: d.level.level }));
-                            } else {
-                                cloud_pending.push_back((rid, CloudJobKind::Full));
-                            }
-                            q.schedule(now, Ev::CloudAdmit);
-                        }
-                    }
-                }
-
-                Ev::CloudAdmit => {
-                    // Drain every job admissible at this timestamp, then issue
-                    // all of their generations as ONE backend batch — the
-                    // parallel/lockstep backends shard it across workers while
-                    // results stay index-aligned with the admission order.
-                    let mut admitted: Vec<(usize, CloudJobKind)> = Vec::new();
-                    while cloud_inflight + admitted.len() < cloud_slots {
-                        let Some(j) = cloud_pending.pop_front() else { break };
-                        admitted.push(j);
-                    }
-                    if admitted.is_empty() {
-                        continue;
-                    }
-                    let real_cap =
-                        ((self.cfg.cloud_max_tokens as f64 / scale).round() as usize).max(4);
-                    let reqs: Vec<GenRequest> = admitted
-                        .iter()
-                        .map(|(rid, kind)| {
-                            let question = &pend[*rid].question_toks;
-                            let (prompt, max_tokens) = match kind {
-                                CloudJobKind::Full => {
-                                    (Prompts::full_answer(self.tok, question), real_cap)
-                                }
-                                CloudJobKind::Sketch { .. } => {
-                                    (Prompts::sketch(self.tok, question), 60)
-                                }
-                            };
-                            GenRequest {
-                                model: cloud_model.clone(),
-                                prompt: prompt.into(),
-                                sp: SamplingParams {
-                                    max_tokens,
-                                    seed: self.cfg.seed ^ *rid as u64,
-                                    ..Default::default()
-                                },
-                            }
-                        })
-                        .collect();
-                    let outs = self.backend.generate_batch(&reqs);
-                    // every member of this admission batch runs concurrently
-                    // with the jobs already in flight AND with each other, so
-                    // all are priced at the final concurrent batch size — not
-                    // the ascending sizes an in-loop `inflight + 1` would see
-                    let b = cloud_inflight + admitted.len();
-                    for (k, ((rid, kind), out)) in
-                        admitted.into_iter().zip(outs).enumerate()
-                    {
-                        let out = out.map_err(RunError::Backend)?;
-                        pend[rid].cloud_start = now;
-                        let prompt_sim = (reqs[k].prompt.len() as f64 * scale) as usize;
-                        let dur = match &kind {
-                            CloudJobKind::Full => {
-                                let n_sim = (out.tokens.len() as f64 * scale) as usize;
-                                pend[rid].cloud_tokens = n_sim;
-                                // final answer = cloud output minus <eos>
-                                let mut ans = out.tokens;
-                                if ans.last() == Some(&self.tok.specials.eos) {
-                                    ans.pop();
-                                }
-                                pend[rid].candidates = vec![Candidate {
-                                    model: cloud_model.clone(),
-                                    tokens: ans,
-                                    logps: out.logps,
-                                }];
-                                self.cluster.cloud.prefill_time_s(cloud_info, prompt_sim, b)
-                                    + self.cluster.cloud.gen_time_s(cloud_info, n_sim, b)
-                            }
-                            CloudJobKind::Sketch { level } => {
-                                let mut sk = out.tokens;
-                                if sk.last() == Some(&self.tok.specials.eos) {
-                                    sk.pop();
-                                }
-                                // apply the level compression per sentence
-                                let lv = self
-                                    .cfg
-                                    .scheduler
-                                    .levels
-                                    .iter()
-                                    .copied()
-                                    .find(|l| l.level == *level)
-                                    .unwrap_or(self.cfg.scheduler.levels[1]);
-                                let keep = self
-                                    .cfg
-                                    .sketch_keep_frac_override
-                                    .as_ref()
-                                    .and_then(|m| m.get(&pend[rid].category).copied());
-                                let sents = split_sketch(&sk, self.tok.specials.semicolon);
-                                let mut out_sk: Vec<u32> = Vec::new();
-                                for (i, s) in sents.iter().enumerate() {
-                                    if i > 0 {
-                                        out_sk.push(self.tok.specials.semicolon);
-                                    }
-                                    let lvl = match keep {
-                                        Some(kf) => crate::sketch::SketchLevel { level: lv.level, keep_frac: kf },
-                                        None => lv,
-                                    };
-                                    out_sk.extend(compress(s, lvl));
-                                }
-                                let n_sim = (out_sk.len() as f64 * scale) as usize;
-                                pend[rid].cloud_tokens = n_sim;
-                                pend[rid].sketch = out_sk.into();
-                                self.cluster.cloud.prefill_time_s(cloud_info, prompt_sim, b)
-                                    + self.cluster.cloud.gen_time_s(cloud_info, n_sim, b)
-                            }
-                        };
-                        cloud_inflight += 1;
-                        q.schedule(now + dur, Ev::CloudDone { rid, kind });
-                    }
-                }
-
-                Ev::CloudDone { rid, kind } => {
-                    cloud_inflight = cloud_inflight.saturating_sub(1);
-                    pend[rid].cloud_done = now;
-                    q.schedule(now, Ev::CloudAdmit);
-                    match kind {
-                        CloudJobKind::Full => {
-                            self.finalize(rid, now, &mut pend, &mut traces);
-                        }
-                        CloudJobKind::Sketch { .. } => {
-                            let delta = self
-                                .cfg
-                                .link
-                                .transfer_tokens_s((pend[rid].sketch.len() as f64 * scale) as usize);
-                            q.schedule(now + delta, Ev::JobArriveAtQueue { rid });
-                        }
-                    }
-                }
-
-                Ev::JobArriveAtQueue { rid } => {
-                    let attempts = enqueue_attempts.entry(rid).or_insert(0usize);
-                    if jobq.len() >= self.cfg.queue_cap && *attempts < 5 {
-                        // queue full: retry shortly instead of degrading
-                        // (bounded so latency can't grow unboundedly)
-                        *attempts += 1;
-                        q.schedule_in(2.0, Ev::JobArriveAtQueue { rid });
-                        continue;
-                    }
-                    let sents: Vec<Arc<[u32]>> =
-                        split_sketch(&pend[rid].sketch, self.tok.specials.semicolon)
-                            .into_iter()
-                            .map(Arc::from)
-                            .collect();
-                    let replicas = self.cfg.ensemble_k.max(1);
-                    pend[rid].replicas_out = replicas;
-                    let job = Job {
-                        rid,
-                        expected_len: pend[rid].predicted_len,
-                        sentences: sents,
-                        full_sketch: pend[rid].sketch.clone(),
-                        question: pend[rid].question_toks.clone(),
-                        enqueued_at: now,
-                        replicas_left: replicas,
-                    };
-                    if !jobq.push(job) {
-                        // queue full: fall back — answer is the sketch itself
-                        // (degenerate; counted against PICE's quality)
-                        pend[rid].candidates = vec![Candidate {
-                            model: cloud_model.clone(),
-                            tokens: pend[rid].sketch.to_vec(),
-                            logps: vec![-1.0; pend[rid].sketch.len()],
-                        }];
-                        self.finalize(rid, now, &mut pend, &mut traces);
-                        continue;
-                    }
-                    for eid in 0..edges.len() {
-                        if !edges[eid].busy {
-                            q.schedule(now, Ev::EdgePull { eid });
-                        }
-                    }
-                }
-
-                Ev::EdgePull { eid } => {
-                    if edges[eid].busy {
-                        continue;
-                    }
-                    // Edge-only / routed-easy full answers first.
-                    if let Some(rid) = edge_fifo[eid].pop_front() {
-                        edges[eid].busy = true;
-                        pend[rid].edge_start.get_or_insert(now);
-                        let model_name = edges[eid].current_model.clone();
-                        let info = self.registry.get(&model_name).unwrap();
-                        let prompt = Prompts::full_answer(self.tok, &pend[rid].question_toks);
-                        let real_cap =
-                            ((self.cfg.cloud_max_tokens as f64 / scale).round() as usize).max(4);
-                        let out = self
-                            .backend
-                            .generate(
-                                &model_name,
-                                &prompt,
-                                &SamplingParams {
-                                    max_tokens: real_cap,
-                                    seed: self.cfg.seed ^ (rid as u64) << 1,
-                                    ..Default::default()
-                                },
-                            )
-                            .map_err(RunError::Backend)?;
-                        let mut ans = out.tokens;
-                        if ans.last() == Some(&self.tok.specials.eos) {
-                            ans.pop();
-                        }
-                        let n_sim = (ans.len() as f64 * scale) as usize;
-                        let dur = edges[eid]
-                            .spec
-                            .prefill_time_s(info, (prompt.len() as f64 * scale) as usize, 1)
-                            + edges[eid].spec.gen_time_s(info, n_sim, 1);
-                        let work = EdgeWork {
-                            items: vec![(
-                                rid,
-                                Candidate { model: model_name, tokens: ans, logps: out.logps },
-                                n_sim,
-                            )],
-                        };
-                        q.schedule(now + dur, Ev::EdgeDone { eid, work });
-                        continue;
-                    }
-                    if jobq.is_empty() {
-                        continue;
-                    }
-                    // Algorithm 1: pull a batch from the longest list.
-                    let info0 = self.registry.get(&edges[eid].current_model).unwrap();
-                    let cap = edges[eid].spec.max_batch(info0, 600).clamp(1, 4);
-                    let mut batch = jobq.pull_batch(cap);
-                    if batch.is_empty() {
-                        continue;
-                    }
-                    edges[eid].busy = true;
-                    // Ensemble replication: each queue entry carries the number
-                    // of pending candidate executions (replicas_left). This pull
-                    // runs ONE execution per job; surplus replicas are re-queued
-                    // only if *idle* edges can absorb them (never delaying the
-                    // primary expansion), and discarded otherwise.
-                    let idle_others: Vec<usize> =
-                        (0..edges.len()).filter(|&e2| e2 != eid && !edges[e2].busy).collect();
-                    let mut spare = idle_others.len();
-                    for job in batch.iter_mut() {
-                        let surplus = job.replicas_left.saturating_sub(1);
-                        let extra = surplus.min(spare);
-                        let mut discarded = surplus - extra;
-                        if extra > 0 {
-                            let mut rep = job.clone();
-                            rep.replicas_left = extra;
-                            // the replica enters the queue NOW — keeping the
-                            // original enqueue time would misattribute the
-                            // primary's queue delay to the replica
-                            rep.enqueued_at = now;
-                            if jobq.push(rep) {
-                                spare -= extra;
-                                for &e2 in &idle_others {
-                                    q.schedule(now, Ev::EdgePull { eid: e2 });
-                                }
-                            } else {
-                                discarded += extra;
-                            }
-                        }
-                        pend[job.rid].replicas_out =
-                            pend[job.rid].replicas_out.saturating_sub(discarded);
-                        job.replicas_left = 1;
-                        pend[job.rid].edge_start.get_or_insert(now);
-                    }
-
-                    // Algorithm 2 on the first job's budget (batch-shared model)
-                    let slm_refs = self.slms();
-                    let j0 = &batch[0];
-                    let budget = (f_cloud.eval(j0.expected_len)
-                        - f_cloud.eval((j0.full_sketch.len() as f64 * scale) as usize))
-                    .max(0.05);
-                    let sel = if slm_refs.is_empty() {
-                        super::selection::SelectionOutcome {
-                            model: edges[eid].current_model.to_string(),
-                            switched: false,
-                            switch_cost_s: 0.0,
-                        }
-                    } else {
-                        select_model(
-                            &edges[eid].spec,
-                            &slm_refs,
-                            &edges[eid].current_model,
-                            j0.expected_len,
-                            ((j0.full_sketch.len() + j0.question.len()) as f64 * scale) as usize,
-                            budget,
-                            jobq.len(),
-                            self.cfg.queue_cap,
-                        )
-                    };
-                    let sel_model = intern(&sel.model);
-                    edges[eid].current_model = sel_model.clone();
-                    let info = self.registry.get(&sel.model).unwrap();
-
-                    // Execution optimizer: batch-level lane planning. All
-                    // jobs' lanes run concurrently on this device; the
-                    // binary-tree merge balances per-job parallelism against
-                    // global token-rate contention + prompt overhead (Fig. 7a).
-                    let info_cost = EdgeCostModel {
-                        token_s: edges[eid].spec.token_latency_s(info, 1),
-                        batch_slowdown: crate::cluster::BATCH_TOKEN_SLOWDOWN,
-                        prompt_tokens: batch
-                            .iter()
-                            .map(|j| ((j.question.len() + j.full_sketch.len() + 4) as f64 * scale) as usize)
-                            .max()
-                            .unwrap_or(0),
-                        prefill_speedup: 8.0,
-                    };
-                    let est_lens: Vec<Vec<usize>> = batch
-                        .iter()
-                        .map(|job| {
-                            job.sentences
-                                .iter()
-                                .map(|s| (((s.len() as f64 * 2.2).ceil() + 2.0) * scale) as usize)
-                                .collect()
-                        })
-                        .collect();
-                    let est_refs: Vec<&[usize]> = est_lens.iter().map(|v| v.as_slice()).collect();
-                    let p_mem = edges[eid]
-                        .spec
-                        .max_batch(info, info_cost.prompt_tokens + (40.0 * scale) as usize)
-                        .max(1);
-                    let (plans, _) = plan_batch(&est_refs, p_mem, &info_cost);
-
-                    // Generate the real expansions — every sentence of every
-                    // job in the pulled batch goes out as ONE backend batch
-                    // (sharded across workers by ParallelBackend), then charge
-                    // simulated time using the chosen plans over the *actual*
-                    // lengths. Flattened order is job-major, sentence-minor,
-                    // so results realign positionally.
-                    let reqs: Vec<GenRequest> = batch
-                        .iter()
-                        .flat_map(|job| {
-                            job.sentences.iter().enumerate().map(|(si, sent)| GenRequest {
-                                model: sel_model.clone(),
-                                prompt: Prompts::expand(
-                                    self.tok,
-                                    &job.question,
-                                    &job.full_sketch,
-                                    sent,
-                                )
-                                .into(),
-                                sp: SamplingParams {
-                                    max_tokens: 24,
-                                    stop_token: Some(self.tok.specials.period),
-                                    seed: self.cfg.seed ^ ((job.rid as u64) << 8) ^ si as u64,
-                                    ..Default::default()
-                                },
-                            })
-                        })
-                        .collect();
-                    let mut outs = self.backend.generate_batch(&reqs).into_iter();
-                    let mut items = Vec::new();
-                    let mut real_lens_per_job: Vec<Vec<usize>> = Vec::with_capacity(batch.len());
-                    for job in &batch {
-                        let mut expansion: Vec<u32> = Vec::new();
-                        let mut logps: Vec<f64> = Vec::new();
-                        let mut real_lens = vec![0usize; job.sentences.len()];
-                        for si in 0..job.sentences.len() {
-                            let out = outs
-                                .next()
-                                .expect("batch result per sentence")
-                                .map_err(RunError::Backend)?;
-                            let mut toks = out.tokens;
-                            if toks.last() == Some(&self.tok.specials.eos) {
-                                toks.pop();
-                            }
-                            real_lens[si] = (toks.len() as f64 * scale) as usize;
-                            expansion.extend_from_slice(&toks);
-                            logps.extend_from_slice(&out.logps);
-                        }
-                        let n_edge_tokens: usize = real_lens.iter().sum();
-                        items.push((
-                            job.rid,
-                            Candidate { model: sel_model.clone(), tokens: expansion, logps },
-                            n_edge_tokens,
-                        ));
-                        real_lens_per_job.push(real_lens);
-                    }
-                    let mean_lanes = plans.iter().map(Vec::len).sum::<usize>() as f64
-                        / plans.len().max(1) as f64;
-                    ewma_parallelism = 0.8 * ewma_parallelism + 0.2 * mean_lanes;
-                    for (job, plan) in batch.iter().zip(&plans) {
-                        pend[job.rid].parallelism = pend[job.rid].parallelism.max(plan.len());
-                    }
-                    let real_refs: Vec<&[usize]> =
-                        real_lens_per_job.iter().map(|v| v.as_slice()).collect();
-                    let wall = batch_wall(&plans, &real_refs, &info_cost);
-                    let total_dur = sel.switch_cost_s + wall;
-                    crate::debug!(
-                        "edge{eid} t={now:.1} batch={} model={} lanes={:?} switch={:.1} wall={wall:.1}",
-                        batch.len(), sel.model,
-                        plans.iter().map(Vec::len).collect::<Vec<_>>(), sel.switch_cost_s
-                    );
-                    q.schedule(now + total_dur, Ev::EdgeDone { eid, work: EdgeWork { items } });
-                }
-
-                Ev::EdgeDone { eid, work } => {
-                    edges[eid].busy = false;
-                    for (rid, cand, edge_tokens) in work.items {
-                        pend[rid].edge_tokens += edge_tokens;
-                        pend[rid].candidates.push(cand);
-                        pend[rid].replicas_out = pend[rid].replicas_out.saturating_sub(1);
-                        if pend[rid].replicas_out == 0 && !pend[rid].done {
-                            self.finalize(rid, now, &mut pend, &mut traces);
-                        }
-                    }
-                    q.schedule(now, Ev::EdgePull { eid });
-                }
+        if !self.core.jobq.push(job) {
+            // queue full: fall back — answer is the sketch itself
+            // (degenerate; counted against PICE's quality)
+            let sketch_cand = Candidate {
+                model: self.core.cloud_model.clone(),
+                tokens: self.core.pend[rid].sketch.to_vec(),
+                logps: vec![-1.0; self.core.pend[rid].sketch.len()],
+            };
+            self.core.pend[rid].candidates = vec![sketch_cand];
+            self.finalize(rid, now);
+            return;
+        }
+        for eid in 0..self.core.edges.len() {
+            if !self.core.edges[eid].busy {
+                self.core.q.schedule(now, Ev::EdgePull { eid });
             }
         }
+    }
 
-        Ok(traces.into_iter().flatten().collect())
+    fn ev_edge_pull(&mut self, now: SimTime, eid: usize) -> Result<(), RunError> {
+        if self.core.edges[eid].busy {
+            return Ok(());
+        }
+        let scale = self.cfg.sim_token_scale;
+        // Edge-only / routed-easy full answers first.
+        if let Some(rid) = self.core.edge_fifo[eid].pop_front() {
+            self.core.edges[eid].busy = true;
+            self.core.pend[rid].edge_start.get_or_insert(now);
+            let model_name = self.core.edges[eid].current_model.clone();
+            let info = self.model_info(&model_name);
+            let prompt = Prompts::full_answer(self.tok, &self.core.pend[rid].question_toks);
+            let real_cap = ((self.cfg.cloud_max_tokens as f64 / scale).round() as usize).max(4);
+            let out = self
+                .backend
+                .generate(
+                    &model_name,
+                    &prompt,
+                    &SamplingParams {
+                        max_tokens: real_cap,
+                        seed: self.cfg.seed ^ (rid as u64) << 1,
+                        ..Default::default()
+                    },
+                )
+                .map_err(RunError::Backend)?;
+            let mut ans = out.tokens;
+            if ans.last() == Some(&self.tok.specials.eos) {
+                ans.pop();
+            }
+            let n_sim = (ans.len() as f64 * scale) as usize;
+            let dur = self.core.edges[eid].spec.prefill_time_s(
+                info,
+                (prompt.len() as f64 * scale) as usize,
+                1,
+            ) + self.core.edges[eid].spec.gen_time_s(info, n_sim, 1);
+            let work = EdgeWork {
+                items: vec![(
+                    rid,
+                    Candidate { model: model_name, tokens: ans, logps: out.logps },
+                    n_sim,
+                )],
+            };
+            self.core.q.schedule(now + dur, Ev::EdgeDone { eid, work });
+            return Ok(());
+        }
+        if self.core.jobq.is_empty() {
+            return Ok(());
+        }
+        // Algorithm 1: pull a batch from the longest list.
+        let model0 = self.core.edges[eid].current_model.clone();
+        let info0 = self.model_info(&model0);
+        let cap = self.core.edges[eid].spec.max_batch(info0, 600).clamp(1, 4);
+        let mut batch = self.core.jobq.pull_batch(cap);
+        if batch.is_empty() {
+            return Ok(());
+        }
+        self.core.edges[eid].busy = true;
+        // Ensemble replication: each queue entry carries the number of
+        // pending candidate executions (replicas_left). This pull runs ONE
+        // execution per job; surplus replicas are re-queued only if *idle*
+        // edges can absorb them (never delaying the primary expansion), and
+        // discarded otherwise.
+        let idle_others: Vec<usize> = (0..self.core.edges.len())
+            .filter(|&e2| e2 != eid && !self.core.edges[e2].busy)
+            .collect();
+        let mut spare = idle_others.len();
+        for job in batch.iter_mut() {
+            let surplus = job.replicas_left.saturating_sub(1);
+            let extra = surplus.min(spare);
+            let mut discarded = surplus - extra;
+            if extra > 0 {
+                let mut rep = job.clone();
+                rep.replicas_left = extra;
+                // the replica enters the queue NOW — keeping the original
+                // enqueue time would misattribute the primary's queue delay
+                // to the replica
+                rep.enqueued_at = now;
+                if self.core.jobq.push(rep) {
+                    spare -= extra;
+                    for &e2 in &idle_others {
+                        self.core.q.schedule(now, Ev::EdgePull { eid: e2 });
+                    }
+                } else {
+                    discarded += extra;
+                }
+            }
+            let p = &mut self.core.pend[job.rid];
+            p.replicas_out = p.replicas_out.saturating_sub(discarded);
+            job.replicas_left = 1;
+            p.edge_start.get_or_insert(now);
+        }
+
+        // Algorithm 2 on the first job's budget (batch-shared model)
+        let slm_refs = self.slms();
+        let f_cloud = self.core.f_cloud;
+        let j0 = &batch[0];
+        let budget = (f_cloud.eval(j0.expected_len)
+            - f_cloud.eval((j0.full_sketch.len() as f64 * scale) as usize))
+        .max(0.05);
+        let sel = if slm_refs.is_empty() {
+            super::selection::SelectionOutcome {
+                model: self.core.edges[eid].current_model.to_string(),
+                switched: false,
+                switch_cost_s: 0.0,
+            }
+        } else {
+            select_model(
+                &self.core.edges[eid].spec,
+                &slm_refs,
+                &self.core.edges[eid].current_model,
+                j0.expected_len,
+                ((j0.full_sketch.len() + j0.question.len()) as f64 * scale) as usize,
+                budget,
+                self.core.jobq.len(),
+                self.cfg.queue_cap,
+            )
+        };
+        let sel_model = self.core.intern(&sel.model);
+        self.core.edges[eid].current_model = sel_model.clone();
+        let info = self.model_info(&sel.model);
+
+        // Execution optimizer: batch-level lane planning. All jobs' lanes
+        // run concurrently on this device; the binary-tree merge balances
+        // per-job parallelism against global token-rate contention + prompt
+        // overhead (Fig. 7a).
+        let info_cost = EdgeCostModel {
+            token_s: self.core.edges[eid].spec.token_latency_s(info, 1),
+            batch_slowdown: crate::cluster::BATCH_TOKEN_SLOWDOWN,
+            prompt_tokens: batch
+                .iter()
+                .map(|j| ((j.question.len() + j.full_sketch.len() + 4) as f64 * scale) as usize)
+                .max()
+                .unwrap_or(0),
+            prefill_speedup: 8.0,
+        };
+        let est_lens: Vec<Vec<usize>> = batch
+            .iter()
+            .map(|job| {
+                job.sentences
+                    .iter()
+                    .map(|s| (((s.len() as f64 * 2.2).ceil() + 2.0) * scale) as usize)
+                    .collect()
+            })
+            .collect();
+        let est_refs: Vec<&[usize]> = est_lens.iter().map(|v| v.as_slice()).collect();
+        let p_mem = self.core.edges[eid]
+            .spec
+            .max_batch(info, info_cost.prompt_tokens + (40.0 * scale) as usize)
+            .max(1);
+        let (plans, _) = plan_batch(&est_refs, p_mem, &info_cost);
+
+        // Generate the real expansions — every sentence of every job in the
+        // pulled batch goes out as ONE backend batch (sharded across workers
+        // by ParallelBackend), then charge simulated time using the chosen
+        // plans over the *actual* lengths. Flattened order is job-major,
+        // sentence-minor, so results realign positionally.
+        let reqs: Vec<GenRequest> = batch
+            .iter()
+            .flat_map(|job| {
+                job.sentences.iter().enumerate().map(|(si, sent)| GenRequest {
+                    model: sel_model.clone(),
+                    prompt: Prompts::expand(self.tok, &job.question, &job.full_sketch, sent)
+                        .into(),
+                    sp: SamplingParams {
+                        max_tokens: 24,
+                        stop_token: Some(self.tok.specials.period),
+                        seed: self.cfg.seed ^ ((job.rid as u64) << 8) ^ si as u64,
+                        ..Default::default()
+                    },
+                })
+            })
+            .collect();
+        let mut outs = self.backend.generate_batch(&reqs).into_iter();
+        let mut items = Vec::new();
+        let mut real_lens_per_job: Vec<Vec<usize>> = Vec::with_capacity(batch.len());
+        for job in &batch {
+            let mut expansion: Vec<u32> = Vec::new();
+            let mut logps: Vec<f64> = Vec::new();
+            let mut real_lens = vec![0usize; job.sentences.len()];
+            for len_slot in real_lens.iter_mut() {
+                let out = outs
+                    .next()
+                    .expect("batch result per sentence")
+                    .map_err(RunError::Backend)?;
+                let mut toks = out.tokens;
+                if toks.last() == Some(&self.tok.specials.eos) {
+                    toks.pop();
+                }
+                *len_slot = (toks.len() as f64 * scale) as usize;
+                expansion.extend_from_slice(&toks);
+                logps.extend_from_slice(&out.logps);
+            }
+            let n_edge_tokens: usize = real_lens.iter().sum();
+            items.push((
+                job.rid,
+                Candidate { model: sel_model.clone(), tokens: expansion, logps },
+                n_edge_tokens,
+            ));
+            real_lens_per_job.push(real_lens);
+        }
+        let mean_lanes =
+            plans.iter().map(Vec::len).sum::<usize>() as f64 / plans.len().max(1) as f64;
+        self.core.ewma_parallelism = 0.8 * self.core.ewma_parallelism + 0.2 * mean_lanes;
+        for (job, plan) in batch.iter().zip(&plans) {
+            let p = &mut self.core.pend[job.rid];
+            p.parallelism = p.parallelism.max(plan.len());
+        }
+        let real_refs: Vec<&[usize]> = real_lens_per_job.iter().map(|v| v.as_slice()).collect();
+        let wall = batch_wall(&plans, &real_refs, &info_cost);
+        let total_dur = sel.switch_cost_s + wall;
+        crate::debug!(
+            "edge{eid} t={now:.1} batch={} model={} lanes={:?} switch={:.1} wall={wall:.1}",
+            batch.len(),
+            sel.model,
+            plans.iter().map(Vec::len).collect::<Vec<_>>(),
+            sel.switch_cost_s
+        );
+        self.core.q.schedule(now + total_dur, Ev::EdgeDone { eid, work: EdgeWork { items } });
+        Ok(())
+    }
+
+    fn ev_edge_done(&mut self, now: SimTime, eid: usize, work: EdgeWork) {
+        self.core.edges[eid].busy = false;
+        for (rid, cand, edge_tokens) in work.items {
+            // streaming: the expansion chunk becomes client-visible now,
+            // before terminal bookkeeping (SketchReady always precedes it).
+            // A defensively-possible late completion for an already-final
+            // request must not stream after its terminal event.
+            if self.core.pend[rid].mode == Mode::Progressive && !self.core.pend[rid].done {
+                self.core.pend[rid].first_expansion.get_or_insert(now);
+                if self.core.events.is_some() {
+                    let slot = self.core.pend[rid].candidates.len();
+                    let text = self.tok.decode_content(&cand.tokens);
+                    self.emit(now, rid, ResponseEventKind::ExpansionChunk { slot, text });
+                }
+            }
+            let p = &mut self.core.pend[rid];
+            p.edge_tokens += edge_tokens;
+            p.candidates.push(cand);
+            p.replicas_out = p.replicas_out.saturating_sub(1);
+            let ready = p.replicas_out == 0 && !p.done;
+            if ready {
+                self.finalize(rid, now);
+            }
+        }
+        self.core.q.schedule(now, Ev::EdgePull { eid });
     }
 
     /// Ensemble-select and close out a request.
-    fn finalize(
-        &self,
-        rid: usize,
-        now: SimTime,
-        pend: &mut [Pending],
-        traces: &mut [Option<RequestTrace>],
-    ) {
-        let p = &mut pend[rid];
-        p.done = true;
-        let expected_real =
-            ((p.predicted_len as f64 / self.cfg.sim_token_scale).round() as usize).max(1);
-        let (winner, confidence) = if p.candidates.len() > 1 {
-            let (i, c) = ensemble_select(
-                &p.candidates,
-                &p.sketch,
-                expected_real,
-                self.cfg.confidence,
-            )
-            .unwrap_or((0, 0.0));
-            (i, c)
-        } else {
-            (0, 1.0)
+    fn finalize(&mut self, rid: usize, now: SimTime) {
+        let scale = self.cfg.sim_token_scale;
+        let conf_w = self.cfg.confidence;
+        let trace = {
+            let p = &mut self.core.pend[rid];
+            p.done = true;
+            let expected_real = ((p.predicted_len as f64 / scale).round() as usize).max(1);
+            let (winner, confidence) = if p.candidates.len() > 1 {
+                ensemble_select(&p.candidates, &p.sketch, expected_real, conf_w)
+                    .unwrap_or((0, 0.0))
+            } else {
+                (0, 1.0)
+            };
+            let cand = p.candidates.get(winner).cloned().unwrap_or(Candidate {
+                model: Arc::from(""),
+                tokens: Vec::new(),
+                logps: Vec::new(),
+            });
+            RequestTrace {
+                rid,
+                question_id: p.question_id,
+                category: p.category.clone(),
+                mode: p.mode,
+                sketch_level: p.sketch_level,
+                predicted_len: p.predicted_len,
+                cloud_tokens: p.cloud_tokens,
+                edge_tokens: p.edge_tokens,
+                answer: cand.tokens,
+                arrival: p.arrival,
+                cloud_start: p.cloud_start,
+                cloud_done: p.cloud_done,
+                edge_start: p.edge_start.unwrap_or(0.0),
+                sketch_ready: p.sketch_ready,
+                first_expansion: p.first_expansion,
+                done: now,
+                winner_model: cand.model.to_string(),
+                confidence,
+                parallelism: p.parallelism,
+            }
         };
-        let cand = p.candidates.get(winner).cloned().unwrap_or(Candidate {
-            model: Arc::from(""),
-            tokens: Vec::new(),
-            logps: Vec::new(),
-        });
-        traces[rid] = Some(RequestTrace {
-            rid,
-            question_id: p.question_id,
-            category: p.category.clone(),
-            mode: p.mode,
-            sketch_level: p.sketch_level,
-            predicted_len: p.predicted_len,
-            cloud_tokens: p.cloud_tokens,
-            edge_tokens: p.edge_tokens,
-            answer: cand.tokens,
-            arrival: p.arrival,
-            cloud_start: p.cloud_start,
-            cloud_done: p.cloud_done,
-            edge_start: p.edge_start.unwrap_or(0.0),
-            done: now,
-            winner_model: cand.model.to_string(),
-            confidence,
-            parallelism: p.parallelism,
-        });
+        self.core.traces[rid] = Some(trace);
+        if self.core.events.is_some() {
+            let tr = self.core.traces[rid].as_ref().unwrap().clone();
+            self.emit(now, rid, ResponseEventKind::Final { trace: tr });
+        }
     }
 }

@@ -9,6 +9,8 @@
 //! * the paper's contribution: [`coordinator`] (dynamic scheduler, job
 //!   dispatching, model selection), [`parallel`] (execution optimizer),
 //!   [`ensemble`], [`finetune`] (RLAIF sketch policy), [`baselines`]
+//! * online serving: [`serve`] (streaming progressive-response sessions
+//!   over the step-driven engine core, with admission control)
 //! * evaluation scale-out: [`sweep`] (shared generation cache + the
 //!   concurrent scenario-sweep runner), [`scenario`] (env wiring)
 
@@ -27,6 +29,7 @@ pub mod profiler;
 pub mod quality;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod simclock;
 pub mod sketch;
 pub mod sweep;

@@ -3,10 +3,12 @@
 //!
 //! ```text
 //! pice serve   [--model llama70b-sim] [--rpm 30] [--n 60] [--policy pice|cloud|edge|routing]
+//!              [--seed 11] [--max-inflight 256] [--stream]
 //! pice models
 //! pice profile [--edges 4]
 //! pice finetune [--pairs 8] [--steps 30]
 //! pice eval    [--model llama70b-sim] [--n 40]
+//! pice help | pice <subcommand> --help
 //! ```
 
 use pice::cli::Args;
@@ -17,25 +19,85 @@ use pice::models::ModelInfo;
 use pice::profiler::OfflineProfile;
 use pice::quality::judge::Judge;
 use pice::scenario::Env;
+use pice::serve::{ResponseEventKind, ServeCfg};
 use pice::util::stats;
 use pice::{baselines, info};
+
+const USAGE: &str = "usage: pice <serve|models|profile|finetune|eval|help> [options]\n\
+                     run `pice help` for the full option and knob reference";
+
+const HELP: &str = "\
+pice — semantic-driven progressive inference for LLM serving (PICE reproduction)
+
+SUBCOMMANDS
+  serve     serve a generated workload through one policy
+              --model <name>        cloud LLM (default llama70b-sim)
+              --rpm <f>             request rate (default: 1.5x cloud max batch)
+              --n <int>             number of requests (default 60)
+              --policy <p>          pice | cloud | edge | routing (default pice)
+              --seed <int>          workload seed (default 11)
+              --max-inflight <int>  admission bound; excess submissions are
+                                    rejected with a terminal event (default 256)
+              --stream              print the live per-request response-event log
+                                    (Admitted / SketchReady / ExpansionChunk / Final)
+  models    print the model registry (speed, memory, MMLU, eval accuracy)
+  profile   offline latency fits f(l) per (device, model)
+              --edges <int>         edge count of the profiled testbed (default 4)
+  finetune  RLAIF sketch-policy fine-tuning
+              --pairs <int>         preference pairs per category (default 8)
+              --steps <int>         RL steps (default 30)
+  eval      run all four systems (PICE + baselines) on one workload
+              --model <name>        cloud LLM (default llama70b-sim)
+              --n <int>             number of requests (default 40)
+
+GLOBAL FLAGS
+  --quiet   suppress info logging
+  --help    this text (also `pice help`)
+
+ENVIRONMENT KNOBS (serve/bench execution layer — see PERF.md)
+  PICE_BACKEND=surrogate   force the deterministic surrogate backend
+  PICE_ARTIFACTS=<dir>     artifacts directory (default ./artifacts)
+  PICE_WORKERS=<n>         backend worker pool (unset: auto-size, cap 8)
+  PICE_SWEEP_THREADS=<n>   scenario-sweep pool for grid benches (unset: auto)
+  PICE_MEMO_CAP=<n>        generation memo-cache bound (default 4096, 0 = off)
+  PICE_MEMO_PATH=<path>    persist the memo cache across processes
+  PICE_BENCH_N=<n>         requests per bench scenario (default 60)
+  PICE_BENCH_SMOKE=1       tiny CI sizing for benches
+  PICE_SINGLE_FIFO=1       ablate Algorithm 1 into one FIFO list";
+
+/// Flags accepted by every subcommand.
+const GLOBAL_FLAGS: &[&str] = &["quiet", "help"];
+
+/// The global flags plus a subcommand's own.
+fn with_global_flags(extra: &[&'static str]) -> Vec<&'static str> {
+    GLOBAL_FLAGS.iter().chain(extra).copied().collect()
+}
 
 fn main() {
     let args = Args::from_env();
     if args.has_flag("quiet") {
         pice::util::set_log_level(0);
     }
+    if args.has_flag("help") || args.subcommand.as_deref() == Some("help") {
+        println!("{HELP}");
+        return;
+    }
     let result = match args.subcommand.as_deref() {
-        Some("serve") => serve(&args),
-        Some("models") => models(),
-        Some("profile") => profile(&args),
-        Some("finetune") => finetune(&args),
-        Some("eval") => eval(&args),
-        _ => {
-            eprintln!(
-                "usage: pice <serve|models|profile|finetune|eval> [options]\n\
-                 see `cargo run --example quickstart` for the runtime path"
-            );
+        Some("serve") => args
+            .validate(
+                &["model", "rpm", "n", "policy", "seed", "max-inflight"],
+                &with_global_flags(&["stream"]),
+            )
+            .and_then(|()| serve(&args)),
+        Some("models") => args.validate(&[], GLOBAL_FLAGS).and_then(|()| models()),
+        Some("profile") => args.validate(&["edges"], GLOBAL_FLAGS).and_then(|()| profile(&args)),
+        Some("finetune") => {
+            args.validate(&["pairs", "steps"], GLOBAL_FLAGS).and_then(|()| finetune(&args))
+        }
+        Some("eval") => args.validate(&["model", "n"], GLOBAL_FLAGS).and_then(|()| eval(&args)),
+        Some(other) => Err(format!("unknown subcommand `{other}`\n{USAGE}")),
+        None => {
+            eprintln!("{USAGE}");
             Ok(())
         }
     };
@@ -48,6 +110,7 @@ fn main() {
 fn serve(args: &Args) -> Result<(), String> {
     let model = args.opt_str("model", "llama70b-sim").to_string();
     let n = args.opt_usize("n", 60);
+    let stream = args.has_flag("stream");
     let mut env = Env::load()?;
     let rpm = args.opt_f64("rpm", env.paper_rpm(&model));
     let cfg = match args.opt_str("policy", "pice") {
@@ -58,23 +121,92 @@ fn serve(args: &Args) -> Result<(), String> {
     };
     info!("serving {n} requests at {rpm:.0} rpm on {model} ({:?})", cfg.policy);
     let wl = env.workload(rpm, n, args.opt_usize("seed", 11) as u64);
-    let judge = Judge::fit(&env.corpus);
-    let (m, traces) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
+    let corpus = env.corpus.clone();
+    let judge = Judge::fit(&corpus);
+    let serve_cfg = ServeCfg { max_inflight: args.opt_usize("max-inflight", 256) };
+
+    // The service (open-loop) path runs when its knobs are engaged: --stream
+    // for the live log, or an explicit --max-inflight for admission control.
+    // Without either, the closed-loop driver produces bit-identical traces
+    // with no event machinery.
+    let (traces, rejected) = if stream || args.opt("max-inflight").is_some() {
+        // Open-loop serving: submit each arrival as simulated time reaches
+        // it, pumping the engine between submissions.
+        let mut svc = env.service(cfg, serve_cfg).map_err(|e| e.to_string())?;
+        for r in &wl.requests {
+            svc.pump_until(r.arrival_s).map_err(|e| e.to_string())?;
+            svc.submit(r.question_id, r.arrival_s).map_err(|e| e.to_string())?;
+            if stream {
+                while let Some(ev) = svc.poll_any() {
+                    print_event(&ev);
+                }
+            }
+        }
+        svc.pump_all().map_err(|e| e.to_string())?;
+        if stream {
+            while let Some(ev) = svc.poll_any() {
+                print_event(&ev);
+            }
+        }
+        let rejected = svc.rejected();
+        (svc.finish().map_err(|e| e.to_string())?, rejected)
+    } else {
+        // closed-loop batch driver (same traces, no event machinery)
+        let (_, traces) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
+        (traces, 0)
+    };
+
+    let m = pice::metrics::aggregate(&traces);
     let scores: Vec<f64> = traces
         .iter()
-        .filter_map(|t| env.corpus.get(t.question_id).map(|q| judge.score(q, &t.answer).overall))
+        .filter_map(|t| corpus.get(t.question_id).map(|q| judge.score(q, &t.answer).overall))
         .collect();
     println!("throughput      {:.2} queries/min", m.throughput_qpm);
     println!("avg latency     {:.2} s (p50 {:.2}, p95 {:.2})", m.avg_latency_s, m.p50_latency_s, m.p95_latency_s);
+    println!("first sketch    p50 {:.2} s, p99 {:.2} s", m.p50_ttfs_s, m.p99_ttfs_s);
+    println!("first expansion p50 {:.2} s, p99 {:.2} s", m.p50_ttfe_s, m.p99_ttfe_s);
     println!("judge quality   {:.2} / 10", stats::mean(&scores));
     println!("server tokens   {}", m.server_tokens);
     println!("edge tokens     {}", m.edge_tokens);
     println!(
-        "progressive     {} / {} requests",
+        "progressive     {} / {} requests ({} rejected by admission)",
         traces.iter().filter(|t| t.mode == Mode::Progressive).count(),
-        m.n_requests
+        m.n_requests,
+        rejected
     );
     Ok(())
+}
+
+/// One line per streamed response event (`--stream`).
+fn print_event(ev: &pice::serve::ResponseEvent) {
+    let clip = |s: &str| -> String {
+        let mut out: String = s.chars().take(56).collect();
+        if s.chars().count() > 56 {
+            out.push('…');
+        }
+        out
+    };
+    match &ev.kind {
+        ResponseEventKind::Admitted { mode } => {
+            println!("[t={:8.2}] req {:>3} admitted ({mode:?})", ev.t, ev.rid)
+        }
+        ResponseEventKind::SketchReady { text } => {
+            println!("[t={:8.2}] req {:>3} sketch    | {}", ev.t, ev.rid, clip(text))
+        }
+        ResponseEventKind::ExpansionChunk { slot, text } => {
+            println!("[t={:8.2}] req {:>3} expand #{slot} | {}", ev.t, ev.rid, clip(text))
+        }
+        ResponseEventKind::Final { trace } => println!(
+            "[t={:8.2}] req {:>3} FINAL     | {:.2}s e2e, winner {}",
+            ev.t,
+            ev.rid,
+            trace.latency(),
+            if trace.winner_model.is_empty() { "cloud" } else { &trace.winner_model }
+        ),
+        ResponseEventKind::Rejected { reason } => {
+            println!("[t={:8.2}] req {:>3} REJECTED  | {}", ev.t, ev.rid, reason)
+        }
+    }
 }
 
 fn models() -> Result<(), String> {

@@ -37,6 +37,12 @@ pub struct RequestTrace {
     pub cloud_start: SimTime,
     pub cloud_done: SimTime,
     pub edge_start: SimTime,
+    /// when the cloud sketch became client-visible — the streamed
+    /// `SketchReady` instant (progressive requests only)
+    pub sketch_ready: Option<SimTime>,
+    /// when the first edge expansion chunk was delivered — the streamed
+    /// first `ExpansionChunk` instant (progressive requests only)
+    pub first_expansion: Option<SimTime>,
     pub done: SimTime,
     /// ensemble winner (empty when not progressive)
     pub winner_model: String,
@@ -49,6 +55,18 @@ impl RequestTrace {
     pub fn latency(&self) -> f64 {
         self.done - self.arrival
     }
+
+    /// Time-to-first-sketch: arrival until the streamed sketch (the early
+    /// partial response). None for non-progressive requests.
+    pub fn ttfs(&self) -> Option<f64> {
+        self.sketch_ready.map(|t| t - self.arrival)
+    }
+
+    /// Time-to-first-expansion: arrival until the first streamed expansion
+    /// chunk. None when no expansion was delivered.
+    pub fn ttfe(&self) -> Option<f64> {
+        self.first_expansion.map(|t| t - self.arrival)
+    }
 }
 
 /// Aggregated results for one serving run.
@@ -58,6 +76,15 @@ pub struct RunMetrics {
     pub avg_latency_s: f64,
     pub p50_latency_s: f64,
     pub p95_latency_s: f64,
+    /// time-to-first-sketch percentiles over progressive requests — the
+    /// paper's "early response" metric, fed from the streaming event
+    /// timestamps (0.0 when nothing went progressive)
+    pub p50_ttfs_s: f64,
+    pub p99_ttfs_s: f64,
+    /// time-to-first-expansion percentiles over requests that received at
+    /// least one streamed expansion chunk (0.0 when none did)
+    pub p50_ttfe_s: f64,
+    pub p99_ttfe_s: f64,
     pub server_tokens: usize,
     pub edge_tokens: usize,
     pub n_requests: usize,
@@ -70,6 +97,8 @@ pub fn aggregate(traces: &[RequestTrace]) -> RunMetrics {
         return RunMetrics::default();
     }
     let lat: Vec<f64> = traces.iter().map(RequestTrace::latency).collect();
+    let ttfs: Vec<f64> = traces.iter().filter_map(RequestTrace::ttfs).collect();
+    let ttfe: Vec<f64> = traces.iter().filter_map(RequestTrace::ttfe).collect();
     let first_arrival = traces.iter().map(|t| t.arrival).fold(f64::INFINITY, f64::min);
     let last_done = traces.iter().map(|t| t.done).fold(0.0, f64::max);
     let makespan = (last_done - first_arrival).max(1e-9);
@@ -78,6 +107,10 @@ pub fn aggregate(traces: &[RequestTrace]) -> RunMetrics {
         avg_latency_s: stats::mean(&lat),
         p50_latency_s: stats::percentile(&lat, 50.0),
         p95_latency_s: stats::percentile(&lat, 95.0),
+        p50_ttfs_s: stats::percentile(&ttfs, 50.0),
+        p99_ttfs_s: stats::percentile(&ttfs, 99.0),
+        p50_ttfe_s: stats::percentile(&ttfe, 50.0),
+        p99_ttfe_s: stats::percentile(&ttfe, 99.0),
         server_tokens: traces.iter().map(|t| t.cloud_tokens).sum(),
         edge_tokens: traces.iter().map(|t| t.edge_tokens).sum(),
         n_requests: traces.len(),
@@ -105,6 +138,8 @@ mod tests {
             cloud_start: arrival,
             cloud_done: done,
             edge_start: done,
+            sketch_ready: None,
+            first_expansion: None,
             done,
             winner_model: String::new(),
             confidence: 0.0,
@@ -127,5 +162,34 @@ mod tests {
         let m = aggregate(&[]);
         assert_eq!(m.n_requests, 0);
         assert_eq!(m.throughput_qpm, 0.0);
+    }
+
+    #[test]
+    fn ttfs_ttfe_percentiles_from_streaming_timestamps() {
+        let traces: Vec<_> = (0..40)
+            .map(|i| {
+                let mut t = trace(i as f64, i as f64 + 10.0);
+                t.mode = Mode::Progressive;
+                // sketch ready 1..40 s after arrival, first expansion 2x that
+                t.sketch_ready = Some(t.arrival + (i + 1) as f64);
+                t.first_expansion = Some(t.arrival + 2.0 * (i + 1) as f64);
+                t
+            })
+            .collect();
+        let m = aggregate(&traces);
+        assert!(m.p50_ttfs_s > 0.0 && m.p50_ttfs_s <= m.p99_ttfs_s);
+        assert!(m.p50_ttfe_s > m.p50_ttfs_s, "{} vs {}", m.p50_ttfe_s, m.p50_ttfs_s);
+        assert!(m.p99_ttfs_s <= 40.0 + 1e-9);
+    }
+
+    #[test]
+    fn ttfs_skips_non_progressive() {
+        // cloud-full traces carry no streaming timestamps; percentiles
+        // must not be polluted by zeros
+        let traces: Vec<_> = (0..10).map(|i| trace(i as f64, i as f64 + 2.0)).collect();
+        let m = aggregate(&traces);
+        assert_eq!(m.p50_ttfs_s, 0.0);
+        assert_eq!(m.p99_ttfe_s, 0.0);
+        assert!(traces.iter().all(|t| t.ttfs().is_none() && t.ttfe().is_none()));
     }
 }

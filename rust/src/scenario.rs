@@ -15,6 +15,7 @@ use crate::corpus::Corpus;
 use crate::metrics::{RequestTrace, RunMetrics};
 use crate::models::Registry;
 use crate::quality::judge::Judge;
+use crate::serve::{PiceService, ServeCfg};
 use crate::sweep::cache::{load_snapshot, CacheStats, SharedMemoCache, SnapshotState};
 use crate::sweep::{ScenarioResult, SweepRunner, SweepScenario};
 use crate::tokenizer::Tokenizer;
@@ -202,7 +203,9 @@ impl Env {
         )
     }
 
-    /// Run one engine configuration over a workload (the sequential path).
+    /// Run one engine configuration over a workload — the sequential
+    /// closed-loop driver ([`crate::coordinator::Engine::run`] submits every
+    /// arrival into the step-driven core and drains it to quiescence).
     pub fn run(
         &mut self,
         cfg: EngineCfg,
@@ -217,6 +220,27 @@ impl Env {
         )?;
         let traces = engine.run(wl)?;
         Ok((crate::metrics::aggregate(&traces), traces))
+    }
+
+    /// Open a streaming serving session façade over this environment's
+    /// backend: `submit()` requests open-loop as they arrive, pump simulated
+    /// time forward, and poll per-request [`crate::serve::ResponseEvent`]s
+    /// (sketch first, expansions behind it, exactly one terminal event).
+    /// Driving a workload's arrivals through the service produces traces
+    /// bit-identical to [`Env::run`] on the same `(cfg, workload)`.
+    pub fn service(
+        &mut self,
+        cfg: EngineCfg,
+        serve_cfg: ServeCfg,
+    ) -> Result<PiceService<'_>, RunError> {
+        let engine = crate::coordinator::Engine::new(
+            cfg,
+            self.corpus.clone(),
+            &self.tok,
+            &self.registry,
+            self.backend.as_mut(),
+        )?;
+        Ok(PiceService::new(engine, serve_cfg))
     }
 
     /// Run a grid of independent scenarios across the sweep thread pool

@@ -1,0 +1,273 @@
+//! The online serving API: streaming progressive-response sessions over the
+//! step-driven engine core.
+//!
+//! PICE's product is not a batch of traces — it is a *sketch that arrives
+//! early* and *expansions that stream in behind it* (PAPER §IV). This module
+//! exposes that contract:
+//!
+//! * [`PiceService`] — a session façade over [`Engine`]: `submit()` returns a
+//!   [`RequestHandle`]; pumping the service advances simulated time and
+//!   routes per-request [`ResponseEvent`]s (`Admitted`, `SketchReady`,
+//!   `ExpansionChunk`, `Final`, `Rejected`) into each session's stream.
+//! * **Admission control / backpressure** — [`ServeCfg::max_inflight`] bounds
+//!   concurrently admitted requests; a submission over the bound is not
+//!   silently dropped: its handle immediately carries a terminal
+//!   [`ResponseEventKind::Rejected`] and the engine never sees it.
+//!
+//! Every request stream satisfies three invariants (enforced by
+//! `rust/tests/serve_streaming.rs`): event timestamps are monotone in sim
+//! time, `SketchReady` precedes every `ExpansionChunk`, and exactly one
+//! terminal event (`Final` or `Rejected`) is delivered per submission.
+//!
+//! Determinism: driving a workload open-loop through the service (submit
+//! each request at its arrival time, pumping between submissions) produces
+//! traces **bit-identical** to the closed-loop [`Engine::run`] driver —
+//! external arrivals are injected ahead of same-instant internal events
+//! (see [`crate::simclock::FIRST_CLASS`]), so the event interleaving is
+//! exactly what scheduling every arrival up-front would have produced.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::{Engine, RunError};
+use crate::metrics::{Mode, RequestTrace};
+use crate::simclock::SimTime;
+
+/// One streamed serving event for a request session.
+#[derive(Clone, Debug)]
+pub struct ResponseEvent {
+    /// session id of the request this event belongs to (engine rid while
+    /// inside the engine; rewritten to the session id by [`PiceService`])
+    pub rid: usize,
+    /// simulated timestamp the event became visible to the client
+    pub t: SimTime,
+    pub kind: ResponseEventKind,
+}
+
+#[derive(Clone, Debug)]
+pub enum ResponseEventKind {
+    /// the request passed admission and the scheduler chose its serving mode
+    Admitted { mode: Mode },
+    /// the cloud sketch is ready — the early, low-latency partial response
+    SketchReady { text: String },
+    /// one edge expansion (ensemble candidate) arrived behind the sketch
+    ExpansionChunk { slot: usize, text: String },
+    /// terminal: the request finished; the full trace is attached
+    Final { trace: RequestTrace },
+    /// terminal: admission control turned the request away (backpressure)
+    Rejected { reason: String },
+}
+
+impl ResponseEventKind {
+    /// Terminal events end a session's stream (exactly one per request).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, ResponseEventKind::Final { .. } | ResponseEventKind::Rejected { .. })
+    }
+}
+
+/// Service-level admission knobs (the engine's own queue policy is part of
+/// [`crate::coordinator::EngineCfg`]; this bounds what enters the engine).
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    /// max requests concurrently admitted (submitted, not yet terminal);
+    /// submissions past the bound are rejected with a terminal
+    /// [`ResponseEventKind::Rejected`] instead of queuing unboundedly.
+    pub max_inflight: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg { max_inflight: 256 }
+    }
+}
+
+/// Opaque per-request session handle returned by [`PiceService::submit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestHandle {
+    sid: usize,
+}
+
+impl RequestHandle {
+    /// Session id — also the `rid` stamped on this session's events.
+    pub fn id(&self) -> usize {
+        self.sid
+    }
+}
+
+struct Session {
+    /// events routed to this session, FIFO
+    queue: VecDeque<ResponseEvent>,
+    terminal: bool,
+}
+
+/// Streaming serving façade over the step-driven [`Engine`] core.
+///
+/// ```ignore
+/// let mut svc = PiceService::new(engine, ServeCfg::default());
+/// let h = svc.submit(question_id, arrival_s)?;
+/// svc.pump_all()?;                      // or pump_until(horizon) open-loop
+/// while let Some(ev) = svc.poll(&h) { /* stream to the client */ }
+/// ```
+pub struct PiceService<'a> {
+    engine: Engine<'a>,
+    cfg: ServeCfg,
+    sessions: Vec<Session>,
+    /// engine rid -> session id (admitted submissions only)
+    rid_to_sid: Vec<usize>,
+    /// one session-id marker per routed event, in global emission order —
+    /// backs [`PiceService::poll_any`] without cloning events
+    order: VecDeque<usize>,
+    inflight: usize,
+    rejected: usize,
+}
+
+impl<'a> PiceService<'a> {
+    /// Wrap an engine; enables its streaming event sink.
+    pub fn new(mut engine: Engine<'a>, cfg: ServeCfg) -> Self {
+        engine.enable_events();
+        PiceService {
+            engine,
+            cfg,
+            sessions: Vec::new(),
+            rid_to_sid: Vec::new(),
+            order: VecDeque::new(),
+            inflight: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Current simulated time of the underlying engine.
+    pub fn now(&self) -> SimTime {
+        self.engine.now()
+    }
+
+    /// Requests admitted and not yet terminal.
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
+    /// Submissions turned away by admission control so far.
+    pub fn rejected(&self) -> usize {
+        self.rejected
+    }
+
+    /// Submit a request arriving at simulated time `arrival` (>= `now()`;
+    /// earlier values clamp to now). Backpressure is an API outcome, not a
+    /// drop: over [`ServeCfg::max_inflight`], the returned handle's stream
+    /// carries a terminal [`ResponseEventKind::Rejected`] immediately and
+    /// the engine is never touched. `Err` is reserved for hard failures
+    /// (infeasible placement, backend errors).
+    pub fn submit(
+        &mut self,
+        question_id: usize,
+        arrival: SimTime,
+    ) -> Result<RequestHandle, RunError> {
+        let sid = self.sessions.len();
+        if self.inflight >= self.cfg.max_inflight {
+            let t = arrival.max(self.engine.now());
+            let reason = format!(
+                "admission: {} requests in flight (max_inflight {})",
+                self.inflight, self.cfg.max_inflight
+            );
+            let mut queue = VecDeque::new();
+            queue.push_back(ResponseEvent {
+                rid: sid,
+                t,
+                kind: ResponseEventKind::Rejected { reason },
+            });
+            self.sessions.push(Session { queue, terminal: true });
+            self.order.push_back(sid);
+            self.rejected += 1;
+            return Ok(RequestHandle { sid });
+        }
+        let rid = self.engine.submit(question_id, arrival)?;
+        debug_assert_eq!(rid, self.rid_to_sid.len(), "engine rids are sequential");
+        self.rid_to_sid.push(sid);
+        self.sessions.push(Session { queue: VecDeque::new(), terminal: false });
+        self.inflight += 1;
+        Ok(RequestHandle { sid })
+    }
+
+    /// Process every event strictly before `horizon`, routing response
+    /// events to their sessions. Submit arrivals at `horizon` *before*
+    /// pumping past it to keep the open-loop run bit-identical to the
+    /// closed-loop driver.
+    pub fn pump_until(&mut self, horizon: SimTime) -> Result<(), RunError> {
+        let res = self.engine.pump_until(horizon);
+        self.route();
+        res
+    }
+
+    /// Drain the engine to quiescence (all submitted work finished).
+    pub fn pump_all(&mut self) -> Result<(), RunError> {
+        let res = self.engine.pump_all();
+        self.route();
+        res
+    }
+
+    fn route(&mut self) {
+        for mut ev in self.engine.take_events() {
+            let sid = self.rid_to_sid[ev.rid];
+            // the session id is the client-facing request id — on the event
+            // AND on the embedded terminal trace, so a client keying state
+            // by either sees one id even when rejections made session ids
+            // diverge from engine rids
+            ev.rid = sid;
+            if let ResponseEventKind::Final { trace } = &mut ev.kind {
+                trace.rid = sid;
+            }
+            if ev.kind.is_terminal() {
+                self.sessions[sid].terminal = true;
+                self.inflight = self.inflight.saturating_sub(1);
+            }
+            self.sessions[sid].queue.push_back(ev);
+            self.order.push_back(sid);
+        }
+    }
+
+    /// Next pending event of this session, if any.
+    pub fn poll(&mut self, h: &RequestHandle) -> Option<ResponseEvent> {
+        self.sessions[h.sid].queue.pop_front()
+    }
+
+    /// Next pending event across *all* sessions, in global emission order —
+    /// the live-log drain (O(events), no per-session sweep). Mixing with
+    /// per-session [`PiceService::poll`]/[`PiceService::drain`] is allowed:
+    /// markers whose event was already taken are skipped.
+    pub fn poll_any(&mut self) -> Option<ResponseEvent> {
+        while let Some(sid) = self.order.pop_front() {
+            if let Some(ev) = self.sessions[sid].queue.pop_front() {
+                return Some(ev);
+            }
+        }
+        None
+    }
+
+    /// Drain every pending event of this session.
+    pub fn drain(&mut self, h: &RequestHandle) -> Vec<ResponseEvent> {
+        self.sessions[h.sid].queue.drain(..).collect()
+    }
+
+    /// True once the session's terminal event has been *routed* (it may
+    /// still be waiting in the stream until polled).
+    pub fn is_terminal(&self, h: &RequestHandle) -> bool {
+        self.sessions[h.sid].terminal
+    }
+
+    /// True when the engine has no scheduled work left.
+    pub fn idle(&self) -> bool {
+        self.engine.is_idle()
+    }
+
+    /// Finish serving: drain the engine and return the completed traces,
+    /// with each trace's `rid` remapped to its session id (the same id its
+    /// handle and events carry — rejected submissions have no trace).
+    pub fn finish(mut self) -> Result<Vec<RequestTrace>, RunError> {
+        self.engine.pump_all()?;
+        self.route();
+        let mut traces = self.engine.take_traces();
+        for t in &mut traces {
+            t.rid = self.rid_to_sid[t.rid];
+        }
+        Ok(traces)
+    }
+}

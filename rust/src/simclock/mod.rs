@@ -12,15 +12,26 @@ use std::collections::BinaryHeap;
 /// Simulated timestamp in seconds.
 pub type SimTime = f64;
 
+/// Priority class of plain [`EventQueue::schedule`] calls.
+pub const DEFAULT_CLASS: u8 = 1;
+/// Highest-priority class: pops before every same-time default-class event.
+pub const FIRST_CLASS: u8 = 0;
+
 struct Entry<E> {
     time: SimTime,
-    seq: u64, // FIFO tie-break for equal timestamps
+    /// priority class at equal timestamps: lower pops first. Lets external
+    /// arrivals injected mid-run (`Engine::submit`) order ahead of internal
+    /// events at the same instant, exactly as if they had been scheduled
+    /// up-front — the invariant the open-loop serving API's bit-identical
+    /// guarantee rests on.
+    class: u8,
+    seq: u64, // FIFO tie-break for equal (time, class)
     event: E,
 }
 
 impl<E> PartialEq for Entry<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.time == other.time && self.class == other.class && self.seq == other.seq
     }
 }
 impl<E> Eq for Entry<E> {}
@@ -36,6 +47,7 @@ impl<E> Ord for Entry<E> {
             .time
             .partial_cmp(&self.time)
             .unwrap_or(Ordering::Equal)
+            .then(other.class.cmp(&self.class))
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -64,9 +76,20 @@ impl<E> EventQueue<E> {
 
     /// Schedule `event` at absolute simulated time `at` (clamped to now).
     pub fn schedule(&mut self, at: SimTime, event: E) {
+        self.schedule_class(at, DEFAULT_CLASS, event);
+    }
+
+    /// Schedule with an explicit same-timestamp priority class (lower pops
+    /// first; ties within a class stay FIFO by insertion).
+    pub fn schedule_class(&mut self, at: SimTime, class: u8, event: E) {
         let t = if at < self.now { self.now } else { at };
-        self.heap.push(Entry { time: t, seq: self.seq, event });
+        self.heap.push(Entry { time: t, class, seq: self.seq, event });
         self.seq += 1;
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn next_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.time)
     }
 
     /// Schedule `event` after a delay from the current clock.
@@ -131,6 +154,32 @@ mod tests {
         q.schedule(1.0, ());
         let (t, _) = q.pop().unwrap();
         assert_eq!(t, 5.0);
+    }
+
+    #[test]
+    fn first_class_pops_before_default_at_equal_time() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "default-early");
+        q.schedule_class(1.0, FIRST_CLASS, "arrival");
+        q.schedule(1.0, "default-late");
+        assert_eq!(q.pop().unwrap().1, "arrival");
+        assert_eq!(q.pop().unwrap().1, "default-early");
+        assert_eq!(q.pop().unwrap().1, "default-late");
+        // classes only reorder ties; time still dominates
+        q.schedule(3.0, "t3-first");
+        q.schedule_class(5.0, FIRST_CLASS, "t5-arrival");
+        assert_eq!(q.pop().unwrap().1, "t3-first");
+        assert_eq!(q.pop().unwrap().1, "t5-arrival");
+    }
+
+    #[test]
+    fn next_time_peeks_without_popping() {
+        let mut q = EventQueue::new();
+        assert!(q.next_time().is_none());
+        q.schedule(2.0, ());
+        q.schedule(1.0, ());
+        assert_eq!(q.next_time(), Some(1.0));
+        assert_eq!(q.len(), 2);
     }
 
     #[test]

@@ -1,0 +1,466 @@
+//! The online serving API's contract, on the fig6/fig13 seed scenarios:
+//!
+//! 1. **Determinism** — traces produced by driving a workload *open-loop*
+//!    through [`PiceService`] (submit each request at its arrival instant,
+//!    pumping simulated time between submissions) are bit-identical to the
+//!    closed-loop [`Engine::run`] driver (the pre-refactor monolithic loop's
+//!    semantics), and to the same scenarios executed through the
+//!    [`SweepRunner`] at 1/2/4 threads.
+//! 2. **Streaming invariants** — per request: event timestamps are monotone
+//!    in sim time, `SketchReady` precedes every `ExpansionChunk`, and
+//!    exactly one terminal event (`Final` or `Rejected`) is delivered.
+//! 3. **Backpressure** — submissions over `max_inflight` are rejected as a
+//!    terminal event on the handle, never silently dropped, and never touch
+//!    the engine.
+
+use std::sync::Arc;
+
+use pice::baselines;
+use pice::cluster::DeviceSpec;
+use pice::coordinator::backend::{SurrogateBackend, TextBackend};
+use pice::coordinator::{Engine, EngineCfg};
+use pice::corpus::synth::{synth_corpus, synth_tokenizer};
+use pice::corpus::workload::{Arrival, Request, Workload, WorkloadSpec};
+use pice::corpus::Corpus;
+use pice::metrics::{Mode, RequestTrace};
+use pice::models::Registry;
+use pice::serve::{PiceService, RequestHandle, ResponseEvent, ResponseEventKind, ServeCfg};
+use pice::sweep::{SweepRunner, SweepScenario};
+use pice::tokenizer::Tokenizer;
+
+fn setup() -> (Arc<Corpus>, Tokenizer, Registry) {
+    let tok = synth_tokenizer();
+    let corpus = Arc::new(synth_corpus(&tok, 20, 42));
+    (corpus, tok, Registry::builtin())
+}
+
+/// §V-B's operating point, same formula as `Env::paper_rpm`.
+fn paper_rpm(reg: &Registry, model: &str) -> f64 {
+    let info = reg.get(model).expect("model");
+    let cloud = DeviceSpec::a100_cloud("c");
+    1.5 * cloud.max_batch(info, 1000) as f64
+}
+
+fn workload(corpus: &Arc<Corpus>, rpm: f64, n: usize, seed: u64) -> Arc<Workload> {
+    Arc::new(Workload::generate(
+        corpus,
+        WorkloadSpec { rpm, n_requests: n, arrival: Arrival::Poisson, categories: vec![], seed },
+    ))
+}
+
+/// The Fig. 6 variant grid (dynamic-vs-static scheduling comparison),
+/// seed 13 — the bench's exact scenario structure.
+fn fig6_grid(reg: &Registry, corpus: &Arc<Corpus>) -> Vec<SweepScenario> {
+    let model = "llama70b-sim";
+    let wl = workload(corpus, paper_rpm(reg, model), 36, 13);
+    let mut stat = baselines::pice(model);
+    stat.scheduler.static_mode = true;
+    vec![
+        SweepScenario::new("Cloud-only", baselines::cloud_only(model), wl.clone()),
+        SweepScenario::new("Routing", baselines::routing(model), wl.clone()),
+        SweepScenario::new("PICE-static", stat, wl.clone()),
+        SweepScenario::new("PICE-dynamic", baselines::pice(model), wl),
+    ]
+}
+
+/// The Fig. 13 queue-capacity grid, seed 19 at 1.3x load.
+fn fig13_grid(reg: &Registry, corpus: &Arc<Corpus>) -> Vec<SweepScenario> {
+    let model = "llama70b-sim";
+    let wl = workload(corpus, paper_rpm(reg, model) * 1.3, 30, 19);
+    [1usize, 2, 4, 8, 12, 16]
+        .iter()
+        .map(|&cap| {
+            let mut cfg = baselines::pice(model);
+            cfg.queue_cap = cap;
+            SweepScenario::new(format!("cap{cap}"), cfg, wl.clone())
+        })
+        .collect()
+}
+
+/// Open-loop driver: a fresh service per scenario; submit each arrival at
+/// its instant, pump strictly up to the next arrival in between. Returns
+/// (traces, per-session event streams).
+fn run_via_service(
+    cfg: &EngineCfg,
+    wl: &Workload,
+    corpus: &Arc<Corpus>,
+    tok: &Tokenizer,
+    reg: &Registry,
+    base: &SurrogateBackend,
+) -> (Vec<RequestTrace>, Vec<Vec<ResponseEvent>>) {
+    let mut backend = base.clone();
+    let engine =
+        Engine::new(cfg.clone(), corpus.clone(), tok, reg, &mut backend).expect("engine");
+    let mut svc = PiceService::new(engine, ServeCfg { max_inflight: usize::MAX });
+    let mut handles: Vec<RequestHandle> = Vec::with_capacity(wl.requests.len());
+    for r in &wl.requests {
+        svc.pump_until(r.arrival_s).expect("pump");
+        handles.push(svc.submit(r.question_id, r.arrival_s).expect("submit"));
+    }
+    svc.pump_all().expect("pump_all");
+    let streams: Vec<Vec<ResponseEvent>> = handles.iter().map(|h| svc.drain(h)).collect();
+    let traces = svc.finish().expect("finish");
+    (traces, streams)
+}
+
+/// Closed-loop reference: `Engine::run` on a fresh backend clone.
+fn run_closed_loop(
+    cfg: &EngineCfg,
+    wl: &Workload,
+    corpus: &Arc<Corpus>,
+    tok: &Tokenizer,
+    reg: &Registry,
+    base: &SurrogateBackend,
+) -> Vec<RequestTrace> {
+    let mut backend = base.clone();
+    let mut engine =
+        Engine::new(cfg.clone(), corpus.clone(), tok, reg, &mut backend).expect("engine");
+    engine.run(wl).expect("run")
+}
+
+fn assert_traces_identical(label: &str, a: &[RequestTrace], b: &[RequestTrace]) {
+    assert_eq!(a.len(), b.len(), "{label}: trace count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.rid, y.rid, "{label}: rid");
+        assert_eq!(x.mode, y.mode, "{label}: mode rid={}", x.rid);
+        assert_eq!(x.answer, y.answer, "{label}: answer rid={}", x.rid);
+        assert_eq!(x.winner_model, y.winner_model, "{label}: winner rid={}", x.rid);
+        assert_eq!(x.cloud_tokens, y.cloud_tokens, "{label}: cloud tokens rid={}", x.rid);
+        assert_eq!(x.edge_tokens, y.edge_tokens, "{label}: edge tokens rid={}", x.rid);
+        assert_eq!(x.sketch_level, y.sketch_level, "{label}: level rid={}", x.rid);
+        assert_eq!(x.parallelism, y.parallelism, "{label}: parallelism rid={}", x.rid);
+        assert!(x.arrival == y.arrival, "{label}: arrival rid={}", x.rid);
+        assert!(x.cloud_start == y.cloud_start, "{label}: cloud_start rid={}", x.rid);
+        assert!(x.cloud_done == y.cloud_done, "{label}: cloud_done rid={}", x.rid);
+        assert!(x.edge_start == y.edge_start, "{label}: edge_start rid={}", x.rid);
+        assert!(x.sketch_ready == y.sketch_ready, "{label}: sketch_ready rid={}", x.rid);
+        assert!(
+            x.first_expansion == y.first_expansion,
+            "{label}: first_expansion rid={}",
+            x.rid
+        );
+        assert!(x.done == y.done, "{label}: done time rid={}", x.rid);
+        assert!(x.confidence == y.confidence, "{label}: confidence rid={}", x.rid);
+    }
+}
+
+#[test]
+fn service_open_loop_bit_identical_to_closed_loop_on_fig6_fig13() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    for (grid_name, grid) in
+        [("fig6", fig6_grid(&reg, &corpus)), ("fig13", fig13_grid(&reg, &corpus))]
+    {
+        for sc in &grid {
+            let closed = run_closed_loop(&sc.cfg, &sc.workload, &corpus, &tok, &reg, &base);
+            let (open, _) = run_via_service(&sc.cfg, &sc.workload, &corpus, &tok, &reg, &base);
+            assert_traces_identical(&format!("{grid_name}/{}", sc.label), &closed, &open);
+        }
+    }
+}
+
+#[test]
+fn service_reference_matches_sweep_runner_at_1_2_4_threads() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    for (grid_name, grid) in
+        [("fig6", fig6_grid(&reg, &corpus)), ("fig13", fig13_grid(&reg, &corpus))]
+    {
+        // the service-driven per-scenario traces are THE reference
+        let reference: Vec<Vec<RequestTrace>> = grid
+            .iter()
+            .map(|sc| run_via_service(&sc.cfg, &sc.workload, &corpus, &tok, &reg, &base).0)
+            .collect();
+        for threads in [1usize, 2, 4] {
+            let got = SweepRunner::new(threads).run(&grid, &corpus, &tok, &reg, |_| {
+                Box::new(base.clone()) as Box<dyn TextBackend>
+            });
+            for ((sc, reference), got) in grid.iter().zip(&reference).zip(got) {
+                let (_, traces) = got.expect("scenario ok");
+                assert_traces_identical(
+                    &format!("{grid_name}/{} @ {threads} threads", sc.label),
+                    reference,
+                    &traces,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn per_request_streams_are_monotone_sketch_first_one_terminal() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let cfg = baselines::pice("llama70b-sim");
+    let wl = workload(&corpus, paper_rpm(&reg, "llama70b-sim"), 40, 13);
+    let (traces, streams) = run_via_service(&cfg, &wl, &corpus, &tok, &reg, &base);
+    assert_eq!(traces.len(), wl.requests.len());
+    assert!(
+        traces.iter().any(|t| t.mode == Mode::Progressive),
+        "workload must exercise the progressive path"
+    );
+    for (sid, stream) in streams.iter().enumerate() {
+        assert!(!stream.is_empty(), "request {sid}: empty event stream");
+        // every event belongs to this session
+        assert!(stream.iter().all(|e| e.rid == sid), "request {sid}: foreign event");
+        // first event is the admission decision
+        assert!(
+            matches!(stream[0].kind, ResponseEventKind::Admitted { .. }),
+            "request {sid}: stream must open with Admitted"
+        );
+        // timestamps monotone in sim time
+        for w in stream.windows(2) {
+            assert!(
+                w[0].t <= w[1].t,
+                "request {sid}: event time went backwards ({} > {})",
+                w[0].t,
+                w[1].t
+            );
+        }
+        // exactly one terminal event, and it is last
+        let terminals = stream.iter().filter(|e| e.kind.is_terminal()).count();
+        assert_eq!(terminals, 1, "request {sid}: {terminals} terminal events");
+        assert!(
+            stream.last().unwrap().kind.is_terminal(),
+            "request {sid}: terminal event not last"
+        );
+        // SketchReady precedes every ExpansionChunk
+        let sketch_at =
+            stream.iter().position(|e| matches!(e.kind, ResponseEventKind::SketchReady { .. }));
+        let chunk_positions: Vec<usize> = stream
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| matches!(e.kind, ResponseEventKind::ExpansionChunk { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        if let Some(first_chunk) = chunk_positions.first() {
+            let s = sketch_at.expect("expansion chunks require a sketch");
+            assert!(s < *first_chunk, "request {sid}: chunk before sketch");
+        }
+        // per-mode stream shape
+        let mode = traces.iter().find(|t| t.rid == sid).map(|t| t.mode).unwrap();
+        match mode {
+            Mode::Progressive => {
+                assert_eq!(
+                    stream
+                        .iter()
+                        .filter(|e| matches!(e.kind, ResponseEventKind::SketchReady { .. }))
+                        .count(),
+                    1,
+                    "request {sid}: progressive requests stream exactly one sketch"
+                );
+            }
+            Mode::CloudFull | Mode::EdgeFull => {
+                assert!(sketch_at.is_none(), "request {sid}: non-progressive sketch");
+                assert!(chunk_positions.is_empty(), "request {sid}: non-progressive chunk");
+            }
+        }
+        // expansion slots ascend from 0 in delivery order
+        let slots: Vec<usize> = stream
+            .iter()
+            .filter_map(|e| match e.kind {
+                ResponseEventKind::ExpansionChunk { slot, .. } => Some(slot),
+                _ => None,
+            })
+            .collect();
+        for (i, s) in slots.iter().enumerate() {
+            assert_eq!(*s, i, "request {sid}: slot order");
+        }
+    }
+}
+
+#[test]
+fn streamed_timestamps_feed_ttfs_ttfe_metrics() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let cfg = baselines::pice("llama70b-sim");
+    let wl = workload(&corpus, paper_rpm(&reg, "llama70b-sim"), 40, 13);
+    let (traces, streams) = run_via_service(&cfg, &wl, &corpus, &tok, &reg, &base);
+    let mut progressive = 0;
+    for t in &traces {
+        match t.mode {
+            Mode::Progressive => {
+                progressive += 1;
+                let sk = t.sketch_ready.expect("progressive trace records sketch instant");
+                assert!(sk >= t.arrival && sk <= t.done, "rid {}", t.rid);
+                assert!(t.ttfs().unwrap() >= 0.0);
+                // the trace timestamp IS the streamed event timestamp
+                let ev_t = streams[t.rid]
+                    .iter()
+                    .find_map(|e| match e.kind {
+                        ResponseEventKind::SketchReady { .. } => Some(e.t),
+                        _ => None,
+                    })
+                    .expect("sketch event");
+                assert!(ev_t == sk, "rid {}: trace vs event sketch time", t.rid);
+                if let Some(fe) = t.first_expansion {
+                    assert!(fe >= sk, "rid {}: expansion before sketch", t.rid);
+                }
+            }
+            _ => {
+                assert!(t.sketch_ready.is_none() && t.first_expansion.is_none(), "rid {}", t.rid)
+            }
+        }
+    }
+    assert!(progressive > 0);
+    let m = pice::metrics::aggregate(&traces);
+    assert!(m.p50_ttfs_s > 0.0, "p50 TTFS");
+    assert!(m.p99_ttfs_s >= m.p50_ttfs_s, "TTFS percentile order");
+    assert!(m.p99_ttfe_s >= m.p50_ttfe_s, "TTFE percentile order");
+    // the whole point of progressive delivery: every progressive request's
+    // sketch lands strictly before its final answer
+    assert!(
+        traces
+            .iter()
+            .filter(|t| t.mode == Mode::Progressive)
+            .all(|t| t.ttfs().unwrap() < t.latency()),
+        "sketch must precede the final answer"
+    );
+}
+
+#[test]
+fn poll_any_yields_global_emission_order() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let mut backend = base.clone();
+    let engine = Engine::new(
+        baselines::pice("llama70b-sim"),
+        corpus.clone(),
+        &tok,
+        &reg,
+        &mut backend,
+    )
+    .expect("engine");
+    let mut svc = PiceService::new(engine, ServeCfg::default());
+    let wl = workload(&corpus, 30.0, 16, 7);
+    for r in &wl.requests {
+        svc.pump_until(r.arrival_s).expect("pump");
+        svc.submit(r.question_id, r.arrival_s).expect("submit");
+    }
+    svc.pump_all().expect("pump_all");
+    let mut events = Vec::new();
+    while let Some(ev) = svc.poll_any() {
+        events.push(ev);
+    }
+    assert!(!events.is_empty());
+    // the global drain preserves emission order: sim time never rewinds
+    for w in events.windows(2) {
+        assert!(w[0].t <= w[1].t, "global order broken: {} > {}", w[0].t, w[1].t);
+    }
+    let terminals = events.iter().filter(|e| e.kind.is_terminal()).count();
+    assert_eq!(terminals, wl.requests.len(), "one terminal per request");
+    // fully drained — per-session streams are empty too
+    assert!(svc.poll_any().is_none());
+}
+
+#[test]
+fn backpressure_rejects_as_terminal_events_not_drops() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let mut backend = base.clone();
+    let engine = Engine::new(
+        baselines::pice("llama70b-sim"),
+        corpus.clone(),
+        &tok,
+        &reg,
+        &mut backend,
+    )
+    .expect("engine");
+    let mut svc = PiceService::new(engine, ServeCfg { max_inflight: 2 });
+    let qid = corpus.eval_questions()[0].id;
+    // a burst of 12 with no pumping in between: 2 admitted, 10 rejected
+    let handles: Vec<RequestHandle> =
+        (0..12).map(|_| svc.submit(qid, 0.0).expect("submit")).collect();
+    assert_eq!(svc.rejected(), 10);
+    assert_eq!(svc.inflight(), 2);
+    svc.pump_all().expect("pump");
+    assert_eq!(svc.inflight(), 0);
+    let mut finals = 0;
+    let mut rejects = 0;
+    for h in &handles {
+        let stream = svc.drain(h);
+        assert!(svc.is_terminal(h));
+        let terminals: Vec<&ResponseEvent> =
+            stream.iter().filter(|e| e.kind.is_terminal()).collect();
+        assert_eq!(terminals.len(), 1, "session {}: one terminal event", h.id());
+        match &terminals[0].kind {
+            ResponseEventKind::Final { trace } => {
+                finals += 1;
+                assert!(!trace.answer.is_empty());
+            }
+            ResponseEventKind::Rejected { reason } => {
+                rejects += 1;
+                assert!(reason.contains("max_inflight"), "{reason}");
+            }
+            _ => unreachable!(),
+        }
+    }
+    assert_eq!(finals, 2);
+    assert_eq!(rejects, 10);
+    // only admitted requests ever reached the engine
+    let traces = svc.finish().expect("finish");
+    assert_eq!(traces.len(), 2);
+}
+
+#[test]
+fn submissions_between_pumps_interleave_with_inflight_work() {
+    // genuinely open-loop: a request submitted while earlier ones are mid
+    // flight still lands correctly (the re-entrancy the old monolithic
+    // Engine::run could not express)
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let mut backend = base.clone();
+    let engine = Engine::new(
+        baselines::pice("llama70b-sim"),
+        corpus.clone(),
+        &tok,
+        &reg,
+        &mut backend,
+    )
+    .expect("engine");
+    let mut svc = PiceService::new(engine, ServeCfg::default());
+    let qids: Vec<usize> = corpus.eval_questions().iter().map(|q| q.id).take(6).collect();
+    let mut handles = Vec::new();
+    let mut t = 0.0;
+    for (i, qid) in qids.iter().enumerate() {
+        handles.push(svc.submit(*qid, t).expect("submit"));
+        // pump partway into the future before the next arrival
+        t += 3.0 * (i + 1) as f64;
+        svc.pump_until(t).expect("pump");
+    }
+    svc.pump_all().expect("pump_all");
+    assert!(svc.idle());
+    for h in &handles {
+        assert!(svc.is_terminal(h), "session {} unterminated", h.id());
+    }
+    let traces = svc.finish().expect("finish");
+    assert_eq!(traces.len(), qids.len());
+    // the closed-loop equivalent over the same arrival schedule agrees
+    let wl = Workload {
+        spec: WorkloadSpec {
+            rpm: 1.0,
+            n_requests: qids.len(),
+            arrival: Arrival::Uniform,
+            categories: vec![],
+            seed: 0,
+        },
+        requests: qids
+            .iter()
+            .enumerate()
+            .map(|(rid, qid)| {
+                // same arrival schedule as the open-loop submissions above
+                let arrival_s: f64 = (0..rid).map(|i| 3.0 * (i + 1) as f64).sum();
+                Request { rid, question_id: *qid, arrival_s }
+            })
+            .collect(),
+    };
+    let closed = run_closed_loop(
+        &baselines::pice("llama70b-sim"),
+        &wl,
+        &corpus,
+        &tok,
+        &reg,
+        &base,
+    );
+    assert_traces_identical("interleaved open-loop", &closed, &traces);
+}
