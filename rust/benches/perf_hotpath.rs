@@ -22,6 +22,7 @@ use pice::coordinator::Engine;
 use pice::corpus::synth::{synth_corpus, synth_tokenizer};
 use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
 use pice::models::Registry;
+use pice::network::TransferModel;
 use pice::parallel::{plan_batch, EdgeCostModel};
 use pice::profiler::LatencyFit;
 use pice::quality::rouge::{rouge1_f1, rouge_l_f1};
@@ -84,7 +85,7 @@ fn main() -> Result<(), String> {
         predicted_len: 480,
         f_cloud: LatencyFit { a: 0.4, b: 0.1 },
         cost_coeff: 0.6,
-        transfer_s: |n| 0.02 + n as f64 * 5e-7,
+        transfer: TransferModel { base_s: 0.02, per_token_s: 5e-7 },
         backlog_s: 12.0,
         n_edges: 4,
         best_slm_capability: 74.0,

@@ -1,10 +1,13 @@
-//! Load-sweep scenario grid — rpm × edge count × policy, the
+//! Load-sweep scenario grid — rpm × edge count × policy × dynamics, the
 //! whole-tradeoff-surface characterization that Edge-First-style cloud-edge
 //! studies call for and that was previously too slow to run as a
 //! sequential loop. The grid executes concurrently on the scenario-sweep
 //! runner (`PICE_SWEEP_THREADS`) over one shared generation cache, so the
-//! nine-to-27 scenarios that replay each workload serve each other's
-//! generations instead of recomputing them.
+//! scenarios that replay each workload serve each other's generations
+//! instead of recomputing them. The dynamics axis replays each cell in a
+//! static world and under the named environment presets (PERF.md
+//! §Dynamics subsystem) — deterministic per cell, so the grid stays
+//! bit-identical at any thread count.
 
 mod common;
 
@@ -13,6 +16,7 @@ use std::time::Instant;
 
 use pice::baselines;
 use pice::coordinator::EngineCfg;
+use pice::dynamics::DynamicsSpec;
 use pice::quality::judge::Judge;
 use pice::scenario::{bench_n, Env};
 use pice::sweep::{sweep_threads, SweepScenario};
@@ -29,6 +33,9 @@ fn main() -> Result<(), String> {
 
     let rpm_mults: &[f64] = if smoke { &[1.0] } else { &[0.75, 1.0, 1.5] };
     let edge_counts: &[usize] = if smoke { &[2, 4] } else { &[2, 4, 8] };
+    let dyn_axis: &[&str] = if smoke { &["stable", "edge-churn"] } else {
+        &["stable", "flaky-wan", "edge-churn"]
+    };
     type MkCfg = fn(&str) -> EngineCfg;
     let policies: [(&str, MkCfg); 3] = [
         ("PICE", baselines::pice),
@@ -36,21 +43,25 @@ fn main() -> Result<(), String> {
         ("Routing", baselines::routing),
     ];
 
-    // one workload per load level, shared by every (edges, policy) variant
-    // at that level — the cross-variant cache case
-    let mut scenarios: Vec<(f64, usize, &str, SweepScenario)> = Vec::new();
+    // one workload per load level, shared by every (edges, policy, dynamics)
+    // variant at that level — the cross-variant cache case
+    let mut scenarios: Vec<(f64, usize, &str, &str, SweepScenario)> = Vec::new();
     for &mult in rpm_mults {
         let wl = Arc::new(env.workload(base_rpm * mult, n, 29));
         for &ne in edge_counts {
             for (pname, mk) in &policies {
-                let mut cfg = mk(model);
-                cfg.n_edges = ne;
-                let label = format!("{pname} x{mult:.2} e{ne}");
-                scenarios.push((mult, ne, pname, SweepScenario::new(label, cfg, wl.clone())));
+                for &dname in dyn_axis {
+                    let mut cfg = mk(model);
+                    cfg.n_edges = ne;
+                    cfg.dynamics = DynamicsSpec::preset(dname).expect("known preset");
+                    let label = format!("{pname} x{mult:.2} e{ne} {dname}");
+                    let sc = SweepScenario::new(label, cfg, wl.clone());
+                    scenarios.push((mult, ne, pname, dname, sc));
+                }
             }
         }
     }
-    let grid: Vec<SweepScenario> = scenarios.iter().map(|(_, _, _, sc)| sc.clone()).collect();
+    let grid: Vec<SweepScenario> = scenarios.iter().map(|(_, _, _, _, sc)| sc.clone()).collect();
 
     common::banner(
         "Sweep grid",
@@ -67,26 +78,29 @@ fn main() -> Result<(), String> {
     let wall = t0.elapsed().as_secs_f64();
 
     println!(
-        "{:<12} {:>6} {:>6} | {:>10} {:>8} {:>8} {:>8}",
-        "policy", "rpm x", "edges", "thpt(q/m)", "lat(s)", "p95(s)", "quality"
+        "{:<12} {:>6} {:>6} {:>10} | {:>10} {:>8} {:>8} {:>8} {:>8}",
+        "policy", "rpm x", "edges", "dynamics", "thpt(q/m)", "lat(s)", "p95(s)", "quality",
+        "failover"
     );
     let mut rows = Vec::new();
-    for ((mult, ne, pname, _), outcome) in scenarios.iter().zip(outcomes) {
+    for ((mult, ne, pname, dname, _), outcome) in scenarios.iter().zip(outcomes) {
         let (m, traces) = outcome.map_err(|e| e.to_string())?;
         let q = common::mean_quality(&env, &judge, &traces);
         println!(
-            "{pname:<12} {mult:>6.2} {ne:>6} | {:>10.2} {:>8.2} {:>8.2} {:>8.2}",
-            m.throughput_qpm, m.avg_latency_s, m.p95_latency_s, q
+            "{pname:<12} {mult:>6.2} {ne:>6} {dname:>10} | {:>10.2} {:>8.2} {:>8.2} {:>8.2} {:>8}",
+            m.throughput_qpm, m.avg_latency_s, m.p95_latency_s, q, m.failovers
         );
         rows.push(obj(vec![
             ("policy", s(pname)),
             ("rpm_mult", num(*mult)),
             ("rpm", num(base_rpm * mult)),
             ("edges", num(*ne as f64)),
+            ("dynamics", s(dname)),
             ("throughput_qpm", num(m.throughput_qpm)),
             ("latency_s", num(m.avg_latency_s)),
             ("p95_s", num(m.p95_latency_s)),
             ("quality", num(q)),
+            ("failovers", num(m.failovers as f64)),
         ]));
     }
     common::dump("sweep_grid", Json::Arr(rows));

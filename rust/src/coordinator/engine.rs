@@ -24,6 +24,22 @@
 //! emits per-request [`ResponseEvent`]s — `Admitted`, `SketchReady`,
 //! `ExpansionChunk`, `Final` — at the simulated instant each becomes client
 //! visible; the sink is off by default so batch runs pay nothing for it.
+//!
+//! ## Environment dynamics + failover
+//!
+//! With a non-default [`crate::dynamics::DynamicsSpec`] in [`EngineCfg`],
+//! the world moves while the engine runs: the WAN link is re-evaluated per
+//! event (Eq. 2 consumes the *current* transfer model, sketch transfers pay
+//! the *current* link), and edge fault events (crash / recover / slowdown)
+//! are scheduled up-front from the spec's deterministic timeline. A crash
+//! bumps the edge's epoch so its in-flight completion events are discarded
+//! as stale, and every lost slot re-enters dispatch (`enqueued_at` reset,
+//! sketch context preserved) toward surviving edges — or parks until a
+//! scheduled recover, or falls back to the cloud when no help is coming.
+//! Invariant: **no request is ever silently lost** — every submission still
+//! ends in exactly one terminal serve event. The static default schedules
+//! no fault events, tracks no in-flight state and pins the legacy transfer
+//! constants, so it stays bit-identical to the pre-dynamics engine.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -35,10 +51,11 @@ use super::selection::select_model;
 use crate::cluster::Cluster;
 use crate::corpus::workload::Workload;
 use crate::corpus::Corpus;
+use crate::dynamics::{DynamicsSpec, EdgeFault};
 use crate::ensemble::{select as ensemble_select, Candidate, ConfidenceWeights};
 use crate::metrics::{Mode, RequestTrace};
 use crate::models::{ModelInfo, Registry};
-use crate::network::Link;
+use crate::network::{Link, TransferModel};
 use crate::parallel::{batch_wall, plan_batch, EdgeCostModel};
 use crate::profiler::{LatencyFit, OfflineProfile};
 use crate::runtime::SamplingParams;
@@ -82,6 +99,9 @@ pub struct EngineCfg {
     /// apply the RLAIF-fine-tuned sketch policy (per-category keep-fraction
     /// learned by `finetune`); None = base sketching
     pub sketch_keep_frac_override: Option<std::collections::BTreeMap<String, f64>>,
+    /// environment dynamics: time-varying link + edge churn/failure
+    /// injection. Default = static world, zero-cost when off.
+    pub dynamics: DynamicsSpec,
 }
 
 impl EngineCfg {
@@ -101,11 +121,17 @@ impl EngineCfg {
             scheduler,
             confidence: ConfidenceWeights::default(),
             sketch_keep_frac_override: None,
+            dynamics: DynamicsSpec::default(),
         }
     }
 
     pub fn with_policy(mut self, p: Policy) -> Self {
         self.policy = p;
+        self
+    }
+
+    pub fn with_dynamics(mut self, d: DynamicsSpec) -> Self {
+        self.dynamics = d;
         self
     }
 }
@@ -135,7 +161,13 @@ enum Ev {
     CloudDone { rid: usize, kind: CloudJobKind },
     JobArriveAtQueue { rid: usize },
     EdgePull { eid: usize },
-    EdgeDone { eid: usize, work: EdgeWork },
+    /// `epoch` is the launching edge incarnation: a crash bumps the edge's
+    /// epoch, so completions of work that died with the node arrive stale
+    /// and are discarded (their slots were already re-dispatched).
+    EdgeDone { eid: usize, epoch: u64, work: EdgeWork },
+    /// environment-dynamics fault event (scheduled up-front from the
+    /// deterministic [`crate::dynamics::FaultSpec`] timeline)
+    Fault { eid: usize, fault: EdgeFault },
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -150,12 +182,32 @@ struct EdgeWork {
     items: Vec<(usize, Candidate, usize /* edge tokens */)>,
 }
 
+/// What an edge is executing right now — retained (only when fault
+/// injection is on) so a crash can re-dispatch the lost work.
+#[derive(Clone, Debug, Default)]
+enum EdgeInflight {
+    #[default]
+    Idle,
+    /// expansion jobs of the current pull (replicas collapsed to 1)
+    Expand(Vec<Job>),
+    /// full-answer request (edge-only / routed-easy)
+    Full(usize),
+}
+
 struct EdgeState {
     spec: crate::cluster::DeviceSpec,
     /// interned model name — reassignment and every per-event read are
     /// refcount bumps, never String allocations
     current_model: Arc<str>,
     busy: bool,
+    /// false while crashed (dynamics) — a down edge pulls nothing
+    up: bool,
+    /// compute-duration multiplier (>1 = straggler; dynamics slowdown)
+    speed_mult: f64,
+    /// incarnation counter; bumped on crash to invalidate in-flight work
+    epoch: u64,
+    /// current work, tracked only when fault injection is on
+    inflight: EdgeInflight,
 }
 
 struct Pending {
@@ -185,6 +237,14 @@ struct Pending {
     candidates: Vec<Candidate>,
     replicas_out: usize,
     parallelism: usize,
+    /// failure-triggered re-dispatches (dynamics failover counter)
+    failovers: usize,
+    /// expansion sentence-slots re-queued by those failovers
+    retried_slots: usize,
+    /// a cloud-fallback regeneration is already pending for this request
+    /// (dedups the rescue when a primary job and its ensemble replicas are
+    /// drained to the cloud in one blackout sweep)
+    cloud_rescue: bool,
     done: bool,
 }
 
@@ -218,6 +278,26 @@ struct Core {
     /// streaming sink: Some = emit client-visible [`ResponseEvent`]s
     /// (enabled by [`Engine::enable_events`]); None = zero-cost
     events: Option<Vec<ResponseEvent>>,
+    /// fault injection configured (gates the in-flight tracking so the
+    /// static world stays allocation-free on the pull path)
+    faults_on: bool,
+    /// edges currently alive
+    up_edges: usize,
+    /// Recover events still unprocessed in the timeline — the "is help
+    /// coming" signal deciding park-vs-cloud-fallback when all edges die
+    pending_recovers: usize,
+    /// expansion jobs waiting out an all-edges-down window
+    parked_jobs: Vec<Job>,
+    /// full-answer requests waiting out an all-edges-down window
+    parked_full: VecDeque<usize>,
+    /// resumable bandwidth-walk state: the event clock is monotone, so the
+    /// walk advances incrementally instead of replaying from t=0 per event
+    walk_cache: crate::dynamics::link::WalkCache,
+    /// true until anything is submitted or pumped — lets [`Engine::run`]
+    /// skip rebuilding a core that is still exactly what `reset()` would
+    /// produce (a fault timeline pre-schedules events, so "queue empty" is
+    /// no longer a usable pristine test)
+    virgin: bool,
 }
 
 impl Core {
@@ -260,6 +340,10 @@ fn make_core(
                 slm_names[i % slm_names.len()].clone()
             },
             busy: false,
+            up: true,
+            speed_mult: 1.0,
+            epoch: 0,
+            inflight: EdgeInflight::Idle,
         })
         .collect();
 
@@ -281,9 +365,20 @@ fn make_core(
         None
     };
     let n_edges = edges.len();
+    // Environment dynamics: the WHOLE fault timeline is generated here,
+    // pure in (n_edges, dynamics.seed), and scheduled up-front — open-loop
+    // submission then sees the exact internal event set the closed loop
+    // does, and sweeps replay the identical environment at any thread
+    // count. The static default generates nothing.
+    let fault_timeline = cfg.dynamics.faults.timeline(n_edges, cfg.dynamics.seed);
+    let pending_recovers = crate::dynamics::FaultSpec::recover_count(&fault_timeline);
+    let mut q = EventQueue::new();
+    for ev in &fault_timeline {
+        q.schedule(ev.t, Ev::Fault { eid: ev.eid, fault: ev.fault });
+    }
     Core {
         rng: Rng::new(cfg.seed),
-        q: EventQueue::new(),
+        q,
         pend: Vec::new(),
         traces: Vec::new(),
         cloud_model,
@@ -299,6 +394,13 @@ fn make_core(
         ewma_parallelism: 1.0,
         edge_oom,
         events: None,
+        faults_on: cfg.dynamics.faults.any(),
+        up_edges: n_edges,
+        pending_recovers,
+        parked_jobs: Vec::new(),
+        parked_full: VecDeque::new(),
+        walk_cache: None,
+        virgin: true,
     }
 }
 
@@ -454,10 +556,14 @@ impl<'a> Engine<'a> {
             candidates: Vec::new(),
             replicas_out: 0,
             parallelism: 0,
+            failovers: 0,
+            retried_slots: 0,
+            cloud_rescue: false,
             done: false,
         });
         self.core.traces.push(None);
         self.core.q.schedule_class(arrival, FIRST_CLASS, Ev::Arrive(rid));
+        self.core.virgin = false;
         Ok(rid)
     }
 
@@ -466,13 +572,15 @@ impl<'a> Engine<'a> {
         let Some((now, ev)) = self.core.q.pop() else {
             return Ok(false);
         };
+        self.core.virgin = false;
         match ev {
             Ev::Arrive(rid) => self.ev_arrive(now, rid),
             Ev::CloudAdmit => self.ev_cloud_admit(now)?,
             Ev::CloudDone { rid, kind } => self.ev_cloud_done(now, rid, kind),
             Ev::JobArriveAtQueue { rid } => self.ev_job_arrive(now, rid),
             Ev::EdgePull { eid } => self.ev_edge_pull(now, eid)?,
-            Ev::EdgeDone { eid, work } => self.ev_edge_done(now, eid, work),
+            Ev::EdgeDone { eid, epoch, work } => self.ev_edge_done(now, eid, epoch, work),
+            Ev::Fault { eid, fault } => self.ev_fault(now, eid, fault),
         }
         Ok(true)
     }
@@ -519,8 +627,10 @@ impl<'a> Engine<'a> {
     /// drain the queue.
     pub fn run(&mut self, workload: &Workload) -> Result<Vec<RequestTrace>, RunError> {
         // a pristine core (no submissions, nothing pumped) is already the
-        // state reset() would rebuild — don't construct it twice per run
-        if !(self.core.pend.is_empty() && self.core.q.is_empty()) {
+        // state reset() would rebuild — don't construct it twice per run.
+        // Tracked with an explicit flag: a dynamics fault timeline
+        // pre-schedules events, so an empty queue is not a usable test.
+        if !self.core.virgin {
             self.reset();
         }
         // infeasible placements fail up front, even for empty workloads
@@ -553,12 +663,7 @@ impl<'a> Engine<'a> {
                 self.core.q.schedule(now, Ev::CloudAdmit);
             }
             Policy::EdgeOnly => {
-                self.core.pend[rid].mode = Mode::EdgeFull;
-                let eid = (0..self.core.edges.len())
-                    .min_by_key(|&i| self.core.edge_fifo[i].len())
-                    .unwrap_or(0);
-                self.core.edge_fifo[eid].push_back(rid);
-                self.core.q.schedule(now, Ev::EdgePull { eid });
+                self.dispatch_full(now, rid);
             }
             Policy::Routing { difficulty_threshold } => {
                 // difficulty proxy: predicted length + jitter (an imperfect
@@ -573,12 +678,7 @@ impl<'a> Engine<'a> {
                     self.core.cloud_pending.push_back((rid, CloudJobKind::Full));
                     self.core.q.schedule(now, Ev::CloudAdmit);
                 } else {
-                    self.core.pend[rid].mode = Mode::EdgeFull;
-                    let eid = (0..self.core.edges.len())
-                        .min_by_key(|&i| self.core.edge_fifo[i].len())
-                        .unwrap_or(0);
-                    self.core.edge_fifo[eid].push_back(rid);
-                    self.core.q.schedule(now, Ev::EdgePull { eid });
+                    self.dispatch_full(now, rid);
                 }
             }
             Policy::Pice => {
@@ -589,11 +689,19 @@ impl<'a> Engine<'a> {
                 // fit is summed per job, so each queued job carries its own
                 // intercept
                 let backlog_s = self.cost_coeff * self.core.jobq.backlog_cost(&f_cloud);
+                // Δ(r): the static world pins the legacy calibrated
+                // constants bit-for-bit; with dynamics on, the profiler's
+                // view is the CURRENT link, so routing adapts mid-run
+                let transfer = if self.cfg.dynamics.link.is_static() {
+                    TransferModel { base_s: 0.02, per_token_s: 5e-7 }
+                } else {
+                    self.link_now_mut(now).transfer_model()
+                };
                 let inp = SchedInput {
                     predicted_len: predicted,
                     f_cloud,
                     cost_coeff: self.cost_coeff,
-                    transfer_s: |n| 0.02 + n as f64 * 5e-7,
+                    transfer,
                     backlog_s,
                     n_edges: self.core.edges.len(),
                     best_slm_capability: best_cap,
@@ -683,11 +791,16 @@ impl<'a> Engine<'a> {
                     if ans.last() == Some(&self.tok.specials.eos) {
                         ans.pop();
                     }
-                    self.core.pend[rid].candidates = vec![Candidate {
+                    // push, don't replace: a plain Full request reaches
+                    // admission with no candidates (so this is the old
+                    // `vec![..]` bit-for-bit), while a failover cloud
+                    // rescue joins any already-streamed edge expansions in
+                    // ensemble selection instead of silently erasing them
+                    self.core.pend[rid].candidates.push(Candidate {
                         model: cloud_model.clone(),
                         tokens: ans,
                         logps: out.logps,
-                    }];
+                    });
                     self.cluster.cloud.prefill_time_s(cloud_info, prompt_sim, b)
                         + self.cluster.cloud.gen_time_s(cloud_info, n_sim, b)
                 }
@@ -752,7 +865,9 @@ impl<'a> Engine<'a> {
                     let text = self.tok.decode_content(&self.core.pend[rid].sketch);
                     self.emit(now, rid, ResponseEventKind::SketchReady { text });
                 }
-                let delta = self.cfg.link.transfer_tokens_s(
+                // the sketch pays the CURRENT link (dynamics may have
+                // retimed it); static worlds see cfg.link untouched
+                let delta = self.link_now_mut(now).transfer_tokens_s(
                     (self.core.pend[rid].sketch.len() as f64 * self.cfg.sim_token_scale) as usize,
                 );
                 self.core.q.schedule(now + delta, Ev::JobArriveAtQueue { rid });
@@ -785,27 +900,35 @@ impl<'a> Engine<'a> {
             enqueued_at: now,
             replicas_left: replicas,
         };
+        if self.core.up_edges == 0 {
+            // every edge is down: park for a scheduled recover, or fall
+            // back to the cloud when the timeline promises none. Either
+            // way the request was displaced by the blackout — count it, so
+            // the degraded-mode percentiles see park-then-recover
+            // survivors too, not only cloud rescues.
+            self.core.pend[rid].failovers += 1;
+            if self.core.pending_recovers > 0 {
+                self.core.parked_jobs.push(job);
+            } else {
+                self.fail_to_cloud(now, rid);
+            }
+            return;
+        }
         if !self.core.jobq.push(job) {
             // queue full: fall back — answer is the sketch itself
             // (degenerate; counted against PICE's quality)
-            let sketch_cand = Candidate {
-                model: self.core.cloud_model.clone(),
-                tokens: self.core.pend[rid].sketch.to_vec(),
-                logps: vec![-1.0; self.core.pend[rid].sketch.len()],
-            };
-            self.core.pend[rid].candidates = vec![sketch_cand];
-            self.finalize(rid, now);
+            self.fallback_finalize_with_sketch(rid, now);
             return;
         }
         for eid in 0..self.core.edges.len() {
-            if !self.core.edges[eid].busy {
+            if self.core.edges[eid].up && !self.core.edges[eid].busy {
                 self.core.q.schedule(now, Ev::EdgePull { eid });
             }
         }
     }
 
     fn ev_edge_pull(&mut self, now: SimTime, eid: usize) -> Result<(), RunError> {
-        if self.core.edges[eid].busy {
+        if self.core.edges[eid].busy || !self.core.edges[eid].up {
             return Ok(());
         }
         let scale = self.cfg.sim_token_scale;
@@ -834,11 +957,14 @@ impl<'a> Engine<'a> {
                 ans.pop();
             }
             let n_sim = (ans.len() as f64 * scale) as usize;
-            let dur = self.core.edges[eid].spec.prefill_time_s(
+            // straggler mode (dynamics slowdown) stretches compute; the
+            // static multiplier is exactly 1.0 (bit-neutral)
+            let dur = (self.core.edges[eid].spec.prefill_time_s(
                 info,
                 (prompt.len() as f64 * scale) as usize,
                 1,
-            ) + self.core.edges[eid].spec.gen_time_s(info, n_sim, 1);
+            ) + self.core.edges[eid].spec.gen_time_s(info, n_sim, 1))
+                * self.core.edges[eid].speed_mult;
             let work = EdgeWork {
                 items: vec![(
                     rid,
@@ -846,7 +972,11 @@ impl<'a> Engine<'a> {
                     n_sim,
                 )],
             };
-            self.core.q.schedule(now + dur, Ev::EdgeDone { eid, work });
+            if self.core.faults_on {
+                self.core.edges[eid].inflight = EdgeInflight::Full(rid);
+            }
+            let epoch = self.core.edges[eid].epoch;
+            self.core.q.schedule(now + dur, Ev::EdgeDone { eid, epoch, work });
             return Ok(());
         }
         if self.core.jobq.is_empty() {
@@ -867,7 +997,7 @@ impl<'a> Engine<'a> {
         // edges can absorb them (never delaying the primary expansion), and
         // discarded otherwise.
         let idle_others: Vec<usize> = (0..self.core.edges.len())
-            .filter(|&e2| e2 != eid && !self.core.edges[e2].busy)
+            .filter(|&e2| e2 != eid && !self.core.edges[e2].busy && self.core.edges[e2].up)
             .collect();
         let mut spare = idle_others.len();
         for job in batch.iter_mut() {
@@ -1013,7 +1143,8 @@ impl<'a> Engine<'a> {
         }
         let real_refs: Vec<&[usize]> = real_lens_per_job.iter().map(|v| v.as_slice()).collect();
         let wall = batch_wall(&plans, &real_refs, &info_cost);
-        let total_dur = sel.switch_cost_s + wall;
+        // straggler multiplier is exactly 1.0 in the static world
+        let total_dur = (sel.switch_cost_s + wall) * self.core.edges[eid].speed_mult;
         crate::debug!(
             "edge{eid} t={now:.1} batch={} model={} lanes={:?} switch={:.1} wall={wall:.1}",
             batch.len(),
@@ -1021,12 +1152,28 @@ impl<'a> Engine<'a> {
             plans.iter().map(Vec::len).collect::<Vec<_>>(),
             sel.switch_cost_s
         );
-        self.core.q.schedule(now + total_dur, Ev::EdgeDone { eid, work: EdgeWork { items } });
+        if self.core.faults_on {
+            // retained so a crash can re-enter these slots into dispatch
+            // with their sketch context intact (Job clones are Arc bumps)
+            self.core.edges[eid].inflight = EdgeInflight::Expand(batch.clone());
+        }
+        let epoch = self.core.edges[eid].epoch;
+        let done = Ev::EdgeDone { eid, epoch, work: EdgeWork { items } };
+        self.core.q.schedule(now + total_dur, done);
         Ok(())
     }
 
-    fn ev_edge_done(&mut self, now: SimTime, eid: usize, work: EdgeWork) {
+    fn ev_edge_done(&mut self, now: SimTime, eid: usize, epoch: u64, work: EdgeWork) {
+        if epoch != self.core.edges[eid].epoch {
+            // completion of work that died with a crashed incarnation: the
+            // slots were re-dispatched at crash time — drop it entirely
+            // (touching busy/pull state here would race the new incarnation)
+            return;
+        }
         self.core.edges[eid].busy = false;
+        if self.core.faults_on {
+            self.core.edges[eid].inflight = EdgeInflight::Idle;
+        }
         for (rid, cand, edge_tokens) in work.items {
             // streaming: the expansion chunk becomes client-visible now,
             // before terminal bookkeeping (SketchReady always precedes it).
@@ -1052,8 +1199,230 @@ impl<'a> Engine<'a> {
         self.core.q.schedule(now, Ev::EdgePull { eid });
     }
 
-    /// Ensemble-select and close out a request.
+    // -- environment dynamics + failover -------------------------------------
+
+    /// The cloud<->edge link as of simulated time `t` — `cfg.link` itself in
+    /// a static world, the dynamics-retimed state otherwise. All engine
+    /// callers see a monotone clock, so the bandwidth walk advances through
+    /// the resumable cache instead of replaying from t=0 per event.
+    fn link_now_mut(&mut self, t: SimTime) -> Link {
+        self.cfg.dynamics.link.link_at_cached(
+            &self.cfg.link,
+            t,
+            self.cfg.dynamics.seed,
+            &mut self.core.walk_cache,
+        )
+    }
+
+    /// Conservative estimate of the latency a request admitted *now* would
+    /// inherit before its own work even starts: the Eq. 2 backlog cost of
+    /// every queued expansion job plus one sketch transfer on the current
+    /// link. The SLO-aware admission gate
+    /// ([`crate::serve::ServeCfg::deadline_s`]) tests deadlines against it.
+    pub fn backlog_estimate_s(&mut self) -> SimTime {
+        let backlog = self.cost_coeff * self.core.jobq.backlog_cost(&self.core.f_cloud);
+        let transfer = self
+            .link_now_mut(self.now())
+            .transfer_tokens_s(self.cfg.scheduler.min_progressive_len);
+        backlog + transfer
+    }
+
+    /// Process one fault event from the dynamics timeline.
+    fn ev_fault(&mut self, now: SimTime, eid: usize, fault: EdgeFault) {
+        match fault {
+            EdgeFault::Crash => {
+                if !self.core.edges[eid].up {
+                    return;
+                }
+                self.core.edges[eid].up = false;
+                self.core.edges[eid].busy = false;
+                self.core.edges[eid].speed_mult = 1.0;
+                // invalidate the incarnation: in-flight EdgeDone events of
+                // this edge now arrive stale and are dropped
+                self.core.edges[eid].epoch += 1;
+                self.core.up_edges -= 1;
+                // the work that died with the node re-enters dispatch
+                match std::mem::take(&mut self.core.edges[eid].inflight) {
+                    EdgeInflight::Idle => {}
+                    EdgeInflight::Expand(jobs) => {
+                        for job in jobs {
+                            self.redispatch_job(now, job);
+                        }
+                    }
+                    EdgeInflight::Full(rid) => {
+                        if !self.core.pend[rid].done {
+                            self.core.pend[rid].failovers += 1;
+                            self.dispatch_full(now, rid);
+                        }
+                    }
+                }
+                // queued-but-unstarted full-answer jobs move off the dead node
+                let waiting = std::mem::take(&mut self.core.edge_fifo[eid]);
+                for rid in waiting {
+                    if !self.core.pend[rid].done {
+                        self.core.pend[rid].failovers += 1;
+                        self.dispatch_full(now, rid);
+                    }
+                }
+                // nobody left alive and no recover scheduled: everything
+                // still queued for the edges must terminate via the cloud
+                if self.core.up_edges == 0 && self.core.pending_recovers == 0 {
+                    loop {
+                        let batch = self.core.jobq.pull_batch(usize::MAX);
+                        if batch.is_empty() {
+                            break;
+                        }
+                        for job in batch {
+                            // one failover per request here, even when its
+                            // primary and replicas all drain in this sweep
+                            let p = &self.core.pend[job.rid];
+                            if !p.done && !p.cloud_rescue {
+                                self.core.pend[job.rid].failovers += 1;
+                                self.fail_to_cloud(now, job.rid);
+                            }
+                        }
+                    }
+                    let parked: Vec<Job> = std::mem::take(&mut self.core.parked_jobs);
+                    for job in parked {
+                        self.fail_to_cloud(now, job.rid);
+                    }
+                    let parked_full = std::mem::take(&mut self.core.parked_full);
+                    for rid in parked_full {
+                        if !self.core.pend[rid].done {
+                            self.dispatch_full(now, rid);
+                        }
+                    }
+                }
+            }
+            EdgeFault::Recover => {
+                // every Recover in the timeline is consumed exactly once,
+                // whether or not the edge was actually down
+                self.core.pending_recovers = self.core.pending_recovers.saturating_sub(1);
+                if !self.core.edges[eid].up {
+                    self.core.edges[eid].up = true;
+                    self.core.edges[eid].busy = false;
+                    self.core.edges[eid].speed_mult = 1.0;
+                    self.core.edges[eid].inflight = EdgeInflight::Idle;
+                    self.core.up_edges += 1;
+                }
+                // drain work parked during an all-edges-down window
+                let parked: Vec<Job> = std::mem::take(&mut self.core.parked_jobs);
+                for mut job in parked {
+                    let rid = job.rid;
+                    job.enqueued_at = now;
+                    if !self.core.jobq.push(job) {
+                        self.fallback_finalize_with_sketch(rid, now);
+                    }
+                }
+                let parked_full = std::mem::take(&mut self.core.parked_full);
+                for rid in parked_full {
+                    if !self.core.pend[rid].done {
+                        self.dispatch_full(now, rid);
+                    }
+                }
+                self.core.q.schedule(now, Ev::EdgePull { eid });
+            }
+            EdgeFault::Slowdown { mult } => {
+                if self.core.edges[eid].up {
+                    // applies to work STARTED after this instant; in-flight
+                    // work keeps the duration it was scheduled with
+                    self.core.edges[eid].speed_mult = mult.max(0.05);
+                }
+            }
+        }
+    }
+
+    /// Route a full-answer request to the least-loaded *live* edge; with
+    /// every edge down, park it for a scheduled recover or serve it from
+    /// the cloud when the timeline promises none. (In a static world every
+    /// edge is up and this is exactly the old least-loaded FIFO pick.)
+    fn dispatch_full(&mut self, now: SimTime, rid: usize) {
+        let pick = (0..self.core.edges.len())
+            .filter(|&i| self.core.edges[i].up)
+            .min_by_key(|&i| self.core.edge_fifo[i].len());
+        if let Some(eid) = pick {
+            self.core.pend[rid].mode = Mode::EdgeFull;
+            self.core.edge_fifo[eid].push_back(rid);
+            self.core.q.schedule(now, Ev::EdgePull { eid });
+        } else if self.core.pending_recovers > 0 {
+            self.core.pend[rid].mode = Mode::EdgeFull;
+            self.core.parked_full.push_back(rid);
+        } else {
+            // no edge will ever come back: the cloud is the answer of last
+            // resort (degrades the edge-only baseline honestly)
+            self.core.pend[rid].mode = Mode::CloudFull;
+            self.core.cloud_pending.push_back((rid, CloudJobKind::Full));
+            self.core.q.schedule(now, Ev::CloudAdmit);
+        }
+    }
+
+    /// Re-enter a failed expansion job into dispatch: fresh queue clock,
+    /// sketch context preserved, counted on the request's failover tally.
+    fn redispatch_job(&mut self, now: SimTime, mut job: Job) {
+        let rid = job.rid;
+        if self.core.pend[rid].done {
+            return;
+        }
+        self.core.pend[rid].failovers += 1;
+        self.core.pend[rid].retried_slots += job.sentences.len();
+        job.enqueued_at = now;
+        if self.core.up_edges > 0 {
+            if self.core.jobq.push(job) {
+                for eid in 0..self.core.edges.len() {
+                    if self.core.edges[eid].up && !self.core.edges[eid].busy {
+                        self.core.q.schedule(now, Ev::EdgePull { eid });
+                    }
+                }
+            } else {
+                self.fallback_finalize_with_sketch(rid, now);
+            }
+        } else if self.core.pending_recovers > 0 {
+            self.core.parked_jobs.push(job);
+        } else {
+            self.fail_to_cloud(now, rid);
+        }
+    }
+
+    /// Last-resort failover: have the cloud produce the full answer (the
+    /// request keeps its identity; whichever completion lands first wins —
+    /// `finalize` is idempotent). One rescue per request: a primary job and
+    /// its ensemble replicas drained in the same blackout collapse into a
+    /// single cloud regeneration.
+    fn fail_to_cloud(&mut self, now: SimTime, rid: usize) {
+        if self.core.pend[rid].done || self.core.pend[rid].cloud_rescue {
+            return;
+        }
+        self.core.pend[rid].cloud_rescue = true;
+        self.core.cloud_pending.push_back((rid, CloudJobKind::Full));
+        self.core.q.schedule(now, Ev::CloudAdmit);
+    }
+
+    /// Degenerate close-out: the sketch itself (or any candidate already
+    /// delivered) becomes the answer — the pre-dynamics queue-full path,
+    /// shared by failover when re-queueing is impossible.
+    fn fallback_finalize_with_sketch(&mut self, rid: usize, now: SimTime) {
+        if self.core.pend[rid].done {
+            return;
+        }
+        if self.core.pend[rid].candidates.is_empty() {
+            let sketch_cand = Candidate {
+                model: self.core.cloud_model.clone(),
+                tokens: self.core.pend[rid].sketch.to_vec(),
+                logps: vec![-1.0; self.core.pend[rid].sketch.len()],
+            };
+            self.core.pend[rid].candidates = vec![sketch_cand];
+        }
+        self.finalize(rid, now);
+    }
+
+    /// Ensemble-select and close out a request. Idempotent: under failover
+    /// a request can race two completion paths (e.g. a surviving ensemble
+    /// replica vs the cloud fallback); only the first closes the request,
+    /// so exactly one terminal event is ever emitted.
     fn finalize(&mut self, rid: usize, now: SimTime) {
+        if self.core.pend[rid].done {
+            return;
+        }
         let scale = self.cfg.sim_token_scale;
         let conf_w = self.cfg.confidence;
         let trace = {
@@ -1091,6 +1460,8 @@ impl<'a> Engine<'a> {
                 winner_model: cand.model.to_string(),
                 confidence,
                 parallelism: p.parallelism,
+                failovers: p.failovers,
+                retried_slots: p.retried_slots,
             }
         };
         self.core.traces[rid] = Some(trace);

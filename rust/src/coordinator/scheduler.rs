@@ -12,6 +12,7 @@
 //! more capable SLMs admit shorter sketches.
 
 use super::slo::SloPolicy;
+use crate::network::TransferModel;
 use crate::profiler::LatencyFit;
 use crate::simclock::SimTime;
 use crate::sketch::{expected_sketch_len, SketchLevel};
@@ -38,8 +39,10 @@ pub struct SchedInput {
     pub f_cloud: LatencyFit,
     /// cost coefficient c for the *current* best SLM/edge pair
     pub cost_coeff: f64,
-    /// network transfer time for a sketch of the candidate size
-    pub transfer_s: fn(usize) -> SimTime,
+    /// network transfer model for a sketch of the candidate size — derived
+    /// from the *current* link state by the engine (the dynamics subsystem
+    /// retimes it mid-run), so Eq. 2 routing genuinely adapts to the WAN
+    pub transfer: TransferModel,
     /// backlog: Σ c·f(l_j) over queued jobs
     pub backlog_s: SimTime,
     /// number of edge devices N
@@ -81,7 +84,7 @@ impl CloudScheduler {
     pub fn e2e_estimate(&self, inp: &SchedInput, level: SketchLevel) -> SimTime {
         let sk_len = expected_sketch_len(inp.predicted_len, level);
         let f_sketch = inp.f_cloud.eval(sk_len);
-        let delta = (inp.transfer_s)(sk_len);
+        let delta = inp.transfer.eval(sk_len);
         let p = inp.parallel_hint.max(1.0);
         // edge pass at the observed parallelism (p = 1 when no data yet —
         // the paper's conservative default)
@@ -156,7 +159,7 @@ mod tests {
             predicted_len: 100,
             f_cloud: LatencyFit { a: 0.2, b: 0.055 }, // ~18 tok/s cloud
             cost_coeff: 0.35,
-            transfer_s: |n| 0.02 + n as f64 * 1e-5,
+            transfer: TransferModel { base_s: 0.02, per_token_s: 1e-5 },
             backlog_s: 0.0,
             n_edges: 4,
             best_slm_capability: 74.0,
@@ -193,6 +196,20 @@ mod tests {
         let s = CloudScheduler::default();
         let d = s.decide(&SchedInput { backlog_s: 500.0, ..base_input() });
         assert_eq!(d.mode, Mode::Full);
+    }
+
+    #[test]
+    fn degraded_link_forgoes_progressive() {
+        // Eq. 2 consumes the live transfer model (dynamics subsystem): a
+        // WAN bad enough that the sketch transfer alone blows the latency
+        // budget must flip the decision to Full
+        let s = CloudScheduler::default();
+        assert_eq!(s.decide(&base_input()).mode, Mode::Progressive);
+        let bad = SchedInput {
+            transfer: TransferModel { base_s: 20.0, per_token_s: 1e-2 },
+            ..base_input()
+        };
+        assert_eq!(s.decide(&bad).mode, Mode::Full);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 use super::{Corpus, Question};
 use crate::util::rng::Rng;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Arrival {
     /// Poisson process (exponential inter-arrival).
     Poisson,
@@ -16,6 +16,12 @@ pub enum Arrival {
     Uniform,
     /// All requests arrive at t=0 (closed-loop batch).
     Burst,
+    /// Markov-modulated on/off Poisson: alternating phases of `burst_len`
+    /// arrivals — ON at `burst_factor` x the nominal rate, OFF at the
+    /// complementary rate — so the long-run mean rate still equals `rpm`
+    /// while load spikes can coincide with link degradation / edge churn
+    /// (the dynamics-subsystem pairing). `burst_factor` is clamped to >= 1.
+    BurstyPoisson { burst_factor: f64, burst_len: usize },
 }
 
 #[derive(Clone, Debug)]
@@ -78,6 +84,17 @@ impl Workload {
                     t
                 }
                 Arrival::Burst => 0.0,
+                Arrival::BurstyPoisson { burst_factor, burst_len } => {
+                    let bf = burst_factor.max(1.0);
+                    let on = rate_per_s * bf;
+                    // equal-length (in arrivals) on/off phases keep the
+                    // mean inter-arrival at exactly 1/rate:
+                    // (1/on + 1/off) / 2 = 1/rate  =>  off = rate/(2 - 1/bf)
+                    let off = rate_per_s / (2.0 - 1.0 / bf);
+                    let phase_on = (rid / burst_len.max(1)) % 2 == 0;
+                    t += rng.exp(if phase_on { on } else { off });
+                    t
+                }
             };
             requests.push(Request { rid, question_id: q.id, arrival_s });
         }
@@ -109,6 +126,60 @@ mod tests {
         // 60 rpm = 1/s; 2000 arrivals should span ~2000s +- 10%
         let span = w.span_s();
         assert!((1700.0..2300.0).contains(&span), "span {span}");
+    }
+
+    #[test]
+    fn bursty_mean_rate_matches_rpm() {
+        // property: across factors/phase lengths, the modulated process
+        // keeps the nominal long-run rate (the phase algebra is exact; the
+        // tolerance only absorbs sampling noise)
+        let c = toy_corpus();
+        for (bf, bl, seed) in [(2.0, 10, 7u64), (4.0, 25, 11), (8.0, 5, 13), (1.0, 50, 17)] {
+            let spec = WorkloadSpec {
+                rpm: 60.0,
+                n_requests: 4000,
+                arrival: Arrival::BurstyPoisson { burst_factor: bf, burst_len: bl },
+                categories: vec![],
+                seed,
+            };
+            let w = Workload::generate(&c, spec);
+            let span = w.span_s();
+            assert!(
+                (3400.0..4600.0).contains(&span),
+                "bf={bf} bl={bl}: span {span} vs nominal 4000s"
+            );
+        }
+    }
+
+    #[test]
+    fn bursty_actually_bursts() {
+        // ON-phase gaps must be visibly tighter than OFF-phase gaps
+        let c = toy_corpus();
+        let bl = 50;
+        let spec = WorkloadSpec {
+            rpm: 60.0,
+            n_requests: 1000,
+            arrival: Arrival::BurstyPoisson { burst_factor: 6.0, burst_len: bl },
+            categories: vec![],
+            seed: 3,
+        };
+        let w = Workload::generate(&c, spec);
+        let gap = |i: usize| w.requests[i].arrival_s - w.requests[i - 1].arrival_s;
+        let (mut on_sum, mut on_n, mut off_sum, mut off_n) = (0.0, 0, 0.0, 0);
+        for i in 1..w.requests.len() {
+            if (i / bl) % 2 == 0 {
+                on_sum += gap(i);
+                on_n += 1;
+            } else {
+                off_sum += gap(i);
+                off_n += 1;
+            }
+        }
+        let (on_mean, off_mean) = (on_sum / on_n as f64, off_sum / off_n as f64);
+        assert!(
+            on_mean * 2.0 < off_mean,
+            "on-phase mean gap {on_mean:.3}s not clearly tighter than off {off_mean:.3}s"
+        );
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Edge churn and failure injection.
+//!
+//! EdgeShard-class deployments must tolerate heterogeneous, unreliable edge
+//! devices; this module generates the *entire* fault timeline of a scenario
+//! up-front as a pure function of `(n_edges, seed)`, so the engine schedules
+//! every event at construction and open-loop driving stays bit-identical to
+//! the closed loop (an on-demand process would observe submission timing).
+//!
+//! Event kinds:
+//! * `Crash` — the node dies instantly: in-flight expansion slots are lost
+//!   and re-enter dispatch (the engine's failover path);
+//! * `Recover` — the node rejoins with a cold queue and nominal speed;
+//! * `Slowdown { mult }` — straggler mode: compute takes `mult`x as long
+//!   (`mult: 1.0` restores nominal speed).
+//!
+//! Stochastic processes (MTBF/MTTR crashes, straggler windows) are bounded
+//! by `horizon_s`; every stochastically injected crash is **paired with a
+//! recover**, even one past the horizon, so work parked during an all-edges
+//! -down window always drains. Explicit event lists may model permanent
+//! loss (crash with no recover) — the engine then falls back to the cloud.
+
+use crate::simclock::SimTime;
+use crate::util::rng::Rng;
+
+/// One edge-node fault event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EdgeFault {
+    Crash,
+    Recover,
+    Slowdown { mult: f64 },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeEvent {
+    pub t: SimTime,
+    pub eid: usize,
+    pub fault: EdgeFault,
+}
+
+/// Stochastic straggler windows: on average every `mtbs_s` an edge slows to
+/// `mult`x compute time for an (exponential) `mean_dur_s` window.
+#[derive(Clone, Copy, Debug)]
+pub struct SlowdownSpec {
+    pub mtbs_s: f64,
+    pub mean_dur_s: f64,
+    pub mult: f64,
+}
+
+/// The failure-injection schedule of a scenario. Default = no faults.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    /// explicit scheduled events (reproduced incidents, targeted tests)
+    pub events: Vec<EdgeEvent>,
+    /// mean time between failures per edge (exponential); None = no crashes
+    pub mtbf_s: Option<f64>,
+    /// mean time to repair after a stochastic crash (exponential)
+    pub mttr_s: f64,
+    /// stochastic straggler process; None = no slowdowns
+    pub slowdown: Option<SlowdownSpec>,
+    /// stochastic injections stop at this sim time (recovers may land past
+    /// it); bounds the timeline so `Engine::run` always reaches quiescence
+    pub horizon_s: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            events: Vec::new(),
+            mtbf_s: None,
+            mttr_s: 30.0,
+            slowdown: None,
+            horizon_s: 3600.0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Any fault source configured? (Gates the engine's in-flight tracking
+    /// so the static world pays nothing for the failover machinery.)
+    pub fn any(&self) -> bool {
+        !self.events.is_empty() || self.mtbf_s.is_some() || self.slowdown.is_some()
+    }
+
+    /// The full deterministic event timeline, sorted by `(t, eid)` with
+    /// stable insertion order on ties. Pure in `(n_edges, seed)`.
+    pub fn timeline(&self, n_edges: usize, seed: u64) -> Vec<EdgeEvent> {
+        let mut evs: Vec<EdgeEvent> =
+            self.events.iter().filter(|e| e.eid < n_edges).copied().collect();
+        if let Some(mtbf) = self.mtbf_s {
+            let mtbf = mtbf.max(1e-3);
+            let mttr = self.mttr_s.max(1e-3);
+            for eid in 0..n_edges {
+                let mut rng = Rng::new(seed ^ (eid as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let mut t = 0.0;
+                loop {
+                    t += rng.exp(1.0 / mtbf);
+                    if t >= self.horizon_s {
+                        break;
+                    }
+                    evs.push(EdgeEvent { t, eid, fault: EdgeFault::Crash });
+                    t += rng.exp(1.0 / mttr);
+                    // paired recover, even past the horizon: a stochastic
+                    // crash never strands parked work forever
+                    evs.push(EdgeEvent { t, eid, fault: EdgeFault::Recover });
+                }
+            }
+        }
+        if let Some(sl) = self.slowdown {
+            let mtbs = sl.mtbs_s.max(1e-3);
+            let dur = sl.mean_dur_s.max(1e-3);
+            for eid in 0..n_edges {
+                let mut rng = Rng::new(seed ^ (eid as u64 + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+                let mut t = 0.0;
+                loop {
+                    t += rng.exp(1.0 / mtbs);
+                    if t >= self.horizon_s {
+                        break;
+                    }
+                    evs.push(EdgeEvent { t, eid, fault: EdgeFault::Slowdown { mult: sl.mult } });
+                    t += rng.exp(1.0 / dur);
+                    evs.push(EdgeEvent { t, eid, fault: EdgeFault::Slowdown { mult: 1.0 } });
+                }
+            }
+        }
+        // stable sort: equal (t, eid) keep generation order, so the
+        // timeline (and thus the engine's event-queue seq numbers) is a
+        // deterministic function of the spec alone
+        evs.sort_by(|a, b| a.t.total_cmp(&b.t).then(a.eid.cmp(&b.eid)));
+        evs
+    }
+
+    /// Recover events in the timeline — the engine's "is help coming"
+    /// signal deciding park-vs-cloud-fallback when every edge is down.
+    pub fn recover_count(timeline: &[EdgeEvent]) -> usize {
+        timeline.iter().filter(|e| e.fault == EdgeFault::Recover).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn churny() -> FaultSpec {
+        FaultSpec {
+            mtbf_s: Some(60.0),
+            mttr_s: 15.0,
+            horizon_s: 600.0,
+            slowdown: Some(SlowdownSpec { mtbs_s: 120.0, mean_dur_s: 20.0, mult: 2.5 }),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn default_is_empty() {
+        let f = FaultSpec::default();
+        assert!(!f.any());
+        assert!(f.timeline(4, 7).is_empty());
+    }
+
+    #[test]
+    fn timeline_is_pure_and_sorted() {
+        let f = churny();
+        let a = f.timeline(4, 21);
+        let b = f.timeline(4, 21);
+        assert!(!a.is_empty());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.t.to_bits(), y.t.to_bits());
+            assert_eq!(x.eid, y.eid);
+            assert_eq!(x.fault, y.fault);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].t <= w[1].t, "timeline out of order");
+        }
+        // a different seed perturbs the timeline
+        let c = f.timeline(4, 22);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.t != y.t));
+    }
+
+    #[test]
+    fn every_stochastic_crash_is_paired_with_a_recover() {
+        let f =
+            FaultSpec { mtbf_s: Some(40.0), mttr_s: 10.0, horizon_s: 500.0, ..Default::default() };
+        let tl = f.timeline(3, 5);
+        let crashes = tl.iter().filter(|e| e.fault == EdgeFault::Crash).count();
+        assert!(crashes > 0, "horizon 500 / mtbf 40 x 3 edges must crash");
+        assert_eq!(FaultSpec::recover_count(&tl), crashes);
+        // per edge, crash/recover strictly alternate
+        for eid in 0..3 {
+            let mut expect_crash = true;
+            for e in tl.iter().filter(|e| e.eid == eid) {
+                match e.fault {
+                    EdgeFault::Crash => {
+                        assert!(expect_crash, "double crash on edge {eid}");
+                        expect_crash = false;
+                    }
+                    EdgeFault::Recover => {
+                        assert!(!expect_crash, "recover before crash on edge {eid}");
+                        expect_crash = true;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_events_pass_through_and_filter_bad_eids() {
+        let f = FaultSpec {
+            events: vec![
+                EdgeEvent { t: 5.0, eid: 1, fault: EdgeFault::Crash },
+                EdgeEvent { t: 9.0, eid: 99, fault: EdgeFault::Crash }, // dropped
+                EdgeEvent { t: 8.0, eid: 1, fault: EdgeFault::Recover },
+            ],
+            ..Default::default()
+        };
+        let tl = f.timeline(2, 0);
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl[0].t, 5.0);
+        assert_eq!(tl[1].t, 8.0);
+    }
+}

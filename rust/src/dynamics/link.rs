@@ -1,0 +1,257 @@
+//! Time-varying cloud<->edge links.
+//!
+//! The paper's central implementation challenge is "increased latency caused
+//! by network transmission and edge inference" (§I, Fig. 14) — but a WAN is
+//! not a constant. This module retimes a base [`Link`] as a **pure function
+//! of `(SimTime, seed)`**: no mutable state, no wall clock, so concurrent
+//! sweeps replay the exact same network no matter how scenarios interleave
+//! (the same determinism rule the sweep layer lives by — PERF.md).
+//!
+//! Three composable processes, all opt-in:
+//! * [`LinkPhase`] — piecewise base overrides (scheduled outages/degradation
+//!   windows, e.g. "bandwidth drops to 10 Mbps from t=60 to t=120");
+//! * [`BandwidthWalk`] — a bounded random walk on log-bandwidth (slow WAN
+//!   drift between a floor and a ceiling);
+//! * [`CongestionSpikes`] — periodic congestion windows (cross-traffic
+//!   bursts) driving the [`Link::congestion`] factor, which since the
+//!   queueing-delay fix inflates RTT as well as thinning bandwidth.
+
+use crate::network::Link;
+use crate::simclock::SimTime;
+use crate::util::rng::Rng;
+
+/// Base-link override active from `start_s` until the next phase (the last
+/// phase holds to the end of time). Phases must be sorted by `start_s`.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkPhase {
+    pub start_s: SimTime,
+    pub bandwidth_mbps: f64,
+    pub rtt_ms: f64,
+}
+
+/// Bounded random walk on log-bandwidth: every `step_s` the multiplier takes
+/// a uniform step of at most `rel_step` in log space, clamped to
+/// `[min_frac, max_frac]` of the base bandwidth. Evaluated by replaying the
+/// walk from t=0 at every call — a pure function of `(t, seed)`, O(t/step_s)
+/// with cheap xoshiro draws (hundreds of steps per call at sim scale).
+#[derive(Clone, Copy, Debug)]
+pub struct BandwidthWalk {
+    pub step_s: f64,
+    pub rel_step: f64,
+    pub min_frac: f64,
+    pub max_frac: f64,
+}
+
+/// Resumable walk state: `(steps_replayed, clamped log-factor, rng)`. The
+/// walk is a function of the step count alone, so carrying this forward
+/// between calls with nondecreasing `t` (the engine's event clock) yields
+/// bit-identical factors while only drawing the *new* steps — without it,
+/// per-event evaluation is O(t/step_s) and total cost quadratic in sim
+/// length. `None` (or a cache ahead of `t`) falls back to a fresh replay.
+pub type WalkCache = Option<(u64, f64, Rng)>;
+
+impl BandwidthWalk {
+    pub fn factor_at(&self, t: SimTime, seed: u64) -> f64 {
+        self.factor_at_cached(t, seed, &mut None)
+    }
+
+    pub fn factor_at_cached(&self, t: SimTime, seed: u64, cache: &mut WalkCache) -> f64 {
+        let step = self.step_s.max(1e-3);
+        // cap the replay length so a pathological timestamp can't spin
+        let steps = (t / step).floor().clamp(0.0, 1e6) as u64;
+        let (lo, hi) = (self.min_frac.max(1e-6).ln(), self.max_frac.max(1e-6).ln());
+        let (mut done, mut logf, mut rng) = match cache.take() {
+            Some(c) if c.0 <= steps => c,
+            _ => (0, 0.0f64, Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15)),
+        };
+        while done < steps {
+            logf = (logf + self.rel_step * (2.0 * rng.f64() - 1.0)).clamp(lo, hi);
+            done += 1;
+        }
+        *cache = Some((done, logf, rng));
+        logf.exp()
+    }
+}
+
+/// Periodic congestion: for the first `duty` fraction of every `period_s`
+/// window the link's congestion factor is `factor`, else 1.0. The window
+/// phase is jittered per seed so grids don't all spike in lockstep.
+#[derive(Clone, Copy, Debug)]
+pub struct CongestionSpikes {
+    pub period_s: f64,
+    pub duty: f64,
+    pub factor: f64,
+}
+
+impl CongestionSpikes {
+    pub fn factor_at(&self, t: SimTime, seed: u64) -> f64 {
+        let period = self.period_s.max(1e-3);
+        let phase = Rng::new(seed ^ 0x5bf0_3635_c0ff_ee01).f64() * period;
+        let pos = ((t + phase) / period).fract();
+        if pos < self.duty.clamp(0.0, 1.0) {
+            self.factor.max(1.0)
+        } else {
+            1.0
+        }
+    }
+}
+
+/// The link-dynamics schedule of a scenario. Default = static world: every
+/// component off, [`LinkDynamics::link_at`] returns the base link untouched
+/// and the engine keeps its calibrated static transfer model bit-for-bit.
+#[derive(Clone, Debug, Default)]
+pub struct LinkDynamics {
+    pub phases: Vec<LinkPhase>,
+    pub bw_walk: Option<BandwidthWalk>,
+    pub spikes: Option<CongestionSpikes>,
+}
+
+impl LinkDynamics {
+    pub fn is_static(&self) -> bool {
+        self.phases.is_empty() && self.bw_walk.is_none() && self.spikes.is_none()
+    }
+
+    /// The link state at simulated time `t` — pure in `(t, seed)`.
+    pub fn link_at(&self, base: &Link, t: SimTime, seed: u64) -> Link {
+        self.link_at_cached(base, t, seed, &mut None)
+    }
+
+    /// [`LinkDynamics::link_at`] with a resumable [`WalkCache`] — what the
+    /// engine's monotone event clock uses, so the bandwidth walk advances
+    /// incrementally instead of replaying from t=0 per event. Results are
+    /// bit-identical to the pure form.
+    pub fn link_at_cached(
+        &self,
+        base: &Link,
+        t: SimTime,
+        seed: u64,
+        cache: &mut WalkCache,
+    ) -> Link {
+        if self.is_static() {
+            return base.clone();
+        }
+        let mut link = base.clone();
+        if let Some(ph) = self.phases.iter().rev().find(|p| p.start_s <= t) {
+            link.bandwidth_mbps = ph.bandwidth_mbps;
+            link.rtt_ms = ph.rtt_ms;
+        }
+        if let Some(w) = &self.bw_walk {
+            let f = w.factor_at_cached(t, seed, cache);
+            link.bandwidth_mbps = (link.bandwidth_mbps * f).max(0.001);
+        }
+        if let Some(s) = &self.spikes {
+            link.congestion *= s.factor_at(t, seed);
+        }
+        link
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn walk() -> BandwidthWalk {
+        BandwidthWalk { step_s: 5.0, rel_step: 0.3, min_frac: 0.2, max_frac: 1.5 }
+    }
+
+    #[test]
+    fn static_schedule_is_identity() {
+        let d = LinkDynamics::default();
+        assert!(d.is_static());
+        let base = Link::new(100.0, 20.0);
+        for t in [0.0, 17.3, 900.0] {
+            let l = d.link_at(&base, t, 7);
+            assert_eq!(l.bandwidth_mbps, base.bandwidth_mbps);
+            assert_eq!(l.rtt_ms, base.rtt_ms);
+            assert_eq!(l.congestion, base.congestion);
+        }
+    }
+
+    #[test]
+    fn walk_is_pure_and_bounded() {
+        let w = walk();
+        for t in [0.0, 3.0, 50.0, 777.7] {
+            let a = w.factor_at(t, 42);
+            let b = w.factor_at(t, 42);
+            assert_eq!(a.to_bits(), b.to_bits(), "factor not pure at t={t}");
+            assert!((0.2..=1.5).contains(&a), "factor {a} out of bounds at t={t}");
+        }
+        // different seeds give different walks (overwhelmingly likely)
+        assert_ne!(w.factor_at(500.0, 1), w.factor_at(500.0, 2));
+    }
+
+    #[test]
+    fn cached_replay_matches_pure_replay() {
+        // the resumable cache must be invisible in the results, for any
+        // monotone sequence of query times
+        let w = walk();
+        let mut cache = None;
+        for k in 0..60 {
+            let t = k as f64 * 3.7;
+            let pure = w.factor_at(t, 99);
+            let cached = w.factor_at_cached(t, 99, &mut cache);
+            assert_eq!(pure.to_bits(), cached.to_bits(), "cache diverged at t={t}");
+        }
+        // a cache ahead of t falls back to a fresh replay, not stale state
+        let early = w.factor_at_cached(2.0, 99, &mut cache);
+        assert_eq!(early.to_bits(), w.factor_at(2.0, 99).to_bits());
+    }
+
+    #[test]
+    fn walk_actually_moves() {
+        let w = walk();
+        let early = w.factor_at(0.0, 9);
+        let late = w.factor_at(400.0, 9);
+        assert_eq!(early, 1.0, "no steps before the first boundary");
+        assert_ne!(early, late);
+    }
+
+    #[test]
+    fn phases_override_in_order() {
+        let d = LinkDynamics {
+            phases: vec![
+                LinkPhase { start_s: 60.0, bandwidth_mbps: 10.0, rtt_ms: 80.0 },
+                LinkPhase { start_s: 120.0, bandwidth_mbps: 50.0, rtt_ms: 40.0 },
+            ],
+            ..Default::default()
+        };
+        let base = Link::new(100.0, 20.0);
+        assert_eq!(d.link_at(&base, 10.0, 0).bandwidth_mbps, 100.0);
+        assert_eq!(d.link_at(&base, 60.0, 0).bandwidth_mbps, 10.0);
+        assert_eq!(d.link_at(&base, 61.0, 0).rtt_ms, 80.0);
+        assert_eq!(d.link_at(&base, 500.0, 0).bandwidth_mbps, 50.0);
+    }
+
+    #[test]
+    fn spikes_toggle_congestion() {
+        let s = CongestionSpikes { period_s: 10.0, duty: 0.5, factor: 4.0 };
+        let (mut hi, mut lo) = (0, 0);
+        for k in 0..100 {
+            match s.factor_at(k as f64 * 0.37, 3) {
+                f if f > 1.0 => hi += 1,
+                _ => lo += 1,
+            }
+        }
+        assert!(hi > 10 && lo > 10, "spikes never toggled: hi={hi} lo={lo}");
+        // pure
+        assert_eq!(s.factor_at(7.7, 3).to_bits(), s.factor_at(7.7, 3).to_bits());
+    }
+
+    #[test]
+    fn degraded_link_slows_transfer() {
+        let d = LinkDynamics {
+            bw_walk: Some(BandwidthWalk {
+                step_s: 5.0,
+                rel_step: 0.4,
+                min_frac: 0.1,
+                max_frac: 0.5, // strictly degrading ceiling
+            }),
+            ..Default::default()
+        };
+        let base = Link::new(100.0, 20.0);
+        let t_base = base.transfer_tokens_s(2000);
+        let degraded = d.link_at(&base, 300.0, 11);
+        assert!(degraded.bandwidth_mbps < base.bandwidth_mbps);
+        assert!(degraded.transfer_tokens_s(2000) > t_base);
+    }
+}

@@ -1,0 +1,136 @@
+//! Environment dynamics: the subsystem that makes the simulated world move.
+//!
+//! PICE's scheduler is *dynamic* — Eq. 2 re-routes every query under the
+//! network and edge conditions of the moment — but a frozen testbed never
+//! exercises that. [`DynamicsSpec`] perturbs the world while the engine
+//! runs: time-varying links ([`link`]), edge churn / failure injection
+//! ([`fault`]), and the engine-side failover re-dispatch that survives it
+//! (see `coordinator::engine`).
+//!
+//! Determinism contract (same rules as the sweep layer, PERF.md):
+//! * link state is a pure function of `(SimTime, seed)`;
+//! * the fault timeline is generated in full at engine construction, pure
+//!   in `(n_edges, seed)` — open-loop serving, closed-loop runs and
+//!   N-thread sweeps all see the identical environment;
+//! * `DynamicsSpec::default()` is the static world: no events are
+//!   scheduled, no per-pull state is tracked, and traces are bit-identical
+//!   to an engine that predates this module.
+
+pub mod fault;
+pub mod link;
+
+pub use fault::{EdgeEvent, EdgeFault, FaultSpec, SlowdownSpec};
+pub use link::{BandwidthWalk, CongestionSpikes, LinkDynamics, LinkPhase};
+
+/// A scenario's environment-dynamics schedule. Carried by
+/// [`crate::coordinator::EngineCfg`]; default = static world (zero-cost).
+#[derive(Clone, Debug, Default)]
+pub struct DynamicsSpec {
+    pub link: LinkDynamics,
+    pub faults: FaultSpec,
+    /// dynamics seed — deliberately separate from `EngineCfg::seed`, so a
+    /// grid of policy variants faces the *same* environment timeline
+    pub seed: u64,
+}
+
+impl DynamicsSpec {
+    /// Fully static world (the default): no link variation, no faults.
+    pub fn is_static(&self) -> bool {
+        self.link.is_static() && !self.faults.any()
+    }
+
+    /// Named presets for the CLI / benches / sweep grids.
+    ///
+    /// * `stable`     — the static world (identical to `default()`; runs
+    ///   through the same preset plumbing so CI can assert it changes
+    ///   nothing);
+    /// * `flaky-wan`  — bounded bandwidth walk + periodic congestion
+    ///   spikes, no edge faults;
+    /// * `edge-churn` — a deterministic front-loaded churn pattern (edges
+    ///   0-2 crash and recover inside the first minute, so even short smoke
+    ///   runs exercise the failover path) followed by a stochastic
+    ///   MTBF/MTTR tail plus straggler windows, on a stable WAN.
+    pub fn preset(name: &str) -> Option<DynamicsSpec> {
+        match name {
+            "stable" => Some(DynamicsSpec::default()),
+            "flaky-wan" => Some(DynamicsSpec {
+                link: LinkDynamics {
+                    bw_walk: Some(BandwidthWalk {
+                        step_s: 5.0,
+                        rel_step: 0.3,
+                        min_frac: 0.2,
+                        max_frac: 1.25,
+                    }),
+                    spikes: Some(CongestionSpikes { period_s: 40.0, duty: 0.25, factor: 4.0 }),
+                    phases: Vec::new(),
+                },
+                faults: FaultSpec::default(),
+                seed: 29,
+            }),
+            "edge-churn" => Some(DynamicsSpec {
+                link: LinkDynamics::default(),
+                faults: FaultSpec {
+                    mtbf_s: Some(75.0),
+                    mttr_s: 15.0,
+                    slowdown: Some(SlowdownSpec { mtbs_s: 120.0, mean_dur_s: 25.0, mult: 2.5 }),
+                    horizon_s: 1800.0,
+                    events: vec![
+                        EdgeEvent { t: 10.0, eid: 0, fault: EdgeFault::Crash },
+                        EdgeEvent { t: 16.0, eid: 1, fault: EdgeFault::Crash },
+                        EdgeEvent { t: 25.0, eid: 0, fault: EdgeFault::Recover },
+                        EdgeEvent { t: 31.0, eid: 1, fault: EdgeFault::Recover },
+                        EdgeEvent { t: 38.0, eid: 2, fault: EdgeFault::Crash },
+                        EdgeEvent { t: 53.0, eid: 2, fault: EdgeFault::Recover },
+                    ],
+                },
+                seed: 23,
+            }),
+            _ => None,
+        }
+    }
+
+    pub fn preset_names() -> &'static [&'static str] {
+        &["stable", "flaky-wan", "edge-churn"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_static() {
+        assert!(DynamicsSpec::default().is_static());
+    }
+
+    #[test]
+    fn presets_resolve_and_unknown_rejects() {
+        for name in DynamicsSpec::preset_names() {
+            assert!(DynamicsSpec::preset(name).is_some(), "missing preset {name}");
+        }
+        assert!(DynamicsSpec::preset("chaos-monkey").is_none());
+    }
+
+    #[test]
+    fn stable_preset_is_the_static_world() {
+        assert!(DynamicsSpec::preset("stable").unwrap().is_static());
+    }
+
+    #[test]
+    fn churn_preset_generates_faults() {
+        let d = DynamicsSpec::preset("edge-churn").unwrap();
+        assert!(!d.is_static());
+        let tl = d.faults.timeline(4, d.seed);
+        assert!(
+            tl.iter().any(|e| e.fault == EdgeFault::Crash),
+            "edge-churn must crash at least one edge within its horizon"
+        );
+    }
+
+    #[test]
+    fn flaky_wan_perturbs_the_link_but_not_the_cluster() {
+        let d = DynamicsSpec::preset("flaky-wan").unwrap();
+        assert!(!d.link.is_static());
+        assert!(!d.faults.any());
+    }
+}

@@ -9,6 +9,8 @@
 //! * the paper's contribution: [`coordinator`] (dynamic scheduler, job
 //!   dispatching, model selection), [`parallel`] (execution optimizer),
 //!   [`ensemble`], [`finetune`] (RLAIF sketch policy), [`baselines`]
+//! * environment dynamics: [`dynamics`] (time-varying links, edge churn /
+//!   failure injection; the engine's failover re-dispatch rides on it)
 //! * online serving: [`serve`] (streaming progressive-response sessions
 //!   over the step-driven engine core, with admission control)
 //! * evaluation scale-out: [`sweep`] (shared generation cache + the
@@ -18,6 +20,7 @@ pub mod baselines;
 pub mod cli;
 pub mod cluster;
 pub mod coordinator;
+pub mod dynamics;
 pub mod finetune;
 pub mod corpus;
 pub mod ensemble;

@@ -4,6 +4,7 @@
 //! ```text
 //! pice serve   [--model llama70b-sim] [--rpm 30] [--n 60] [--policy pice|cloud|edge|routing]
 //!              [--seed 11] [--max-inflight 256] [--stream]
+//!              [--dynamics stable|flaky-wan|edge-churn] [--deadline <s>]
 //! pice models
 //! pice profile [--edges 4]
 //! pice finetune [--pairs 8] [--steps 30]
@@ -13,6 +14,7 @@
 
 use pice::cli::Args;
 use pice::cluster::{Cluster, DeviceSpec};
+use pice::dynamics::DynamicsSpec;
 use pice::finetune::{Trainer, TrainerCfg};
 use pice::metrics::Mode;
 use pice::models::ModelInfo;
@@ -38,6 +40,14 @@ SUBCOMMANDS
               --seed <int>          workload seed (default 11)
               --max-inflight <int>  admission bound; excess submissions are
                                     rejected with a terminal event (default 256)
+              --deadline <s>        per-request SLO deadline: submissions whose
+                                    backlog estimate already exceeds it are
+                                    rejected up-front as infeasible
+              --dynamics <preset>   environment dynamics (PERF.md §Dynamics):
+                                      stable     static world (the default)
+                                      flaky-wan  bandwidth walk + congestion spikes
+                                      edge-churn edge crash/recover + stragglers,
+                                                 with failover re-dispatch
               --stream              print the live per-request response-event log
                                     (Admitted / SketchReady / ExpansionChunk / Final)
   models    print the model registry (speed, memory, MMLU, eval accuracy)
@@ -85,7 +95,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("serve") => args
             .validate(
-                &["model", "rpm", "n", "policy", "seed", "max-inflight"],
+                &["model", "rpm", "n", "policy", "seed", "max-inflight", "dynamics", "deadline"],
                 &with_global_flags(&["stream"]),
             )
             .and_then(|()| serve(&args)),
@@ -113,23 +123,49 @@ fn serve(args: &Args) -> Result<(), String> {
     let stream = args.has_flag("stream");
     let mut env = Env::load()?;
     let rpm = args.opt_f64("rpm", env.paper_rpm(&model));
-    let cfg = match args.opt_str("policy", "pice") {
+    let mut cfg = match args.opt_str("policy", "pice") {
         "cloud" => baselines::cloud_only(&model),
         "edge" => baselines::edge_only(&model),
         "routing" => baselines::routing(&model),
         _ => baselines::pice(&model),
     };
+    if let Some(preset) = args.opt("dynamics") {
+        cfg.dynamics = DynamicsSpec::preset(preset).ok_or_else(|| {
+            format!(
+                "unknown dynamics preset `{preset}`; valid presets: {}",
+                DynamicsSpec::preset_names().join(", ")
+            )
+        })?;
+    }
     info!("serving {n} requests at {rpm:.0} rpm on {model} ({:?})", cfg.policy);
     let wl = env.workload(rpm, n, args.opt_usize("seed", 11) as u64);
     let corpus = env.corpus.clone();
     let judge = Judge::fit(&corpus);
-    let serve_cfg = ServeCfg { max_inflight: args.opt_usize("max-inflight", 256) };
+    let deadline_s = match args.opt("deadline") {
+        Some(v) => {
+            let d: f64 = v.parse().map_err(|_| {
+                format!("--deadline expects seconds as a number, got `{v}` (e.g. --deadline 12.5)")
+            })?;
+            // NaN would silently disable the gate (every comparison false)
+            // and a non-positive bound rejects everything — both are
+            // user errors, not configurations
+            if !d.is_finite() || d <= 0.0 {
+                return Err(format!("--deadline must be a positive finite number, got `{v}`"));
+            }
+            Some(d)
+        }
+        None => None,
+    };
+    let serve_cfg = ServeCfg { max_inflight: args.opt_usize("max-inflight", 256), deadline_s };
 
     // The service (open-loop) path runs when its knobs are engaged: --stream
-    // for the live log, or an explicit --max-inflight for admission control.
-    // Without either, the closed-loop driver produces bit-identical traces
-    // with no event machinery.
-    let (traces, rejected) = if stream || args.opt("max-inflight").is_some() {
+    // for the live log, an explicit --max-inflight for admission control, or
+    // an SLO --deadline. Without any, the closed-loop driver produces
+    // bit-identical traces with no event machinery.
+    let (traces, rejected) = if stream
+        || args.opt("max-inflight").is_some()
+        || deadline_s.is_some()
+    {
         // Open-loop serving: submit each arrival as simulated time reaches
         // it, pumping the engine between submissions.
         let mut svc = env.service(cfg, serve_cfg).map_err(|e| e.to_string())?;
@@ -168,6 +204,12 @@ fn serve(args: &Args) -> Result<(), String> {
     println!("judge quality   {:.2} / 10", stats::mean(&scores));
     println!("server tokens   {}", m.server_tokens);
     println!("edge tokens     {}", m.edge_tokens);
+    if m.failovers > 0 {
+        println!(
+            "failovers       {} ({} slots re-queued; degraded p99 {:.2} s)",
+            m.failovers, m.retried_slots, m.p99_degraded_latency_s
+        );
+    }
     println!(
         "progressive     {} / {} requests ({} rejected by admission)",
         traces.iter().filter(|t| t.mode == Mode::Progressive).count(),

@@ -49,6 +49,11 @@ pub struct RequestTrace {
     pub confidence: f64,
     /// edge expansion parallelism degree chosen by the execution optimizer
     pub parallelism: usize,
+    /// failure-triggered re-dispatches this request survived (edge crashes
+    /// killing its in-flight or queued work — dynamics subsystem)
+    pub failovers: usize,
+    /// expansion sentence-slots re-queued by those failovers
+    pub retried_slots: usize,
 }
 
 impl RequestTrace {
@@ -76,6 +81,7 @@ pub struct RunMetrics {
     pub avg_latency_s: f64,
     pub p50_latency_s: f64,
     pub p95_latency_s: f64,
+    pub p99_latency_s: f64,
     /// time-to-first-sketch percentiles over progressive requests — the
     /// paper's "early response" metric, fed from the streaming event
     /// timestamps (0.0 when nothing went progressive)
@@ -90,6 +96,15 @@ pub struct RunMetrics {
     pub n_requests: usize,
     pub n_progressive: usize,
     pub makespan_s: f64,
+    /// total failure-triggered re-dispatches across the run (0 in a static
+    /// world — the dynamics subsystem's failover counter)
+    pub failovers: usize,
+    /// total expansion slots re-queued by those failovers
+    pub retried_slots: usize,
+    /// degraded-mode latency: percentiles over only the requests that
+    /// survived at least one failover (0.0 when none did)
+    pub p50_degraded_latency_s: f64,
+    pub p99_degraded_latency_s: f64,
 }
 
 pub fn aggregate(traces: &[RequestTrace]) -> RunMetrics {
@@ -99,6 +114,8 @@ pub fn aggregate(traces: &[RequestTrace]) -> RunMetrics {
     let lat: Vec<f64> = traces.iter().map(RequestTrace::latency).collect();
     let ttfs: Vec<f64> = traces.iter().filter_map(RequestTrace::ttfs).collect();
     let ttfe: Vec<f64> = traces.iter().filter_map(RequestTrace::ttfe).collect();
+    let degraded: Vec<f64> =
+        traces.iter().filter(|t| t.failovers > 0).map(RequestTrace::latency).collect();
     let first_arrival = traces.iter().map(|t| t.arrival).fold(f64::INFINITY, f64::min);
     let last_done = traces.iter().map(|t| t.done).fold(0.0, f64::max);
     let makespan = (last_done - first_arrival).max(1e-9);
@@ -107,6 +124,7 @@ pub fn aggregate(traces: &[RequestTrace]) -> RunMetrics {
         avg_latency_s: stats::mean(&lat),
         p50_latency_s: stats::percentile(&lat, 50.0),
         p95_latency_s: stats::percentile(&lat, 95.0),
+        p99_latency_s: stats::percentile(&lat, 99.0),
         p50_ttfs_s: stats::percentile(&ttfs, 50.0),
         p99_ttfs_s: stats::percentile(&ttfs, 99.0),
         p50_ttfe_s: stats::percentile(&ttfe, 50.0),
@@ -116,6 +134,10 @@ pub fn aggregate(traces: &[RequestTrace]) -> RunMetrics {
         n_requests: traces.len(),
         n_progressive: traces.iter().filter(|t| t.mode == Mode::Progressive).count(),
         makespan_s: makespan,
+        failovers: traces.iter().map(|t| t.failovers).sum(),
+        retried_slots: traces.iter().map(|t| t.retried_slots).sum(),
+        p50_degraded_latency_s: stats::percentile(&degraded, 50.0),
+        p99_degraded_latency_s: stats::percentile(&degraded, 99.0),
     }
 }
 
@@ -144,6 +166,8 @@ mod tests {
             winner_model: String::new(),
             confidence: 0.0,
             parallelism: 0,
+            failovers: 0,
+            retried_slots: 0,
         }
     }
 
@@ -180,6 +204,27 @@ mod tests {
         assert!(m.p50_ttfs_s > 0.0 && m.p50_ttfs_s <= m.p99_ttfs_s);
         assert!(m.p50_ttfe_s > m.p50_ttfs_s, "{} vs {}", m.p50_ttfe_s, m.p50_ttfs_s);
         assert!(m.p99_ttfs_s <= 40.0 + 1e-9);
+    }
+
+    #[test]
+    fn failover_totals_and_degraded_percentiles() {
+        let mut traces: Vec<_> = (0..10).map(|i| trace(i as f64, i as f64 + 2.0)).collect();
+        traces[3].failovers = 2;
+        traces[3].retried_slots = 5;
+        traces[3].done = traces[3].arrival + 9.0;
+        traces[7].failovers = 1;
+        traces[7].done = traces[7].arrival + 7.0;
+        let m = aggregate(&traces);
+        assert_eq!(m.failovers, 3);
+        assert_eq!(m.retried_slots, 5);
+        // degraded percentiles see only the two failover-survivor latencies
+        assert!(m.p50_degraded_latency_s >= 7.0);
+        assert!(m.p99_degraded_latency_s >= m.p50_degraded_latency_s);
+        assert!(m.p99_latency_s >= m.p95_latency_s);
+        // static world: no failovers, degraded percentiles stay 0
+        let m0 = aggregate(&traces[..3]);
+        assert_eq!(m0.failovers, 0);
+        assert_eq!(m0.p99_degraded_latency_s, 0.0);
     }
 
     #[test]

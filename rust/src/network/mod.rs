@@ -2,8 +2,11 @@
 //!
 //! PICE transfers only *text* (queries + sketches); the paper observes this
 //! keeps transfer to "a few tens of milliseconds even at lower bandwidths"
-//! (Fig. 14). The model: transfer_s = RTT/2 + payload_bits / bandwidth, with
-//! an optional congestion multiplier the runtime profiler can update.
+//! (Fig. 14). The model: transfer_s = RTT·congestion/2 + payload_bits /
+//! (bandwidth/congestion) — congestion both thins the per-flow bandwidth
+//! and inflates the RTT (queueing delay at the bottleneck), and is driven
+//! at runtime by the profiler / the dynamics subsystem
+//! ([`crate::dynamics::CongestionSpikes`]).
 
 use crate::simclock::SimTime;
 
@@ -36,12 +39,42 @@ impl Link {
     pub fn transfer_bytes_s(&self, bytes: f64) -> SimTime {
         let bits = (bytes + PROTOCOL_OVERHEAD_BYTES) * 8.0;
         let bw = (self.bandwidth_mbps * 1e6 / self.congestion).max(1e3);
-        self.rtt_ms / 2.0 / 1e3 + bits / bw
+        // congestion inflates BOTH terms: a congested path queues packets
+        // (RTT grows), it doesn't just thin per-flow bandwidth
+        self.rtt_ms * self.congestion / 2.0 / 1e3 + bits / bw
     }
 
     /// Round trip for request + response payloads (the Δ(r) of Eq. 2).
     pub fn round_trip_s(&self, tokens_out: usize, tokens_back: usize) -> SimTime {
         self.transfer_tokens_s(tokens_out) + self.transfer_tokens_s(tokens_back)
+    }
+
+    /// Affine view (base + per-token seconds) of this link's one-way
+    /// transfer — the Δ(r) form the Eq. 2 scheduler consumes, recomputed
+    /// from the *current* link state when dynamics are on.
+    pub fn transfer_model(&self) -> TransferModel {
+        let bw = (self.bandwidth_mbps * 1e6 / self.congestion).max(1e3);
+        TransferModel {
+            base_s: self.rtt_ms * self.congestion / 2.0 / 1e3
+                + PROTOCOL_OVERHEAD_BYTES * 8.0 / bw,
+            per_token_s: BYTES_PER_TOKEN * 8.0 / bw,
+        }
+    }
+}
+
+/// Affine one-way transfer-time model `base_s + n_tokens * per_token_s` —
+/// what one scheduling decision sees of the network. A plain value (not a
+/// closure) so [`crate::coordinator::scheduler::SchedInput`] stays `Clone`
+/// and the static world can pin its legacy calibrated constants bit-for-bit.
+#[derive(Clone, Copy, Debug)]
+pub struct TransferModel {
+    pub base_s: f64,
+    pub per_token_s: f64,
+}
+
+impl TransferModel {
+    pub fn eval(&self, n_tokens: usize) -> SimTime {
+        self.base_s + n_tokens as f64 * self.per_token_s
     }
 }
 
@@ -56,6 +89,14 @@ mod tests {
         let t = slow.transfer_tokens_s(200);
         assert!(t < 0.1, "200-token sketch at 10 Mbps took {t}s");
         assert!(t > 0.01);
+        // recalibrated for the congestion-RTT fix: a 3x-congested slow link
+        // pays queueing delay on the RTT term too, but a sketch still lands
+        // well under a second — text transfer never dominates inference
+        let mut congested = Link::new(10.0, 30.0);
+        congested.congestion = 3.0;
+        let tc = congested.transfer_tokens_s(200);
+        assert!(tc > 3.0 * 30.0 / 2.0 / 1e3, "congestion must inflate the RTT term: {tc}s");
+        assert!(tc < 0.5, "200-token sketch at 10 Mbps x3 congestion took {tc}s");
     }
 
     #[test]
@@ -71,7 +112,29 @@ mod tests {
         let mut l = Link::new(100.0, 20.0);
         let fast = l.transfer_tokens_s(1000);
         l.congestion = 4.0;
-        assert!(l.transfer_tokens_s(1000) > fast);
+        let slow = l.transfer_tokens_s(1000);
+        assert!(slow > fast);
+        // regression (queueing-delay fix): congestion applies to the RTT
+        // term as well as bandwidth, so the slowdown must exceed what
+        // thinning bandwidth alone would produce
+        let bits = (1000.0 * BYTES_PER_TOKEN + PROTOCOL_OVERHEAD_BYTES) * 8.0;
+        let bw_only = 20.0 / 2.0 / 1e3 + bits / (100.0 * 1e6 / 4.0);
+        assert!(slow > bw_only + 1e-12, "RTT term not inflated: {slow} vs {bw_only}");
+    }
+
+    #[test]
+    fn transfer_model_matches_closed_form() {
+        let mut l = Link::new(37.0, 28.0);
+        l.congestion = 2.5;
+        let m = l.transfer_model();
+        for n in [0usize, 1, 64, 500, 4096] {
+            let direct = l.transfer_tokens_s(n);
+            assert!(
+                (m.eval(n) - direct).abs() < 1e-12,
+                "affine model diverges at n={n}: {} vs {direct}",
+                m.eval(n)
+            );
+        }
     }
 
     #[test]

@@ -191,16 +191,20 @@ impl Env {
     }
 
     pub fn workload(&self, rpm: f64, n: usize, seed: u64) -> Workload {
-        Workload::generate(
-            &self.corpus,
-            WorkloadSpec {
-                rpm,
-                n_requests: n,
-                arrival: Arrival::Poisson,
-                categories: vec![],
-                seed,
-            },
-        )
+        self.workload_with(WorkloadSpec {
+            rpm,
+            n_requests: n,
+            arrival: Arrival::Poisson,
+            categories: vec![],
+            seed,
+        })
+    }
+
+    /// Workload from an explicit spec — e.g. pairing
+    /// [`Arrival::BurstyPoisson`] load spikes with a dynamics scenario's
+    /// link degradation (the fig_dynamics composition).
+    pub fn workload_with(&self, spec: WorkloadSpec) -> Workload {
+        Workload::generate(&self.corpus, spec)
     }
 
     /// Run one engine configuration over a workload — the sequential

@@ -13,6 +13,10 @@
 //!   concurrently admitted requests; a submission over the bound is not
 //!   silently dropped: its handle immediately carries a terminal
 //!   [`ResponseEventKind::Rejected`] and the engine never sees it.
+//! * **SLO-aware admission** — an optional [`ServeCfg::deadline_s`] rejects
+//!   up-front (`Rejected{reason: "infeasible: …"}`) when the engine's
+//!   current backlog estimate already exceeds the request's deadline, so
+//!   doomed work never occupies the cluster.
 //!
 //! Every request stream satisfies three invariants (enforced by
 //! `rust/tests/serve_streaming.rs`): event timestamps are monotone in sim
@@ -72,11 +76,19 @@ pub struct ServeCfg {
     /// submissions past the bound are rejected with a terminal
     /// [`ResponseEventKind::Rejected`] instead of queuing unboundedly.
     pub max_inflight: usize,
+    /// optional per-request SLO deadline (seconds, end-to-end): a
+    /// submission is rejected up-front with a terminal
+    /// `Rejected{reason: "infeasible: …"}` when the engine's current
+    /// backlog estimate ([`Engine::backlog_estimate_s`] — Eq. 2 backlog
+    /// cost of the queued expansion jobs plus one sketch transfer on the
+    /// live link) already exceeds it. `None` (the default) admits purely by
+    /// `max_inflight`, exactly the pre-SLO behavior.
+    pub deadline_s: Option<SimTime>,
 }
 
 impl Default for ServeCfg {
     fn default() -> Self {
-        ServeCfg { max_inflight: 256 }
+        ServeCfg { max_inflight: 256, deadline_s: None }
     }
 }
 
@@ -163,21 +175,22 @@ impl<'a> PiceService<'a> {
     ) -> Result<RequestHandle, RunError> {
         let sid = self.sessions.len();
         if self.inflight >= self.cfg.max_inflight {
-            let t = arrival.max(self.engine.now());
             let reason = format!(
                 "admission: {} requests in flight (max_inflight {})",
                 self.inflight, self.cfg.max_inflight
             );
-            let mut queue = VecDeque::new();
-            queue.push_back(ResponseEvent {
-                rid: sid,
-                t,
-                kind: ResponseEventKind::Rejected { reason },
-            });
-            self.sessions.push(Session { queue, terminal: true });
-            self.order.push_back(sid);
-            self.rejected += 1;
-            return Ok(RequestHandle { sid });
+            return Ok(self.reject(sid, arrival, reason));
+        }
+        // SLO-aware admission: reject-on-infeasible instead of letting a
+        // doomed request queue (the client can retry elsewhere/later)
+        if let Some(deadline) = self.cfg.deadline_s {
+            let est = self.engine.backlog_estimate_s();
+            if est > deadline {
+                let reason = format!(
+                    "infeasible: backlog estimate {est:.2}s exceeds deadline {deadline:.2}s"
+                );
+                return Ok(self.reject(sid, arrival, reason));
+            }
         }
         let rid = self.engine.submit(question_id, arrival)?;
         debug_assert_eq!(rid, self.rid_to_sid.len(), "engine rids are sequential");
@@ -202,6 +215,20 @@ impl<'a> PiceService<'a> {
         let res = self.engine.pump_all();
         self.route();
         res
+    }
+
+    /// Close a session before the engine ever sees it: an immediate
+    /// terminal [`ResponseEventKind::Rejected`] (backpressure or an
+    /// infeasible SLO), never a silent drop.
+    fn reject(&mut self, sid: usize, arrival: SimTime, reason: String) -> RequestHandle {
+        let t = arrival.max(self.engine.now());
+        let mut queue = VecDeque::new();
+        let kind = ResponseEventKind::Rejected { reason };
+        queue.push_back(ResponseEvent { rid: sid, t, kind });
+        self.sessions.push(Session { queue, terminal: true });
+        self.order.push_back(sid);
+        self.rejected += 1;
+        RequestHandle { sid }
     }
 
     fn route(&mut self) {

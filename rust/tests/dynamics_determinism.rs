@@ -1,0 +1,281 @@
+//! The dynamics subsystem's two contracts, end to end:
+//!
+//! 1. **Determinism** — a churn-heavy scenario (edge crash/recover +
+//!    stragglers + a fluctuating WAN) produces bit-identical traces across
+//!    the sequential loop, the SweepRunner at 1/2/4 threads, and open-loop
+//!    service driving vs the closed-loop `Engine::run`.
+//! 2. **No lost requests** — under repeated edge crashes (including every
+//!    edge down at once, with and without scheduled recovery) every
+//!    submitted request still reaches exactly one terminal state, with
+//!    `failovers` accounting for the displaced work.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use pice::baselines;
+use pice::coordinator::backend::{SurrogateBackend, TextBackend};
+use pice::coordinator::{Engine, EngineCfg};
+use pice::corpus::synth::{synth_corpus, synth_tokenizer};
+use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use pice::corpus::Corpus;
+use pice::dynamics::{DynamicsSpec, EdgeEvent, EdgeFault, FaultSpec};
+use pice::metrics::{aggregate, RequestTrace};
+use pice::models::Registry;
+use pice::serve::{PiceService, ServeCfg};
+use pice::sweep::{SweepRunner, SweepScenario};
+use pice::tokenizer::Tokenizer;
+
+fn setup() -> (Arc<Corpus>, Tokenizer, Registry) {
+    let tok = synth_tokenizer();
+    let corpus = Arc::new(synth_corpus(&tok, 20, 42));
+    (corpus, tok, Registry::builtin())
+}
+
+fn workload(
+    corpus: &Arc<Corpus>,
+    rpm: f64,
+    n: usize,
+    arrival: Arrival,
+    seed: u64,
+) -> Arc<Workload> {
+    Arc::new(Workload::generate(
+        corpus,
+        WorkloadSpec { rpm, n_requests: n, arrival, categories: vec![], seed },
+    ))
+}
+
+/// Dense staggered churn: each edge of 4 cycles down-2s/up-14s, covering
+/// sim time 1..~240 s — any in-flight expansion in that window dies at
+/// least once.
+fn dense_churn() -> DynamicsSpec {
+    let mut events = Vec::new();
+    for k in 0..60usize {
+        let t = 1.0 + 4.0 * k as f64;
+        events.push(EdgeEvent { t, eid: k % 4, fault: EdgeFault::Crash });
+        events.push(EdgeEvent { t: t + 2.0, eid: k % 4, fault: EdgeFault::Recover });
+    }
+    DynamicsSpec {
+        faults: FaultSpec { events, ..Default::default() },
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+/// The churn-heavy composite: edge-churn faults + flaky-wan link.
+fn churn_heavy() -> DynamicsSpec {
+    let churn = DynamicsSpec::preset("edge-churn").unwrap();
+    let flaky = DynamicsSpec::preset("flaky-wan").unwrap();
+    DynamicsSpec { link: flaky.link, faults: churn.faults, seed: 23 }
+}
+
+fn run_closed_loop(
+    cfg: &EngineCfg,
+    wl: &Workload,
+    corpus: &Arc<Corpus>,
+    tok: &Tokenizer,
+    reg: &Registry,
+) -> Vec<RequestTrace> {
+    let mut backend = SurrogateBackend::new(corpus.clone(), tok, reg, 9);
+    let mut engine =
+        Engine::new(cfg.clone(), corpus.clone(), tok, reg, &mut backend).expect("engine");
+    engine.run(wl).expect("run")
+}
+
+/// Every field, via the Debug form (covers failovers/retried_slots too).
+fn assert_identical(label: &str, a: &[RequestTrace], b: &[RequestTrace]) {
+    assert_eq!(a.len(), b.len(), "{label}: trace count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(format!("{x:?}"), format!("{y:?}"), "{label}: trace rid={}", x.rid);
+    }
+}
+
+fn assert_exactly_one_terminal_each(label: &str, traces: &[RequestTrace], n: usize) {
+    assert_eq!(traces.len(), n, "{label}: requests lost or duplicated");
+    let rids: HashSet<usize> = traces.iter().map(|t| t.rid).collect();
+    assert_eq!(rids.len(), n, "{label}: duplicate terminal traces");
+    for t in traces {
+        assert!(t.done >= t.arrival, "{label}: negative latency rid={}", t.rid);
+        assert!(!t.answer.is_empty(), "{label}: empty answer rid={}", t.rid);
+    }
+}
+
+#[test]
+fn no_request_lost_under_repeated_edge_crashes() {
+    let (corpus, tok, reg) = setup();
+    let cfg = baselines::pice("llama70b-sim").with_dynamics(dense_churn());
+    // burst: all 30 requests at t=0, so expansions saturate the edges while
+    // the churn schedule kills each edge over and over
+    let wl = workload(&corpus, 40.0, 30, Arrival::Burst, 3);
+    let traces = run_closed_loop(&cfg, &wl, &corpus, &tok, &reg);
+    assert_exactly_one_terminal_each("dense churn", &traces, 30);
+    let m = aggregate(&traces);
+    assert!(
+        m.failovers > 0,
+        "240 s of staggered crashes over a saturated burst must displace work"
+    );
+    assert!(m.p99_degraded_latency_s > 0.0, "failover survivors must feed degraded percentiles");
+}
+
+#[test]
+fn edge_only_full_answers_survive_crashes() {
+    let (corpus, tok, reg) = setup();
+    // llama8b fits a Jetson, so the edge-only baseline actually runs
+    let cfg = baselines::edge_only("llama8b-sim").with_dynamics(dense_churn());
+    let wl = workload(&corpus, 30.0, 20, Arrival::Burst, 5);
+    let traces = run_closed_loop(&cfg, &wl, &corpus, &tok, &reg);
+    assert_exactly_one_terminal_each("edge-only churn", &traces, 20);
+}
+
+#[test]
+fn all_edges_down_forever_falls_back_to_cloud() {
+    let (corpus, tok, reg) = setup();
+    // both edges die at t=1 and never recover: progressive requests must
+    // terminate via the cloud instead of stranding in the job queue
+    let spec = DynamicsSpec {
+        faults: FaultSpec {
+            events: vec![
+                EdgeEvent { t: 1.0, eid: 0, fault: EdgeFault::Crash },
+                EdgeEvent { t: 1.0, eid: 1, fault: EdgeFault::Crash },
+            ],
+            ..Default::default()
+        },
+        seed: 1,
+        ..Default::default()
+    };
+    let mut cfg = baselines::pice("llama70b-sim").with_dynamics(spec);
+    cfg.n_edges = 2;
+    let wl = workload(&corpus, 40.0, 8, Arrival::Burst, 9);
+    let traces = run_closed_loop(&cfg, &wl, &corpus, &tok, &reg);
+    assert_exactly_one_terminal_each("permanent blackout", &traces, 8);
+    // whatever went progressive was rescued by the cloud and marked failed-over
+    for t in traces.iter().filter(|t| t.failovers > 0) {
+        assert!(
+            t.winner_model.contains("llama70b") || t.retried_slots > 0,
+            "rescued rid={} should carry a cloud answer or re-queued slots, got winner `{}`",
+            t.rid,
+            t.winner_model
+        );
+    }
+    let m = aggregate(&traces);
+    assert!(m.failovers > 0, "a permanent blackout at t=1 must displace sketched work");
+}
+
+#[test]
+fn churn_heavy_traces_identical_at_1_2_4_sweep_threads() {
+    let (corpus, tok, reg) = setup();
+    let wl = workload(&corpus, 40.0, 24, Arrival::Poisson, 5);
+    let bursty =
+        workload(&corpus, 40.0, 18, Arrival::BurstyPoisson { burst_factor: 4.0, burst_len: 6 }, 7);
+    let pice = || baselines::pice("llama70b-sim").with_dynamics(churn_heavy());
+    let cloud = baselines::cloud_only("llama70b-sim").with_dynamics(churn_heavy());
+    let routing = baselines::routing("llama70b-sim").with_dynamics(churn_heavy());
+    let grid = vec![
+        SweepScenario::new("pice-churn", pice(), wl.clone()),
+        SweepScenario::new("cloud-churn", cloud, wl.clone()),
+        SweepScenario::new("routing-churn", routing, wl),
+        SweepScenario::new("pice-bursty", pice(), bursty),
+    ];
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    // reference: plain sequential loop, no sweep machinery
+    let reference: Vec<Vec<RequestTrace>> = grid
+        .iter()
+        .map(|sc| run_closed_loop(&sc.cfg, &sc.workload, &corpus, &tok, &reg))
+        .collect();
+    for threads in [1usize, 2, 4] {
+        let runner = SweepRunner::new(threads);
+        let results = runner.run(&grid, &corpus, &tok, &reg, |_| {
+            Box::new(base.clone()) as Box<dyn TextBackend>
+        });
+        for (i, res) in results.into_iter().enumerate() {
+            let (_, traces) = res.expect("scenario");
+            let label = format!("{} @{} threads", grid[i].label, threads);
+            assert_identical(&label, &reference[i], &traces);
+        }
+    }
+}
+
+#[test]
+fn churn_open_loop_service_identical_to_closed_loop() {
+    let (corpus, tok, reg) = setup();
+    let cfg = baselines::pice("llama70b-sim").with_dynamics(churn_heavy());
+    let wl = workload(&corpus, 40.0, 20, Arrival::Poisson, 11);
+    let closed = run_closed_loop(&cfg, &wl, &corpus, &tok, &reg);
+    let mut backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let engine =
+        Engine::new(cfg.clone(), corpus.clone(), &tok, &reg, &mut backend).expect("engine");
+    let mut svc =
+        PiceService::new(engine, ServeCfg { max_inflight: usize::MAX, deadline_s: None });
+    for r in &wl.requests {
+        svc.pump_until(r.arrival_s).expect("pump");
+        svc.submit(r.question_id, r.arrival_s).expect("submit");
+    }
+    let open = svc.finish().expect("finish");
+    assert_identical("open vs closed loop under churn", &closed, &open);
+}
+
+#[test]
+fn static_default_has_no_failovers_and_matches_stable_preset() {
+    let (corpus, tok, reg) = setup();
+    let wl = workload(&corpus, 40.0, 20, Arrival::Poisson, 13);
+    let plain = run_closed_loop(&baselines::pice("llama70b-sim"), &wl, &corpus, &tok, &reg);
+    let stable = run_closed_loop(
+        &baselines::pice("llama70b-sim")
+            .with_dynamics(DynamicsSpec::preset("stable").unwrap()),
+        &wl,
+        &corpus,
+        &tok,
+        &reg,
+    );
+    assert_identical("stable preset vs default", &plain, &stable);
+    for t in &plain {
+        assert_eq!(t.failovers, 0, "static world must never fail over");
+        assert_eq!(t.retried_slots, 0);
+    }
+    let m = aggregate(&plain);
+    assert_eq!(m.failovers, 0);
+    assert_eq!(m.p99_degraded_latency_s, 0.0);
+}
+
+#[test]
+fn slo_deadline_rejects_infeasible_but_leaves_feasible_untouched() {
+    let (corpus, tok, reg) = setup();
+    let cfg = baselines::pice("llama70b-sim");
+    let wl = workload(&corpus, 40.0, 16, Arrival::Poisson, 17);
+    let closed = run_closed_loop(&cfg, &wl, &corpus, &tok, &reg);
+
+    // a generous deadline admits everything: traces identical to no-SLO
+    let mut backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let engine =
+        Engine::new(cfg.clone(), corpus.clone(), &tok, &reg, &mut backend).expect("engine");
+    let mut svc = PiceService::new(
+        engine,
+        ServeCfg { max_inflight: usize::MAX, deadline_s: Some(1e6) },
+    );
+    for r in &wl.requests {
+        svc.pump_until(r.arrival_s).expect("pump");
+        svc.submit(r.question_id, r.arrival_s).expect("submit");
+    }
+    assert_eq!(svc.rejected(), 0, "feasible requests must be unaffected by the SLO gate");
+    let open = svc.finish().expect("finish");
+    assert_identical("SLO generous deadline", &closed, &open);
+
+    // an impossible deadline (below even one sketch transfer) rejects all
+    let mut backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let engine =
+        Engine::new(cfg.clone(), corpus.clone(), &tok, &reg, &mut backend).expect("engine");
+    let mut svc = PiceService::new(
+        engine,
+        ServeCfg { max_inflight: usize::MAX, deadline_s: Some(1e-9) },
+    );
+    let h = svc.submit(0, 0.0).expect("submit");
+    assert!(svc.is_terminal(&h), "infeasible submission must terminate immediately");
+    match svc.poll(&h).expect("terminal event").kind {
+        pice::serve::ResponseEventKind::Rejected { reason } => {
+            assert!(reason.contains("infeasible"), "reason must say infeasible: {reason}");
+        }
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+    assert_eq!(svc.rejected(), 1);
+    let traces = svc.finish().expect("finish");
+    assert!(traces.is_empty(), "rejected submissions never reach the engine");
+}

@@ -8,6 +8,7 @@ use pice::coordinator::selection::select_model;
 use pice::coordinator::slo::SloPolicy;
 use pice::ensemble::{confidence, select, Candidate, ConfidenceWeights};
 use pice::models::Registry;
+use pice::network::TransferModel;
 use pice::parallel::{merge_once, plan_groups, EdgeCostModel, Group};
 use pice::profiler::LatencyFit;
 use pice::quality::rouge::{lcs_len, lcs_len_trimmed, rouge1_f1, rouge_l_f1};
@@ -220,7 +221,7 @@ fn prop_scheduler_respects_hard_constraint() {
             predicted_len: 20 + rng.below(200),
             f_cloud: LatencyFit { a: rng.range(0.0, 0.5), b: rng.range(0.01, 0.1) },
             cost_coeff: rng.range(0.1, 3.0),
-            transfer_s: |n| 0.02 + n as f64 * 1e-6,
+            transfer: TransferModel { base_s: 0.02, per_token_s: 1e-6 },
             backlog_s: rng.range(0.0, 30.0),
             n_edges: 1 + rng.below(8),
             best_slm_capability: rng.range(40.0, 90.0),

@@ -91,7 +91,8 @@ fn run_via_service(
     let mut backend = base.clone();
     let engine =
         Engine::new(cfg.clone(), corpus.clone(), tok, reg, &mut backend).expect("engine");
-    let mut svc = PiceService::new(engine, ServeCfg { max_inflight: usize::MAX });
+    let mut svc =
+        PiceService::new(engine, ServeCfg { max_inflight: usize::MAX, deadline_s: None });
     let mut handles: Vec<RequestHandle> = Vec::with_capacity(wl.requests.len());
     for r in &wl.requests {
         svc.pump_until(r.arrival_s).expect("pump");
@@ -366,7 +367,7 @@ fn backpressure_rejects_as_terminal_events_not_drops() {
         &mut backend,
     )
     .expect("engine");
-    let mut svc = PiceService::new(engine, ServeCfg { max_inflight: 2 });
+    let mut svc = PiceService::new(engine, ServeCfg { max_inflight: 2, deadline_s: None });
     let qid = corpus.eval_questions()[0].id;
     // a burst of 12 with no pumping in between: 2 admitted, 10 rejected
     let handles: Vec<RequestHandle> =
