@@ -1,0 +1,244 @@
+//! §Fleet — open-loop saturation ramp over the sharded serving fleet.
+//!
+//! For each (placement, shard count) the bench drives an ascending
+//! request-rate ladder through `Env::fleet_service` open-loop (submit each
+//! arrival at its instant, pump between) until the run violates the SLO —
+//! p99 end-to-end latency or p99 time-to-first-sketch beyond 3x an
+//! unsaturated single-engine anchor. The last passing rung is the fleet's
+//! max sustainable rpm; scaling it against the 1-shard fleet is the PR's
+//! perf claim (CI guards 4-shard > 2x 1-shard at the same SLO).
+//!
+//! A second pass pins a session cohort to one hash class (mod 8) and
+//! replays it at 1/2/4/8 shards: power-of-two hash nesting must keep the
+//! traces bit-identical across shard counts (`hash_identity` in the JSON).
+//!
+//! Results print paper-style rows and dump machine-readable JSON to both
+//! `bench_results/fig_saturation.json` and `BENCH_fig_saturation.json`
+//! (repo root) so the scaling trajectory is tracked across PRs.
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use pice::baselines;
+use pice::coordinator::EngineCfg;
+use pice::corpus::workload::Workload;
+use pice::fleet::{session_shard, FleetCfg, Placement};
+use pice::metrics::{aggregate, aggregate_shards, RequestTrace};
+use pice::scenario::{self, Env};
+use pice::serve::ServeCfg;
+use pice::util::json::{arr, num, obj, s, Json};
+
+const MODEL: &str = "llama70b-sim";
+
+/// Open-loop fleet driver: submit each arrival at its instant, pumping
+/// every shard between. Returns (traces, session-id -> shard routes).
+fn drive(
+    env: &Env,
+    cfg: &EngineCfg,
+    fleet: FleetCfg,
+    wl: &Workload,
+    keys: Option<&[u64]>,
+) -> (Vec<RequestTrace>, Vec<Option<usize>>) {
+    let mut svc = env
+        .fleet_service(
+            cfg.clone(),
+            ServeCfg { max_inflight: usize::MAX, deadline_s: None },
+            fleet,
+        )
+        .expect("fleet service");
+    for r in &wl.requests {
+        svc.pump_until(r.arrival_s).expect("pump");
+        match keys {
+            Some(ks) => {
+                svc.submit_with_key(r.question_id, r.arrival_s, ks[r.rid]).expect("submit")
+            }
+            None => svc.submit(r.question_id, r.arrival_s).expect("submit"),
+        };
+    }
+    svc.pump_all().expect("pump_all");
+    let routes = svc.shard_routes().to_vec();
+    let traces = svc.finish().expect("finish");
+    (traces, routes)
+}
+
+/// Group fleet traces by the shard each session was placed on.
+fn group_by_shard(
+    traces: &[RequestTrace],
+    routes: &[Option<usize>],
+    shards: usize,
+) -> Vec<Vec<RequestTrace>> {
+    let mut by_shard: Vec<Vec<RequestTrace>> = vec![Vec::new(); shards];
+    for t in traces {
+        if let Some(sh) = routes.get(t.rid).copied().flatten() {
+            by_shard[sh].push(t.clone());
+        }
+    }
+    by_shard
+}
+
+fn main() -> Result<(), String> {
+    common::banner("fig_saturation", "open-loop saturation ramp over the serving fleet");
+    common::default_memo_path();
+    let smoke = std::env::var("PICE_BENCH_SMOKE").as_deref() == Ok("1");
+    let env = Env::load()?;
+    let cfg = baselines::pice(MODEL);
+    let paper = env.paper_rpm(MODEL);
+    let per_shard_n = if smoke { 10 } else { (scenario::bench_n() / 2).max(16) };
+    let shard_counts: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let rungs: u32 = if smoke { 8 } else { 10 };
+
+    // SLO anchor: an unsaturated single engine at 0.3x the paper operating
+    // point. The ladder below fails a rung when p99 latency or p99 TTFS
+    // exceeds 3x this anchor — "the same answer quality, three times the
+    // tail" marks saturation.
+    let anchor_wl = env.workload(0.3 * paper, per_shard_n, 11);
+    let (anchor_traces, _) = drive(
+        &env,
+        &cfg,
+        FleetCfg { shards: 1, placement: Placement::Hash },
+        &anchor_wl,
+        None,
+    );
+    let am = aggregate(&anchor_traces);
+    let slo_lat = am.p99_latency_s * 3.0;
+    let slo_ttfs = am.p99_ttfs_s * 3.0;
+    println!(
+        "SLO anchor @ {:.0} rpm: p99 latency {:.2}s, p99 TTFS {:.2}s -> SLO {:.2}s / {:.2}s\n",
+        0.3 * paper,
+        am.p99_latency_s,
+        am.p99_ttfs_s,
+        slo_lat,
+        slo_ttfs
+    );
+
+    let mut rung_rows: Vec<Json> = Vec::new();
+    let mut max_rows: Vec<Json> = Vec::new();
+    let mut max_rpm: BTreeMap<(&'static str, usize), f64> = BTreeMap::new();
+    println!(
+        "{:<14} {:>6} {:>9} {:>9} {:>9} {:>9} {:>11} {:>5}",
+        "placement", "shards", "rpm", "thpt q/m", "p99 lat", "p99 TTFS", "load/shard", "SLO"
+    );
+    for placement in [Placement::Hash, Placement::LeastLoaded] {
+        for &shards in shard_counts {
+            let n = per_shard_n * shards;
+            let mut sustained = 0.0f64;
+            for k in 0..rungs {
+                let rpm = 0.5 * paper * 1.5f64.powi(k as i32);
+                let wl = env.workload(rpm, n, 11);
+                let fleet = FleetCfg { shards, placement };
+                let (traces, routes) = drive(&env, &cfg, fleet, &wl, None);
+                let fm = aggregate_shards(&group_by_shard(&traces, &routes, shards));
+                let m = &fm.fleet;
+                let load_min =
+                    fm.per_shard.iter().map(|sm| sm.n_requests).min().unwrap_or(0);
+                let load_max =
+                    fm.per_shard.iter().map(|sm| sm.n_requests).max().unwrap_or(0);
+                let ttfs_ok = am.p99_ttfs_s <= 0.0 || m.p99_ttfs_s <= slo_ttfs;
+                let pass = m.p99_latency_s <= slo_lat && ttfs_ok;
+                println!(
+                    "{:<14} {:>6} {:>9.0} {:>9.2} {:>8.2}s {:>8.2}s {:>7}..{:<3} {:>5}",
+                    placement.name(),
+                    shards,
+                    rpm,
+                    m.throughput_qpm,
+                    m.p99_latency_s,
+                    m.p99_ttfs_s,
+                    load_min,
+                    load_max,
+                    if pass { "ok" } else { "FAIL" }
+                );
+                rung_rows.push(obj(vec![
+                    ("placement", s(placement.name())),
+                    ("shards", num(shards as f64)),
+                    ("rpm", num(rpm)),
+                    ("throughput_qpm", num(m.throughput_qpm)),
+                    ("p99_latency_s", num(m.p99_latency_s)),
+                    ("p99_ttfs_s", num(m.p99_ttfs_s)),
+                    ("salvaged_slots", num(m.salvaged_slots as f64)),
+                    ("pass", num(if pass { 1.0 } else { 0.0 })),
+                ]));
+                if pass {
+                    sustained = rpm;
+                } else {
+                    break;
+                }
+            }
+            println!(
+                "  -> {} x{shards}: max sustainable {:.0} rpm ({:.0} per shard)\n",
+                placement.name(),
+                sustained,
+                sustained / shards as f64
+            );
+            max_rpm.insert((placement.name(), shards), sustained);
+            max_rows.push(obj(vec![
+                ("placement", s(placement.name())),
+                ("shards", num(shards as f64)),
+                ("max_rpm", num(sustained)),
+                ("max_rpm_per_shard", num(sustained / shards as f64)),
+            ]));
+        }
+    }
+
+    // The PR's perf claim: a 4-shard hash fleet sustains > 2x the rpm of a
+    // single engine at the same SLO (CI asserts ratio > 2.0).
+    let rpm1 = max_rpm.get(&("hash", 1)).copied().unwrap_or(0.0);
+    let rpm4 = max_rpm.get(&("hash", 4)).copied().unwrap_or(0.0);
+    let ratio = if rpm1 > 0.0 { rpm4 / rpm1 } else { 0.0 };
+    println!("scaling guard: hash x4 {rpm4:.0} rpm vs x1 {rpm1:.0} rpm -> {ratio:.2}x");
+
+    // Determinism guard: a session cohort pinned to one hash class (mod 8)
+    // must replay bit-identically at every power-of-two fleet width.
+    let pinned: Vec<u64> = (0u64..).filter(|&k| session_shard(k, 8) == 5).take(12).collect();
+    let pin_wl = env.workload(0.5 * paper, pinned.len(), 23);
+    let mut identity = true;
+    let mut reference: Option<Vec<String>> = None;
+    for &shards in shard_counts {
+        let fleet = FleetCfg { shards, placement: Placement::Hash };
+        let (traces, _) = drive(&env, &cfg, fleet, &pin_wl, Some(&pinned));
+        let repr: Vec<String> = traces.iter().map(|t| format!("{t:?}")).collect();
+        match &reference {
+            None => reference = Some(repr),
+            Some(r) => {
+                if *r != repr {
+                    identity = false;
+                    println!("hash identity BROKEN at {shards} shards");
+                }
+            }
+        }
+    }
+    println!(
+        "hash identity: pinned cohort bit-identical across shard counts: {}",
+        if identity { "yes" } else { "NO" }
+    );
+    common::report_sweep_stats(&env);
+
+    let json = obj(vec![
+        ("slo_p99_latency_s", num(slo_lat)),
+        ("slo_p99_ttfs_s", num(slo_ttfs)),
+        ("rungs", arr(rung_rows)),
+        ("max_sustainable", arr(max_rows)),
+        (
+            "scaling_guard",
+            obj(vec![
+                ("placement", s("hash")),
+                ("rpm_1shard", num(rpm1)),
+                ("rpm_4shard", num(rpm4)),
+                ("ratio", num(ratio)),
+            ]),
+        ),
+        ("hash_identity", num(if identity { 1.0 } else { 0.0 })),
+    ]);
+    common::dump("fig_saturation", json.clone());
+    // cross-PR scaling trajectory file at the repo root (see PERF.md); bench
+    // executables run with CWD = rust/, so resolve the root via the manifest
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(std::path::Path::to_path_buf)
+        .unwrap_or_default();
+    let path = root.join("BENCH_fig_saturation.json");
+    if std::fs::write(&path, json.to_string()).is_ok() {
+        println!("[saved {}]", path.display());
+    }
+    Ok(())
+}

@@ -99,6 +99,7 @@ fn main() -> Result<(), String> {
         rid,
         expected_len: len,
         sentences: vec![],
+        salvaged: vec![],
         full_sketch: Vec::new().into(),
         question: Vec::new().into(),
         enqueued_at: 0.0,

@@ -12,6 +12,17 @@ use std::sync::Arc;
 use crate::profiler::LatencyFit;
 use crate::simclock::SimTime;
 
+/// A sentence expansion completed before its edge crashed, carried across
+/// the failover re-dispatch so the next edge regenerates only the slots
+/// that were genuinely lost (PERF.md §Dynamics: partial-result salvage).
+#[derive(Clone, Debug)]
+pub struct SalvagedSlot {
+    pub tokens: Vec<u32>,
+    pub logps: Vec<f64>,
+    /// simulated token count the slot was charged when generated
+    pub sim_tokens: usize,
+}
+
 /// One queued expansion job. Token payloads are shared `Arc<[u32]>` slices:
 /// jobs are cloned on every ensemble re-queue and embedded in events, so
 /// sharing turns those clones into reference bumps instead of token copies.
@@ -22,12 +33,22 @@ pub struct Job {
     pub expected_len: usize,
     /// sketch sentences to expand (token ids per sentence)
     pub sentences: Vec<Arc<[u32]>>,
+    /// slots rescued from a crashed edge, index-aligned with `sentences`
+    /// (`None` = still needs generation). Empty only in unit fixtures.
+    pub salvaged: Vec<Option<SalvagedSlot>>,
     /// full sketch (context for the expansion prompt)
     pub full_sketch: Arc<[u32]>,
     pub question: Arc<[u32]>,
     pub enqueued_at: SimTime,
     /// how many ensemble replicas of this job remain to be launched
     pub replicas_left: usize,
+}
+
+impl Job {
+    /// Sentence slots that still need generation (not salvaged).
+    pub fn unsalvaged(&self) -> usize {
+        self.sentences.len() - self.salvaged.iter().filter(|s| s.is_some()).count()
+    }
 }
 
 /// Length-bucketed multi-list queue.
@@ -114,6 +135,7 @@ mod tests {
             rid,
             expected_len: len,
             sentences: vec![],
+            salvaged: vec![],
             full_sketch: Vec::new().into(),
             question: Vec::new().into(),
             enqueued_at: 0.0,

@@ -45,7 +45,7 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use super::backend::{GenRequest, TextBackend};
-use super::dispatch::{Job, MultiListQueue};
+use super::dispatch::{Job, MultiListQueue, SalvagedSlot};
 use super::scheduler::{CloudScheduler, Mode as SchedMode, SchedInput};
 use super::selection::select_model;
 use crate::cluster::Cluster;
@@ -182,6 +182,18 @@ struct EdgeWork {
     items: Vec<(usize, Candidate, usize /* edge tokens */)>,
 }
 
+/// An in-flight expansion job plus the per-slot outputs this pull
+/// generated, each with its estimated completion instant (the pull's wall
+/// time apportioned by cumulative sim-token share). A crash salvages every
+/// slot whose estimate is already past — those expansions survived the
+/// node — and re-queues only the rest.
+#[derive(Clone, Debug)]
+struct InflightJob {
+    job: Job,
+    /// freshly generated slots: (sentence index, estimated done, output)
+    outs: Vec<(usize, SimTime, SalvagedSlot)>,
+}
+
 /// What an edge is executing right now — retained (only when fault
 /// injection is on) so a crash can re-dispatch the lost work.
 #[derive(Clone, Debug, Default)]
@@ -189,7 +201,7 @@ enum EdgeInflight {
     #[default]
     Idle,
     /// expansion jobs of the current pull (replicas collapsed to 1)
-    Expand(Vec<Job>),
+    Expand(Vec<InflightJob>),
     /// full-answer request (edge-only / routed-easy)
     Full(usize),
 }
@@ -241,6 +253,9 @@ struct Pending {
     failovers: usize,
     /// expansion sentence-slots re-queued by those failovers
     retried_slots: usize,
+    /// sentence-slots whose completed expansion was salvaged across a
+    /// crash instead of re-queued
+    salvaged_slots: usize,
     /// a cloud-fallback regeneration is already pending for this request
     /// (dedups the rescue when a primary job and its ensemble replicas are
     /// drained to the cloud in one blackout sweep)
@@ -290,6 +305,12 @@ struct Core {
     parked_jobs: Vec<Job>,
     /// full-answer requests waiting out an all-edges-down window
     parked_full: VecDeque<usize>,
+    /// monotone count of processed events — advances exactly when the loop
+    /// makes progress, so derived state (the fleet router's backlog memo)
+    /// can be invalidated without polling queue internals
+    events_processed: u64,
+    /// requests finalized (terminal event emitted)
+    completed: usize,
     /// resumable bandwidth-walk state: the event clock is monotone, so the
     /// walk advances incrementally instead of replaying from t=0 per event
     walk_cache: crate::dynamics::link::WalkCache,
@@ -399,8 +420,28 @@ fn make_core(
         pending_recovers,
         parked_jobs: Vec::new(),
         parked_full: VecDeque::new(),
+        events_processed: 0,
+        completed: 0,
         walk_cache: None,
         virgin: true,
+    }
+}
+
+/// How an engine holds its backend: borrowed (the original single-engine
+/// contract — callers keep ownership) or boxed (a [`crate::fleet::Fleet`]
+/// owns N engines, so each must own its backend stack too). Dispatch is one
+/// match per generation call — noise next to a backend invocation.
+enum BackendSlot<'a> {
+    Borrowed(&'a mut dyn TextBackend),
+    Owned(Box<dyn TextBackend>),
+}
+
+impl BackendSlot<'_> {
+    fn as_mut(&mut self) -> &mut dyn TextBackend {
+        match self {
+            BackendSlot::Borrowed(b) => &mut **b,
+            BackendSlot::Owned(b) => b.as_mut(),
+        }
     }
 }
 
@@ -409,7 +450,7 @@ pub struct Engine<'a> {
     pub corpus: Arc<Corpus>,
     pub tok: &'a Tokenizer,
     pub registry: &'a Registry,
-    backend: &'a mut dyn TextBackend,
+    backend: BackendSlot<'a>,
     cluster: Cluster,
     profile: OfflineProfile,
     cost_coeff: f64,
@@ -423,6 +464,29 @@ impl<'a> Engine<'a> {
         tok: &'a Tokenizer,
         registry: &'a Registry,
         backend: &'a mut dyn TextBackend,
+    ) -> Result<Self, RunError> {
+        Engine::build(cfg, corpus, tok, registry, BackendSlot::Borrowed(backend))
+    }
+
+    /// Like [`Engine::new`] but taking ownership of the backend stack —
+    /// the constructor fleet shards use, since a [`crate::fleet::Fleet`]
+    /// must own N engines (and therefore N backends) at once.
+    pub fn new_owned(
+        cfg: EngineCfg,
+        corpus: Arc<Corpus>,
+        tok: &'a Tokenizer,
+        registry: &'a Registry,
+        backend: Box<dyn TextBackend>,
+    ) -> Result<Self, RunError> {
+        Engine::build(cfg, corpus, tok, registry, BackendSlot::Owned(backend))
+    }
+
+    fn build(
+        cfg: EngineCfg,
+        corpus: Arc<Corpus>,
+        tok: &'a Tokenizer,
+        registry: &'a Registry,
+        backend: BackendSlot<'a>,
     ) -> Result<Self, RunError> {
         let cluster = Cluster::testbed(cfg.n_edges);
         let cloud_info = registry
@@ -500,6 +564,35 @@ impl<'a> Engine<'a> {
         self.core.pend.len()
     }
 
+    /// Requests finalized so far (terminal event emitted). `submitted() -
+    /// completed()` is the engine's in-flight depth — the fleet router's
+    /// least-loaded tiebreak.
+    pub fn completed(&self) -> usize {
+        self.core.completed
+    }
+
+    /// Monotone count of events processed by [`Engine::pump_one`]. Advances
+    /// exactly when the loop makes progress, so callers can memoize derived
+    /// state against it — the fleet router caches `backlog_estimate_s` per
+    /// shard keyed on this counter instead of re-running Eq. 2 per
+    /// submission.
+    pub fn events_processed(&self) -> u64 {
+        self.core.events_processed
+    }
+
+    /// Edges currently alive (dynamics: crashes decrement, recovers
+    /// restore). In a static world this is constant `cfg.n_edges`.
+    pub fn up_edges(&self) -> usize {
+        self.core.up_edges
+    }
+
+    /// Recover events still unprocessed in the dynamics timeline — the
+    /// "is help coming" signal (a shard with zero live edges and zero
+    /// pending recovers can only serve via cloud fallback).
+    pub fn pending_recovers(&self) -> usize {
+        self.core.pending_recovers
+    }
+
     /// Turn on the streaming [`ResponseEvent`] sink (off by default — batch
     /// drivers pay nothing for the serving-event machinery).
     pub fn enable_events(&mut self) {
@@ -558,6 +651,7 @@ impl<'a> Engine<'a> {
             parallelism: 0,
             failovers: 0,
             retried_slots: 0,
+            salvaged_slots: 0,
             cloud_rescue: false,
             done: false,
         });
@@ -573,6 +667,7 @@ impl<'a> Engine<'a> {
             return Ok(false);
         };
         self.core.virgin = false;
+        self.core.events_processed += 1;
         match ev {
             Ev::Arrive(rid) => self.ev_arrive(now, rid),
             Ev::CloudAdmit => self.ev_cloud_admit(now)?,
@@ -771,7 +866,7 @@ impl<'a> Engine<'a> {
                 }
             })
             .collect();
-        let outs = self.backend.generate_batch(&reqs);
+        let outs = self.backend.as_mut().generate_batch(&reqs);
         // every member of this admission batch runs concurrently with the
         // jobs already in flight AND with each other, so all are priced at
         // the final concurrent batch size — not the ascending sizes an
@@ -894,6 +989,7 @@ impl<'a> Engine<'a> {
         let job = Job {
             rid,
             expected_len: self.core.pend[rid].predicted_len,
+            salvaged: vec![None; sents.len()],
             sentences: sents,
             full_sketch: self.core.pend[rid].sketch.clone(),
             question: self.core.pend[rid].question_toks.clone(),
@@ -942,6 +1038,7 @@ impl<'a> Engine<'a> {
             let real_cap = ((self.cfg.cloud_max_tokens as f64 / scale).round() as usize).max(4);
             let out = self
                 .backend
+                .as_mut()
                 .generate(
                     &model_name,
                     &prompt,
@@ -1069,12 +1166,27 @@ impl<'a> Engine<'a> {
                 .unwrap_or(0),
             prefill_speedup: 8.0,
         };
-        let est_lens: Vec<Vec<usize>> = batch
+        // Sentence slots still needing generation. A first dispatch has
+        // every slot fresh; after a crash-salvage re-dispatch only the
+        // unfinished ones are regenerated (planned, priced and prompted) —
+        // the salvaged expansions ride along for free.
+        let fresh_idx: Vec<Vec<usize>> = batch
             .iter()
             .map(|job| {
-                job.sentences
+                (0..job.sentences.len())
+                    .filter(|&si| job.salvaged.get(si).and_then(Option::as_ref).is_none())
+                    .collect()
+            })
+            .collect();
+        let est_lens: Vec<Vec<usize>> = batch
+            .iter()
+            .zip(&fresh_idx)
+            .map(|(job, fresh)| {
+                fresh
                     .iter()
-                    .map(|s| (((s.len() as f64 * 2.2).ceil() + 2.0) * scale) as usize)
+                    .map(|&si| {
+                        (((job.sentences[si].len() as f64 * 2.2).ceil() + 2.0) * scale) as usize
+                    })
                     .collect()
             })
             .collect();
@@ -1092,11 +1204,20 @@ impl<'a> Engine<'a> {
         // sentence-minor, so results realign positionally.
         let reqs: Vec<GenRequest> = batch
             .iter()
-            .flat_map(|job| {
-                job.sentences.iter().enumerate().map(|(si, sent)| GenRequest {
+            .zip(&fresh_idx)
+            .flat_map(|(job, fresh)| {
+                // the regenerated slot keeps its original sentence-index
+                // seed, so a salvage re-dispatch replays the identical
+                // sampling key (and hits the memo cache)
+                fresh.iter().map(move |&si| GenRequest {
                     model: sel_model.clone(),
-                    prompt: Prompts::expand(self.tok, &job.question, &job.full_sketch, sent)
-                        .into(),
+                    prompt: Prompts::expand(
+                        self.tok,
+                        &job.question,
+                        &job.full_sketch,
+                        &job.sentences[si],
+                    )
+                    .into(),
                     sp: SamplingParams {
                         max_tokens: 24,
                         stop_token: Some(self.tok.specials.period),
@@ -1106,14 +1227,19 @@ impl<'a> Engine<'a> {
                 })
             })
             .collect();
-        let mut outs = self.backend.generate_batch(&reqs).into_iter();
+        let mut outs = self.backend.as_mut().generate_batch(&reqs).into_iter();
         let mut items = Vec::new();
         let mut real_lens_per_job: Vec<Vec<usize>> = Vec::with_capacity(batch.len());
-        for job in &batch {
-            let mut expansion: Vec<u32> = Vec::new();
-            let mut logps: Vec<f64> = Vec::new();
-            let mut real_lens = vec![0usize; job.sentences.len()];
-            for len_slot in real_lens.iter_mut() {
+        // fresh outputs per job, kept for crash salvage (faults only)
+        let mut fresh_outs_per_job: Vec<Vec<(usize, SalvagedSlot)>> =
+            Vec::with_capacity(batch.len());
+        for (job, fresh) in batch.iter().zip(&fresh_idx) {
+            let mut slot_out: Vec<Option<SalvagedSlot>> = (0..job.sentences.len())
+                .map(|si| job.salvaged.get(si).cloned().flatten())
+                .collect();
+            let mut real_lens = vec![0usize; fresh.len()];
+            let mut fresh_outs = Vec::new();
+            for (k, &si) in fresh.iter().enumerate() {
                 let out = outs
                     .next()
                     .expect("batch result per sentence")
@@ -1122,17 +1248,31 @@ impl<'a> Engine<'a> {
                 if toks.last() == Some(&self.tok.specials.eos) {
                     toks.pop();
                 }
-                *len_slot = (toks.len() as f64 * scale) as usize;
-                expansion.extend_from_slice(&toks);
-                logps.extend_from_slice(&out.logps);
+                let n_sim = (toks.len() as f64 * scale) as usize;
+                real_lens[k] = n_sim;
+                let slot = SalvagedSlot { tokens: toks, logps: out.logps, sim_tokens: n_sim };
+                if self.core.faults_on {
+                    fresh_outs.push((si, slot.clone()));
+                }
+                slot_out[si] = Some(slot);
             }
-            let n_edge_tokens: usize = real_lens.iter().sum();
+            // assemble in sentence order — salvaged and fresh interleave
+            // exactly where the sketch put them
+            let mut expansion: Vec<u32> = Vec::new();
+            let mut logps: Vec<f64> = Vec::new();
+            let mut n_edge_tokens = 0usize;
+            for s in slot_out.into_iter().flatten() {
+                expansion.extend_from_slice(&s.tokens);
+                logps.extend_from_slice(&s.logps);
+                n_edge_tokens += s.sim_tokens;
+            }
             items.push((
                 job.rid,
                 Candidate { model: sel_model.clone(), tokens: expansion, logps },
                 n_edge_tokens,
             ));
             real_lens_per_job.push(real_lens);
+            fresh_outs_per_job.push(fresh_outs);
         }
         let mean_lanes =
             plans.iter().map(Vec::len).sum::<usize>() as f64 / plans.len().max(1) as f64;
@@ -1153,9 +1293,28 @@ impl<'a> Engine<'a> {
             sel.switch_cost_s
         );
         if self.core.faults_on {
-            // retained so a crash can re-enter these slots into dispatch
-            // with their sketch context intact (Job clones are Arc bumps)
-            self.core.edges[eid].inflight = EdgeInflight::Expand(batch.clone());
+            // Retained so a crash can re-enter these slots into dispatch
+            // with their sketch context intact (Job clones are Arc bumps).
+            // Each fresh slot gets an estimated completion instant — the
+            // pull's total duration apportioned by cumulative sim-token
+            // share within its job (the last slot lands exactly on the
+            // EdgeDone instant) — so a mid-pull crash can salvage the
+            // slots that were already finished.
+            let mut infl = Vec::with_capacity(batch.len());
+            for ((job, fresh_outs), real_lens) in
+                batch.iter().zip(fresh_outs_per_job).zip(&real_lens_per_job)
+            {
+                let total: usize = real_lens.iter().sum();
+                let mut cum = 0usize;
+                let mut outs = Vec::with_capacity(fresh_outs.len());
+                for ((si, slot), &len) in fresh_outs.into_iter().zip(real_lens) {
+                    cum += len;
+                    let frac = if total == 0 { 1.0 } else { cum as f64 / total as f64 };
+                    outs.push((si, now + total_dur * frac, slot));
+                }
+                infl.push(InflightJob { job: job.clone(), outs });
+            }
+            self.core.edges[eid].inflight = EdgeInflight::Expand(infl);
         }
         let epoch = self.core.edges[eid].epoch;
         let done = Ev::EdgeDone { eid, epoch, work: EdgeWork { items } };
@@ -1245,7 +1404,21 @@ impl<'a> Engine<'a> {
                 match std::mem::take(&mut self.core.edges[eid].inflight) {
                     EdgeInflight::Idle => {}
                     EdgeInflight::Expand(jobs) => {
-                        for job in jobs {
+                        for InflightJob { mut job, outs } in jobs {
+                            // partial-result salvage: slots whose estimated
+                            // completion is already past survived the node —
+                            // carry them, re-queue only the unfinished rest
+                            debug_assert_eq!(job.salvaged.len(), job.sentences.len());
+                            let mut newly = 0usize;
+                            for (si, done_at, slot) in outs {
+                                if done_at <= now && job.salvaged[si].is_none() {
+                                    job.salvaged[si] = Some(slot);
+                                    newly += 1;
+                                }
+                            }
+                            if newly > 0 && !self.core.pend[job.rid].done {
+                                self.core.pend[job.rid].salvaged_slots += newly;
+                            }
                             self.redispatch_job(now, job);
                         }
                     }
@@ -1364,7 +1537,8 @@ impl<'a> Engine<'a> {
             return;
         }
         self.core.pend[rid].failovers += 1;
-        self.core.pend[rid].retried_slots += job.sentences.len();
+        // salvaged slots ride along — only genuinely lost work is a retry
+        self.core.pend[rid].retried_slots += job.unsalvaged();
         job.enqueued_at = now;
         if self.core.up_edges > 0 {
             if self.core.jobq.push(job) {
@@ -1462,9 +1636,11 @@ impl<'a> Engine<'a> {
                 parallelism: p.parallelism,
                 failovers: p.failovers,
                 retried_slots: p.retried_slots,
+                salvaged_slots: p.salvaged_slots,
             }
         };
         self.core.traces[rid] = Some(trace);
+        self.core.completed += 1;
         if self.core.events.is_some() {
             let tr = self.core.traces[rid].as_ref().unwrap().clone();
             self.emit(now, rid, ResponseEventKind::Final { trace: tr });

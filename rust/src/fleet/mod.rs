@@ -1,0 +1,313 @@
+//! The serving fleet: N independent [`Engine`] shards behind one router.
+//!
+//! One engine is one event loop — its saturation point is bounded by a
+//! single core's worth of simulated cluster. The fleet scales the serving
+//! tier *horizontally*: each shard owns a full cloud+edges cluster replica,
+//! its own simclock, and its own dynamics timeline (shard i's fault seed is
+//! `base + i`, so shards fail independently — and shard 0's world is
+//! bit-identical to the single-engine world). A router in front places each
+//! session on a shard ([`Placement`]): deterministic session-hash, or
+//! backlog-aware least-loaded.
+//!
+//! ## Determinism contract (hash placement)
+//!
+//! Extends the SweepRunner playbook to the serving tier:
+//!
+//! 1. **Shard isolation.** Shards never interact — the only shared state
+//!    is the generation memo cache, which is semantically transparent. A
+//!    session's trace is therefore a pure function of its *own shard's*
+//!    `(cfg, sub-workload, seed)`: a fleet run equals N independent
+//!    single-engine runs over the hash partition of the workload,
+//!    bit-for-bit, under any pump interleaving.
+//! 2. **Pump-order independence.** [`Fleet::pump_until`] advances every
+//!    shard to the same horizon and [`Fleet::take_events`] k-way-merges the
+//!    per-shard streams by `(t, shard)`. Per-shard streams are monotone and
+//!    a horizon never splits same-instant events across calls, so the
+//!    merged global order is identical however the caller chunks its pumps.
+//! 3. **Shard-count transparency for pinned sessions.** Hash placement
+//!    nests across power-of-two fleet sizes (see
+//!    [`placement::session_shard`]): a session whose key lands on shard 0
+//!    of an 8-wide fleet lands on shard 0 of every smaller power-of-two
+//!    fleet, where (by 1) it replays the identical world. The
+//!    `fleet_determinism` tests and the `fig_saturation` hash-identity
+//!    guard drive pinned cohorts and assert their traces are bit-identical
+//!    at 1/2/4/8 shards.
+//!
+//! [`Placement::LeastLoaded`] is deliberately outside the contract: it
+//! reads live backlog, so the route depends on when the caller pumps. Its
+//! guarantees are weaker and load-shaped: no session routes to a
+//! crashed-and-unrecovering shard while a healthy one exists, and backlog
+//! estimates are memoized per shard (invalidated on event-loop progress via
+//! [`Engine::events_processed`]) so routing doesn't re-run Eq. 2 per
+//! submission.
+
+pub mod placement;
+
+pub use placement::{session_shard, Placement};
+
+use crate::coordinator::{Engine, EngineCfg, RunError};
+use crate::metrics::RequestTrace;
+use crate::serve::{ResponseEvent, ResponseEventKind};
+use crate::simclock::SimTime;
+
+/// Fleet shape: how many engine shards, and how sessions are placed.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetCfg {
+    pub shards: usize,
+    pub placement: Placement,
+}
+
+impl Default for FleetCfg {
+    fn default() -> Self {
+        FleetCfg { shards: 1, placement: Placement::Hash }
+    }
+}
+
+/// Derive shard `i`'s engine config from the fleet's base config: identical
+/// in every respect except the dynamics seed (`base + i`), so shards face
+/// independent fault timelines while shard 0 stays bit-identical to the
+/// single-engine world. `cfg.seed` is deliberately shared — identical
+/// questions derive identical sampling keys on every shard, which is what
+/// makes cross-shard memo-cache hits possible.
+pub fn shard_cfg(base: &EngineCfg, shard: usize) -> EngineCfg {
+    let mut cfg = base.clone();
+    cfg.dynamics.seed = base.dynamics.seed.wrapping_add(shard as u64);
+    cfg
+}
+
+/// A fleet of independent engine shards behind a placement router.
+///
+/// Global request ids are allocated sequentially across the fleet in
+/// submission order (the [`crate::serve::PiceService`] contract); traces
+/// and events surface with global ids, shard-local ids stay internal.
+pub struct Fleet<'a> {
+    shards: Vec<Engine<'a>>,
+    placement: Placement,
+    /// global rid -> (shard, shard-local rid)
+    routes: Vec<(usize, usize)>,
+    /// per shard: shard-local rid -> global rid
+    global_of: Vec<Vec<usize>>,
+    /// per shard: (events_processed at estimate time, estimate). Re-polled
+    /// only when the shard's event loop has moved since.
+    backlog_memo: Vec<Option<(u64, SimTime)>>,
+}
+
+impl<'a> Fleet<'a> {
+    /// Assemble a fleet from pre-built shards (typically via
+    /// [`Engine::new_owned`] over [`shard_cfg`] variants — see
+    /// [`crate::scenario::Env::fleet_service`]).
+    pub fn new(shards: Vec<Engine<'a>>, placement: Placement) -> Self {
+        assert!(!shards.is_empty(), "a fleet needs at least one shard");
+        let n = shards.len();
+        Fleet {
+            shards,
+            placement,
+            routes: Vec::new(),
+            global_of: vec![Vec::new(); n],
+            backlog_memo: vec![None; n],
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    /// Latest simulated time across the shards (each shard's clock advances
+    /// only as far as its own events go).
+    pub fn now(&self) -> SimTime {
+        self.shards.iter().map(Engine::now).fold(0.0, f64::max)
+    }
+
+    /// True when no shard has scheduled work left.
+    pub fn is_idle(&self) -> bool {
+        self.shards.iter().all(Engine::is_idle)
+    }
+
+    /// Total accepted submissions across the fleet.
+    pub fn submitted(&self) -> usize {
+        self.routes.len()
+    }
+
+    /// Total finalized requests across the fleet.
+    pub fn completed(&self) -> usize {
+        self.shards.iter().map(Engine::completed).sum()
+    }
+
+    /// Enable the streaming event sink on every shard.
+    pub fn enable_events(&mut self) {
+        for e in &mut self.shards {
+            e.enable_events();
+        }
+    }
+
+    /// The shard a submission with this session key would land on *now*
+    /// (for hash placement, ever): admission control peeks here to test a
+    /// deadline against the backlog the request would actually inherit.
+    pub fn shard_for(&mut self, session_key: u64) -> usize {
+        match self.placement {
+            Placement::Hash => session_shard(session_key, self.shards.len()),
+            Placement::LeastLoaded => self.least_loaded_shard(),
+        }
+    }
+
+    /// Submit one request and return its fleet-global request id. The
+    /// session key drives placement: requests of one session (same key)
+    /// always co-locate under hash placement.
+    pub fn submit(
+        &mut self,
+        question_id: usize,
+        arrival: SimTime,
+        session_key: u64,
+    ) -> Result<usize, RunError> {
+        let s = self.shard_for(session_key);
+        let local = self.shards[s].submit(question_id, arrival)?;
+        debug_assert_eq!(local, self.global_of[s].len(), "shard rids are sequential");
+        let global = self.routes.len();
+        self.routes.push((s, local));
+        self.global_of[s].push(global);
+        Ok(global)
+    }
+
+    /// The shard a (successfully submitted) global request id was routed to.
+    pub fn route_of(&self, global_rid: usize) -> usize {
+        self.routes[global_rid].0
+    }
+
+    /// Eq. 2 backlog estimate of the shard this session key would land on —
+    /// the fleet-level [`Engine::backlog_estimate_s`], memoized per shard.
+    pub fn backlog_estimate_for(&mut self, session_key: u64) -> SimTime {
+        let s = self.shard_for(session_key);
+        self.shard_backlog(s)
+    }
+
+    /// Memoized per-shard backlog: Eq. 2 is re-run only when the shard's
+    /// event loop has processed something since the last estimate
+    /// (submissions between pumps reuse the cached value — the router's
+    /// hot path is a counter compare, not a queue walk).
+    fn shard_backlog(&mut self, s: usize) -> SimTime {
+        let stamp = self.shards[s].events_processed();
+        if let Some((at, est)) = self.backlog_memo[s] {
+            if at == stamp {
+                return est;
+            }
+        }
+        let est = self.shards[s].backlog_estimate_s();
+        self.backlog_memo[s] = Some((stamp, est));
+        est
+    }
+
+    /// Least-loaded pick: smallest memoized backlog, ties broken by
+    /// in-flight depth then shard index. Shards with zero live edges and
+    /// zero pending recovers are skipped — they can only serve via cloud
+    /// fallback, so routing *new* sessions there would turn every placement
+    /// into a degraded one — unless the whole fleet is in that state.
+    fn least_loaded_shard(&mut self) -> usize {
+        let n = self.shards.len();
+        let healthy = |e: &Engine<'_>| e.up_edges() > 0 || e.pending_recovers() > 0;
+        let any_healthy = self.shards.iter().any(healthy);
+        let mut best: Option<(f64, usize, usize)> = None;
+        for s in 0..n {
+            if any_healthy && !healthy(&self.shards[s]) {
+                continue;
+            }
+            let inflight = self.shards[s].submitted() - self.shards[s].completed();
+            let key = (self.shard_backlog(s), inflight, s);
+            let better = match &best {
+                None => true,
+                Some(b) => match key.0.total_cmp(&b.0) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => key.1 < b.1,
+                },
+            };
+            if better {
+                best = Some(key);
+            }
+        }
+        best.expect("non-empty fleet").2
+    }
+
+    /// Advance every shard strictly past all events before `horizon` (the
+    /// open-loop driving primitive, same semantics as
+    /// [`Engine::pump_until`] per shard).
+    pub fn pump_until(&mut self, horizon: SimTime) -> Result<(), RunError> {
+        for e in &mut self.shards {
+            e.pump_until(horizon)?;
+        }
+        Ok(())
+    }
+
+    /// Drain every shard to quiescence.
+    pub fn pump_all(&mut self) -> Result<(), RunError> {
+        for e in &mut self.shards {
+            e.pump_all()?;
+        }
+        Ok(())
+    }
+
+    /// Drain and merge the shards' streaming events into one globally
+    /// time-ordered stream (ties resolve to the lower shard index; ids are
+    /// rewritten to fleet-global rids). Chunked draining is safe: a pump
+    /// horizon never splits events across calls out of time order, so
+    /// concatenating successive merges reproduces the full-run merge.
+    pub fn take_events(&mut self) -> Vec<ResponseEvent> {
+        let mut streams: Vec<std::iter::Peekable<std::vec::IntoIter<ResponseEvent>>> =
+            self.shards.iter_mut().map(|e| e.take_events().into_iter().peekable()).collect();
+        let mut out = Vec::new();
+        loop {
+            let mut best: Option<(usize, SimTime)> = None;
+            for (s, st) in streams.iter_mut().enumerate() {
+                if let Some(ev) = st.peek() {
+                    let better = match best {
+                        None => true,
+                        Some((_, bt)) => ev.t < bt,
+                    };
+                    if better {
+                        best = Some((s, ev.t));
+                    }
+                }
+            }
+            let Some((s, _)) = best else { break };
+            let mut ev = streams[s].next().expect("peeked event");
+            ev.rid = self.global_of[s][ev.rid];
+            if let ResponseEventKind::Final { trace } = &mut ev.kind {
+                trace.rid = ev.rid;
+            }
+            out.push(ev);
+        }
+        out
+    }
+
+    /// Take completed traces across the fleet, rids rewritten to global ids,
+    /// sorted by global id (fleet submission order).
+    pub fn take_traces(&mut self) -> Vec<RequestTrace> {
+        let mut out: Vec<RequestTrace> = Vec::new();
+        for (s, e) in self.shards.iter_mut().enumerate() {
+            for mut t in e.take_traces() {
+                t.rid = self.global_of[s][t.rid];
+                out.push(t);
+            }
+        }
+        out.sort_by_key(|t| t.rid);
+        out
+    }
+
+    /// Like [`Fleet::take_traces`], but keeping the per-shard grouping
+    /// (rids still rewritten to global ids) — the
+    /// [`crate::metrics::aggregate_shards`] input.
+    pub fn take_shard_traces(&mut self) -> Vec<Vec<RequestTrace>> {
+        let mut out: Vec<Vec<RequestTrace>> = Vec::with_capacity(self.shards.len());
+        for (s, e) in self.shards.iter_mut().enumerate() {
+            let mut traces = e.take_traces();
+            for t in &mut traces {
+                t.rid = self.global_of[s][t.rid];
+            }
+            out.push(traces);
+        }
+        out
+    }
+}

@@ -1,0 +1,104 @@
+//! Placement policies for the serving fleet: which engine shard a new
+//! session lands on.
+//!
+//! * [`Placement::Hash`] — deterministic session-hash placement. A session
+//!   key is mixed through a splitmix64 finalizer and reduced mod the shard
+//!   count; the choice is a pure function of `(key, n_shards)`, independent
+//!   of fleet state, pump interleaving, or submission order. This is the
+//!   policy the fleet determinism contract is stated under.
+//! * [`Placement::LeastLoaded`] — backlog-aware placement: route to the
+//!   shard with the smallest Eq. 2 backlog estimate
+//!   ([`crate::coordinator::Engine::backlog_estimate_s`]), breaking ties by
+//!   in-flight depth, then by shard index. Estimates are memoized per shard
+//!   and invalidated on event-loop progress (see
+//!   [`crate::fleet::Fleet`]), so routing never re-runs Eq. 2 for a shard
+//!   whose loop hasn't moved. Load-adaptive, therefore *not* part of the
+//!   bit-identity contract: the route depends on when the caller pumps.
+
+/// Shard-placement policy of a [`crate::fleet::Fleet`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// deterministic session-hash placement (the default)
+    Hash,
+    /// backlog-aware least-loaded placement
+    LeastLoaded,
+}
+
+impl Placement {
+    /// Parse a CLI spelling (`hash` | `least-loaded`).
+    pub fn parse(s: &str) -> Option<Placement> {
+        match s {
+            "hash" => Some(Placement::Hash),
+            "least-loaded" => Some(Placement::LeastLoaded),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::Hash => "hash",
+            Placement::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// splitmix64 finalizer: a bijective avalanche mix, so consecutive session
+/// keys (0, 1, 2, …) spread uniformly across shards instead of striping.
+pub fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Hash placement: the shard a session key lands on in an `n_shards`-wide
+/// fleet. Pure in `(key, n_shards)` — the determinism contract's anchor.
+///
+/// Power-of-two fleets nest: `session_shard(k, m) ≡ session_shard(k, n)
+/// (mod m)` whenever `m` divides `n`, because both reduce the same mixed
+/// hash. A key whose mixed hash is ≡ j (mod 8) therefore lands on shard
+/// `j % n` for every fleet size n ∈ {1, 2, 4, 8} — the property the
+/// cross-shard-count bit-identity guard pins sessions with.
+pub fn session_shard(key: u64, n_shards: usize) -> usize {
+    debug_assert!(n_shards > 0);
+    (mix64(key) % n_shards.max(1) as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [Placement::Hash, Placement::LeastLoaded] {
+            assert_eq!(Placement::parse(p.name()), Some(p));
+        }
+        assert_eq!(Placement::parse("random"), None);
+    }
+
+    #[test]
+    fn hash_placement_is_stable_and_spread() {
+        // pure: same key, same shard
+        for key in 0..64u64 {
+            assert_eq!(session_shard(key, 4), session_shard(key, 4));
+        }
+        // consecutive keys must not stripe onto one shard
+        let mut counts = [0usize; 4];
+        for key in 0..400u64 {
+            counts[session_shard(key, 4)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c >= 50), "skewed spread: {counts:?}");
+    }
+
+    #[test]
+    fn power_of_two_fleets_nest() {
+        // h % m == (h % n) % m when m | n: a session pinned to shard j of
+        // an 8-wide fleet lands on shard j % n for every n in {1,2,4,8}
+        for key in 0..512u64 {
+            let s8 = session_shard(key, 8);
+            for n in [1usize, 2, 4] {
+                assert_eq!(session_shard(key, n), s8 % n);
+            }
+        }
+    }
+}

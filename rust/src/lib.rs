@@ -12,7 +12,8 @@
 //! * environment dynamics: [`dynamics`] (time-varying links, edge churn /
 //!   failure injection; the engine's failover re-dispatch rides on it)
 //! * online serving: [`serve`] (streaming progressive-response sessions
-//!   over the step-driven engine core, with admission control)
+//!   over the step-driven engine core, with admission control), [`fleet`]
+//!   (N engine shards behind a hash / least-loaded placement router)
 //! * evaluation scale-out: [`sweep`] (shared generation cache + the
 //!   concurrent scenario-sweep runner), [`scenario`] (env wiring)
 
@@ -24,6 +25,7 @@ pub mod dynamics;
 pub mod finetune;
 pub mod corpus;
 pub mod ensemble;
+pub mod fleet;
 pub mod metrics;
 pub mod parallel;
 pub mod models;

@@ -5,6 +5,7 @@
 //! pice serve   [--model llama70b-sim] [--rpm 30] [--n 60] [--policy pice|cloud|edge|routing]
 //!              [--seed 11] [--max-inflight 256] [--stream]
 //!              [--dynamics stable|flaky-wan|edge-churn] [--deadline <s>]
+//!              [--shards 4] [--placement hash|least-loaded]
 //! pice models
 //! pice profile [--edges 4]
 //! pice finetune [--pairs 8] [--steps 30]
@@ -16,6 +17,7 @@ use pice::cli::Args;
 use pice::cluster::{Cluster, DeviceSpec};
 use pice::dynamics::DynamicsSpec;
 use pice::finetune::{Trainer, TrainerCfg};
+use pice::fleet::{FleetCfg, Placement};
 use pice::metrics::Mode;
 use pice::models::ModelInfo;
 use pice::profiler::OfflineProfile;
@@ -50,6 +52,14 @@ SUBCOMMANDS
                                                  with failover re-dispatch
               --stream              print the live per-request response-event log
                                     (Admitted / SketchReady / ExpansionChunk / Final)
+              --shards <int>        serve through a fleet of N engine shards,
+                                    each with its own cluster replica and fault
+                                    timeline (default 1: the single engine)
+              --placement <p>       fleet session placement (PERF.md §Fleet):
+                                      hash          deterministic session-hash
+                                                    (default; bit-stable traces)
+                                      least-loaded  route to the shard with the
+                                                    smallest backlog estimate
   models    print the model registry (speed, memory, MMLU, eval accuracy)
   profile   offline latency fits f(l) per (device, model)
               --edges <int>         edge count of the profiled testbed (default 4)
@@ -95,7 +105,18 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("serve") => args
             .validate(
-                &["model", "rpm", "n", "policy", "seed", "max-inflight", "dynamics", "deadline"],
+                &[
+                    "model",
+                    "rpm",
+                    "n",
+                    "policy",
+                    "seed",
+                    "max-inflight",
+                    "dynamics",
+                    "deadline",
+                    "shards",
+                    "placement",
+                ],
                 &with_global_flags(&["stream"]),
             )
             .and_then(|()| serve(&args)),
@@ -157,18 +178,41 @@ fn serve(args: &Args) -> Result<(), String> {
         None => None,
     };
     let serve_cfg = ServeCfg { max_inflight: args.opt_usize("max-inflight", 256), deadline_s };
+    let shards = args.opt_usize("shards", 1);
+    let shards_invalid = match args.opt("shards") {
+        Some(v) => v.parse::<usize>().is_err(),
+        None => false,
+    };
+    if shards == 0 || shards_invalid {
+        return Err("--shards expects a positive integer (e.g. --shards 4)".to_string());
+    }
+    let placement = match args.opt("placement") {
+        Some(p) => Placement::parse(p).ok_or_else(|| {
+            format!("unknown placement `{p}`; valid placements: hash, least-loaded")
+        })?,
+        None => Placement::Hash,
+    };
+    // Asking for a fleet knob (even `--shards 1`) routes through the fleet
+    // service — a 1-shard hash fleet is bit-identical to the single engine.
+    let fleet_mode = args.opt("shards").is_some() || args.opt("placement").is_some();
 
     // The service (open-loop) path runs when its knobs are engaged: --stream
-    // for the live log, an explicit --max-inflight for admission control, or
-    // an SLO --deadline. Without any, the closed-loop driver produces
-    // bit-identical traces with no event machinery.
-    let (traces, rejected) = if stream
+    // for the live log, an explicit --max-inflight for admission control, an
+    // SLO --deadline, or a fleet shape. Without any, the closed-loop driver
+    // produces bit-identical traces with no event machinery.
+    let (traces, rejected, shard_routes) = if fleet_mode
+        || stream
         || args.opt("max-inflight").is_some()
         || deadline_s.is_some()
     {
         // Open-loop serving: submit each arrival as simulated time reaches
-        // it, pumping the engine between submissions.
-        let mut svc = env.service(cfg, serve_cfg).map_err(|e| e.to_string())?;
+        // it, pumping the engine(s) between submissions.
+        let mut svc = if fleet_mode {
+            env.fleet_service(cfg, serve_cfg, FleetCfg { shards, placement })
+                .map_err(|e| e.to_string())?
+        } else {
+            env.service(cfg, serve_cfg).map_err(|e| e.to_string())?
+        };
         for r in &wl.requests {
             svc.pump_until(r.arrival_s).map_err(|e| e.to_string())?;
             svc.submit(r.question_id, r.arrival_s).map_err(|e| e.to_string())?;
@@ -185,11 +229,12 @@ fn serve(args: &Args) -> Result<(), String> {
             }
         }
         let rejected = svc.rejected();
-        (svc.finish().map_err(|e| e.to_string())?, rejected)
+        let routes = svc.shard_routes().to_vec();
+        (svc.finish().map_err(|e| e.to_string())?, rejected, routes)
     } else {
         // closed-loop batch driver (same traces, no event machinery)
         let (_, traces) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
-        (traces, 0)
+        (traces, 0, Vec::new())
     };
 
     let m = pice::metrics::aggregate(&traces);
@@ -216,6 +261,29 @@ fn serve(args: &Args) -> Result<(), String> {
         m.n_requests,
         rejected
     );
+    if m.salvaged_slots > 0 {
+        println!("salvaged        {} expansion slots kept across edge crashes", m.salvaged_slots);
+    }
+    // Per-shard breakdown: fleet-wide numbers above are computed over the
+    // union of traces (never by summing per-shard rates — see
+    // metrics::aggregate_shards); here each shard's own slice.
+    if shards > 1 {
+        let mut by_shard: Vec<Vec<pice::metrics::RequestTrace>> = vec![Vec::new(); shards];
+        for t in &traces {
+            if let Some(s) = shard_routes.get(t.rid).copied().flatten() {
+                by_shard[s].push(t.clone());
+            }
+        }
+        let fm = pice::metrics::aggregate_shards(&by_shard);
+        println!("fleet           {shards} shards, {} placement", placement.name());
+        for (s, sm) in fm.per_shard.iter().enumerate() {
+            println!(
+                "  shard {s}       {:>3} reqs | {:.2} q/m | lat p50 {:.2}s p95 {:.2}s \
+                 | {} failovers",
+                sm.n_requests, sm.throughput_qpm, sm.p50_latency_s, sm.p95_latency_s, sm.failovers
+            );
+        }
+    }
     Ok(())
 }
 

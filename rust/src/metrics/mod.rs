@@ -54,6 +54,9 @@ pub struct RequestTrace {
     pub failovers: usize,
     /// expansion sentence-slots re-queued by those failovers
     pub retried_slots: usize,
+    /// sentence-slots whose completed expansion was salvaged across an
+    /// edge crash instead of re-queued (partial-result salvage)
+    pub salvaged_slots: usize,
 }
 
 impl RequestTrace {
@@ -101,6 +104,9 @@ pub struct RunMetrics {
     pub failovers: usize,
     /// total expansion slots re-queued by those failovers
     pub retried_slots: usize,
+    /// total expansion slots salvaged across edge crashes (work the
+    /// failover path did NOT have to redo)
+    pub salvaged_slots: usize,
     /// degraded-mode latency: percentiles over only the requests that
     /// survived at least one failover (0.0 when none did)
     pub p50_degraded_latency_s: f64,
@@ -108,14 +114,19 @@ pub struct RunMetrics {
 }
 
 pub fn aggregate(traces: &[RequestTrace]) -> RunMetrics {
+    let refs: Vec<&RequestTrace> = traces.iter().collect();
+    aggregate_refs(&refs)
+}
+
+fn aggregate_refs(traces: &[&RequestTrace]) -> RunMetrics {
     if traces.is_empty() {
         return RunMetrics::default();
     }
-    let lat: Vec<f64> = traces.iter().map(RequestTrace::latency).collect();
-    let ttfs: Vec<f64> = traces.iter().filter_map(RequestTrace::ttfs).collect();
-    let ttfe: Vec<f64> = traces.iter().filter_map(RequestTrace::ttfe).collect();
+    let lat: Vec<f64> = traces.iter().map(|t| t.latency()).collect();
+    let ttfs: Vec<f64> = traces.iter().filter_map(|t| t.ttfs()).collect();
+    let ttfe: Vec<f64> = traces.iter().filter_map(|t| t.ttfe()).collect();
     let degraded: Vec<f64> =
-        traces.iter().filter(|t| t.failovers > 0).map(RequestTrace::latency).collect();
+        traces.iter().filter(|t| t.failovers > 0).map(|t| t.latency()).collect();
     let first_arrival = traces.iter().map(|t| t.arrival).fold(f64::INFINITY, f64::min);
     let last_done = traces.iter().map(|t| t.done).fold(0.0, f64::max);
     let makespan = (last_done - first_arrival).max(1e-9);
@@ -136,9 +147,33 @@ pub fn aggregate(traces: &[RequestTrace]) -> RunMetrics {
         makespan_s: makespan,
         failovers: traces.iter().map(|t| t.failovers).sum(),
         retried_slots: traces.iter().map(|t| t.retried_slots).sum(),
+        salvaged_slots: traces.iter().map(|t| t.salvaged_slots).sum(),
         p50_degraded_latency_s: stats::percentile(&degraded, 50.0),
         p99_degraded_latency_s: stats::percentile(&degraded, 99.0),
     }
+}
+
+/// Aggregation over a fleet's disjoint per-shard trace streams: one
+/// `RunMetrics` per shard plus the fleet-wide view.
+#[derive(Clone, Debug, Default)]
+pub struct FleetMetrics {
+    /// the whole fleet, every request counted exactly once
+    pub fleet: RunMetrics,
+    /// `per_shard[i]` aggregates shard i's own stream only
+    pub per_shard: Vec<RunMetrics>,
+}
+
+/// Merge N disjoint per-shard trace streams into per-shard and fleet-wide
+/// metrics without double-counting. Shards share one simulated time axis,
+/// so fleet percentiles/totals are computed over the **union** of the
+/// streams and fleet throughput uses the **global** makespan (max done −
+/// min arrival across every shard). Summing per-shard `throughput_qpm`
+/// instead would count overlapping wall-clock N times — the bug this merge
+/// path exists to prevent.
+pub fn aggregate_shards(shards: &[Vec<RequestTrace>]) -> FleetMetrics {
+    let per_shard: Vec<RunMetrics> = shards.iter().map(|s| aggregate(s)).collect();
+    let flat: Vec<&RequestTrace> = shards.iter().flatten().collect();
+    FleetMetrics { fleet: aggregate_refs(&flat), per_shard }
 }
 
 #[cfg(test)]
@@ -168,6 +203,7 @@ mod tests {
             parallelism: 0,
             failovers: 0,
             retried_slots: 0,
+            salvaged_slots: 0,
         }
     }
 
@@ -225,6 +261,66 @@ mod tests {
         let m0 = aggregate(&traces[..3]);
         assert_eq!(m0.failovers, 0);
         assert_eq!(m0.p99_degraded_latency_s, 0.0);
+    }
+
+    #[test]
+    fn fleet_merge_matches_flat_aggregate() {
+        // fleet-wide view == aggregating the flattened union: every
+        // request counted once, percentiles over the union, throughput on
+        // the global makespan
+        let all: Vec<_> = (0..24)
+            .map(|i| {
+                let mut t = trace(i as f64, i as f64 + 2.0 + (i % 5) as f64);
+                t.failovers = i % 3;
+                t.retried_slots = i % 2;
+                t.salvaged_slots = i % 4;
+                t
+            })
+            .collect();
+        let shards: Vec<Vec<RequestTrace>> = vec![
+            all.iter().step_by(2).cloned().collect(),
+            all.iter().skip(1).step_by(2).cloned().collect(),
+        ];
+        let fm = aggregate_shards(&shards);
+        let flat = aggregate(&all);
+        assert_eq!(fm.fleet.n_requests, flat.n_requests);
+        assert_eq!(fm.fleet.failovers, flat.failovers);
+        assert_eq!(fm.fleet.retried_slots, flat.retried_slots);
+        assert_eq!(fm.fleet.salvaged_slots, flat.salvaged_slots);
+        assert!((fm.fleet.throughput_qpm - flat.throughput_qpm).abs() < 1e-9);
+        assert!((fm.fleet.p99_latency_s - flat.p99_latency_s).abs() < 1e-9);
+        assert!((fm.fleet.p50_ttfs_s - flat.p50_ttfs_s).abs() < 1e-9);
+        // per-shard rows partition the fleet totals exactly
+        assert_eq!(fm.per_shard.len(), 2);
+        assert_eq!(
+            fm.per_shard.iter().map(|m| m.n_requests).sum::<usize>(),
+            fm.fleet.n_requests
+        );
+        assert_eq!(
+            fm.per_shard.iter().map(|m| m.failovers).sum::<usize>(),
+            fm.fleet.failovers
+        );
+    }
+
+    #[test]
+    fn fleet_merge_throughput_is_not_a_shard_sum() {
+        // two shards serving concurrently over the SAME wall-clock window:
+        // fleet throughput must reflect the union over the global makespan
+        // (~2x one shard), not the sum of per-shard rates computed on
+        // overlapping windows (which here would equal it) — and crucially
+        // not N x when one shard is idle most of the window
+        let busy: Vec<_> = (0..30).map(|i| trace(i as f64 * 2.0, i as f64 * 2.0 + 1.0)).collect();
+        let brief: Vec<_> = (0..3).map(|i| trace(i as f64, i as f64 + 1.0)).collect();
+        let fm = aggregate_shards(&[busy.clone(), brief.clone()]);
+        let shard_sum = fm.per_shard[0].throughput_qpm + fm.per_shard[1].throughput_qpm;
+        // the brief shard's 3 requests over ~4 s inflate its own rate; the
+        // honest fleet rate is 33 requests over the ~59 s global window
+        assert!((fm.fleet.throughput_qpm - 33.0 / fm.fleet.makespan_s * 60.0).abs() < 1e-9);
+        assert!(fm.fleet.throughput_qpm < shard_sum);
+        // empty shard set degrades to defaults
+        let empty = aggregate_shards(&[]);
+        assert_eq!(empty.fleet.n_requests, 0);
+        assert!(empty.per_shard.is_empty());
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::coordinator::backend::{
 use crate::coordinator::{EngineCfg, RunError};
 use crate::corpus::workload::{Arrival, Workload, WorkloadSpec};
 use crate::corpus::Corpus;
+use crate::fleet::{Fleet, FleetCfg};
 use crate::metrics::{RequestTrace, RunMetrics};
 use crate::models::Registry;
 use crate::quality::judge::Judge;
@@ -245,6 +246,47 @@ impl Env {
             self.backend.as_mut(),
         )?;
         Ok(PiceService::new(engine, serve_cfg))
+    }
+
+    /// Open a streaming service over a sharded fleet: `fleet_cfg.shards`
+    /// engines, each owning its own backend replica stack (worker pool when
+    /// `PICE_WORKERS > 1` is set explicitly, like sweep scenarios) tagged
+    /// with its own cache-owner id over the shared memo cache — so
+    /// [`Env::cache_stats`] afterwards shows `cross_hits` when one shard's
+    /// generations serve another's. With `shards == 1` and hash placement
+    /// the service is bit-identical to [`Env::service`] on the same
+    /// `(cfg, workload)`.
+    pub fn fleet_service(
+        &self,
+        cfg: EngineCfg,
+        serve_cfg: ServeCfg,
+        fleet_cfg: FleetCfg,
+    ) -> Result<PiceService<'_>, RunError> {
+        let n = fleet_cfg.shards.max(1);
+        let workers = self.explicit_workers.unwrap_or(1);
+        let base = self.next_owner.fetch_add(n as u32, Ordering::Relaxed);
+        let mut shards = Vec::with_capacity(n);
+        for i in 0..n {
+            let inner: Box<dyn TextBackend + Send> = if workers > 1 {
+                let r = self.replica.clone();
+                Box::new(ParallelBackend::new(workers, move |_| r()))
+            } else {
+                (self.replica)()
+            };
+            let backend: Box<dyn TextBackend> = match &self.cache {
+                Some(c) => Box::new(MemoBackend::shared(inner, c.clone(), base + i as u32)),
+                None => inner,
+            };
+            shards.push(crate::coordinator::Engine::new_owned(
+                crate::fleet::shard_cfg(&cfg, i),
+                self.corpus.clone(),
+                &self.tok,
+                &self.registry,
+                backend,
+            )?);
+        }
+        let fleet = Fleet::new(shards, fleet_cfg.placement);
+        Ok(PiceService::over_fleet(fleet, serve_cfg))
     }
 
     /// Run a grid of independent scenarios across the sweep thread pool

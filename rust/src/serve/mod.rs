@@ -33,6 +33,7 @@
 use std::collections::VecDeque;
 
 use crate::coordinator::{Engine, RunError};
+use crate::fleet::Fleet;
 use crate::metrics::{Mode, RequestTrace};
 use crate::simclock::SimTime;
 
@@ -111,6 +112,87 @@ struct Session {
     terminal: bool,
 }
 
+/// What the service fronts: one engine (the original contract) or a
+/// [`Fleet`] of engine shards. Both expose the same step-driven surface —
+/// sequential rids, time-ordered event stream, pump/trace drains — so every
+/// session/admission/streaming invariant above holds unchanged over N
+/// shards.
+enum ServeCore<'a> {
+    Engine(Engine<'a>),
+    Fleet(Fleet<'a>),
+}
+
+impl<'a> ServeCore<'a> {
+    fn now(&self) -> SimTime {
+        match self {
+            ServeCore::Engine(e) => e.now(),
+            ServeCore::Fleet(f) => f.now(),
+        }
+    }
+
+    fn is_idle(&self) -> bool {
+        match self {
+            ServeCore::Engine(e) => e.is_idle(),
+            ServeCore::Fleet(f) => f.is_idle(),
+        }
+    }
+
+    /// Submit; returns `(rid, shard)` — shard is `None` on the
+    /// single-engine core. Rids are sequential in submission order on both
+    /// cores (the fleet allocates global ids at its router).
+    fn submit(
+        &mut self,
+        question_id: usize,
+        arrival: SimTime,
+        session_key: u64,
+    ) -> Result<(usize, Option<usize>), RunError> {
+        match self {
+            ServeCore::Engine(e) => Ok((e.submit(question_id, arrival)?, None)),
+            ServeCore::Fleet(f) => {
+                let rid = f.submit(question_id, arrival, session_key)?;
+                Ok((rid, Some(f.route_of(rid))))
+            }
+        }
+    }
+
+    /// Backlog the request behind this session key would inherit — on a
+    /// fleet, the estimate of the shard placement would actually choose.
+    fn backlog_estimate_s(&mut self, session_key: u64) -> SimTime {
+        match self {
+            ServeCore::Engine(e) => e.backlog_estimate_s(),
+            ServeCore::Fleet(f) => f.backlog_estimate_for(session_key),
+        }
+    }
+
+    fn pump_until(&mut self, horizon: SimTime) -> Result<(), RunError> {
+        match self {
+            ServeCore::Engine(e) => e.pump_until(horizon),
+            ServeCore::Fleet(f) => f.pump_until(horizon),
+        }
+    }
+
+    fn pump_all(&mut self) -> Result<(), RunError> {
+        match self {
+            ServeCore::Engine(e) => e.pump_all(),
+            ServeCore::Fleet(f) => f.pump_all(),
+        }
+    }
+
+    fn take_events(&mut self) -> Vec<ResponseEvent> {
+        match self {
+            ServeCore::Engine(e) => e.take_events(),
+            ServeCore::Fleet(f) => f.take_events(),
+        }
+    }
+
+    fn take_traces(&mut self) -> Vec<RequestTrace> {
+        match self {
+            ServeCore::Engine(e) => e.take_traces(),
+            ServeCore::Fleet(f) => f.take_traces(),
+        }
+    }
+}
+
 /// Streaming serving façade over the step-driven [`Engine`] core.
 ///
 /// ```ignore
@@ -120,11 +202,14 @@ struct Session {
 /// while let Some(ev) = svc.poll(&h) { /* stream to the client */ }
 /// ```
 pub struct PiceService<'a> {
-    engine: Engine<'a>,
+    core: ServeCore<'a>,
     cfg: ServeCfg,
     sessions: Vec<Session>,
-    /// engine rid -> session id (admitted submissions only)
+    /// core rid -> session id (admitted submissions only)
     rid_to_sid: Vec<usize>,
+    /// session id -> fleet shard (None for rejected submissions and on the
+    /// single-engine core) — the per-shard metrics breakdown key
+    sid_shard: Vec<Option<usize>>,
     /// one session-id marker per routed event, in global emission order —
     /// backs [`PiceService::poll_any`] without cloning events
     order: VecDeque<usize>,
@@ -136,20 +221,35 @@ impl<'a> PiceService<'a> {
     /// Wrap an engine; enables its streaming event sink.
     pub fn new(mut engine: Engine<'a>, cfg: ServeCfg) -> Self {
         engine.enable_events();
+        PiceService::over(ServeCore::Engine(engine), cfg)
+    }
+
+    /// Wrap a [`Fleet`] of engine shards; enables streaming on every shard.
+    /// Sessions, admission control (`max_inflight`, `deadline_s`) and the
+    /// streaming invariants work unchanged — `deadline_s` tests against
+    /// the backlog of the shard placement would choose for the session.
+    pub fn over_fleet(mut fleet: Fleet<'a>, cfg: ServeCfg) -> Self {
+        fleet.enable_events();
+        PiceService::over(ServeCore::Fleet(fleet), cfg)
+    }
+
+    fn over(core: ServeCore<'a>, cfg: ServeCfg) -> Self {
         PiceService {
-            engine,
+            core,
             cfg,
             sessions: Vec::new(),
             rid_to_sid: Vec::new(),
+            sid_shard: Vec::new(),
             order: VecDeque::new(),
             inflight: 0,
             rejected: 0,
         }
     }
 
-    /// Current simulated time of the underlying engine.
+    /// Current simulated time of the underlying core (on a fleet, the
+    /// furthest shard clock).
     pub fn now(&self) -> SimTime {
-        self.engine.now()
+        self.core.now()
     }
 
     /// Requests admitted and not yet terminal.
@@ -173,6 +273,21 @@ impl<'a> PiceService<'a> {
         question_id: usize,
         arrival: SimTime,
     ) -> Result<RequestHandle, RunError> {
+        let key = self.sessions.len() as u64;
+        self.submit_with_key(question_id, arrival, key)
+    }
+
+    /// [`PiceService::submit`] with an explicit session key. On a fleet the
+    /// key drives placement — callers with client affinity (one user, many
+    /// requests) pass a stable key so hash placement co-locates the
+    /// session. On a single engine the key is ignored. The default
+    /// [`PiceService::submit`] uses the session id as key.
+    pub fn submit_with_key(
+        &mut self,
+        question_id: usize,
+        arrival: SimTime,
+        session_key: u64,
+    ) -> Result<RequestHandle, RunError> {
         let sid = self.sessions.len();
         if self.inflight >= self.cfg.max_inflight {
             let reason = format!(
@@ -184,7 +299,7 @@ impl<'a> PiceService<'a> {
         // SLO-aware admission: reject-on-infeasible instead of letting a
         // doomed request queue (the client can retry elsewhere/later)
         if let Some(deadline) = self.cfg.deadline_s {
-            let est = self.engine.backlog_estimate_s();
+            let est = self.core.backlog_estimate_s(session_key);
             if est > deadline {
                 let reason = format!(
                     "infeasible: backlog estimate {est:.2}s exceeds deadline {deadline:.2}s"
@@ -192,9 +307,10 @@ impl<'a> PiceService<'a> {
                 return Ok(self.reject(sid, arrival, reason));
             }
         }
-        let rid = self.engine.submit(question_id, arrival)?;
-        debug_assert_eq!(rid, self.rid_to_sid.len(), "engine rids are sequential");
+        let (rid, shard) = self.core.submit(question_id, arrival, session_key)?;
+        debug_assert_eq!(rid, self.rid_to_sid.len(), "core rids are sequential");
         self.rid_to_sid.push(sid);
+        self.sid_shard.push(shard);
         self.sessions.push(Session { queue: VecDeque::new(), terminal: false });
         self.inflight += 1;
         Ok(RequestHandle { sid })
@@ -205,14 +321,14 @@ impl<'a> PiceService<'a> {
     /// pumping past it to keep the open-loop run bit-identical to the
     /// closed-loop driver.
     pub fn pump_until(&mut self, horizon: SimTime) -> Result<(), RunError> {
-        let res = self.engine.pump_until(horizon);
+        let res = self.core.pump_until(horizon);
         self.route();
         res
     }
 
     /// Drain the engine to quiescence (all submitted work finished).
     pub fn pump_all(&mut self) -> Result<(), RunError> {
-        let res = self.engine.pump_all();
+        let res = self.core.pump_all();
         self.route();
         res
     }
@@ -221,18 +337,19 @@ impl<'a> PiceService<'a> {
     /// terminal [`ResponseEventKind::Rejected`] (backpressure or an
     /// infeasible SLO), never a silent drop.
     fn reject(&mut self, sid: usize, arrival: SimTime, reason: String) -> RequestHandle {
-        let t = arrival.max(self.engine.now());
+        let t = arrival.max(self.core.now());
         let mut queue = VecDeque::new();
         let kind = ResponseEventKind::Rejected { reason };
         queue.push_back(ResponseEvent { rid: sid, t, kind });
         self.sessions.push(Session { queue, terminal: true });
+        self.sid_shard.push(None);
         self.order.push_back(sid);
         self.rejected += 1;
         RequestHandle { sid }
     }
 
     fn route(&mut self) {
-        for mut ev in self.engine.take_events() {
+        for mut ev in self.core.take_events() {
             let sid = self.rid_to_sid[ev.rid];
             // the session id is the client-facing request id — on the event
             // AND on the embedded terminal trace, so a client keying state
@@ -280,18 +397,31 @@ impl<'a> PiceService<'a> {
         self.sessions[h.sid].terminal
     }
 
+    /// The fleet shard this session was placed on (`None` for rejected
+    /// submissions and on the single-engine core).
+    pub fn shard_of(&self, h: &RequestHandle) -> Option<usize> {
+        self.sid_shard.get(h.sid).copied().flatten()
+    }
+
+    /// Session-id-indexed shard placements — group
+    /// [`PiceService::finish`]'s traces by `shard_routes()[trace.rid]` for
+    /// the per-shard [`crate::metrics::aggregate_shards`] breakdown.
+    pub fn shard_routes(&self) -> &[Option<usize>] {
+        &self.sid_shard
+    }
+
     /// True when the engine has no scheduled work left.
     pub fn idle(&self) -> bool {
-        self.engine.is_idle()
+        self.core.is_idle()
     }
 
     /// Finish serving: drain the engine and return the completed traces,
     /// with each trace's `rid` remapped to its session id (the same id its
     /// handle and events carry — rejected submissions have no trace).
     pub fn finish(mut self) -> Result<Vec<RequestTrace>, RunError> {
-        self.engine.pump_all()?;
+        self.core.pump_all()?;
         self.route();
-        let mut traces = self.engine.take_traces();
+        let mut traces = self.core.take_traces();
         for t in &mut traces {
             t.rid = self.rid_to_sid[t.rid];
         }

@@ -1,0 +1,420 @@
+//! The sharded serving fleet's contract (see `fleet/mod.rs`):
+//!
+//! 1. **Shard isolation + pump-order independence** — under hash placement
+//!    a fleet run is bit-identical to N independent single-engine runs over
+//!    the hash partition of the workload, for any shard count and any pump
+//!    interleaving (chunked per-arrival pumping vs submit-all-then-drain) —
+//!    in a static world AND under explicit edge churn.
+//! 2. **Shard-count transparency** — sessions pinned to one hash class
+//!    produce bit-identical traces at 1/2/4 shards (power-of-two nesting).
+//! 3. **Least-loaded routing** — never places a session on a
+//!    crashed-and-unrecovering shard while a healthy one exists, and spreads
+//!    an unpumped burst via the in-flight tiebreak under memoized backlog.
+//! 4. **Cross-shard memo-cache accounting** — one shard's generations serve
+//!    another's as `cross_hits` (distinct owner ids over one shared cache).
+//! 5. **Serving invariants under churn** — through `PiceService::over_fleet`
+//!    every submission still reaches exactly one terminal event, with the
+//!    merged event stream monotone in sim time.
+//! 6. **Partial-result salvage** — an edge crash mid-expansion keeps the
+//!    sentence slots whose estimated completion had passed, counts them in
+//!    `RequestTrace::salvaged_slots`, and re-queues only the unfinished rest.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use pice::baselines;
+use pice::cluster::DeviceSpec;
+use pice::coordinator::backend::{MemoBackend, SurrogateBackend};
+use pice::coordinator::{Engine, EngineCfg};
+use pice::corpus::synth::{synth_corpus, synth_tokenizer};
+use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use pice::corpus::Corpus;
+use pice::dynamics::{DynamicsSpec, EdgeEvent, EdgeFault, FaultSpec};
+use pice::fleet::{session_shard, shard_cfg, Fleet, Placement};
+use pice::metrics::{aggregate, RequestTrace};
+use pice::models::Registry;
+use pice::serve::{PiceService, ServeCfg};
+use pice::sweep::cache::SharedMemoCache;
+use pice::tokenizer::Tokenizer;
+
+const MODEL: &str = "llama70b-sim";
+
+fn setup() -> (Arc<Corpus>, Tokenizer, Registry) {
+    let tok = synth_tokenizer();
+    let corpus = Arc::new(synth_corpus(&tok, 20, 42));
+    (corpus, tok, Registry::builtin())
+}
+
+fn paper_rpm(reg: &Registry) -> f64 {
+    let info = reg.get(MODEL).expect("model");
+    let cloud = DeviceSpec::a100_cloud("c");
+    1.5 * cloud.max_batch(info, 1000) as f64
+}
+
+fn workload(corpus: &Arc<Corpus>, rpm: f64, n: usize, arrival: Arrival, seed: u64) -> Workload {
+    Workload::generate(
+        corpus,
+        WorkloadSpec { rpm, n_requests: n, arrival, categories: vec![], seed },
+    )
+}
+
+/// (question_id, arrival, session_key) triples — the fleet submission list.
+fn subs_of(wl: &Workload, key_of: impl Fn(usize) -> u64) -> Vec<(usize, f64, u64)> {
+    wl.requests.iter().map(|r| (r.question_id, r.arrival_s, key_of(r.rid))).collect()
+}
+
+fn build_fleet<'a>(
+    base_cfg: &EngineCfg,
+    n: usize,
+    placement: Placement,
+    corpus: &Arc<Corpus>,
+    tok: &'a Tokenizer,
+    reg: &'a Registry,
+    backend: &SurrogateBackend,
+) -> Fleet<'a> {
+    let shards = (0..n)
+        .map(|i| {
+            Engine::new_owned(
+                shard_cfg(base_cfg, i),
+                corpus.clone(),
+                tok,
+                reg,
+                Box::new(backend.clone()),
+            )
+            .expect("shard engine")
+        })
+        .collect();
+    Fleet::new(shards, placement)
+}
+
+/// Open-loop chunked driver: pump every shard to each arrival, then submit.
+fn drive_chunked(fleet: &mut Fleet<'_>, subs: &[(usize, f64, u64)]) -> Vec<RequestTrace> {
+    for &(qid, at, key) in subs {
+        fleet.pump_until(at).expect("pump");
+        fleet.submit(qid, at, key).expect("submit");
+    }
+    fleet.pump_all().expect("pump_all");
+    fleet.take_traces()
+}
+
+/// Closed-loop-style driver: schedule every arrival up-front, drain once.
+fn drive_upfront(fleet: &mut Fleet<'_>, subs: &[(usize, f64, u64)]) -> Vec<RequestTrace> {
+    for &(qid, at, key) in subs {
+        fleet.submit(qid, at, key).expect("submit");
+    }
+    fleet.pump_all().expect("pump_all");
+    fleet.take_traces()
+}
+
+/// Every field via the Debug form, rids included.
+fn assert_identical(label: &str, a: &[RequestTrace], b: &[RequestTrace]) {
+    assert_eq!(a.len(), b.len(), "{label}: trace count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(format!("{x:?}"), format!("{y:?}"), "{label}: trace rid={}", x.rid);
+    }
+}
+
+/// Field equality modulo the request id (global fleet id vs shard-local id).
+fn assert_same_modulo_rid(label: &str, a: &RequestTrace, b: &RequestTrace) {
+    let mut x = a.clone();
+    let mut y = b.clone();
+    x.rid = 0;
+    y.rid = 0;
+    assert_eq!(format!("{x:?}"), format!("{y:?}"), "{label}");
+}
+
+/// Staggered explicit churn over 4 edges: down 2 s, up 14 s, covering the
+/// first ~120 s of sim time.
+fn churn() -> DynamicsSpec {
+    let mut events = Vec::new();
+    for k in 0..30usize {
+        let t = 1.0 + 4.0 * k as f64;
+        events.push(EdgeEvent { t, eid: k % 4, fault: EdgeFault::Crash });
+        events.push(EdgeEvent { t: t + 2.0, eid: k % 4, fault: EdgeFault::Recover });
+    }
+    DynamicsSpec {
+        faults: FaultSpec { events, ..Default::default() },
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn hash_fleet_equals_independent_shard_partition_at_any_pump_interleaving() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    for (world, dynamics) in [("static", DynamicsSpec::default()), ("churn", churn())] {
+        let cfg = baselines::pice(MODEL).with_dynamics(dynamics);
+        let wl = workload(&corpus, paper_rpm(&reg), 18, Arrival::Poisson, 13);
+        let subs = subs_of(&wl, |rid| rid as u64);
+        for n in [1usize, 2, 4] {
+            let label = format!("{world}/{n} shards");
+            let mut f1 = build_fleet(&cfg, n, Placement::Hash, &corpus, &tok, &reg, &base);
+            let chunked = drive_chunked(&mut f1, &subs);
+            let mut f2 = build_fleet(&cfg, n, Placement::Hash, &corpus, &tok, &reg, &base);
+            let upfront = drive_upfront(&mut f2, &subs);
+            // pump-order independence: global ids and every field agree
+            assert_identical(&format!("{label}: chunked vs upfront"), &chunked, &upfront);
+            assert_eq!(chunked.len(), subs.len(), "{label}: requests lost");
+
+            // shard isolation: reference = independent single-engine runs
+            // over the hash partition, with the same per-shard cfg
+            let mut counts = vec![0usize; n];
+            let route: Vec<(usize, usize)> = subs
+                .iter()
+                .map(|&(_, _, key)| {
+                    let s = session_shard(key, n);
+                    counts[s] += 1;
+                    (s, counts[s] - 1)
+                })
+                .collect();
+            let refs: Vec<Vec<RequestTrace>> = (0..n)
+                .map(|s| {
+                    let mut backend = base.clone();
+                    let mut eng = Engine::new(
+                        shard_cfg(&cfg, s),
+                        corpus.clone(),
+                        &tok,
+                        &reg,
+                        &mut backend,
+                    )
+                    .expect("ref engine");
+                    for &(qid, at, key) in &subs {
+                        if session_shard(key, n) == s {
+                            eng.submit(qid, at).expect("submit");
+                        }
+                    }
+                    eng.pump_all().expect("pump_all");
+                    eng.take_traces()
+                })
+                .collect();
+            for (g, t) in chunked.iter().enumerate() {
+                assert_eq!(t.rid, g, "{label}: global ids are submission order");
+                let (s, local) = route[g];
+                assert_eq!(f1.route_of(g), s, "{label}: routed shard");
+                assert_same_modulo_rid(
+                    &format!("{label}: global {g} vs shard {s} local {local}"),
+                    t,
+                    &refs[s][local],
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pinned_sessions_bit_identical_across_shard_counts() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let cfg = baselines::pice(MODEL);
+    let wl = workload(&corpus, paper_rpm(&reg), 16, Arrival::Poisson, 5);
+    // keys all in hash class 3 (mod 4): power-of-two nesting pins the whole
+    // cohort to shard 3 % n for every fleet width n in {1, 2, 4}
+    let pinned: Vec<u64> = (0u64..).filter(|&k| session_shard(k, 4) == 3).take(16).collect();
+    let subs = subs_of(&wl, |rid| pinned[rid]);
+    let mut reference: Option<Vec<RequestTrace>> = None;
+    for n in [1usize, 2, 4] {
+        let mut fleet = build_fleet(&cfg, n, Placement::Hash, &corpus, &tok, &reg, &base);
+        let traces = drive_upfront(&mut fleet, &subs);
+        for g in 0..subs.len() {
+            assert_eq!(fleet.route_of(g), 3 % n, "{n} shards: pinned cohort moved");
+        }
+        match &reference {
+            None => reference = Some(traces),
+            Some(r) => assert_identical(&format!("{n} shards vs 1 shard"), r, &traces),
+        }
+    }
+}
+
+#[test]
+fn least_loaded_avoids_crashed_and_unrecovering_shard() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let healthy_cfg = baselines::pice(MODEL);
+    // shard 1: every edge crashes just after t=0.5 and none ever recovers
+    let events: Vec<EdgeEvent> = (0..healthy_cfg.n_edges)
+        .map(|eid| EdgeEvent { t: 0.5 + 0.01 * eid as f64, eid, fault: EdgeFault::Crash })
+        .collect();
+    let dead_cfg = healthy_cfg.clone().with_dynamics(DynamicsSpec {
+        faults: FaultSpec { events, ..Default::default() },
+        ..Default::default()
+    });
+    let e0 = Engine::new_owned(healthy_cfg, corpus.clone(), &tok, &reg, Box::new(base.clone()))
+        .expect("healthy shard");
+    let e1 = Engine::new_owned(dead_cfg, corpus.clone(), &tok, &reg, Box::new(base.clone()))
+        .expect("dead shard");
+    let mut fleet = Fleet::new(vec![e0, e1], Placement::LeastLoaded);
+    fleet.pump_until(2.0).expect("process the crash timeline");
+    let qid = corpus.eval_questions()[0].id;
+    for i in 0..6u64 {
+        let rid = fleet.submit(qid, 2.0, i).expect("submit");
+        assert_eq!(fleet.route_of(rid), 0, "request {rid} routed to the dead shard");
+    }
+    fleet.pump_all().expect("drain");
+    assert_eq!(fleet.take_traces().len(), 6, "requests lost");
+}
+
+#[test]
+fn least_loaded_burst_spreads_by_inflight_tiebreak() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let cfg = baselines::pice(MODEL);
+    let mut fleet = build_fleet(&cfg, 2, Placement::LeastLoaded, &corpus, &tok, &reg, &base);
+    let qid = corpus.eval_questions()[0].id;
+    // a burst with no pumping in between: backlog estimates are memoized
+    // (the event loops never move), so the in-flight tiebreak alone must
+    // keep the placement from collapsing onto shard 0
+    let mut per_shard = [0usize; 2];
+    for i in 0..8u64 {
+        let rid = fleet.submit(qid, 0.0, i).expect("submit");
+        per_shard[fleet.route_of(rid)] += 1;
+    }
+    assert!(
+        per_shard.iter().all(|&c| c >= 3),
+        "burst collapsed onto one shard: {per_shard:?}"
+    );
+    fleet.pump_all().expect("drain");
+    assert_eq!(fleet.take_traces().len(), 8);
+}
+
+#[test]
+fn cross_shard_cache_hits_are_counted_and_transparent() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let cfg = baselines::pice(MODEL);
+    let cache = Arc::new(SharedMemoCache::new(4096));
+    let shards = (0..2usize)
+        .map(|i| {
+            // distinct owner ids over ONE shared store — the cross-shard
+            // attribution the fleet's Env wiring uses
+            let memo = MemoBackend::shared(base.clone(), cache.clone(), i as u32 + 1);
+            Engine::new_owned(shard_cfg(&cfg, i), corpus.clone(), &tok, &reg, Box::new(memo))
+                .expect("shard engine")
+        })
+        .collect();
+    let mut fleet = Fleet::new(shards, Placement::Hash);
+    let qid = corpus.eval_questions()[0].id;
+    let key_on = |shard: usize| (0u64..).find(|&k| session_shard(k, 2) == shard).unwrap();
+    // the same question lands on BOTH shards as each shard's local rid 0:
+    // identical derived sampling seeds, identical memo keys
+    let r0 = fleet.submit(qid, 0.0, key_on(0)).expect("submit");
+    let r1 = fleet.submit(qid, 0.0, key_on(1)).expect("submit");
+    assert_ne!(fleet.route_of(r0), fleet.route_of(r1));
+    fleet.pump_all().expect("drain");
+    let stats = cache.stats();
+    assert!(
+        stats.cross_hits > 0,
+        "second shard must replay the first shard's generations: {stats:?}"
+    );
+    // the shared cache is semantically transparent: both shards produce the
+    // same answer for the same question in the same (static) world
+    let traces = fleet.take_traces();
+    assert_eq!(traces.len(), 2);
+    assert_same_modulo_rid("cache transparency", &traces[0], &traces[1]);
+}
+
+#[test]
+fn fleet_service_one_terminal_per_request_under_churn() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let cfg = baselines::pice(MODEL).with_dynamics(churn());
+    let fleet = build_fleet(&cfg, 2, Placement::Hash, &corpus, &tok, &reg, &base);
+    let mut svc =
+        PiceService::over_fleet(fleet, ServeCfg { max_inflight: usize::MAX, deadline_s: None });
+    // saturating burst: expansions are in flight on both shards while the
+    // churn schedule kills edges over and over
+    let wl = workload(&corpus, 40.0, 20, Arrival::Burst, 3);
+    for r in &wl.requests {
+        svc.pump_until(r.arrival_s).expect("pump");
+        svc.submit(r.question_id, r.arrival_s).expect("submit");
+    }
+    svc.pump_all().expect("pump_all");
+    let mut events = Vec::new();
+    while let Some(ev) = svc.poll_any() {
+        events.push(ev);
+    }
+    // the k-way merged stream is globally time-ordered
+    for w in events.windows(2) {
+        assert!(w[0].t <= w[1].t, "merged stream rewound: {} > {}", w[0].t, w[1].t);
+    }
+    let terminals = events.iter().filter(|e| e.kind.is_terminal()).count();
+    assert_eq!(terminals, 20, "exactly one terminal event per submission");
+    let traces = svc.finish().expect("finish");
+    assert_eq!(traces.len(), 20);
+    let rids: HashSet<usize> = traces.iter().map(|t| t.rid).collect();
+    assert_eq!(rids.len(), 20, "duplicate terminal traces");
+    assert!(traces.iter().all(|t| !t.answer.is_empty()), "empty answer under churn");
+}
+
+#[test]
+fn edge_crash_salvages_completed_expansion_slots() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let cfg = baselines::pice(MODEL);
+    let wl = workload(&corpus, 40.0, 10, Arrival::Burst, 3);
+    // clean run: find the window where edge expansions are actually in
+    // flight, so the crash grid below lands inside real work
+    let clean = {
+        let mut backend = base.clone();
+        let mut eng = Engine::new(cfg.clone(), corpus.clone(), &tok, &reg, &mut backend)
+            .expect("engine");
+        eng.run(&wl).expect("run")
+    };
+    // edge_start == 0.0 marks requests that never reached an edge
+    let starts: Vec<f64> = clean.iter().map(|t| t.edge_start).filter(|&s| s > 0.0).collect();
+    assert!(!starts.is_empty(), "burst must reach the edges");
+    let t0 = starts.iter().fold(f64::INFINITY, |a, &b| a.min(b)) + 0.25;
+    let t1 = clean.iter().map(|t| t.done).fold(0.0f64, f64::max);
+    assert!(t1 > t0, "degenerate work window");
+
+    // deterministic grid scan: crash edge 0 at each instant (with a later
+    // recover), keep the other edges alive so re-dispatch salvage actually
+    // rides along into a fresh pull
+    let steps = 24;
+    let mut total_salvaged = 0usize;
+    for k in 0..steps {
+        let t = t0 + (t1 - t0) * k as f64 / steps as f64;
+        let dynamics = DynamicsSpec {
+            faults: FaultSpec {
+                events: vec![
+                    EdgeEvent { t, eid: 0, fault: EdgeFault::Crash },
+                    EdgeEvent { t: t + 5.0, eid: 0, fault: EdgeFault::Recover },
+                ],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut backend = base.clone();
+        let mut eng = Engine::new(
+            cfg.clone().with_dynamics(dynamics),
+            corpus.clone(),
+            &tok,
+            &reg,
+            &mut backend,
+        )
+        .expect("engine");
+        let traces = eng.run(&wl).expect("run");
+        // salvage never loses a request, whenever the crash lands
+        assert_eq!(traces.len(), 10, "crash at t={t:.2}: requests lost");
+        assert!(
+            traces.iter().all(|t| !t.answer.is_empty()),
+            "crash at t={t:.2}: empty answer"
+        );
+        let m = aggregate(&traces);
+        total_salvaged += m.salvaged_slots;
+        // a salvaged slot is one that does NOT get re-queued: the two
+        // tallies partition a killed job's sentences
+        for tr in &traces {
+            assert!(
+                tr.salvaged_slots == 0 || tr.failovers > 0,
+                "crash at t={t:.2}: salvage without a failover (rid {})",
+                tr.rid
+            );
+        }
+    }
+    assert!(
+        total_salvaged > 0,
+        "a 24-point crash grid across the active edge window must salvage \
+         at least one completed expansion slot"
+    );
+}

@@ -20,6 +20,7 @@ fn job(rid: usize, len: usize) -> Job {
         rid,
         expected_len: len,
         sentences: vec![],
+        salvaged: vec![],
         full_sketch: Vec::new().into(),
         question: Vec::new().into(),
         enqueued_at: 0.0,
