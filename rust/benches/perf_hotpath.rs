@@ -19,6 +19,7 @@ use pice::coordinator::backend::{
 use pice::coordinator::dispatch::{Job, MultiListQueue};
 use pice::coordinator::scheduler::{CloudScheduler, SchedInput};
 use pice::coordinator::Engine;
+use pice::costmodel::Estimates;
 use pice::corpus::synth::{synth_corpus, synth_tokenizer};
 use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
 use pice::models::Registry;
@@ -81,18 +82,16 @@ fn main() -> Result<(), String> {
     // --- L3 primitives -----------------------------------------------------
     let mut rng = Rng::new(1);
     let sched = CloudScheduler::default();
-    let inp = SchedInput {
-        predicted_len: 480,
+    let inp = SchedInput { predicted_len: 480, n_edges: 4, best_slm_capability: 74.0 };
+    let est = Estimates {
         f_cloud: LatencyFit { a: 0.4, b: 0.1 },
         cost_coeff: 0.6,
         transfer: TransferModel { base_s: 0.02, per_token_s: 5e-7 },
         backlog_s: 12.0,
-        n_edges: 4,
-        best_slm_capability: 74.0,
         parallel_hint: 4.0,
     };
     report(&mut rows, "scheduler.decide (Eq. 2 over 4 levels)", time_it(20_000, || {
-        std::hint::black_box(sched.decide(&inp));
+        std::hint::black_box(sched.decide(&inp, &est));
     }), "per request");
 
     let mk_job = |rid: usize, len: usize| Job {

@@ -40,6 +40,19 @@
 //! ends in exactly one terminal serve event. The static default schedules
 //! no fault events, tracks no in-flight state and pins the legacy transfer
 //! constants, so it stays bit-identical to the pre-dynamics engine.
+//!
+//! ## Cost model
+//!
+//! Every Eq. 2 quantity the engine consumes — cloud latency line, cost
+//! coefficient, transfer correction, backlog, achieved parallelism — comes
+//! from ONE [`crate::costmodel::CostModel`] instance owned by the core
+//! (`cfg.calib` picks static vs calibrated). The engine feeds it
+//! observations from its own event stream: cloud service times at
+//! admission, edge pull walls, sketch transfer times. Because the instance
+//! is per-engine and fed only from that engine's deterministic events,
+//! calibrated traces stay bit-identical across sweep thread counts,
+//! open/closed-loop driving, and fleet shard layouts — and the static
+//! default reproduces the pre-costmodel arithmetic bit for bit.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -51,13 +64,14 @@ use super::selection::select_model;
 use crate::cluster::Cluster;
 use crate::corpus::workload::Workload;
 use crate::corpus::Corpus;
+use crate::costmodel::{self, CalibCfg, CalibState, CalibSummary, CostModel};
 use crate::dynamics::{DynamicsSpec, EdgeFault};
 use crate::ensemble::{select as ensemble_select, Candidate, ConfidenceWeights};
 use crate::metrics::{Mode, RequestTrace};
 use crate::models::{ModelInfo, Registry};
 use crate::network::{Link, TransferModel};
 use crate::parallel::{batch_wall, plan_batch, EdgeCostModel};
-use crate::profiler::{LatencyFit, OfflineProfile};
+use crate::profiler::OfflineProfile;
 use crate::runtime::SamplingParams;
 use crate::serve::{ResponseEvent, ResponseEventKind};
 use crate::simclock::{EventQueue, FIRST_CLASS, SimTime};
@@ -102,6 +116,10 @@ pub struct EngineCfg {
     /// environment dynamics: time-varying link + edge churn/failure
     /// injection. Default = static world, zero-cost when off.
     pub dynamics: DynamicsSpec,
+    /// cost-model calibration: off (the static offline fit — bit-identical
+    /// default), on (online re-fit from this run's event stream), or warm
+    /// (on + seeded from persisted state). See [`crate::costmodel`].
+    pub calib: CalibCfg,
 }
 
 impl EngineCfg {
@@ -122,12 +140,26 @@ impl EngineCfg {
             confidence: ConfidenceWeights::default(),
             sketch_keep_frac_override: None,
             dynamics: DynamicsSpec::default(),
+            calib: CalibCfg::default(),
         }
     }
 
     pub fn with_policy(mut self, p: Policy) -> Self {
         self.policy = p;
         self
+    }
+
+    /// The persistence key this config's calibration is stored under (see
+    /// [`crate::costmodel::calib_key`]): cloud model + edge count + policy
+    /// shape, so persisted state never warms a differently-shaped engine.
+    pub fn calib_key(&self) -> String {
+        let policy = match self.policy {
+            Policy::Pice => "pice",
+            Policy::CloudOnly => "cloud-only",
+            Policy::EdgeOnly => "edge-only",
+            Policy::Routing { .. } => "routing",
+        };
+        costmodel::calib_key(&self.cloud_model, self.n_edges, policy, self.scheduler.static_mode)
     }
 
     pub fn with_dynamics(mut self, d: DynamicsSpec) -> Self {
@@ -247,6 +279,9 @@ struct Pending {
     sketch: Arc<[u32]>,
     expected_sketch_len: usize,
     candidates: Vec<Candidate>,
+    /// decision-time transfer model (calibrating models only — compared
+    /// against the observed sketch transfer to learn WAN drift)
+    transfer_pred: Option<TransferModel>,
     replicas_out: usize,
     parallelism: usize,
     /// failure-triggered re-dispatches (dynamics failover counter)
@@ -281,12 +316,19 @@ struct Core {
     cloud_pending: VecDeque<(usize, CloudJobKind)>,
     cloud_inflight: usize,
     cloud_slots: usize,
-    f_cloud: LatencyFit,
+    /// THE world model: every Eq. 2 quantity (cloud latency line, cost
+    /// coefficient, transfer, backlog, achieved parallelism) comes from
+    /// here — [`crate::costmodel::StaticFit`] by default (bit-identical to
+    /// the pre-costmodel inline arithmetic), or the online-calibrated model
+    /// when `cfg.calib.mode` asks for it. Observations are fed only from
+    /// this core's own event handlers, keeping traces deterministic.
+    cost_model: Box<dyn CostModel>,
+    /// `backlog_estimate_s` memo keyed on `events_processed`: the admission
+    /// estimate is pure between events, so router polls and repeated
+    /// deadline checks re-run Eq. 2 only when the loop actually moved
+    backlog_memo: Option<(u64, SimTime)>,
     jobq: MultiListQueue,
     enqueue_attempts: HashMap<usize, usize>,
-    /// runtime monitor: EWMA of achieved edge expansion parallelism,
-    /// fed back into the dynamic scheduler's Eq. 2 estimate
-    ewma_parallelism: f64,
     /// edge-only feasibility verdict, precomputed (the paper places the
     /// *cloud* model on edges); Some(msg) = every submit/run fails with OOM
     edge_oom: Option<String>,
@@ -339,6 +381,7 @@ fn make_core(
     registry: &Registry,
     cluster: &Cluster,
     profile: &OfflineProfile,
+    cost_coeff: f64,
 ) -> Core {
     // Interned model names, hoisted out of the event loop: per-arrival and
     // per-sentence GenRequest/Candidate construction clones an Arc<str>
@@ -409,10 +452,10 @@ fn make_core(
         cloud_pending: VecDeque::new(),
         cloud_inflight: 0,
         cloud_slots,
-        f_cloud,
+        cost_model: costmodel::build(&cfg.calib, f_cloud, cost_coeff),
+        backlog_memo: None,
         jobq: MultiListQueue::new(bounds, cfg.queue_cap),
         enqueue_attempts: HashMap::new(),
-        ewma_parallelism: 1.0,
         edge_oom,
         events: None,
         faults_on: cfg.dynamics.faults.any(),
@@ -453,6 +496,9 @@ pub struct Engine<'a> {
     backend: BackendSlot<'a>,
     cluster: Cluster,
     profile: OfflineProfile,
+    /// offline cost coefficient (the profile's output) — the base value the
+    /// core's cost model is (re)built from; the *live* coefficient lives on
+    /// the model, which may correct it online
     cost_coeff: f64,
     core: Core,
 }
@@ -488,6 +534,7 @@ impl<'a> Engine<'a> {
         registry: &'a Registry,
         backend: BackendSlot<'a>,
     ) -> Result<Self, RunError> {
+        cfg.calib.validate().map_err(RunError::Backend)?;
         let cluster = Cluster::testbed(cfg.n_edges);
         let cloud_info = registry
             .get(&cfg.cloud_model)
@@ -515,7 +562,7 @@ impl<'a> Engine<'a> {
             })
             .fold(f64::INFINITY, f64::min)
             .min(10.0);
-        let core = make_core(&cfg, registry, &cluster, &profile);
+        let core = make_core(&cfg, registry, &cluster, &profile, cost_coeff);
         Ok(Engine { cfg, corpus, tok, registry, backend, cluster, profile, cost_coeff, core })
     }
 
@@ -647,6 +694,7 @@ impl<'a> Engine<'a> {
             sketch: Vec::new().into(),
             expected_sketch_len: 0,
             candidates: Vec::new(),
+            transfer_pred: None,
             replicas_out: 0,
             parallelism: 0,
             failovers: 0,
@@ -711,7 +759,8 @@ impl<'a> Engine<'a> {
     /// independent, exactly like the pre-refactor per-run locals.
     pub fn reset(&mut self) {
         let events_on = self.core.events.is_some();
-        self.core = make_core(&self.cfg, self.registry, &self.cluster, &self.profile);
+        self.core =
+            make_core(&self.cfg, self.registry, &self.cluster, &self.profile, self.cost_coeff);
         if events_on {
             self.core.events = Some(Vec::new());
         }
@@ -779,43 +828,43 @@ impl<'a> Engine<'a> {
             Policy::Pice => {
                 let slms = self.slms();
                 let best_cap = slms.iter().map(|m| m.mmlu).fold(0.0, f64::max);
-                let f_cloud = self.core.f_cloud;
-                // Eq. 2 backlog: Σ_j c·f(l_j) over queued jobs — the affine
-                // fit is summed per job, so each queued job carries its own
-                // intercept
-                let backlog_s = self.cost_coeff * self.core.jobq.backlog_cost(&f_cloud);
                 // Δ(r): the static world pins the legacy calibrated
-                // constants bit-for-bit; with dynamics on, the profiler's
-                // view is the CURRENT link, so routing adapts mid-run
-                let transfer = if self.cfg.dynamics.link.is_static() {
+                // constants bit-for-bit; with dynamics on, the cost model
+                // sees the CURRENT link, so routing adapts mid-run
+                let live = if self.cfg.dynamics.link.is_static() {
                     TransferModel { base_s: 0.02, per_token_s: 5e-7 }
                 } else {
                     self.link_now_mut(now).transfer_model()
                 };
+                // every Eq. 2 world quantity — f(l), c, Δ correction,
+                // backlog Σ_j c·f(l_j), achieved parallelism — in one
+                // snapshot from THE model instance
+                let est = self.core.cost_model.estimates(live, &self.core.jobq);
                 let inp = SchedInput {
                     predicted_len: predicted,
-                    f_cloud,
-                    cost_coeff: self.cost_coeff,
-                    transfer,
-                    backlog_s,
                     n_edges: self.core.edges.len(),
                     best_slm_capability: best_cap,
-                    parallel_hint: self.core.ewma_parallelism,
                 };
-                let d = self.cfg.scheduler.decide(&inp);
+                let d = self.cfg.scheduler.decide(&inp, &est);
                 if d.mode == SchedMode::Full && predicted >= self.cfg.scheduler.min_progressive_len
                 {
                     crate::debug!(
-                        "rid={rid} FULL pred={predicted} backlog={backlog_s:.1} hint={:.1} e2e_l3={:.1} budget={:.1}",
-                        self.core.ewma_parallelism,
-                        self.cfg.scheduler.e2e_estimate(&inp, self.cfg.scheduler.levels[3]),
-                        f_cloud.eval(predicted)
+                        "rid={rid} FULL pred={predicted} backlog={:.1} hint={:.1} e2e_l3={:.1} budget={:.1}",
+                        est.backlog_s,
+                        est.parallel_hint,
+                        self.cfg.scheduler.e2e_estimate(&inp, &est, self.cfg.scheduler.levels[3]),
+                        est.f_cloud.eval(predicted)
                     );
                 }
                 if d.mode == SchedMode::Progressive && !slms.is_empty() {
                     self.core.pend[rid].mode = Mode::Progressive;
                     self.core.pend[rid].sketch_level = d.level.level;
                     self.core.pend[rid].expected_sketch_len = d.expected_sketch_len;
+                    if self.core.cost_model.learning() {
+                        // remember what the model *promised* for the sketch
+                        // transfer; the observed transfer grades it later
+                        self.core.pend[rid].transfer_pred = Some(est.transfer);
+                    }
                     self.core
                         .cloud_pending
                         .push_back((rid, CloudJobKind::Sketch { level: d.level.level }));
@@ -939,6 +988,13 @@ impl<'a> Engine<'a> {
                         + self.cluster.cloud.gen_time_s(cloud_info, n_sim, b)
                 }
             };
+            if self.core.cost_model.learning() {
+                // both kinds are (response sim-length, service time) points
+                // on the same cloud line at the live batch size — sketches
+                // anchor the short end, full answers the long end
+                let n_sim = self.core.pend[rid].cloud_tokens;
+                self.core.cost_model.observe_cloud(n_sim, dur);
+            }
             self.core.cloud_inflight += 1;
             self.core.q.schedule(now + dur, Ev::CloudDone { rid, kind });
         }
@@ -962,9 +1018,14 @@ impl<'a> Engine<'a> {
                 }
                 // the sketch pays the CURRENT link (dynamics may have
                 // retimed it); static worlds see cfg.link untouched
-                let delta = self.link_now_mut(now).transfer_tokens_s(
-                    (self.core.pend[rid].sketch.len() as f64 * self.cfg.sim_token_scale) as usize,
-                );
+                let sim_len =
+                    (self.core.pend[rid].sketch.len() as f64 * self.cfg.sim_token_scale) as usize;
+                let delta = self.link_now_mut(now).transfer_tokens_s(sim_len);
+                if let Some(tm) = self.core.pend[rid].transfer_pred.take() {
+                    // decision-time promise vs observed transfer: the gap is
+                    // WAN drift between scheduling and the sketch landing
+                    self.core.cost_model.observe_transfer(tm.eval(sim_len), delta);
+                }
                 self.core.q.schedule(now + delta, Ev::JobArriveAtQueue { rid });
             }
         }
@@ -1123,9 +1184,10 @@ impl<'a> Engine<'a> {
             p.edge_start.get_or_insert(now);
         }
 
-        // Algorithm 2 on the first job's budget (batch-shared model)
+        // Algorithm 2 on the first job's budget (batch-shared model) — the
+        // cost model's current cloud line (offline, or the online re-fit)
         let slm_refs = self.slms();
-        let f_cloud = self.core.f_cloud;
+        let f_cloud = self.core.cost_model.f_cloud();
         let j0 = &batch[0];
         let budget = (f_cloud.eval(j0.expected_len)
             - f_cloud.eval((j0.full_sketch.len() as f64 * scale) as usize))
@@ -1276,7 +1338,7 @@ impl<'a> Engine<'a> {
         }
         let mean_lanes =
             plans.iter().map(Vec::len).sum::<usize>() as f64 / plans.len().max(1) as f64;
-        self.core.ewma_parallelism = 0.8 * self.core.ewma_parallelism + 0.2 * mean_lanes;
+        self.core.cost_model.observe_parallelism(mean_lanes);
         for (job, plan) in batch.iter().zip(&plans) {
             let p = &mut self.core.pend[job.rid];
             p.parallelism = p.parallelism.max(plan.len());
@@ -1285,6 +1347,15 @@ impl<'a> Engine<'a> {
         let wall = batch_wall(&plans, &real_refs, &info_cost);
         // straggler multiplier is exactly 1.0 in the static world
         let total_dur = (sel.switch_cost_s + wall) * self.core.edges[eid].speed_mult;
+        if self.core.cost_model.learning() {
+            // grade Eq. 2's edge term in its decision shape — c·f(l)/p for
+            // the batch's lead job at the achieved lane count — against the
+            // wall this pull actually took
+            let pred = self.core.cost_model.cost_coeff()
+                * self.core.cost_model.f_cloud().eval(batch[0].expected_len)
+                / mean_lanes.max(1.0);
+            self.core.cost_model.observe_edge(pred, total_dur);
+        }
         crate::debug!(
             "edge{eid} t={now:.1} batch={} model={} lanes={:?} switch={:.1} wall={wall:.1}",
             batch.len(),
@@ -1374,16 +1445,47 @@ impl<'a> Engine<'a> {
     }
 
     /// Conservative estimate of the latency a request admitted *now* would
-    /// inherit before its own work even starts: the Eq. 2 backlog cost of
-    /// every queued expansion job plus one sketch transfer on the current
-    /// link. The SLO-aware admission gate
-    /// ([`crate::serve::ServeCfg::deadline_s`]) tests deadlines against it.
+    /// inherit before its own work even starts: the cost model's Eq. 2
+    /// backlog over every queued expansion job plus one sketch transfer on
+    /// the current link. The SLO-aware admission gate
+    /// ([`crate::serve::ServeCfg::deadline_s`]) tests deadlines against it,
+    /// and fleet least-loaded placement polls it per shard.
+    ///
+    /// Memoized on [`Engine::events_processed`]: the estimate is a pure
+    /// function of state that only moves when the event loop does, so
+    /// repeated polls between events are a counter compare — and every
+    /// caller (router, admission, tests) reads the *same* value by
+    /// construction.
     pub fn backlog_estimate_s(&mut self) -> SimTime {
-        let backlog = self.cost_coeff * self.core.jobq.backlog_cost(&self.core.f_cloud);
-        let transfer = self
+        let stamp = self.core.events_processed;
+        if let Some((at, est)) = self.core.backlog_memo {
+            if at == stamp {
+                return est;
+            }
+        }
+        let raw = self
             .link_now_mut(self.now())
             .transfer_tokens_s(self.cfg.scheduler.min_progressive_len);
-        backlog + transfer
+        let est = self.core.cost_model.admission_backlog_s(&self.core.jobq, raw);
+        self.core.backlog_memo = Some((stamp, est));
+        est
+    }
+
+    /// Live calibration snapshot for metrics dumps (the static model
+    /// reports the offline fit with identity corrections).
+    pub fn calib_summary(&self) -> CalibSummary {
+        self.core.cost_model.summary()
+    }
+
+    /// Persistable calibration state — None when the model is static.
+    pub fn calib_state(&self) -> Option<CalibState> {
+        self.core.cost_model.state()
+    }
+
+    /// The persistence key this engine's calibration is stored under —
+    /// [`EngineCfg::calib_key`] of its config.
+    pub fn calib_key(&self) -> String {
+        self.cfg.calib_key()
     }
 
     /// Process one fault event from the dynamics timeline.

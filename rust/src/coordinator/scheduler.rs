@@ -5,15 +5,18 @@
 //!
 //!   f(|r_i|) + Δ(r_i) + c·f(l_i) + Σ_{r_j∈Q} c·f(l_j) / (p·N)  ≤  f(l_i)
 //!
-//! with f(.) the offline-profiled cloud latency line, c the cost
-//! coefficient, Δ the network transfer, and the sum the job-queue backlog.
-//! Edge latency is estimated conservatively with p = 1 (paper). Among
-//! feasible levels the lexicographic SLO policy picks the operating point;
-//! more capable SLMs admit shorter sketches.
+//! with f(.) the cloud latency line, c the cost coefficient, Δ the network
+//! transfer, and the sum the job-queue backlog. The scheduler itself is a
+//! pure decision rule: [`SchedInput`] describes the *query* (predicted
+//! length, edge count, SLM capability) and [`Estimates`] carries the
+//! *world model* — produced by the engine's [`crate::costmodel::CostModel`]
+//! instance, which is either the offline fit (f, c static, p = 1 until
+//! observed — the paper's conservative default) or the online-calibrated
+//! re-fit. Among feasible levels the lexicographic SLO policy picks the
+//! operating point; more capable SLMs admit shorter sketches.
 
 use super::slo::SloPolicy;
-use crate::network::TransferModel;
-use crate::profiler::LatencyFit;
+use crate::costmodel::Estimates;
 use crate::simclock::SimTime;
 use crate::sketch::{expected_sketch_len, SketchLevel};
 
@@ -30,30 +33,18 @@ pub struct Decision {
     pub expected_sketch_len: usize,
 }
 
-/// Runtime inputs to one scheduling decision.
-#[derive(Clone, Debug)]
+/// The query descriptor of one scheduling decision — what varies per
+/// request. Everything Eq. 2 knows about the *world* (latency fits, cost
+/// coefficient, transfer, backlog, parallelism) arrives separately as
+/// [`Estimates`] from the engine's cost model.
+#[derive(Clone, Copy, Debug)]
 pub struct SchedInput {
     /// predicted response length l_i (the LLM's length perception)
     pub predicted_len: usize,
-    /// offline fit of the cloud LLM latency f(l)
-    pub f_cloud: LatencyFit,
-    /// cost coefficient c for the *current* best SLM/edge pair
-    pub cost_coeff: f64,
-    /// network transfer model for a sketch of the candidate size — derived
-    /// from the *current* link state by the engine (the dynamics subsystem
-    /// retimes it mid-run), so Eq. 2 routing genuinely adapts to the WAN
-    pub transfer: TransferModel,
-    /// backlog: Σ c·f(l_j) over queued jobs
-    pub backlog_s: SimTime,
     /// number of edge devices N
     pub n_edges: usize,
     /// MMLU-like capability of the strongest available SLM (0-100)
     pub best_slm_capability: f64,
-    /// runtime-observed edge expansion parallelism (EWMA from the profiler's
-    /// monitor). 1.0 = the paper's conservative default; the *dynamic*
-    /// scheduler feeds the achieved degree back in (Fig. 6's gap over
-    /// static scheduling comes largely from this).
-    pub parallel_hint: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -81,19 +72,19 @@ impl Default for CloudScheduler {
 
 impl CloudScheduler {
     /// Eq. 2 left-hand side for a candidate level.
-    pub fn e2e_estimate(&self, inp: &SchedInput, level: SketchLevel) -> SimTime {
+    pub fn e2e_estimate(&self, inp: &SchedInput, est: &Estimates, level: SketchLevel) -> SimTime {
         let sk_len = expected_sketch_len(inp.predicted_len, level);
-        let f_sketch = inp.f_cloud.eval(sk_len);
-        let delta = inp.transfer.eval(sk_len);
-        let p = inp.parallel_hint.max(1.0);
+        let f_sketch = est.f_cloud.eval(sk_len);
+        let delta = est.transfer.eval(sk_len);
+        let p = est.parallel_hint.max(1.0);
         // edge pass at the observed parallelism (p = 1 when no data yet —
         // the paper's conservative default)
-        let edge = inp.cost_coeff * inp.f_cloud.eval(inp.predicted_len) / p;
-        let wait = inp.backlog_s / (p * inp.n_edges.max(1) as f64);
+        let edge = est.cost_coeff * est.f_cloud.eval(inp.predicted_len) / p;
+        let wait = est.backlog_s / (p * inp.n_edges.max(1) as f64);
         f_sketch + delta + edge + wait
     }
 
-    pub fn decide(&self, inp: &SchedInput) -> Decision {
+    pub fn decide(&self, inp: &SchedInput, est: &Estimates) -> Decision {
         let full = Decision {
             mode: Mode::Full,
             level: self.levels[0],
@@ -112,12 +103,12 @@ impl CloudScheduler {
             };
         }
 
-        let budget = inp.f_cloud.eval(inp.predicted_len) * self.policy.latency_slack;
+        let budget = est.f_cloud.eval(inp.predicted_len) * self.policy.latency_slack;
         let feasible: Vec<SketchLevel> = self
             .levels
             .iter()
             .copied()
-            .filter(|lv| lv.level > 0 && self.e2e_estimate(inp, *lv) <= budget)
+            .filter(|lv| lv.level > 0 && self.e2e_estimate(inp, est, *lv) <= budget)
             .collect();
         if feasible.is_empty() {
             // "If no level above 0 meets inequality (2), forgo progressive
@@ -137,7 +128,13 @@ impl CloudScheduler {
                 let sk = expected_sketch_len(inp.predicted_len, *lv) as f64;
                 let err = (1.0 - lv.keep_frac * 0.7) * (1.0 - 0.6 * cap);
                 let served_rate = 1.0 / sk.max(1.0); // queries/server-token
-                [err, -served_rate, self.e2e_estimate(inp, *lv), sk, inp.predicted_len as f64]
+                [
+                    err,
+                    -served_rate,
+                    self.e2e_estimate(inp, est, *lv),
+                    sk,
+                    inp.predicted_len as f64,
+                ]
             })
             .collect();
         let pick = self.policy.lex_select(&vecs).unwrap_or(0);
@@ -153,16 +150,19 @@ impl CloudScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::network::TransferModel;
+    use crate::profiler::LatencyFit;
 
     fn base_input() -> SchedInput {
-        SchedInput {
-            predicted_len: 100,
+        SchedInput { predicted_len: 100, n_edges: 4, best_slm_capability: 74.0 }
+    }
+
+    fn base_est() -> Estimates {
+        Estimates {
             f_cloud: LatencyFit { a: 0.2, b: 0.055 }, // ~18 tok/s cloud
             cost_coeff: 0.35,
             transfer: TransferModel { base_s: 0.02, per_token_s: 1e-5 },
             backlog_s: 0.0,
-            n_edges: 4,
-            best_slm_capability: 74.0,
             parallel_hint: 1.0,
         }
     }
@@ -170,7 +170,7 @@ mod tests {
     #[test]
     fn long_answers_go_progressive() {
         let s = CloudScheduler::default();
-        let d = s.decide(&base_input());
+        let d = s.decide(&base_input(), &base_est());
         assert_eq!(d.mode, Mode::Progressive);
         assert!(d.level.level >= 1);
         assert!(d.expected_sketch_len < 100);
@@ -179,7 +179,7 @@ mod tests {
     #[test]
     fn short_answers_stay_full() {
         let s = CloudScheduler::default();
-        let d = s.decide(&SchedInput { predicted_len: 10, ..base_input() });
+        let d = s.decide(&SchedInput { predicted_len: 10, ..base_input() }, &base_est());
         assert_eq!(d.mode, Mode::Full);
     }
 
@@ -187,14 +187,14 @@ mod tests {
     fn slow_edge_forgoes_progressive() {
         let s = CloudScheduler::default();
         // c = 3: edge pass alone is 3x the cloud budget
-        let d = s.decide(&SchedInput { cost_coeff: 3.0, ..base_input() });
+        let d = s.decide(&base_input(), &Estimates { cost_coeff: 3.0, ..base_est() });
         assert_eq!(d.mode, Mode::Full);
     }
 
     #[test]
     fn deep_backlog_forgoes_progressive() {
         let s = CloudScheduler::default();
-        let d = s.decide(&SchedInput { backlog_s: 500.0, ..base_input() });
+        let d = s.decide(&base_input(), &Estimates { backlog_s: 500.0, ..base_est() });
         assert_eq!(d.mode, Mode::Full);
     }
 
@@ -204,25 +204,25 @@ mod tests {
         // WAN bad enough that the sketch transfer alone blows the latency
         // budget must flip the decision to Full
         let s = CloudScheduler::default();
-        assert_eq!(s.decide(&base_input()).mode, Mode::Progressive);
-        let bad = SchedInput {
+        assert_eq!(s.decide(&base_input(), &base_est()).mode, Mode::Progressive);
+        let bad = Estimates {
             transfer: TransferModel { base_s: 20.0, per_token_s: 1e-2 },
-            ..base_input()
+            ..base_est()
         };
-        assert_eq!(s.decide(&bad).mode, Mode::Full);
+        assert_eq!(s.decide(&base_input(), &bad).mode, Mode::Full);
     }
 
     #[test]
     fn no_edges_full() {
         let s = CloudScheduler::default();
-        let d = s.decide(&SchedInput { n_edges: 0, ..base_input() });
+        let d = s.decide(&SchedInput { n_edges: 0, ..base_input() }, &base_est());
         assert_eq!(d.mode, Mode::Full);
     }
 
     #[test]
     fn static_mode_ignores_backlog() {
         let s = CloudScheduler { static_mode: true, ..Default::default() };
-        let d = s.decide(&SchedInput { backlog_s: 500.0, ..base_input() });
+        let d = s.decide(&base_input(), &Estimates { backlog_s: 500.0, ..base_est() });
         assert_eq!(d.mode, Mode::Progressive);
         assert_eq!(d.level.level, 1);
     }
@@ -235,28 +235,31 @@ mod tests {
             super::super::slo::Metric::ServerCost,
             super::super::slo::Metric::Error,
         ];
-        let weak = s.decide(&SchedInput { best_slm_capability: 40.0, ..base_input() });
-        let strong = s.decide(&SchedInput { best_slm_capability: 95.0, ..base_input() });
+        let weak =
+            s.decide(&SchedInput { best_slm_capability: 40.0, ..base_input() }, &base_est());
+        let strong =
+            s.decide(&SchedInput { best_slm_capability: 95.0, ..base_input() }, &base_est());
         assert!(strong.expected_sketch_len <= weak.expected_sketch_len);
     }
 
     #[test]
     fn parallel_hint_enables_progressive() {
         // a backlog that forgoes progressive at p=1 becomes feasible once
-        // the monitor reports real parallelism
+        // the cost model reports real achieved parallelism
         let s = CloudScheduler::default();
-        let slow = SchedInput { backlog_s: 40.0, cost_coeff: 0.9, ..base_input() };
-        assert_eq!(s.decide(&slow).mode, Mode::Full);
-        let fast = SchedInput { parallel_hint: 5.0, ..slow };
-        assert_eq!(s.decide(&fast).mode, Mode::Progressive);
+        let slow = Estimates { backlog_s: 40.0, cost_coeff: 0.9, ..base_est() };
+        assert_eq!(s.decide(&base_input(), &slow).mode, Mode::Full);
+        let fast = Estimates { parallel_hint: 5.0, ..slow };
+        assert_eq!(s.decide(&base_input(), &fast).mode, Mode::Progressive);
     }
 
     #[test]
     fn e2e_monotone_in_backlog() {
         let s = CloudScheduler::default();
         let lv = s.levels[1];
-        let a = s.e2e_estimate(&base_input(), lv);
-        let b = s.e2e_estimate(&SchedInput { backlog_s: 10.0, ..base_input() }, lv);
+        let a = s.e2e_estimate(&base_input(), &base_est(), lv);
+        let b =
+            s.e2e_estimate(&base_input(), &Estimates { backlog_s: 10.0, ..base_est() }, lv);
         assert!(b > a);
     }
 }

@@ -1,0 +1,791 @@
+//! The cost-model layer: every quantity Eq. 2 consumes, behind one trait.
+//!
+//! Before this layer, Eq. 2's inputs were scattered: static affine
+//! [`LatencyFit`]s in `profiler/`, an ad-hoc `ewma_parallelism` field in the
+//! engine core, a mostly-unwired `RuntimeMonitor`, and backlog estimation
+//! duplicated between `Engine::backlog_estimate_s` and the fleet router.
+//! [`CostModel`] owns all of it — cloud-latency, edge-rate, transfer and
+//! backlog estimation plus the achieved-parallelism hint — and the engine
+//! threads ONE instance through scheduling, admission, fleet placement and
+//! serve deadline checks.
+//!
+//! Two implementations:
+//!
+//! * [`StaticFit`] — the offline profile, verbatim. The default. Every
+//!   expression reproduces the pre-refactor inline arithmetic **bit for
+//!   bit**: corrections are the multiplicative identity (`x * 1.0 == x`
+//!   exactly in IEEE 754), the parallelism EWMA uses the same
+//!   `(1 - α)·p + α·lanes` update (α = 0.2 ⇒ `1.0 - 0.2 == 0.8` exactly),
+//!   and every observation hook is a no-op.
+//! * [`Calibrated`] — closes ROADMAP item 2's loop: a decayed online OLS
+//!   re-fit of the cloud latency line fed by observed cloud service times,
+//!   EWMA ratio corrections for edge service rate and WAN transfer drift,
+//!   and the same parallelism EWMA. All observations arrive from the
+//!   engine's *deterministic event stream* (cloud admissions, edge pulls,
+//!   sketch transfers), so calibrated traces stay bit-identical across
+//!   sweep thread counts and open- vs closed-loop driving.
+//!
+//! Calibration state round-trips through [`persist::CalibStore`]
+//! (`PICE_CALIB_PATH`, versioned JSON, same stamp/invalidation scheme as
+//! the memo snapshot) so later runs start warm — see `CalibMode::Warm`.
+
+pub mod persist;
+
+pub use persist::{calib_key, CalibStore, CALIB_VERSION};
+
+use crate::coordinator::dispatch::MultiListQueue;
+use crate::network::TransferModel;
+use crate::profiler::LatencyFit;
+use crate::simclock::SimTime;
+
+/// How the engine's cost model behaves over a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CalibMode {
+    /// offline fits only — the pre-refactor behavior, bit-identical
+    Off,
+    /// learn online from this run's own event stream, starting cold
+    On,
+    /// learn online, seeded from persisted state when available
+    Warm,
+}
+
+/// Calibration knobs (the former hardcoded EWMA constants, now validated
+/// configuration). `Default` reproduces the historical values exactly:
+/// parallelism EWMA `0.8/0.2`, rate EWMA α = 0.2 with ratio clamp
+/// `[0.25, 4.0]`.
+#[derive(Clone, Debug)]
+pub struct CalibCfg {
+    pub mode: CalibMode,
+    /// EWMA weight of a new achieved-parallelism sample (0 freezes the
+    /// hint at its conservative p = 1 initial value)
+    pub parallel_alpha: f64,
+    /// EWMA weight of a new observed/predicted rate ratio (edge + transfer
+    /// corrections; 0 freezes both corrections at 1.0)
+    pub rate_alpha: f64,
+    /// observed/predicted ratios are clamped to `[clamp_lo, clamp_hi]`
+    /// before entering the EWMA, and the re-fitted cloud slope is clamped
+    /// to `base.b * [clamp_lo, clamp_hi]` — one outlier can't capsize the
+    /// model
+    pub clamp_lo: f64,
+    pub clamp_hi: f64,
+    /// per-sample decay of the online-regression accumulators (1.0 = no
+    /// forgetting; lower tracks drift faster)
+    pub decay: f64,
+    /// cloud samples required before the online re-fit replaces the
+    /// offline line
+    pub min_samples: usize,
+    /// persisted state to seed from under `CalibMode::Warm` (ignored
+    /// otherwise)
+    pub warm: Option<CalibState>,
+}
+
+impl Default for CalibCfg {
+    fn default() -> Self {
+        CalibCfg {
+            mode: CalibMode::Off,
+            parallel_alpha: 0.2,
+            rate_alpha: 0.2,
+            clamp_lo: 0.25,
+            clamp_hi: 4.0,
+            decay: 0.995,
+            min_samples: 16,
+            warm: None,
+        }
+    }
+}
+
+impl CalibCfg {
+    /// Reject out-of-domain knobs with a message naming the offender (the
+    /// CLI surfaces this verbatim).
+    pub fn validate(&self) -> Result<(), String> {
+        let unit = |name: &str, v: f64| -> Result<(), String> {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("{name} must be in [0, 1], got {v}"));
+            }
+            Ok(())
+        };
+        unit("calib parallel_alpha", self.parallel_alpha)?;
+        unit("calib rate_alpha", self.rate_alpha)?;
+        if !(self.clamp_lo.is_finite() && self.clamp_hi.is_finite())
+            || self.clamp_lo <= 0.0
+            || self.clamp_lo > self.clamp_hi
+        {
+            return Err(format!(
+                "calib clamp must satisfy 0 < lo <= hi, got [{}, {}]",
+                self.clamp_lo, self.clamp_hi
+            ));
+        }
+        if !self.decay.is_finite() || self.decay <= 0.0 || self.decay > 1.0 {
+            return Err(format!("calib decay must be in (0, 1], got {}", self.decay));
+        }
+        if self.min_samples < 2 {
+            return Err(format!(
+                "calib min_samples must be >= 2 (a line needs two points), got {}",
+                self.min_samples
+            ));
+        }
+        Ok(())
+    }
+
+    /// Overlay `PICE_CALIB_*` environment knobs onto `self`. Strict: a set
+    /// but unparsable value is an error, not a silent default —
+    /// `PICE_CALIB_PARALLEL_ALPHA`, `PICE_CALIB_RATE_ALPHA`,
+    /// `PICE_CALIB_CLAMP` ("lo,hi"), `PICE_CALIB_DECAY`,
+    /// `PICE_CALIB_MIN_SAMPLES`.
+    pub fn overlay_env(mut self) -> Result<CalibCfg, String> {
+        fn f64_knob(key: &str) -> Result<Option<f64>, String> {
+            match std::env::var(key) {
+                Ok(v) => v
+                    .parse::<f64>()
+                    .map(Some)
+                    .map_err(|_| format!("{key}={v} is not a number")),
+                Err(_) => Ok(None),
+            }
+        }
+        if let Some(v) = f64_knob("PICE_CALIB_PARALLEL_ALPHA")? {
+            self.parallel_alpha = v;
+        }
+        if let Some(v) = f64_knob("PICE_CALIB_RATE_ALPHA")? {
+            self.rate_alpha = v;
+        }
+        if let Ok(v) = std::env::var("PICE_CALIB_CLAMP") {
+            let parts: Vec<&str> = v.split(',').collect();
+            let parsed = (parts.len() == 2)
+                .then(|| {
+                    Some((
+                        parts[0].trim().parse::<f64>().ok()?,
+                        parts[1].trim().parse::<f64>().ok()?,
+                    ))
+                })
+                .flatten();
+            match parsed {
+                Some((lo, hi)) => {
+                    self.clamp_lo = lo;
+                    self.clamp_hi = hi;
+                }
+                None => return Err(format!("PICE_CALIB_CLAMP={v} is not \"lo,hi\"")),
+            }
+        }
+        if let Some(v) = f64_knob("PICE_CALIB_DECAY")? {
+            self.decay = v;
+        }
+        if let Ok(v) = std::env::var("PICE_CALIB_MIN_SAMPLES") {
+            self.min_samples = v
+                .parse::<usize>()
+                .map_err(|_| format!("PICE_CALIB_MIN_SAMPLES={v} is not an integer"))?;
+        }
+        self.validate()?;
+        Ok(self)
+    }
+}
+
+/// One scheduling decision's worth of model outputs — what
+/// [`crate::coordinator::scheduler::CloudScheduler`] consumes next to the
+/// per-query [`crate::coordinator::scheduler::SchedInput`] descriptor.
+#[derive(Clone, Copy, Debug)]
+pub struct Estimates {
+    /// cloud latency line f(l) (offline fit, or the online re-fit)
+    pub f_cloud: LatencyFit,
+    /// cost coefficient c for the current best SLM/edge pair (edge-rate
+    /// corrected under calibration)
+    pub cost_coeff: f64,
+    /// Δ: transfer model of the sketch hop (WAN-drift corrected under
+    /// calibration)
+    pub transfer: TransferModel,
+    /// Eq. 2 backlog: c · Σ_j f(l_j) over queued expansion jobs
+    pub backlog_s: SimTime,
+    /// achieved edge expansion parallelism (EWMA; 1.0 = the paper's
+    /// conservative p = 1 default)
+    pub parallel_hint: f64,
+}
+
+/// Live calibration snapshot for the metrics dump / CLI summary line.
+#[derive(Clone, Copy, Debug)]
+pub struct CalibSummary {
+    pub learning: bool,
+    /// offline baseline the model started from
+    pub base_f_cloud: LatencyFit,
+    /// current effective cloud line
+    pub f_cloud: LatencyFit,
+    pub edge_corr: f64,
+    pub transfer_corr: f64,
+    pub parallelism: f64,
+    /// EWMA of |observed - predicted| cloud service time, seconds
+    pub resid_s: f64,
+    pub cloud_samples: u64,
+    pub edge_samples: u64,
+    pub transfer_samples: u64,
+}
+
+impl std::fmt::Display for CalibSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if !self.learning {
+            return write!(
+                f,
+                "calibration off: f(l) = {:.4} + {:.6}·l (offline), p_hint {:.2}",
+                self.f_cloud.a, self.f_cloud.b, self.parallelism
+            );
+        }
+        write!(
+            f,
+            "calibration on: f(l) = {:.4} + {:.6}·l (offline {:.4} + {:.6}·l), \
+             edge_corr {:.3}, transfer_corr {:.3}, p_hint {:.2}, resid {:.3}s, \
+             samples cloud/edge/transfer {}/{}/{}",
+            self.f_cloud.a,
+            self.f_cloud.b,
+            self.base_f_cloud.a,
+            self.base_f_cloud.b,
+            self.edge_corr,
+            self.transfer_corr,
+            self.parallelism,
+            self.resid_s,
+            self.cloud_samples,
+            self.edge_samples,
+            self.transfer_samples
+        )
+    }
+}
+
+/// Persistable calibration state: the decayed-OLS accumulators plus the
+/// EWMA corrections — everything a warm start needs to resume exactly
+/// where a donor run stopped. All fields finite (enforced at save).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibState {
+    pub n: f64,
+    pub sx: f64,
+    pub sy: f64,
+    pub sxx: f64,
+    pub sxy: f64,
+    pub edge_corr: f64,
+    pub transfer_corr: f64,
+    pub parallelism: f64,
+    pub resid_s: f64,
+    pub cloud_samples: u64,
+    pub edge_samples: u64,
+    pub transfer_samples: u64,
+}
+
+impl CalibState {
+    pub fn is_finite(&self) -> bool {
+        [
+            self.n,
+            self.sx,
+            self.sy,
+            self.sxx,
+            self.sxy,
+            self.edge_corr,
+            self.transfer_corr,
+            self.parallelism,
+            self.resid_s,
+        ]
+        .iter()
+        .all(|x| x.is_finite())
+    }
+}
+
+/// Everything Eq. 2 asks about the world. One instance per engine, owned by
+/// the engine core; observations arrive only from that engine's own event
+/// handlers, so the model is a pure function of the deterministic event
+/// stream (the determinism contract all serving tests enforce).
+pub trait CostModel: std::fmt::Debug + Send {
+    /// Cloud latency line f(l).
+    fn f_cloud(&self) -> LatencyFit;
+
+    /// Cost coefficient c (edge-vs-cloud per-token ratio for the best
+    /// SLM/edge pair), edge-rate corrected under calibration.
+    fn cost_coeff(&self) -> f64;
+
+    /// Transfer model for the sketch hop, given the live link's model.
+    /// [`StaticFit`] returns `live` untouched.
+    fn transfer(&self, live: TransferModel) -> TransferModel;
+
+    /// Multiplicative correction on a raw transfer-seconds estimate —
+    /// exactly 1.0 for [`StaticFit`], so `scale * raw == raw` bit-exact.
+    fn transfer_scale(&self) -> f64 {
+        1.0
+    }
+
+    /// Achieved edge expansion parallelism hint p (EWMA; starts at the
+    /// conservative 1.0).
+    fn parallel_hint(&self) -> f64;
+
+    /// Eq. 2 backlog term: c · Σ_j f(l_j) over the queued expansion jobs.
+    fn backlog_s(&self, q: &MultiListQueue) -> SimTime {
+        self.cost_coeff() * q.backlog_cost(&self.f_cloud())
+    }
+
+    /// The admission-gate estimate (`Engine::backlog_estimate_s`): queued
+    /// Eq. 2 backlog plus one (corrected) sketch transfer, `raw_transfer_s`
+    /// being the live link's uncorrected transfer seconds.
+    fn admission_backlog_s(&self, q: &MultiListQueue, raw_transfer_s: SimTime) -> SimTime {
+        self.backlog_s(q) + self.transfer_scale() * raw_transfer_s
+    }
+
+    /// All Eq. 2 inputs for one decision, in one call.
+    fn estimates(&self, live: TransferModel, q: &MultiListQueue) -> Estimates {
+        Estimates {
+            f_cloud: self.f_cloud(),
+            cost_coeff: self.cost_coeff(),
+            transfer: self.transfer(live),
+            backlog_s: self.backlog_s(q),
+            parallel_hint: self.parallel_hint(),
+        }
+    }
+
+    /// True when observations actually update state beyond the parallelism
+    /// EWMA — the engine gates its observation bookkeeping on this so the
+    /// static path stays zero-cost.
+    fn learning(&self) -> bool {
+        false
+    }
+
+    /// Mean lanes-per-job of a completed batch plan (every pull reports).
+    fn observe_parallelism(&mut self, mean_lanes: f64);
+
+    /// A cloud generation of `sim_tokens` took `observed_s` at the live
+    /// batch size.
+    fn observe_cloud(&mut self, _sim_tokens: usize, _observed_s: SimTime) {}
+
+    /// An edge pull predicted `predicted_s` (c·f(l)/p at decision time) and
+    /// took `observed_s` wall.
+    fn observe_edge(&mut self, _predicted_s: SimTime, _observed_s: SimTime) {}
+
+    /// A sketch transfer predicted `predicted_s` (decision-time transfer
+    /// model at the actual sketch length) and took `observed_s`.
+    fn observe_transfer(&mut self, _predicted_s: SimTime, _observed_s: SimTime) {}
+
+    /// Snapshot for the metrics dump.
+    fn summary(&self) -> CalibSummary;
+
+    /// Persistable state (None for [`StaticFit`] — nothing to warm-start).
+    fn state(&self) -> Option<CalibState> {
+        None
+    }
+}
+
+/// Build the model an [`crate::coordinator::EngineCfg`] asks for from the
+/// offline profile's outputs. The caller validates `calib` first.
+pub fn build(calib: &CalibCfg, base: LatencyFit, cost_coeff: f64) -> Box<dyn CostModel> {
+    match calib.mode {
+        CalibMode::Off => Box::new(StaticFit::new(base, cost_coeff, calib.parallel_alpha)),
+        CalibMode::On | CalibMode::Warm => {
+            let mut m = Calibrated::new(base, cost_coeff, calib.clone());
+            if calib.mode == CalibMode::Warm {
+                if let Some(st) = &calib.warm {
+                    m.load_state(st);
+                }
+            }
+            Box::new(m)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StaticFit
+// ---------------------------------------------------------------------------
+
+/// The offline profile, verbatim — today's behavior, bit-identical. The
+/// only mutable state is the achieved-parallelism EWMA the pre-refactor
+/// engine already tracked (`0.8·p + 0.2·lanes`, now α-configurable with the
+/// default reproducing those constants exactly: `1.0 - 0.2 == 0.8` in f64).
+#[derive(Clone, Debug)]
+pub struct StaticFit {
+    f: LatencyFit,
+    c: f64,
+    parallel_alpha: f64,
+    parallelism: f64,
+}
+
+impl StaticFit {
+    pub fn new(base: LatencyFit, cost_coeff: f64, parallel_alpha: f64) -> Self {
+        StaticFit { f: base, c: cost_coeff, parallel_alpha, parallelism: 1.0 }
+    }
+}
+
+impl CostModel for StaticFit {
+    fn f_cloud(&self) -> LatencyFit {
+        self.f
+    }
+
+    fn cost_coeff(&self) -> f64 {
+        self.c
+    }
+
+    fn transfer(&self, live: TransferModel) -> TransferModel {
+        live
+    }
+
+    fn parallel_hint(&self) -> f64 {
+        self.parallelism
+    }
+
+    fn observe_parallelism(&mut self, mean_lanes: f64) {
+        self.parallelism =
+            (1.0 - self.parallel_alpha) * self.parallelism + self.parallel_alpha * mean_lanes;
+    }
+
+    fn summary(&self) -> CalibSummary {
+        CalibSummary {
+            learning: false,
+            base_f_cloud: self.f,
+            f_cloud: self.f,
+            edge_corr: 1.0,
+            transfer_corr: 1.0,
+            parallelism: self.parallelism,
+            resid_s: 0.0,
+            cloud_samples: 0,
+            edge_samples: 0,
+            transfer_samples: 0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Calibrated
+// ---------------------------------------------------------------------------
+
+/// Online-calibrated model: a decayed OLS re-fit of the cloud line over
+/// observed (response length, service time) pairs, EWMA observed/predicted
+/// ratio corrections for the edge rate (folded into c) and WAN transfer,
+/// and the parallelism EWMA. With `rate_alpha = 0` and `min_samples`
+/// unreachable every correction stays at its identity and the model
+/// decides bit-identically to [`StaticFit`] (the null-calibration test).
+#[derive(Clone, Debug)]
+pub struct Calibrated {
+    base: LatencyFit,
+    base_c: f64,
+    cfg: CalibCfg,
+    st: CalibState,
+    /// current effective fit — recomputed on each cloud observation, read
+    /// on the (much hotter) estimate path
+    fit: LatencyFit,
+}
+
+impl Calibrated {
+    pub fn new(base: LatencyFit, cost_coeff: f64, mut cfg: CalibCfg) -> Self {
+        cfg.warm = None; // state arrives via load_state, not retained config
+        Calibrated {
+            base,
+            base_c: cost_coeff,
+            cfg,
+            st: CalibState {
+                n: 0.0,
+                sx: 0.0,
+                sy: 0.0,
+                sxx: 0.0,
+                sxy: 0.0,
+                edge_corr: 1.0,
+                transfer_corr: 1.0,
+                parallelism: 1.0,
+                resid_s: 0.0,
+                cloud_samples: 0,
+                edge_samples: 0,
+                transfer_samples: 0,
+            },
+            fit: base,
+        }
+    }
+
+    /// Seed from persisted state (ignores non-finite snapshots defensively;
+    /// the store also refuses to save them).
+    pub fn load_state(&mut self, st: &CalibState) {
+        if st.is_finite() {
+            self.st = st.clone();
+            self.refit();
+        }
+    }
+
+    /// Recompute the effective line from the accumulators: activate only
+    /// past `min_samples`, clamp the slope to `base.b * [clamp_lo,
+    /// clamp_hi]`, floor the intercept at 0, and fall back to the offline
+    /// line on a degenerate system.
+    fn refit(&mut self) {
+        if self.st.cloud_samples < self.cfg.min_samples as u64 {
+            self.fit = self.base;
+            return;
+        }
+        let (n, sx, sy, sxx, sxy) = (self.st.n, self.st.sx, self.st.sy, self.st.sxx, self.st.sxy);
+        let det = n * sxx - sx * sx;
+        if !(det.is_finite() && det.abs() > 1e-9 * sxx.max(1.0)) {
+            self.fit = self.base;
+            return;
+        }
+        let b = (n * sxy - sx * sy) / det;
+        let a = (sy - b * sx) / n;
+        if !(a.is_finite() && b.is_finite()) {
+            self.fit = self.base;
+            return;
+        }
+        let b = b.clamp(self.base.b * self.cfg.clamp_lo, self.base.b * self.cfg.clamp_hi);
+        self.fit = LatencyFit { a: a.max(0.0), b };
+    }
+
+    fn ewma_ratio(&self, current: f64, observed: f64, predicted: f64) -> Option<f64> {
+        if !(observed.is_finite() && predicted.is_finite()) || predicted <= 0.0 {
+            return None;
+        }
+        let ratio = (observed / predicted).clamp(self.cfg.clamp_lo, self.cfg.clamp_hi);
+        Some((1.0 - self.cfg.rate_alpha) * current + self.cfg.rate_alpha * ratio)
+    }
+}
+
+impl CostModel for Calibrated {
+    fn f_cloud(&self) -> LatencyFit {
+        self.fit
+    }
+
+    fn cost_coeff(&self) -> f64 {
+        self.base_c * self.st.edge_corr
+    }
+
+    fn transfer(&self, live: TransferModel) -> TransferModel {
+        TransferModel {
+            base_s: live.base_s * self.st.transfer_corr,
+            per_token_s: live.per_token_s * self.st.transfer_corr,
+        }
+    }
+
+    fn transfer_scale(&self) -> f64 {
+        self.st.transfer_corr
+    }
+
+    fn parallel_hint(&self) -> f64 {
+        self.st.parallelism
+    }
+
+    fn learning(&self) -> bool {
+        true
+    }
+
+    fn observe_parallelism(&mut self, mean_lanes: f64) {
+        self.st.parallelism = (1.0 - self.cfg.parallel_alpha) * self.st.parallelism
+            + self.cfg.parallel_alpha * mean_lanes;
+    }
+
+    fn observe_cloud(&mut self, sim_tokens: usize, observed_s: SimTime) {
+        if !observed_s.is_finite() || observed_s < 0.0 {
+            return;
+        }
+        let x = sim_tokens as f64;
+        // residual against the *current* line, before this sample updates it
+        let pred = self.fit.eval(sim_tokens);
+        self.st.resid_s = (1.0 - self.cfg.rate_alpha) * self.st.resid_s
+            + self.cfg.rate_alpha * (observed_s - pred).abs();
+        let d = self.cfg.decay;
+        self.st.n = self.st.n * d + 1.0;
+        self.st.sx = self.st.sx * d + x;
+        self.st.sy = self.st.sy * d + observed_s;
+        self.st.sxx = self.st.sxx * d + x * x;
+        self.st.sxy = self.st.sxy * d + x * observed_s;
+        self.st.cloud_samples += 1;
+        self.refit();
+    }
+
+    fn observe_edge(&mut self, predicted_s: SimTime, observed_s: SimTime) {
+        if let Some(next) = self.ewma_ratio(self.st.edge_corr, observed_s, predicted_s) {
+            self.st.edge_corr = next;
+            self.st.edge_samples += 1;
+        }
+    }
+
+    fn observe_transfer(&mut self, predicted_s: SimTime, observed_s: SimTime) {
+        if let Some(next) = self.ewma_ratio(self.st.transfer_corr, observed_s, predicted_s) {
+            self.st.transfer_corr = next;
+            self.st.transfer_samples += 1;
+        }
+    }
+
+    fn summary(&self) -> CalibSummary {
+        CalibSummary {
+            learning: true,
+            base_f_cloud: self.base,
+            f_cloud: self.fit,
+            edge_corr: self.st.edge_corr,
+            transfer_corr: self.st.transfer_corr,
+            parallelism: self.st.parallelism,
+            resid_s: self.st.resid_s,
+            cloud_samples: self.st.cloud_samples,
+            edge_samples: self.st.edge_samples,
+            transfer_samples: self.st.transfer_samples,
+        }
+    }
+
+    fn state(&self) -> Option<CalibState> {
+        Some(self.st.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> LatencyFit {
+        LatencyFit { a: 0.2, b: 0.055 }
+    }
+
+    fn on_cfg() -> CalibCfg {
+        CalibCfg { mode: CalibMode::On, ..Default::default() }
+    }
+
+    #[test]
+    fn default_cfg_validates_and_matches_historical_constants() {
+        let c = CalibCfg::default();
+        c.validate().unwrap();
+        assert_eq!(c.mode, CalibMode::Off);
+        // the pre-refactor hardcoded constants, exactly
+        assert_eq!(c.parallel_alpha, 0.2);
+        assert_eq!(c.rate_alpha, 0.2);
+        assert_eq!((c.clamp_lo, c.clamp_hi), (0.25, 4.0));
+        // the EWMA complement is bit-exact: 0.8·p + 0.2·x reproduced
+        assert_eq!(1.0 - c.parallel_alpha, 0.8);
+    }
+
+    #[test]
+    fn cfg_validation_rejects_bad_knobs() {
+        for bad in [
+            CalibCfg { parallel_alpha: -0.1, ..Default::default() },
+            CalibCfg { parallel_alpha: 1.5, ..Default::default() },
+            CalibCfg { rate_alpha: f64::NAN, ..Default::default() },
+            CalibCfg { clamp_lo: 0.0, ..Default::default() },
+            CalibCfg { clamp_lo: 2.0, clamp_hi: 1.0, ..Default::default() },
+            CalibCfg { decay: 0.0, ..Default::default() },
+            CalibCfg { decay: 1.1, ..Default::default() },
+            CalibCfg { min_samples: 1, ..Default::default() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should not validate");
+        }
+    }
+
+    #[test]
+    fn static_fit_is_the_identity_model() {
+        let m = StaticFit::new(base(), 0.35, 0.2);
+        let live = TransferModel { base_s: 0.02, per_token_s: 5e-7 };
+        let t = m.transfer(live);
+        assert_eq!((t.base_s, t.per_token_s), (live.base_s, live.per_token_s));
+        assert_eq!(m.transfer_scale(), 1.0);
+        assert_eq!(m.cost_coeff(), 0.35);
+        assert_eq!(m.parallel_hint(), 1.0);
+        assert!(!m.learning());
+        assert!(m.state().is_none());
+    }
+
+    #[test]
+    fn static_parallelism_ewma_matches_hardcoded_update() {
+        // the exact pre-refactor expression, sample by sample
+        let mut m = StaticFit::new(base(), 0.35, 0.2);
+        let mut reference = 1.0f64;
+        for lanes in [3.0, 1.0, 4.0, 2.5, 2.5, 8.0] {
+            m.observe_parallelism(lanes);
+            reference = 0.8 * reference + 0.2 * lanes;
+            assert_eq!(m.parallel_hint().to_bits(), reference.to_bits());
+        }
+    }
+
+    #[test]
+    fn rate_correction_ewma_clamps_like_the_old_monitor() {
+        // RuntimeMonitor::observe_edge_rate's contract, absorbed here: 100
+        // wild samples stay inside the clamp
+        let mut m = Calibrated::new(base(), 0.35, on_cfg());
+        for _ in 0..100 {
+            m.observe_edge(1.0, 100.0);
+        }
+        assert!(m.st.edge_corr <= 4.0, "edge_corr {} escaped clamp", m.st.edge_corr);
+        for _ in 0..100 {
+            m.observe_transfer(1.0, 1e-9);
+        }
+        assert!(m.st.transfer_corr >= 0.25 * 0.2, "floor breached");
+        assert!(m.st.transfer_corr < 1.0);
+    }
+
+    #[test]
+    fn calibrated_refit_activates_after_min_samples_and_tracks_truth() {
+        let mut m = Calibrated::new(base(), 0.35, on_cfg());
+        // the world is actually twice as slow per token as the offline fit
+        let real = LatencyFit { a: 0.4, b: 0.11 };
+        for i in 0..200usize {
+            let l = 32 + (i % 6) * 128;
+            m.observe_cloud(l, real.eval(l));
+        }
+        let f = m.f_cloud();
+        assert!((f.b - real.b).abs() / real.b < 0.05, "slope {} vs {}", f.b, real.b);
+        assert!((f.a - real.a).abs() < 0.1, "intercept {} vs {}", f.a, real.a);
+        // and the slope clamp holds against absurd observations
+        let mut wild = Calibrated::new(base(), 0.35, on_cfg());
+        for i in 0..50usize {
+            let l = 32 + (i % 6) * 128;
+            wild.observe_cloud(l, 1e6);
+        }
+        assert!(wild.f_cloud().b <= base().b * 4.0 + 1e-12);
+    }
+
+    #[test]
+    fn calibrated_below_min_samples_is_the_offline_line() {
+        let mut m = Calibrated::new(base(), 0.35, on_cfg());
+        for _ in 0..(m.cfg.min_samples - 1) {
+            m.observe_cloud(100, 9.0);
+        }
+        let f = m.f_cloud();
+        assert_eq!((f.a.to_bits(), f.b.to_bits()), (base().a.to_bits(), base().b.to_bits()));
+    }
+
+    #[test]
+    fn null_calibration_decides_like_static() {
+        // rate_alpha 0 + unreachable min_samples: every correction frozen
+        // at identity, estimates bit-identical to StaticFit
+        let cfg = CalibCfg {
+            mode: CalibMode::On,
+            rate_alpha: 0.0,
+            min_samples: usize::MAX,
+            ..Default::default()
+        };
+        let mut c = Calibrated::new(base(), 0.35, cfg);
+        let mut s = StaticFit::new(base(), 0.35, 0.2);
+        let live = TransferModel { base_s: 0.025, per_token_s: 6e-7 };
+        for (lanes, obs) in [(3.0, 1.7), (2.0, 0.4), (4.0, 9.0)] {
+            c.observe_parallelism(lanes);
+            c.observe_cloud(200, obs);
+            c.observe_edge(1.0, obs);
+            c.observe_transfer(0.5, obs);
+            s.observe_parallelism(lanes);
+        }
+        assert_eq!(c.cost_coeff().to_bits(), s.cost_coeff().to_bits());
+        assert_eq!(c.f_cloud().b.to_bits(), s.f_cloud().b.to_bits());
+        assert_eq!(c.transfer(live).base_s.to_bits(), live.base_s.to_bits());
+        assert_eq!(c.transfer_scale().to_bits(), 1.0f64.to_bits());
+        assert_eq!(c.parallel_hint().to_bits(), s.parallel_hint().to_bits());
+    }
+
+    #[test]
+    fn state_round_trip_resumes_exactly() {
+        let mut donor = Calibrated::new(base(), 0.35, on_cfg());
+        for i in 0..40usize {
+            let l = 32 + (i % 6) * 128;
+            donor.observe_cloud(l, 0.3 + 0.08 * l as f64);
+            donor.observe_edge(1.0, 1.3);
+            donor.observe_transfer(0.5, 0.8);
+            donor.observe_parallelism(3.0);
+        }
+        let st = donor.state().unwrap();
+        assert!(st.is_finite());
+        let mut heir = Calibrated::new(base(), 0.35, on_cfg());
+        heir.load_state(&st);
+        assert_eq!(heir.f_cloud().a.to_bits(), donor.f_cloud().a.to_bits());
+        assert_eq!(heir.f_cloud().b.to_bits(), donor.f_cloud().b.to_bits());
+        assert_eq!(heir.cost_coeff().to_bits(), donor.cost_coeff().to_bits());
+        assert_eq!(heir.state().unwrap(), st);
+        // and both continue identically on the same next observation
+        heir.observe_cloud(300, 2.0);
+        donor.observe_cloud(300, 2.0);
+        assert_eq!(heir.state().unwrap(), donor.state().unwrap());
+    }
+
+    #[test]
+    fn env_overlay_rejects_garbage() {
+        // strict parse: a set-but-bad knob is an error (run single-threaded
+        // risk: use a key nothing else reads, then clean up)
+        std::env::set_var("PICE_CALIB_DECAY", "fast");
+        let r = CalibCfg::default().overlay_env();
+        std::env::remove_var("PICE_CALIB_DECAY");
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,318 @@
+//! Cross-process calibration persistence: warm starts for [`Calibrated`].
+//!
+//! Same scheme as the generation-memo snapshot (`sweep/cache.rs`): one
+//! versioned JSON file (default next to the memo snapshot, via
+//! `PICE_CALIB_PATH`), sectioned by the artifact *stamp* — the FNV
+//! fingerprint of corpus + registry + backend identity that already
+//! invalidates the memo cache. A calibration learned against one world is
+//! meaningless in another, so a stamp mismatch is a cold start, never an
+//! error; other stamps' sections are retained verbatim (bounded) so
+//! differently-stamped runs can share one file. Within a stamp, entries are
+//! keyed by [`calib_key`] — the engine-shape identity (cloud model, edge
+//! count, policy) — so e.g. a 4-edge PICE run never warms a 2-edge one.
+//!
+//! f64 state is stored as hex bit patterns ([`u64`] hex strings, like the
+//! memo store's seeds): a reloaded [`CalibState`] is bit-identical to the
+//! saved one, which is what makes the warm-start round-trip test exact.
+//!
+//! [`Calibrated`]: super::Calibrated
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::CalibState;
+use crate::util::json::{self, Json};
+
+/// On-disk calibration format version; bump when [`CalibState`] changes.
+pub const CALIB_VERSION: usize = 1;
+
+/// Foreign-stamp sections retained on save — bounds file growth when many
+/// differently-stamped runs share one path (mirrors the memo snapshot).
+const FOREIGN_STAMP_LIMIT: usize = 8;
+
+/// The engine-shape identity a calibration is valid for. Policy and
+/// static-mode matter because they change which decisions feed the model;
+/// edge count changes the cost coefficient's meaning.
+pub fn calib_key(cloud_model: &str, n_edges: usize, policy: &str, static_mode: bool) -> String {
+    format!(
+        "{cloud_model}/e{n_edges}/{policy}{}",
+        if static_mode { "/static" } else { "" }
+    )
+}
+
+/// One process-wide binding of calibration state to a snapshot file.
+/// Load once at startup ([`CalibStore::load`]), read warm states via
+/// [`CalibStore::get`], deposit end-of-run states via [`CalibStore::put`],
+/// save once at exit ([`CalibStore::save`]).
+pub struct CalibStore {
+    path: PathBuf,
+    stamp: String,
+    /// this stamp's section: calib_key -> state
+    entries: BTreeMap<String, CalibState>,
+    /// other stamps' sections, re-emitted verbatim on save
+    foreign: Vec<(String, Json)>,
+    restored: usize,
+    dirty: bool,
+}
+
+impl CalibStore {
+    /// Bind `path` for `stamp`, restoring that stamp's section of any
+    /// matching-version file. Missing, unreadable, corrupt, or
+    /// differently-stamped files all mean a cold start — never an error.
+    pub fn load(path: impl Into<PathBuf>, stamp: &str) -> CalibStore {
+        let path = path.into();
+        let mut entries = BTreeMap::new();
+        let mut foreign: Vec<(String, Json)> = Vec::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(snap) = Json::parse(&text) {
+                if snap.get("version").and_then(Json::as_usize) == Some(CALIB_VERSION) {
+                    if let Some(Json::Obj(stamps)) = snap.get("stamps") {
+                        for (st, section) in stamps {
+                            if st == stamp {
+                                if let Json::Obj(m) = section {
+                                    for (key, sj) in m {
+                                        if let Some(state) = state_from_json(sj) {
+                                            entries.insert(key.clone(), state);
+                                        }
+                                    }
+                                }
+                            } else if foreign.len() < FOREIGN_STAMP_LIMIT {
+                                foreign.push((st.clone(), section.clone()));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let restored = entries.len();
+        CalibStore { path, stamp: stamp.to_string(), entries, foreign, restored, dirty: false }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// States restored from disk at load (0 on a cold start).
+    pub fn restored_entries(&self) -> usize {
+        self.restored
+    }
+
+    /// Warm state for an engine shape, if this stamp has one.
+    pub fn get(&self, key: &str) -> Option<CalibState> {
+        self.entries.get(key).cloned()
+    }
+
+    /// Deposit an end-of-run state. Non-finite states are refused (they
+    /// could only poison later runs); depositing marks the store dirty.
+    pub fn put(&mut self, key: &str, state: CalibState) {
+        if !state.is_finite() {
+            return;
+        }
+        self.entries.insert(key.to_string(), state);
+        self.dirty = true;
+    }
+
+    /// Anything new to write since load / the last save?
+    pub fn dirty(&self) -> bool {
+        self.dirty
+    }
+
+    /// Write the file back: this stamp's section from `entries`, other
+    /// stamps verbatim. Temp-file + rename, so a crashed process never
+    /// leaves a torn file.
+    pub fn save(&mut self) -> Result<(), String> {
+        let mut section = BTreeMap::new();
+        for (key, state) in &self.entries {
+            section.insert(key.clone(), state_json(state));
+        }
+        let mut stamps = BTreeMap::new();
+        for (st, sec) in &self.foreign {
+            stamps.insert(st.clone(), sec.clone());
+        }
+        stamps.insert(self.stamp.clone(), Json::Obj(section));
+        let snap = json::obj(vec![
+            ("version", json::num(CALIB_VERSION as f64)),
+            ("stamps", Json::Obj(stamps)),
+        ]);
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+        }
+        let tmp = self.path.with_extension(format!("tmp{}", std::process::id()));
+        std::fs::write(&tmp, snap.to_string())
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path)
+            .map_err(|e| format!("rename to {}: {e}", self.path.display()))?;
+        self.dirty = false;
+        Ok(())
+    }
+}
+
+fn f64_hex(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+fn parse_f64_hex(j: &Json) -> Option<f64> {
+    let v = f64::from_bits(u64::from_str_radix(j.as_str()?, 16).ok()?);
+    v.is_finite().then_some(v)
+}
+
+fn u64_json(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn parse_u64(j: &Json) -> Option<u64> {
+    u64::from_str_radix(j.as_str()?, 16).ok()
+}
+
+fn state_json(st: &CalibState) -> Json {
+    json::obj(vec![
+        ("n", f64_hex(st.n)),
+        ("sx", f64_hex(st.sx)),
+        ("sy", f64_hex(st.sy)),
+        ("sxx", f64_hex(st.sxx)),
+        ("sxy", f64_hex(st.sxy)),
+        ("edge_corr", f64_hex(st.edge_corr)),
+        ("transfer_corr", f64_hex(st.transfer_corr)),
+        ("parallelism", f64_hex(st.parallelism)),
+        ("resid_s", f64_hex(st.resid_s)),
+        ("cloud_samples", u64_json(st.cloud_samples)),
+        ("edge_samples", u64_json(st.edge_samples)),
+        ("transfer_samples", u64_json(st.transfer_samples)),
+    ])
+}
+
+fn state_from_json(j: &Json) -> Option<CalibState> {
+    Some(CalibState {
+        n: parse_f64_hex(j.get("n")?)?,
+        sx: parse_f64_hex(j.get("sx")?)?,
+        sy: parse_f64_hex(j.get("sy")?)?,
+        sxx: parse_f64_hex(j.get("sxx")?)?,
+        sxy: parse_f64_hex(j.get("sxy")?)?,
+        edge_corr: parse_f64_hex(j.get("edge_corr")?)?,
+        transfer_corr: parse_f64_hex(j.get("transfer_corr")?)?,
+        parallelism: parse_f64_hex(j.get("parallelism")?)?,
+        resid_s: parse_f64_hex(j.get("resid_s")?)?,
+        cloud_samples: parse_u64(j.get("cloud_samples")?)?,
+        edge_samples: parse_u64(j.get("edge_samples")?)?,
+        transfer_samples: parse_u64(j.get("transfer_samples")?)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state(tag: f64) -> CalibState {
+        CalibState {
+            n: 40.0 + tag,
+            sx: 1.5e4 + tag,
+            sy: 88.25 + tag,
+            sxx: 6.1e6 + tag,
+            sxy: 3.3e4 + tag,
+            edge_corr: 1.37 + 0.01 * tag,
+            transfer_corr: 0.81,
+            parallelism: 2.625,
+            resid_s: 0.0625,
+            cloud_samples: 40,
+            edge_samples: 17,
+            transfer_samples: 9,
+        }
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("pice_calib_{name}_{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn state_json_round_trip_bit_exact() {
+        // include an awkward irrational-ish value: hex bit patterns make
+        // the round trip exact regardless of decimal printability
+        let mut st = sample_state(0.0);
+        st.sxy = std::f64::consts::PI * 1e4;
+        let j = state_json(&st);
+        let re = state_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(re, st);
+        assert_eq!(re.sxy.to_bits(), st.sxy.to_bits());
+    }
+
+    #[test]
+    fn store_round_trip_and_dirty_tracking() {
+        let path = tmp_path("rt");
+        let _ = std::fs::remove_file(&path);
+        let mut store = CalibStore::load(&path, "stamp-a");
+        assert_eq!(store.restored_entries(), 0);
+        assert!(!store.dirty());
+        let key = calib_key("llama70b-sim", 4, "pice", false);
+        store.put(&key, sample_state(1.0));
+        assert!(store.dirty());
+        store.save().unwrap();
+        assert!(!store.dirty());
+
+        let store2 = CalibStore::load(&path, "stamp-a");
+        assert_eq!(store2.restored_entries(), 1);
+        assert_eq!(store2.get(&key).unwrap(), sample_state(1.0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_stamp_cold_starts_but_is_retained() {
+        let path = tmp_path("stale");
+        let _ = std::fs::remove_file(&path);
+        let key = calib_key("llama70b-sim", 4, "pice", false);
+        let mut a = CalibStore::load(&path, "stamp-a");
+        a.put(&key, sample_state(1.0));
+        a.save().unwrap();
+
+        // a different stamp sees a cold start...
+        let mut b = CalibStore::load(&path, "stamp-b");
+        assert_eq!(b.restored_entries(), 0);
+        assert!(b.get(&key).is_none());
+        b.put(&key, sample_state(2.0));
+        b.save().unwrap();
+
+        // ...but stamp-a's section survived stamp-b's save
+        let a2 = CalibStore::load(&path, "stamp-a");
+        assert_eq!(a2.get(&key).unwrap(), sample_state(1.0));
+        let b2 = CalibStore::load(&path, "stamp-b");
+        assert_eq!(b2.get(&key).unwrap(), sample_state(2.0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_or_wrong_version_is_a_cold_start() {
+        let path = tmp_path("corrupt");
+        std::fs::write(&path, "{not json").unwrap();
+        assert_eq!(CalibStore::load(&path, "s").restored_entries(), 0);
+        std::fs::write(&path, r#"{"version": 999, "stamps": {}}"#).unwrap();
+        assert_eq!(CalibStore::load(&path, "s").restored_entries(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn non_finite_state_is_refused() {
+        let path = tmp_path("nonfinite");
+        let _ = std::fs::remove_file(&path);
+        let mut store = CalibStore::load(&path, "s");
+        let mut bad = sample_state(0.0);
+        bad.edge_corr = f64::NAN;
+        store.put("k", bad);
+        assert!(!store.dirty());
+        assert!(store.get("k").is_none());
+    }
+
+    #[test]
+    fn calib_key_shapes_are_distinct() {
+        let a = calib_key("m", 4, "pice", false);
+        let b = calib_key("m", 2, "pice", false);
+        let c = calib_key("m", 4, "pice", true);
+        let d = calib_key("m2", 4, "pice", false);
+        let keys = [&a, &b, &c, &d];
+        for i in 0..keys.len() {
+            for j in (i + 1)..keys.len() {
+                assert_ne!(keys[i], keys[j]);
+            }
+        }
+    }
+}

@@ -36,10 +36,11 @@
 //! [`Placement::LeastLoaded`] is deliberately outside the contract: it
 //! reads live backlog, so the route depends on when the caller pumps. Its
 //! guarantees are weaker and load-shaped: no session routes to a
-//! crashed-and-unrecovering shard while a healthy one exists, and backlog
-//! estimates are memoized per shard (invalidated on event-loop progress via
-//! [`Engine::events_processed`]) so routing doesn't re-run Eq. 2 per
-//! submission.
+//! crashed-and-unrecovering shard while a healthy one exists. Backlog polls
+//! go straight to each shard's [`Engine::backlog_estimate_s`] — the engine
+//! memoizes the estimate against its own event-loop progress, so the router
+//! and the shard's admission path always read the *same* number and the
+//! router's hot path is a counter compare, not a queue walk.
 
 pub mod placement;
 
@@ -87,9 +88,6 @@ pub struct Fleet<'a> {
     routes: Vec<(usize, usize)>,
     /// per shard: shard-local rid -> global rid
     global_of: Vec<Vec<usize>>,
-    /// per shard: (events_processed at estimate time, estimate). Re-polled
-    /// only when the shard's event loop has moved since.
-    backlog_memo: Vec<Option<(u64, SimTime)>>,
 }
 
 impl<'a> Fleet<'a> {
@@ -104,7 +102,6 @@ impl<'a> Fleet<'a> {
             placement,
             routes: Vec::new(),
             global_of: vec![Vec::new(); n],
-            backlog_memo: vec![None; n],
         }
     }
 
@@ -178,29 +175,32 @@ impl<'a> Fleet<'a> {
     }
 
     /// Eq. 2 backlog estimate of the shard this session key would land on —
-    /// the fleet-level [`Engine::backlog_estimate_s`], memoized per shard.
+    /// the fleet-level [`Engine::backlog_estimate_s`]. The shard memoizes
+    /// the estimate itself, so repeated polls between pumps are free and
+    /// identical to what the shard's own admission path computes.
     pub fn backlog_estimate_for(&mut self, session_key: u64) -> SimTime {
         let s = self.shard_for(session_key);
-        self.shard_backlog(s)
+        self.shards[s].backlog_estimate_s()
     }
 
-    /// Memoized per-shard backlog: Eq. 2 is re-run only when the shard's
-    /// event loop has processed something since the last estimate
-    /// (submissions between pumps reuse the cached value — the router's
-    /// hot path is a counter compare, not a queue walk).
-    fn shard_backlog(&mut self, s: usize) -> SimTime {
-        let stamp = self.shards[s].events_processed();
-        if let Some((at, est)) = self.backlog_memo[s] {
-            if at == stamp {
-                return est;
-            }
-        }
-        let est = self.shards[s].backlog_estimate_s();
-        self.backlog_memo[s] = Some((stamp, est));
-        est
+    /// One calibration summary per shard (shard order). Every shard owns an
+    /// independent [`crate::costmodel::CostModel`] fed only by its own event
+    /// stream, so summaries diverge exactly as the shards' worlds do.
+    pub fn calib_summaries(&self) -> Vec<crate::costmodel::CalibSummary> {
+        self.shards.iter().map(Engine::calib_summary).collect()
     }
 
-    /// Least-loaded pick: smallest memoized backlog, ties broken by
+    /// Direct shard access (tests and the serve layer's calibration dump).
+    pub fn shard(&self, s: usize) -> &Engine<'a> {
+        &self.shards[s]
+    }
+
+    /// Mutable shard access (tests poll shard-level estimates directly).
+    pub fn shard_mut(&mut self, s: usize) -> &mut Engine<'a> {
+        &mut self.shards[s]
+    }
+
+    /// Least-loaded pick: smallest shard backlog estimate, ties broken by
     /// in-flight depth then shard index. Shards with zero live edges and
     /// zero pending recovers are skipped — they can only serve via cloud
     /// fallback, so routing *new* sessions there would turn every placement
@@ -215,7 +215,7 @@ impl<'a> Fleet<'a> {
                 continue;
             }
             let inflight = self.shards[s].submitted() - self.shards[s].completed();
-            let key = (self.shard_backlog(s), inflight, s);
+            let key = (self.shards[s].backlog_estimate_s(), inflight, s);
             let better = match &best {
                 None => true,
                 Some(b) => match key.0.total_cmp(&b.0) {

@@ -9,11 +9,12 @@
 //! * [`Placement::LeastLoaded`] — backlog-aware placement: route to the
 //!   shard with the smallest Eq. 2 backlog estimate
 //!   ([`crate::coordinator::Engine::backlog_estimate_s`]), breaking ties by
-//!   in-flight depth, then by shard index. Estimates are memoized per shard
-//!   and invalidated on event-loop progress (see
-//!   [`crate::fleet::Fleet`]), so routing never re-runs Eq. 2 for a shard
-//!   whose loop hasn't moved. Load-adaptive, therefore *not* part of the
-//!   bit-identity contract: the route depends on when the caller pumps.
+//!   in-flight depth, then by shard index. Each shard memoizes its estimate
+//!   against its own event-loop progress, so routing never re-runs Eq. 2
+//!   for a shard whose loop hasn't moved — and the router reads the *same*
+//!   number the shard's admission path computes. Load-adaptive, therefore
+//!   *not* part of the bit-identity contract: the route depends on when the
+//!   caller pumps.
 
 /// Shard-placement policy of a [`crate::fleet::Fleet`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

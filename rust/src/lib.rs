@@ -7,7 +7,9 @@
 //!   [`sketch`]
 //! * runtime: [`runtime`] (PJRT; loads the AOT picoLM artifacts)
 //! * the paper's contribution: [`coordinator`] (dynamic scheduler, job
-//!   dispatching, model selection), [`parallel`] (execution optimizer),
+//!   dispatching, model selection), [`costmodel`] (Eq. 2 estimation behind
+//!   one trait: the static offline fit and the online-calibrated model,
+//!   with persisted warm-start state), [`parallel`] (execution optimizer),
 //!   [`ensemble`], [`finetune`] (RLAIF sketch policy), [`baselines`]
 //! * environment dynamics: [`dynamics`] (time-varying links, edge churn /
 //!   failure injection; the engine's failover re-dispatch rides on it)
@@ -21,6 +23,7 @@ pub mod baselines;
 pub mod cli;
 pub mod cluster;
 pub mod coordinator;
+pub mod costmodel;
 pub mod dynamics;
 pub mod finetune;
 pub mod corpus;

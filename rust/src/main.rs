@@ -6,6 +6,7 @@
 //!              [--seed 11] [--max-inflight 256] [--stream]
 //!              [--dynamics stable|flaky-wan|edge-churn] [--deadline <s>]
 //!              [--shards 4] [--placement hash|least-loaded]
+//!              [--calibrate on|off|warm]
 //! pice models
 //! pice profile [--edges 4]
 //! pice finetune [--pairs 8] [--steps 30]
@@ -15,6 +16,7 @@
 
 use pice::cli::Args;
 use pice::cluster::{Cluster, DeviceSpec};
+use pice::costmodel::CalibMode;
 use pice::dynamics::DynamicsSpec;
 use pice::finetune::{Trainer, TrainerCfg};
 use pice::fleet::{FleetCfg, Placement};
@@ -60,6 +62,16 @@ SUBCOMMANDS
                                                     (default; bit-stable traces)
                                       least-loaded  route to the shard with the
                                                     smallest backlog estimate
+              --calibrate <m>       cost-model calibration (PERF.md §Calibrated
+                                    cost model):
+                                      off   static offline fit (default;
+                                            bit-identical legacy behavior)
+                                      on    re-fit Eq. 2's estimates online from
+                                            this run's observed latencies
+                                      warm  on + seed from the PICE_CALIB_PATH
+                                            store (cold start when absent);
+                                            learned state is deposited back
+                                    prints a calibration summary with the metrics
   models    print the model registry (speed, memory, MMLU, eval accuracy)
   profile   offline latency fits f(l) per (device, model)
               --edges <int>         edge count of the profiled testbed (default 4)
@@ -83,7 +95,12 @@ ENVIRONMENT KNOBS (serve/bench execution layer — see PERF.md)
   PICE_MEMO_PATH=<path>    persist the memo cache across processes
   PICE_BENCH_N=<n>         requests per bench scenario (default 60)
   PICE_BENCH_SMOKE=1       tiny CI sizing for benches
-  PICE_SINGLE_FIFO=1       ablate Algorithm 1 into one FIFO list";
+  PICE_SINGLE_FIFO=1       ablate Algorithm 1 into one FIFO list
+  PICE_CALIB_PATH=<path>   persist learned calibration (--calibrate warm)
+  PICE_CALIB_PARALLEL_ALPHA / PICE_CALIB_RATE_ALPHA    EWMA gains in [0,1]
+  PICE_CALIB_CLAMP=<lo,hi> correction-ratio clamp (default 0.25,4)
+  PICE_CALIB_DECAY=<f>     regression sample decay in (0,1] (default 0.995)
+  PICE_CALIB_MIN_SAMPLES=<n>  cloud samples before the re-fit engages";
 
 /// Flags accepted by every subcommand.
 const GLOBAL_FLAGS: &[&str] = &["quiet", "help"];
@@ -116,6 +133,7 @@ fn main() {
                     "deadline",
                     "shards",
                     "placement",
+                    "calibrate",
                 ],
                 &with_global_flags(&["stream"]),
             )
@@ -158,6 +176,18 @@ fn serve(args: &Args) -> Result<(), String> {
             )
         })?;
     }
+    let calib_mode = match args.opt("calibrate") {
+        None | Some("off") => CalibMode::Off,
+        Some("on") => CalibMode::On,
+        Some("warm") => CalibMode::Warm,
+        Some(other) => {
+            return Err(format!("--calibrate expects on|off|warm, got `{other}`"));
+        }
+    };
+    env.apply_calib(&mut cfg, calib_mode);
+    // PICE_CALIB_* knobs overlay the defaults; garbage is an error, not a
+    // silent fallback (a mistyped gain would quietly change the model)
+    cfg.calib = cfg.calib.overlay_env()?;
     info!("serving {n} requests at {rpm:.0} rpm on {model} ({:?})", cfg.policy);
     let wl = env.workload(rpm, n, args.opt_usize("seed", 11) as u64);
     let corpus = env.corpus.clone();
@@ -198,12 +228,15 @@ fn serve(args: &Args) -> Result<(), String> {
 
     // The service (open-loop) path runs when its knobs are engaged: --stream
     // for the live log, an explicit --max-inflight for admission control, an
-    // SLO --deadline, or a fleet shape. Without any, the closed-loop driver
-    // produces bit-identical traces with no event machinery.
-    let (traces, rejected, shard_routes) = if fleet_mode
+    // SLO --deadline, a fleet shape, or calibration (the summary and the
+    // persistable state live on the service's engines). Without any, the
+    // closed-loop driver produces bit-identical traces with no event
+    // machinery.
+    let (traces, rejected, shard_routes, calib_out) = if fleet_mode
         || stream
         || args.opt("max-inflight").is_some()
         || deadline_s.is_some()
+        || calib_mode != CalibMode::Off
     {
         // Open-loop serving: submit each arrival as simulated time reaches
         // it, pumping the engine(s) between submissions.
@@ -230,11 +263,13 @@ fn serve(args: &Args) -> Result<(), String> {
         }
         let rejected = svc.rejected();
         let routes = svc.shard_routes().to_vec();
-        (svc.finish().map_err(|e| e.to_string())?, rejected, routes)
+        let calib_out = (calib_mode != CalibMode::Off)
+            .then(|| (svc.calib_summaries(), svc.calib_states()));
+        (svc.finish().map_err(|e| e.to_string())?, rejected, routes, calib_out)
     } else {
         // closed-loop batch driver (same traces, no event machinery)
         let (_, traces) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
-        (traces, 0, Vec::new())
+        (traces, 0, Vec::new(), None)
     };
 
     let m = pice::metrics::aggregate(&traces);
@@ -263,6 +298,22 @@ fn serve(args: &Args) -> Result<(), String> {
     );
     if m.salvaged_slots > 0 {
         println!("salvaged        {} expansion slots kept across edge crashes", m.salvaged_slots);
+    }
+    if let Some((summaries, states)) = calib_out {
+        if summaries.len() == 1 {
+            println!("calibration     {}", summaries[0]);
+        } else {
+            for (s, cs) in summaries.iter().enumerate() {
+                println!("calibration s{s}  {cs}");
+            }
+        }
+        // deposit learned state into the PICE_CALIB_PATH store (saved when
+        // the Env drops). A fleet's shards all map to the same key and put()
+        // is last-wins, so record in reverse shard order: shard 0 — the
+        // shard bit-identical to the single-engine world — prevails.
+        for (key, st) in states.into_iter().rev() {
+            env.calib_record(&key, st);
+        }
     }
     // Per-shard breakdown: fleet-wide numbers above are computed over the
     // union of traces (never by summing per-shard rates — see

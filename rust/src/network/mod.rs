@@ -64,8 +64,8 @@ impl Link {
 
 /// Affine one-way transfer-time model `base_s + n_tokens * per_token_s` —
 /// what one scheduling decision sees of the network. A plain value (not a
-/// closure) so [`crate::coordinator::scheduler::SchedInput`] stays `Clone`
-/// and the static world can pin its legacy calibrated constants bit-for-bit.
+/// closure) so [`crate::costmodel::Estimates`] stays `Copy` and the static
+/// world can pin its legacy calibrated constants bit-for-bit.
 #[derive(Clone, Copy, Debug)]
 pub struct TransferModel {
     pub base_s: f64,

@@ -1,14 +1,19 @@
-//! Profiler: offline latency estimation + runtime condition monitoring.
+//! Profiler: offline latency estimation.
 //!
 //! Paper §III: "In the offline phase, it conducts device-specific latency
-//! estimation. During runtime, it continuously monitors device and server
-//! loads, as well as network conditions."
+//! estimation."
 //!
-//! Offline: fits the latency function f(l) (cloud LLM time to produce an
-//! l-token response) and the cost coefficient c per (SLM, edge device) —
-//! the quantities Eq. 2's admission test needs. The fit is an OLS line over
+//! Fits the latency function f(l) (cloud LLM time to produce an l-token
+//! response) and the cost coefficient c per (SLM, edge device) — the
+//! quantities Eq. 2's admission test needs. The fit is an OLS line over
 //! sampled generation lengths, mirroring how the paper profiles a real
 //! testbed rather than reading the model's closed form.
+//!
+//! The paper's *runtime* half ("during runtime, it continuously monitors
+//! device and server loads, as well as network conditions") lives in
+//! [`crate::costmodel`]: the engine's `CostModel` instance consumes these
+//! offline fits as its baseline and — when calibration is on — corrects
+//! them from the live event stream.
 
 use std::collections::BTreeMap;
 
@@ -88,53 +93,6 @@ impl OfflineProfile {
     }
 }
 
-/// Runtime monitor: rolling view of queue depths, device busy state and
-/// network condition that the dynamic scheduler consults per-query.
-#[derive(Clone, Debug, Default)]
-pub struct RuntimeMonitor {
-    pub cloud_inflight: usize,
-    pub cloud_queue: usize,
-    pub edge_busy_until: Vec<SimTime>,
-    pub job_queue_len: usize,
-    pub congestion: f64,
-    /// exponentially-weighted observed edge token rate error (observed /
-    /// predicted), used to correct offline fits online.
-    pub edge_rate_correction: f64,
-}
-
-impl RuntimeMonitor {
-    pub fn new(n_edges: usize) -> Self {
-        RuntimeMonitor {
-            cloud_inflight: 0,
-            cloud_queue: 0,
-            edge_busy_until: vec![0.0; n_edges],
-            job_queue_len: 0,
-            congestion: 1.0,
-            edge_rate_correction: 1.0,
-        }
-    }
-
-    /// Earliest time any edge device becomes idle.
-    pub fn next_idle_edge(&self, now: SimTime) -> SimTime {
-        self.edge_busy_until
-            .iter()
-            .cloned()
-            .fold(f64::INFINITY, f64::min)
-            .max(now)
-    }
-
-    pub fn idle_edges(&self, now: SimTime) -> usize {
-        self.edge_busy_until.iter().filter(|&&t| t <= now).count()
-    }
-
-    /// Update the EWMA rate correction with an observed/predicted ratio.
-    pub fn observe_edge_rate(&mut self, ratio: f64) {
-        const ALPHA: f64 = 0.2;
-        self.edge_rate_correction =
-            (1.0 - ALPHA) * self.edge_rate_correction + ALPHA * ratio.clamp(0.25, 4.0);
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,23 +132,5 @@ mod tests {
         // a 7B SLM on a Jetson is slower per token than a 72B on 4xA100+vLLM,
         // but within ~2x (the regime where progressive inference pays off).
         assert!(c > 0.3 && c < 10.0, "c = {c}");
-    }
-
-    #[test]
-    fn monitor_idle_tracking() {
-        let mut mon = RuntimeMonitor::new(3);
-        mon.edge_busy_until = vec![5.0, 1.0, 9.0];
-        assert_eq!(mon.idle_edges(2.0), 1);
-        assert_eq!(mon.next_idle_edge(0.0), 1.0);
-        assert_eq!(mon.next_idle_edge(6.0), 6.0);
-    }
-
-    #[test]
-    fn ewma_bounded() {
-        let mut mon = RuntimeMonitor::new(1);
-        for _ in 0..100 {
-            mon.observe_edge_rate(100.0); // clamped to 4.0
-        }
-        assert!(mon.edge_rate_correction <= 4.0);
     }
 }

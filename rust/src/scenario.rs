@@ -11,6 +11,7 @@ use crate::coordinator::backend::{
 };
 use crate::coordinator::{EngineCfg, RunError};
 use crate::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use crate::costmodel::{CalibMode, CalibState, CalibStore};
 use crate::corpus::Corpus;
 use crate::fleet::{Fleet, FleetCfg};
 use crate::metrics::{RequestTrace, RunMetrics};
@@ -44,6 +45,9 @@ pub struct Env {
     pub real: bool,
     cache: Option<Arc<SharedMemoCache>>,
     snapshot: Option<SnapshotState>,
+    /// `PICE_CALIB_PATH` cost-model calibration store (same artifact stamp
+    /// as the memo snapshot). Loaded once here, saved once on drop.
+    calib: Option<CalibStore>,
     replica: Arc<ReplicaFactory>,
     /// `PICE_WORKERS` when the user set it explicitly. Sweep scenarios
     /// honor an explicit worker count (each scenario's backend becomes its
@@ -73,6 +77,11 @@ impl Env {
     /// * `PICE_MEMO_PATH=path` — persist the shared cache to a
     ///   stamp-guarded snapshot at `path`, so separate bench processes
     ///   share one cache (see PERF.md §Persistent cache).
+    /// * `PICE_CALIB_PATH=path` — persist learned cost-model calibration
+    ///   to a stamp-guarded store at `path`; `--calibrate warm` /
+    ///   [`Env::apply_calib`] warm-start from it (PERF.md §Calibrated cost
+    ///   model). Calibration *knobs* (`PICE_CALIB_*`) are overlaid by the
+    ///   CLI via [`crate::costmodel::CalibCfg::overlay_env`], not here.
     pub fn load() -> Result<Env, String> {
         let art = crate::artifacts_dir();
         let force_surrogate = std::env::var("PICE_BACKEND").as_deref() == Ok("surrogate");
@@ -121,6 +130,10 @@ impl Env {
             (Some(c), Some(p)) => Some(load_snapshot(c, p, &stamp)),
             _ => None,
         };
+        let calib = std::env::var("PICE_CALIB_PATH")
+            .ok()
+            .filter(|p| !p.is_empty())
+            .map(|p| CalibStore::load(p, &stamp));
         // The sequential backend stack: (memo over) parallel pool or the
         // probe replica. Sweep scenarios build their own stacks over the
         // same shared cache — see run_sweep.
@@ -149,6 +162,7 @@ impl Env {
             real,
             cache,
             snapshot,
+            calib,
             replica,
             explicit_workers,
             next_owner: AtomicU32::new(1),
@@ -179,6 +193,49 @@ impl Env {
         if let (Some(cache), Some(snap)) = (&self.cache, &mut self.snapshot) {
             if snap.dirty(cache) {
                 snap.save(cache)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply a calibration mode to a config: `Warm` additionally seeds the
+    /// model from the `PICE_CALIB_PATH` store's entry for this config's
+    /// shape ([`EngineCfg::calib_key`]) — a missing entry (or no store)
+    /// degrades to a cold calibrated start, never an error.
+    pub fn apply_calib(&self, cfg: &mut EngineCfg, mode: CalibMode) {
+        cfg.calib.mode = mode;
+        cfg.calib.warm = match mode {
+            CalibMode::Warm => self.calib_warm(cfg),
+            _ => None,
+        };
+    }
+
+    /// Warm-start state stored for this config's shape, if any.
+    pub fn calib_warm(&self, cfg: &EngineCfg) -> Option<CalibState> {
+        self.calib.as_ref().and_then(|s| s.get(&cfg.calib_key()))
+    }
+
+    /// Deposit an end-of-run calibration state under `key` (no-op when
+    /// persistence is off or the engine learned nothing — `state` is
+    /// `None` on static models).
+    pub fn calib_record(&mut self, key: &str, state: Option<CalibState>) {
+        if let (Some(store), Some(st)) = (&mut self.calib, state) {
+            store.put(key, st);
+        }
+    }
+
+    /// Calibration entries restored from the `PICE_CALIB_PATH` store at
+    /// load (None when calibration persistence is off).
+    pub fn calib_restored(&self) -> Option<usize> {
+        self.calib.as_ref().map(CalibStore::restored_entries)
+    }
+
+    /// Write the calibration store back, if persistence is on and new
+    /// state was deposited. Called automatically on drop.
+    pub fn save_calib(&mut self) -> Result<(), String> {
+        if let Some(store) = &mut self.calib {
+            if store.dirty() {
+                store.save()?;
             }
         }
         Ok(())
@@ -362,6 +419,7 @@ impl Env {
 impl Drop for Env {
     fn drop(&mut self) {
         let _ = self.save_cache();
+        let _ = self.save_calib();
     }
 }
 

@@ -80,10 +80,11 @@ pub struct ServeCfg {
     /// optional per-request SLO deadline (seconds, end-to-end): a
     /// submission is rejected up-front with a terminal
     /// `Rejected{reason: "infeasible: …"}` when the engine's current
-    /// backlog estimate ([`Engine::backlog_estimate_s`] — Eq. 2 backlog
-    /// cost of the queued expansion jobs plus one sketch transfer on the
-    /// live link) already exceeds it. `None` (the default) admits purely by
-    /// `max_inflight`, exactly the pre-SLO behavior.
+    /// backlog estimate ([`Engine::backlog_estimate_s`] — the cost model's
+    /// Eq. 2 backlog over the queued expansion jobs plus one sketch
+    /// transfer on the live link, memoized per engine event) already
+    /// exceeds it. `None` (the default) admits purely by `max_inflight`,
+    /// exactly the pre-SLO behavior.
     pub deadline_s: Option<SimTime>,
 }
 
@@ -189,6 +190,22 @@ impl<'a> ServeCore<'a> {
         match self {
             ServeCore::Engine(e) => e.take_traces(),
             ServeCore::Fleet(f) => f.take_traces(),
+        }
+    }
+
+    fn calib_summaries(&self) -> Vec<crate::costmodel::CalibSummary> {
+        match self {
+            ServeCore::Engine(e) => vec![e.calib_summary()],
+            ServeCore::Fleet(f) => f.calib_summaries(),
+        }
+    }
+
+    fn calib_states(&self) -> Vec<(String, Option<crate::costmodel::CalibState>)> {
+        match self {
+            ServeCore::Engine(e) => vec![(e.calib_key(), e.calib_state())],
+            ServeCore::Fleet(f) => (0..f.n_shards())
+                .map(|s| (f.shard(s).calib_key(), f.shard(s).calib_state()))
+                .collect(),
         }
     }
 }
@@ -413,6 +430,19 @@ impl<'a> PiceService<'a> {
     /// True when the engine has no scheduled work left.
     pub fn idle(&self) -> bool {
         self.core.is_idle()
+    }
+
+    /// One cost-model calibration summary per underlying engine — a single
+    /// entry over an engine core, one per shard (shard order) over a fleet.
+    pub fn calib_summaries(&self) -> Vec<crate::costmodel::CalibSummary> {
+        self.core.calib_summaries()
+    }
+
+    /// Per-engine `(calibration key, learned state)` pairs — what a warm
+    /// shutdown persists. `None` states (static model / nothing learned)
+    /// are for the caller to skip.
+    pub fn calib_states(&self) -> Vec<(String, Option<crate::costmodel::CalibState>)> {
+        self.core.calib_states()
     }
 
     /// Finish serving: drain the engine and return the completed traces,

@@ -1,0 +1,358 @@
+//! The cost-model layer's contract (see `costmodel/mod.rs`):
+//!
+//! 1. **Null calibration is the static model.** A `Calibrated` model with
+//!    its corrections frozen (`rate_alpha` 0, `min_samples` unreachable)
+//!    turns the whole observation machinery on yet decides bit-identically
+//!    to the default `StaticFit`, across the fig6 variant grid, the fig13
+//!    queue-capacity grid, and the dynamics presets. This is the
+//!    refactor's freeze guard: since calibration-off routes through the
+//!    same `CostModel` trait, equality here pins the static default.
+//! 2. **Calibrated stays deterministic.** The model learns only from its
+//!    own engine's event stream, so calibrated runs are bit-identical
+//!    across 1/2/4 sweep threads and open vs closed loop — including the
+//!    learned state itself.
+//! 3. **Warm-start round-trip.** An end-of-run state survives
+//!    `CalibStore` save/load bit-exactly (f64s persist as bit patterns),
+//!    and a warm run seeded from disk decides identically to one seeded
+//!    from the in-memory donor state.
+//! 4. **Stale stamps cold-start.** A snapshot written under a different
+//!    corpus/registry stamp is never applied, but survives as a foreign
+//!    section across saves.
+//! 5. **Router == engine.** Fleet least-loaded placement reads the shard
+//!    engine's own memoized `backlog_estimate_s`: at every poll point the
+//!    router sees exactly the number the shard's admission path uses, the
+//!    estimate is stable across repeated polls, and the request lands on
+//!    the shard the router quoted.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pice::baselines;
+use pice::cluster::DeviceSpec;
+use pice::coordinator::backend::{SurrogateBackend, TextBackend};
+use pice::coordinator::{Engine, EngineCfg};
+use pice::corpus::synth::{synth_corpus, synth_tokenizer};
+use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use pice::corpus::Corpus;
+use pice::costmodel::{CalibMode, CalibState, CalibStore};
+use pice::dynamics::DynamicsSpec;
+use pice::fleet::{shard_cfg, Fleet, Placement};
+use pice::metrics::RequestTrace;
+use pice::models::Registry;
+use pice::serve::{PiceService, ServeCfg};
+use pice::sweep::{SweepRunner, SweepScenario};
+use pice::tokenizer::Tokenizer;
+
+const MODEL: &str = "llama70b-sim";
+
+fn setup() -> (Arc<Corpus>, Tokenizer, Registry) {
+    let tok = synth_tokenizer();
+    let corpus = Arc::new(synth_corpus(&tok, 20, 42));
+    (corpus, tok, Registry::builtin())
+}
+
+/// §V-B's operating point, same formula as `Env::paper_rpm`.
+fn paper_rpm(reg: &Registry) -> f64 {
+    let info = reg.get(MODEL).expect("model");
+    let cloud = DeviceSpec::a100_cloud("c");
+    1.5 * cloud.max_batch(info, 1000) as f64
+}
+
+fn workload(
+    corpus: &Arc<Corpus>,
+    rpm: f64,
+    n: usize,
+    arrival: Arrival,
+    seed: u64,
+) -> Arc<Workload> {
+    Arc::new(Workload::generate(
+        corpus,
+        WorkloadSpec { rpm, n_requests: n, arrival, categories: vec![], seed },
+    ))
+}
+
+/// Same engine shape, calibration learning.
+fn calibrated(mut cfg: EngineCfg) -> EngineCfg {
+    cfg.calib.mode = CalibMode::On;
+    cfg
+}
+
+/// The non-tautological freeze shape: the `Calibrated` model (observation
+/// machinery fully wired) with every correction frozen at its identity.
+fn frozen(mut cfg: EngineCfg) -> EngineCfg {
+    cfg.calib.mode = CalibMode::On;
+    cfg.calib.rate_alpha = 0.0;
+    cfg.calib.min_samples = usize::MAX;
+    cfg
+}
+
+/// Closed-loop run; returns the traces and the end-of-run calibration
+/// state (None for the static model).
+fn run_closed(
+    cfg: &EngineCfg,
+    wl: &Workload,
+    corpus: &Arc<Corpus>,
+    tok: &Tokenizer,
+    reg: &Registry,
+) -> (Vec<RequestTrace>, Option<CalibState>) {
+    let mut backend = SurrogateBackend::new(corpus.clone(), tok, reg, 9);
+    let mut e = Engine::new(cfg.clone(), corpus.clone(), tok, reg, &mut backend).expect("engine");
+    let traces = e.run(wl).expect("run");
+    let state = e.calib_state();
+    (traces, state)
+}
+
+fn assert_traces_identical(label: &str, a: &[RequestTrace], b: &[RequestTrace]) {
+    assert_eq!(a.len(), b.len(), "{label}: trace count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(format!("{x:?}"), format!("{y:?}"), "{label}: trace rid={}", x.rid);
+    }
+}
+
+/// The fig6 variant grid (seed 13), the fig13 queue-capacity grid
+/// (seed 19, 1.3x load), and the dynamics presets on bursty arrivals
+/// (seed 29) — the scenario families every bench freezes on.
+fn scenario_families(
+    reg: &Registry,
+    corpus: &Arc<Corpus>,
+) -> Vec<(String, EngineCfg, Arc<Workload>)> {
+    let rpm = paper_rpm(reg);
+    let mut out = Vec::new();
+    let wl6 = workload(corpus, rpm, 36, Arrival::Poisson, 13);
+    let mut stat = baselines::pice(MODEL);
+    stat.scheduler.static_mode = true;
+    out.push(("fig6/Cloud-only".into(), baselines::cloud_only(MODEL), wl6.clone()));
+    out.push(("fig6/Routing".into(), baselines::routing(MODEL), wl6.clone()));
+    out.push(("fig6/PICE-static".into(), stat, wl6.clone()));
+    out.push(("fig6/PICE-dynamic".into(), baselines::pice(MODEL), wl6));
+    let wl13 = workload(corpus, rpm * 1.3, 30, Arrival::Poisson, 19);
+    for cap in [1usize, 4, 16] {
+        let mut cfg = baselines::pice(MODEL);
+        cfg.queue_cap = cap;
+        out.push((format!("fig13/cap{cap}"), cfg, wl13.clone()));
+    }
+    let wld = workload(
+        corpus,
+        rpm,
+        30,
+        Arrival::BurstyPoisson { burst_factor: 4.0, burst_len: 5 },
+        29,
+    );
+    for p in ["flaky-wan", "edge-churn"] {
+        let cfg = baselines::pice(MODEL).with_dynamics(DynamicsSpec::preset(p).expect("preset"));
+        out.push((format!("dyn/{p}"), cfg, wld.clone()));
+    }
+    out
+}
+
+#[test]
+fn null_calibration_is_bit_identical_to_calibration_off() {
+    let (corpus, tok, reg) = setup();
+    for (name, cfg, wl) in scenario_families(&reg, &corpus) {
+        let (off_traces, off_state) = run_closed(&cfg, &wl, &corpus, &tok, &reg);
+        let (nul_traces, nul_state) = run_closed(&frozen(cfg), &wl, &corpus, &tok, &reg);
+        // the frozen run really did build the Calibrated model (it has
+        // persistable state); the off run really is static
+        assert!(off_state.is_none(), "{name}: static model leaked a state");
+        assert!(nul_state.is_some(), "{name}: frozen run was not Calibrated");
+        assert_traces_identical(&name, &off_traces, &nul_traces);
+    }
+}
+
+#[test]
+fn calibrated_sweep_is_bit_identical_across_thread_counts() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let wl = workload(
+        &corpus,
+        paper_rpm(&reg),
+        24,
+        Arrival::BurstyPoisson { burst_factor: 3.0, burst_len: 6 },
+        5,
+    );
+    let flaky = DynamicsSpec::preset("flaky-wan").expect("preset");
+    let churn = DynamicsSpec::preset("edge-churn").expect("preset");
+    let scenarios = vec![
+        SweepScenario::new("calib", calibrated(baselines::pice(MODEL)), wl.clone()),
+        SweepScenario::new(
+            "calib-flaky",
+            calibrated(baselines::pice(MODEL).with_dynamics(flaky)),
+            wl.clone(),
+        ),
+        SweepScenario::new(
+            "calib-churn",
+            calibrated(baselines::pice(MODEL).with_dynamics(churn)),
+            wl.clone(),
+        ),
+        SweepScenario::new("calib-routing", calibrated(baselines::routing(MODEL)), wl),
+    ];
+    let reference: Vec<Vec<RequestTrace>> = scenarios
+        .iter()
+        .map(|sc| run_closed(&sc.cfg, &sc.workload, &corpus, &tok, &reg).0)
+        .collect();
+    for threads in [1usize, 2, 4] {
+        let got = SweepRunner::new(threads).run(&scenarios, &corpus, &tok, &reg, |_| {
+            Box::new(base.clone()) as Box<dyn TextBackend>
+        });
+        for ((sc, want), res) in scenarios.iter().zip(&reference).zip(got) {
+            let (_, traces) = res.expect("scenario ok");
+            assert_traces_identical(&format!("{} @ {threads} threads", sc.label), want, &traces);
+        }
+    }
+}
+
+#[test]
+fn calibrated_open_loop_matches_closed_loop() {
+    let (corpus, tok, reg) = setup();
+    let cfg = calibrated(
+        baselines::pice(MODEL).with_dynamics(DynamicsSpec::preset("flaky-wan").expect("preset")),
+    );
+    let wl = workload(
+        &corpus,
+        paper_rpm(&reg),
+        30,
+        Arrival::BurstyPoisson { burst_factor: 4.0, burst_len: 5 },
+        29,
+    );
+    let (closed_traces, closed_state) = run_closed(&cfg, &wl, &corpus, &tok, &reg);
+    let mut backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let engine =
+        Engine::new(cfg.clone(), corpus.clone(), &tok, &reg, &mut backend).expect("engine");
+    let mut svc =
+        PiceService::new(engine, ServeCfg { max_inflight: usize::MAX, deadline_s: None });
+    for r in &wl.requests {
+        svc.pump_until(r.arrival_s).expect("pump");
+        svc.submit(r.question_id, r.arrival_s).expect("submit");
+    }
+    svc.pump_all().expect("pump_all");
+    let open_state = svc.calib_states().remove(0).1;
+    let open_traces = svc.finish().expect("finish");
+    assert_traces_identical("open vs closed", &closed_traces, &open_traces);
+    // the learned state itself is part of the determinism contract
+    assert_eq!(closed_state, open_state, "open and closed loop learned different states");
+    assert!(closed_state.expect("calibrated state").cloud_samples > 0, "nothing was learned");
+}
+
+fn tmp_store(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pice_calib_{}_{name}.json", std::process::id()))
+}
+
+#[test]
+fn warm_state_round_trips_through_the_store() {
+    let (corpus, tok, reg) = setup();
+    let base_cfg =
+        baselines::pice(MODEL).with_dynamics(DynamicsSpec::preset("flaky-wan").expect("preset"));
+    let key = base_cfg.calib_key();
+    let wl = workload(
+        &corpus,
+        paper_rpm(&reg),
+        30,
+        Arrival::BurstyPoisson { burst_factor: 4.0, burst_len: 5 },
+        29,
+    );
+    let (_, donor) = run_closed(&calibrated(base_cfg.clone()), &wl, &corpus, &tok, &reg);
+    let donor = donor.expect("calibrated state");
+    assert!(donor.cloud_samples > 0, "donor learned nothing — the round trip proves nothing");
+
+    let path = tmp_store("warm_roundtrip");
+    let _ = std::fs::remove_file(&path);
+    let mut store = CalibStore::load(&path, "stamp-a");
+    assert_eq!(store.restored_entries(), 0, "cold start restored something");
+    store.put(&key, donor.clone());
+    assert!(store.dirty());
+    store.save().expect("save");
+    let reloaded = CalibStore::load(&path, "stamp-a");
+    assert_eq!(reloaded.restored_entries(), 1);
+    let restored = reloaded.get(&key).expect("state under same stamp");
+    assert_eq!(restored, donor, "state drifted across save/load");
+
+    // a warm run seeded from disk == one seeded from the in-memory donor
+    let warm = |st: &CalibState| {
+        let mut cfg = base_cfg.clone();
+        cfg.calib.mode = CalibMode::Warm;
+        cfg.calib.warm = Some(st.clone());
+        cfg
+    };
+    let (mem_traces, _) = run_closed(&warm(&donor), &wl, &corpus, &tok, &reg);
+    let (disk_traces, _) = run_closed(&warm(&restored), &wl, &corpus, &tok, &reg);
+    assert_traces_identical("warm mem vs disk", &mem_traces, &disk_traces);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn stale_stamps_cold_start_but_are_preserved() {
+    let state = CalibState {
+        n: 3.0,
+        sx: 210.0,
+        sy: 14.0,
+        sxx: 16900.0,
+        sxy: 1120.0,
+        edge_corr: 1.25,
+        transfer_corr: 0.8,
+        parallelism: 2.5,
+        resid_s: 0.4,
+        cloud_samples: 5,
+        edge_samples: 7,
+        transfer_samples: 3,
+    };
+    let path = tmp_store("stale_stamp");
+    let _ = std::fs::remove_file(&path);
+    let mut store = CalibStore::load(&path, "stamp-a");
+    store.put("pice/e4/pice", state.clone());
+    store.save().expect("save");
+
+    // a different stamp never applies the snapshot...
+    let mut other = CalibStore::load(&path, "stamp-b");
+    assert_eq!(other.restored_entries(), 0, "stale stamp was applied");
+    assert!(other.get("pice/e4/pice").is_none());
+    // ...and saving under it keeps stamp-a's section intact on disk
+    let mut newer = state.clone();
+    newer.cloud_samples = 99;
+    other.put("pice/e4/pice", newer);
+    other.save().expect("save under new stamp");
+    let back = CalibStore::load(&path, "stamp-a");
+    assert_eq!(back.get("pice/e4/pice"), Some(state), "foreign section was dropped");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn least_loaded_router_reads_the_shards_own_estimate() {
+    let (corpus, tok, reg) = setup();
+    let base = calibrated(baselines::pice(MODEL));
+    let wl = workload(&corpus, paper_rpm(&reg), 32, Arrival::Poisson, 7);
+    let backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let shards = (0..4)
+        .map(|i| {
+            Engine::new_owned(
+                shard_cfg(&base, i),
+                corpus.clone(),
+                &tok,
+                &reg,
+                Box::new(backend.clone()),
+            )
+            .expect("shard")
+        })
+        .collect();
+    let mut fleet = Fleet::new(shards, Placement::LeastLoaded);
+    for r in &wl.requests {
+        fleet.pump_until(r.arrival_s).expect("pump");
+        let key = r.rid as u64;
+        let quoted = fleet.backlog_estimate_for(key);
+        let s = fleet.shard_for(key);
+        let engine_est = fleet.shard_mut(s).backlog_estimate_s();
+        assert_eq!(
+            quoted.to_bits(),
+            engine_est.to_bits(),
+            "rid {}: router quoted {quoted} but shard {s} computes {engine_est}",
+            r.rid
+        );
+        // memoized: polling again without pumping is bit-stable
+        assert_eq!(quoted.to_bits(), fleet.backlog_estimate_for(key).to_bits());
+        let global = fleet.submit(r.question_id, r.arrival_s, key).expect("submit");
+        assert_eq!(fleet.route_of(global), s, "request landed off the quoted shard");
+    }
+    fleet.pump_all().expect("drain");
+    assert_eq!(fleet.take_traces().len(), wl.requests.len());
+    // every shard owns an independent calibrated model
+    assert_eq!(fleet.calib_summaries().len(), 4);
+}

@@ -6,6 +6,7 @@ use pice::coordinator::dispatch::{Job, MultiListQueue};
 use pice::coordinator::scheduler::{CloudScheduler, Mode, SchedInput};
 use pice::coordinator::selection::select_model;
 use pice::coordinator::slo::SloPolicy;
+use pice::costmodel::Estimates;
 use pice::ensemble::{confidence, select, Candidate, ConfidenceWeights};
 use pice::models::Registry;
 use pice::network::TransferModel;
@@ -220,20 +221,22 @@ fn prop_scheduler_respects_hard_constraint() {
         let s = CloudScheduler::default();
         let inp = SchedInput {
             predicted_len: 20 + rng.below(200),
+            n_edges: 1 + rng.below(8),
+            best_slm_capability: rng.range(40.0, 90.0),
+        };
+        let est = Estimates {
             f_cloud: LatencyFit { a: rng.range(0.0, 0.5), b: rng.range(0.01, 0.1) },
             cost_coeff: rng.range(0.1, 3.0),
             transfer: TransferModel { base_s: 0.02, per_token_s: 1e-6 },
             backlog_s: rng.range(0.0, 30.0),
-            n_edges: 1 + rng.below(8),
-            best_slm_capability: rng.range(40.0, 90.0),
             parallel_hint: rng.range(1.0, 8.0),
         };
-        let d = s.decide(&inp);
+        let d = s.decide(&inp, &est);
         if d.mode == Mode::Progressive {
             // the chosen level must satisfy Eq. 2
-            let budget = inp.f_cloud.eval(inp.predicted_len) * s.policy.latency_slack;
+            let budget = est.f_cloud.eval(inp.predicted_len) * s.policy.latency_slack;
             assert!(
-                s.e2e_estimate(&inp, d.level) <= budget + 1e-9,
+                s.e2e_estimate(&inp, &est, d.level) <= budget + 1e-9,
                 "picked an infeasible level"
             );
         }
