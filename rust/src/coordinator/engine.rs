@@ -54,7 +54,7 @@
 //! open/closed-loop driving, and fleet shard layouts — and the static
 //! default reproduces the pre-costmodel arithmetic bit for bit.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use super::backend::{GenRequest, TextBackend};
@@ -120,6 +120,80 @@ pub struct EngineCfg {
     /// default), on (online re-fit from this run's event stream), or warm
     /// (on + seeded from persisted state). See [`crate::costmodel`].
     pub calib: CalibCfg,
+    /// tail tolerance: hedged expansion dispatch + backoff retries.
+    /// Default = off, bit-identical to an engine without the machinery.
+    pub tail: TailCfg,
+}
+
+/// Tail-tolerance knobs: the hedged-dispatch watchdog and the blackout
+/// backoff-retry policy. All timers are pure sim time, so hedge decisions
+/// stay bit-identical across sweep threads and open vs closed loop.
+#[derive(Clone, Debug)]
+pub struct TailCfg {
+    /// Hedge quantile `q` in (0,1): a dispatched expansion pull arms a
+    /// watchdog at `slot_timeout_mult x (-ln(1-q)) x (Eq. 2 edge estimate)`
+    /// — the q-th quantile of an exponential service tail with the cost
+    /// model's estimate as its mean. On expiry the pull is hedged: slots
+    /// already past their estimated completion are salvaged (the original
+    /// dispatch won them), the straggler's remaining in-flight work is
+    /// discarded via the per-edge epoch bump, and the unfinished slots are
+    /// speculatively re-dispatched to another up edge or the cloud.
+    /// `None` = hedging off (the default).
+    pub hedge_quantile: Option<f64>,
+    /// multiplier on the quantile-scaled timeout (tuning headroom)
+    pub slot_timeout_mult: f64,
+    /// max watchdog firings per request — bounds duplicated work
+    pub hedge_budget: usize,
+    /// base delay of the capped exponential backoff a transiently-displaced
+    /// job waits through when every edge is down but recovers are pending
+    pub backoff_base_s: f64,
+    /// retry attempts before the backoff escalates to a cloud rescue
+    /// (bounding how long a request can wait out a blackout)
+    pub backoff_max_retries: usize,
+}
+
+impl Default for TailCfg {
+    fn default() -> Self {
+        TailCfg {
+            hedge_quantile: None,
+            slot_timeout_mult: 1.0,
+            hedge_budget: 2,
+            backoff_base_s: 2.0,
+            backoff_max_retries: 3,
+        }
+    }
+}
+
+impl TailCfg {
+    /// Hedging (and with it the whole tail-tolerance layer) enabled?
+    pub fn on(&self) -> bool {
+        self.hedge_quantile.is_some()
+    }
+
+    /// Strict validation, mirroring [`CalibCfg::validate`].
+    pub fn validate(&self) -> Result<(), String> {
+        if let Some(q) = self.hedge_quantile {
+            if !(q.is_finite() && q > 0.0 && q < 1.0) {
+                return Err(format!("hedge quantile must be in (0, 1), got {q}"));
+            }
+        }
+        if !(self.slot_timeout_mult.is_finite() && self.slot_timeout_mult > 0.0) {
+            return Err(format!(
+                "slot-timeout-mult must be positive and finite, got {}",
+                self.slot_timeout_mult
+            ));
+        }
+        if self.hedge_budget == 0 {
+            return Err("hedge budget must be >= 1".into());
+        }
+        if !(self.backoff_base_s.is_finite() && self.backoff_base_s > 0.0) {
+            return Err(format!("backoff base must be positive, got {}", self.backoff_base_s));
+        }
+        if self.backoff_max_retries == 0 {
+            return Err("backoff retries must be >= 1".into());
+        }
+        Ok(())
+    }
 }
 
 impl EngineCfg {
@@ -141,6 +215,7 @@ impl EngineCfg {
             sketch_keep_frac_override: None,
             dynamics: DynamicsSpec::default(),
             calib: CalibCfg::default(),
+            tail: TailCfg::default(),
         }
     }
 
@@ -200,6 +275,13 @@ enum Ev {
     /// environment-dynamics fault event (scheduled up-front from the
     /// deterministic [`crate::dynamics::FaultSpec`] timeline)
     Fault { eid: usize, fault: EdgeFault },
+    /// hedged-dispatch watchdog: armed when an expansion pull's realized
+    /// duration exceeds the tail-quantile of its Eq. 2 estimate. Carries
+    /// the launching epoch — a crash before expiry makes it lapse stale.
+    HedgeFire { eid: usize, epoch: u64 },
+    /// capped exponential backoff retry of a job displaced by a transient
+    /// all-edges-down window; the job itself waits in `Core::backoff_jobs`
+    BackoffRetry { rid: usize, attempt: usize },
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -295,6 +377,15 @@ struct Pending {
     /// (dedups the rescue when a primary job and its ensemble replicas are
     /// drained to the cloud in one blackout sweep)
     cloud_rescue: bool,
+    /// watchdog firings that hedged this request's pulls (tail tolerance;
+    /// capped by `TailCfg::hedge_budget`)
+    hedges: usize,
+    /// expansion sentence-slots speculatively re-dispatched by those hedges
+    hedged_slots: usize,
+    /// "queue full: retry shortly" deferrals this request ate before its
+    /// expansion job entered the dispatch queue (bounded — see
+    /// `ev_job_arrive`; surfaces queue-pressure starvation in traces)
+    requeue_retries: usize,
     done: bool,
 }
 
@@ -328,7 +419,6 @@ struct Core {
     /// deadline checks re-run Eq. 2 only when the loop actually moved
     backlog_memo: Option<(u64, SimTime)>,
     jobq: MultiListQueue,
-    enqueue_attempts: HashMap<usize, usize>,
     /// edge-only feasibility verdict, precomputed (the paper places the
     /// *cloud* model on edges); Some(msg) = every submit/run fails with OOM
     edge_oom: Option<String>,
@@ -338,6 +428,19 @@ struct Core {
     /// fault injection configured (gates the in-flight tracking so the
     /// static world stays allocation-free on the pull path)
     faults_on: bool,
+    /// tail tolerance configured (`cfg.tail.on()`): arms hedge watchdogs
+    /// and routes transient displacements through backoff retries
+    tail_on: bool,
+    /// per-pull in-flight slot tracking needed — by crash salvage
+    /// (`faults_on`) or by the hedge watchdog (`tail_on`)
+    track_inflight: bool,
+    /// jobs waiting out a backoff delay (tail tolerance; the paired
+    /// `Ev::BackoffRetry` re-attempts dispatch). A plain Vec: entries are
+    /// matched by rid in schedule order, deterministically.
+    backoff_jobs: Vec<Job>,
+    /// requests closed on THIS engine without a terminal event because the
+    /// fleet re-dispatched them to a healthy shard (see `evict_displaced`)
+    evicted: usize,
     /// edges currently alive
     up_edges: usize,
     /// Recover events still unprocessed in the timeline — the "is help
@@ -455,10 +558,13 @@ fn make_core(
         cost_model: costmodel::build(&cfg.calib, f_cloud, cost_coeff),
         backlog_memo: None,
         jobq: MultiListQueue::new(bounds, cfg.queue_cap),
-        enqueue_attempts: HashMap::new(),
         edge_oom,
         events: None,
         faults_on: cfg.dynamics.faults.any(),
+        tail_on: cfg.tail.on(),
+        track_inflight: cfg.dynamics.faults.any() || cfg.tail.on(),
+        backoff_jobs: Vec::new(),
+        evicted: 0,
         up_edges: n_edges,
         pending_recovers,
         parked_jobs: Vec::new(),
@@ -535,6 +641,7 @@ impl<'a> Engine<'a> {
         backend: BackendSlot<'a>,
     ) -> Result<Self, RunError> {
         cfg.calib.validate().map_err(RunError::Backend)?;
+        cfg.tail.validate().map_err(RunError::Backend)?;
         let cluster = Cluster::testbed(cfg.n_edges);
         let cloud_info = registry
             .get(&cfg.cloud_model)
@@ -616,6 +723,14 @@ impl<'a> Engine<'a> {
     /// least-loaded tiebreak.
     pub fn completed(&self) -> usize {
         self.core.completed
+    }
+
+    /// Requests closed on this engine without a terminal event because the
+    /// fleet moved them to another shard (see [`Engine::evict_displaced`]).
+    /// The router's in-flight depth is `submitted() - completed() -
+    /// evicted()`.
+    pub fn evicted(&self) -> usize {
+        self.core.evicted
     }
 
     /// Monotone count of events processed by [`Engine::pump_one`]. Advances
@@ -701,6 +816,9 @@ impl<'a> Engine<'a> {
             retried_slots: 0,
             salvaged_slots: 0,
             cloud_rescue: false,
+            hedges: 0,
+            hedged_slots: 0,
+            requeue_retries: 0,
             done: false,
         });
         self.core.traces.push(None);
@@ -724,6 +842,8 @@ impl<'a> Engine<'a> {
             Ev::EdgePull { eid } => self.ev_edge_pull(now, eid)?,
             Ev::EdgeDone { eid, epoch, work } => self.ev_edge_done(now, eid, epoch, work),
             Ev::Fault { eid, fault } => self.ev_fault(now, eid, fault),
+            Ev::HedgeFire { eid, epoch } => self.ev_hedge_fire(now, eid, epoch),
+            Ev::BackoffRetry { rid, attempt } => self.ev_backoff_retry(now, rid, attempt),
         }
         Ok(true)
     }
@@ -1032,11 +1152,19 @@ impl<'a> Engine<'a> {
     }
 
     fn ev_job_arrive(&mut self, now: SimTime, rid: usize) {
-        let attempts = self.core.enqueue_attempts.get(&rid).copied().unwrap_or(0);
+        // a fleet may have evicted this request to another shard while its
+        // deferral was pending — it must not re-enter here
+        if self.core.pend[rid].done {
+            return;
+        }
+        let attempts = self.core.pend[rid].requeue_retries;
         if self.core.jobq.len() >= self.cfg.queue_cap && attempts < 5 {
-            // queue full: retry shortly instead of degrading (bounded so
-            // latency can't grow unboundedly)
-            self.core.enqueue_attempts.insert(rid, attempts + 1);
+            // queue full: retry shortly instead of degrading. Bounded so
+            // latency can't grow unboundedly: after 5 deferrals the request
+            // proceeds regardless and, if the queue is still full, takes
+            // the sketch-fallback terminal below — saturation degrades
+            // answers, it never silently drops a request.
+            self.core.pend[rid].requeue_retries = attempts + 1;
             self.core.q.schedule_in(2.0, Ev::JobArriveAtQueue { rid });
             return;
         }
@@ -1065,7 +1193,11 @@ impl<'a> Engine<'a> {
             // survivors too, not only cloud rescues.
             self.core.pend[rid].failovers += 1;
             if self.core.pending_recovers > 0 {
-                self.core.parked_jobs.push(job);
+                if self.core.tail_on {
+                    self.backoff_displaced(now, job, 0);
+                } else {
+                    self.core.parked_jobs.push(job);
+                }
             } else {
                 self.fail_to_cloud(now, rid);
             }
@@ -1130,7 +1262,7 @@ impl<'a> Engine<'a> {
                     n_sim,
                 )],
             };
-            if self.core.faults_on {
+            if self.core.track_inflight {
                 self.core.edges[eid].inflight = EdgeInflight::Full(rid);
             }
             let epoch = self.core.edges[eid].epoch;
@@ -1292,7 +1424,8 @@ impl<'a> Engine<'a> {
         let mut outs = self.backend.as_mut().generate_batch(&reqs).into_iter();
         let mut items = Vec::new();
         let mut real_lens_per_job: Vec<Vec<usize>> = Vec::with_capacity(batch.len());
-        // fresh outputs per job, kept for crash salvage (faults only)
+        // fresh outputs per job, kept for crash/hedge salvage (tracked only
+        // when fault injection or hedging needs them)
         let mut fresh_outs_per_job: Vec<Vec<(usize, SalvagedSlot)>> =
             Vec::with_capacity(batch.len());
         for (job, fresh) in batch.iter().zip(&fresh_idx) {
@@ -1313,7 +1446,7 @@ impl<'a> Engine<'a> {
                 let n_sim = (toks.len() as f64 * scale) as usize;
                 real_lens[k] = n_sim;
                 let slot = SalvagedSlot { tokens: toks, logps: out.logps, sim_tokens: n_sim };
-                if self.core.faults_on {
+                if self.core.track_inflight {
                     fresh_outs.push((si, slot.clone()));
                 }
                 slot_out[si] = Some(slot);
@@ -1363,7 +1496,7 @@ impl<'a> Engine<'a> {
             plans.iter().map(Vec::len).collect::<Vec<_>>(),
             sel.switch_cost_s
         );
-        if self.core.faults_on {
+        if self.core.track_inflight {
             // Retained so a crash can re-enter these slots into dispatch
             // with their sketch context intact (Job clones are Arc bumps).
             // Each fresh slot gets an estimated completion instant — the
@@ -1390,6 +1523,23 @@ impl<'a> Engine<'a> {
         let epoch = self.core.edges[eid].epoch;
         let done = Ev::EdgeDone { eid, epoch, work: EdgeWork { items } };
         self.core.q.schedule(now + total_dur, done);
+        if self.core.tail_on {
+            // Tail-tolerance watchdog: arm a timer at the configured quantile
+            // of Eq. 2's *edge-term estimate* for this pull (the same decision
+            // shape observe_edge grades — c·f(l)/p with the calibrated lane
+            // hint). Modelling pull duration as exponential with that mean,
+            // the q-quantile is −ln(1−q)·est; slot_timeout_mult tightens or
+            // relaxes it. Armed only when this pull will actually overrun the
+            // threshold, so a well-behaved world schedules zero extra events.
+            let est = self.core.cost_model.cost_coeff()
+                * self.core.cost_model.f_cloud().eval(batch[0].expected_len)
+                / self.core.cost_model.parallel_hint().max(1.0);
+            let q = self.cfg.tail.hedge_quantile.unwrap_or(1.0);
+            let timeout = self.cfg.tail.slot_timeout_mult * -(1.0 - q).ln() * est;
+            if timeout.is_finite() && timeout > 0.0 && total_dur > timeout {
+                self.core.q.schedule(now + timeout, Ev::HedgeFire { eid, epoch });
+            }
+        }
         Ok(())
     }
 
@@ -1401,7 +1551,7 @@ impl<'a> Engine<'a> {
             return;
         }
         self.core.edges[eid].busy = false;
-        if self.core.faults_on {
+        if self.core.track_inflight {
             self.core.edges[eid].inflight = EdgeInflight::Idle;
         }
         for (rid, cand, edge_tokens) in work.items {
@@ -1561,6 +1711,12 @@ impl<'a> Engine<'a> {
                     for job in parked {
                         self.fail_to_cloud(now, job.rid);
                     }
+                    // backed-off jobs too: their retry timers will find the
+                    // pool empty and no-op
+                    let backoff: Vec<Job> = std::mem::take(&mut self.core.backoff_jobs);
+                    for job in backoff {
+                        self.fail_to_cloud(now, job.rid);
+                    }
                     let parked_full = std::mem::take(&mut self.core.parked_full);
                     for rid in parked_full {
                         if !self.core.pend[rid].done {
@@ -1653,10 +1809,176 @@ impl<'a> Engine<'a> {
                 self.fallback_finalize_with_sketch(rid, now);
             }
         } else if self.core.pending_recovers > 0 {
-            self.core.parked_jobs.push(job);
+            if self.core.tail_on {
+                // tail tolerance: capped exponential backoff instead of an
+                // open-ended park — see [`Engine::ev_backoff_retry`]
+                self.backoff_displaced(now, job, 0);
+            } else {
+                self.core.parked_jobs.push(job);
+            }
         } else {
             self.fail_to_cloud(now, rid);
         }
+    }
+
+    /// Tail-tolerance alternative to parking a displaced expansion job while
+    /// every edge is down: hold it in the backoff pool and schedule a capped
+    /// exponential retry. A transient blackout then costs roughly one backoff
+    /// step instead of a full wait-for-recover, and an over-long blackout is
+    /// bounded: once the retry cap is hit the cloud answers instead.
+    fn backoff_displaced(&mut self, now: SimTime, job: Job, attempt: usize) {
+        let rid = job.rid;
+        let delay = self.cfg.tail.backoff_base_s * (1u64 << attempt.min(32)) as f64;
+        self.core.backoff_jobs.push(job);
+        self.core.q.schedule(now + delay, Ev::BackoffRetry { rid, attempt });
+    }
+
+    /// A backoff timer fired: retry dispatch of the pooled job. The pool is
+    /// scanned by rid (first match — insertion order is deterministic); an
+    /// absent rid means the job was already drained elsewhere (fleet
+    /// re-dispatch eviction, or a no-recover-coming cloud sweep) and the
+    /// timer is simply stale.
+    fn ev_backoff_retry(&mut self, now: SimTime, rid: usize, attempt: usize) {
+        let Some(pos) = self.core.backoff_jobs.iter().position(|j| j.rid == rid) else {
+            return;
+        };
+        if self.core.pend[rid].done || self.core.pend[rid].cloud_rescue {
+            self.core.backoff_jobs.remove(pos);
+            return;
+        }
+        if self.core.up_edges == 0 {
+            if self.core.pending_recovers > 0 && attempt + 1 < self.cfg.tail.backoff_max_retries {
+                // still blacked out: double the delay, job stays pooled
+                let delay =
+                    self.cfg.tail.backoff_base_s * (1u64 << (attempt + 1).min(32)) as f64;
+                self.core.q.schedule(now + delay, Ev::BackoffRetry { rid, attempt: attempt + 1 });
+            } else {
+                // retry cap hit (or no recover is ever coming): bound the
+                // blackout wait — the cloud serves the full answer
+                self.core.backoff_jobs.remove(pos);
+                self.fail_to_cloud(now, rid);
+            }
+            return;
+        }
+        let mut job = self.core.backoff_jobs.remove(pos);
+        job.enqueued_at = now;
+        if self.core.jobq.push(job) {
+            for eid in 0..self.core.edges.len() {
+                if self.core.edges[eid].up && !self.core.edges[eid].busy {
+                    self.core.q.schedule(now, Ev::EdgePull { eid });
+                }
+            }
+        } else {
+            self.fallback_finalize_with_sketch(rid, now);
+        }
+    }
+
+    /// Tail-tolerance watchdog expiry: a pull armed at dispatch time has
+    /// outrun its quantile timeout. Hedge it — re-enter the still-pending
+    /// slots into dispatch (another up edge picks them up, or the cloud when
+    /// re-queueing is impossible) and invalidate this edge's incarnation so
+    /// the straggling completion is discarded on arrival. First completion
+    /// wins at *slot* granularity: slots the straggler already finished are
+    /// salvaged verbatim, exactly like the crash path, so hedging never
+    /// regenerates done work and never double-counts `salvaged_slots`.
+    fn ev_hedge_fire(&mut self, now: SimTime, eid: usize, epoch: u64) {
+        if epoch != self.core.edges[eid].epoch {
+            // the pull completed (or the edge crashed) before the timer fired
+            return;
+        }
+        let jobs = match &self.core.edges[eid].inflight {
+            EdgeInflight::Expand(jobs) => jobs,
+            _ => return,
+        };
+        // hedge budget: the pull's EdgeDone is indivisible, so duplicate it
+        // only if EVERY live job in the batch still has budget — otherwise
+        // let the straggler finish on its own
+        if !jobs.iter().all(|ij| {
+            let p = &self.core.pend[ij.job.rid];
+            p.done || p.hedges < self.cfg.tail.hedge_budget
+        }) {
+            return;
+        }
+        let jobs = match std::mem::take(&mut self.core.edges[eid].inflight) {
+            EdgeInflight::Expand(jobs) => jobs,
+            _ => unreachable!("checked above"),
+        };
+        // invalidate the incarnation: the straggler's EdgeDone now arrives
+        // stale and is dropped wholesale (same mechanism as a crash)
+        self.core.edges[eid].epoch += 1;
+        self.core.edges[eid].busy = false;
+        for InflightJob { mut job, outs } in jobs {
+            debug_assert_eq!(job.salvaged.len(), job.sentences.len());
+            let mut newly = 0usize;
+            for (si, done_at, slot) in outs {
+                if done_at <= now && job.salvaged[si].is_none() {
+                    job.salvaged[si] = Some(slot);
+                    newly += 1;
+                }
+            }
+            let rid = job.rid;
+            if self.core.pend[rid].done {
+                continue;
+            }
+            if newly > 0 {
+                self.core.pend[rid].salvaged_slots += newly;
+            }
+            self.core.pend[rid].hedges += 1;
+            self.core.pend[rid].hedged_slots += job.unsalvaged();
+            job.enqueued_at = now;
+            if self.core.jobq.push(job) {
+                for e2 in 0..self.core.edges.len() {
+                    if e2 != eid && self.core.edges[e2].up && !self.core.edges[e2].busy {
+                        self.core.q.schedule(now, Ev::EdgePull { eid: e2 });
+                    }
+                }
+            } else {
+                // queue full: the cloud is the hedge target of last resort
+                self.fail_to_cloud(now, rid);
+            }
+        }
+        // the straggler edge goes back to pulling LAST, so an idle peer gets
+        // first claim on the hedged job (the whole point of the hedge)
+        self.core.q.schedule(now, Ev::EdgePull { eid });
+    }
+
+    /// Fleet failover support: drain every request this engine holds in a
+    /// *displaced* state — parked, in backoff, or queued-but-unstarted — so
+    /// a healthy shard can adopt it. Intended for a dead shard (all edges
+    /// down): work already in the cloud path is left alone, it completes
+    /// regardless. Each drained request is closed WITHOUT a terminal event
+    /// (`done` is set, so any late local completion is ignored) and counted
+    /// in [`Engine::evicted`], keeping `submitted − completed − evicted` an
+    /// honest in-flight figure for the fleet router. Returns
+    /// `(local rid, question_id, original arrival)` per evicted request.
+    pub fn evict_displaced(&mut self) -> Vec<(usize, usize, SimTime)> {
+        let mut rids: Vec<usize> = Vec::new();
+        for job in std::mem::take(&mut self.core.parked_jobs) {
+            rids.push(job.rid);
+        }
+        for job in std::mem::take(&mut self.core.backoff_jobs) {
+            rids.push(job.rid);
+        }
+        rids.extend(std::mem::take(&mut self.core.parked_full));
+        loop {
+            let batch = self.core.jobq.pull_batch(usize::MAX);
+            if batch.is_empty() {
+                break;
+            }
+            rids.extend(batch.into_iter().map(|j| j.rid));
+        }
+        let mut out = Vec::new();
+        for rid in rids {
+            let p = &mut self.core.pend[rid];
+            if p.done {
+                // ensemble replicas share a rid — evict a request once
+                continue;
+            }
+            p.done = true;
+            self.core.evicted += 1;
+            out.push((rid, p.question_id, p.arrival));
+        }
+        out
     }
 
     /// Last-resort failover: have the cloud produce the full answer (the
@@ -1739,6 +2061,9 @@ impl<'a> Engine<'a> {
                 failovers: p.failovers,
                 retried_slots: p.retried_slots,
                 salvaged_slots: p.salvaged_slots,
+                requeue_retries: p.requeue_retries,
+                hedges: p.hedges,
+                hedged_slots: p.hedged_slots,
             }
         };
         self.core.traces[rid] = Some(trace);

@@ -14,4 +14,4 @@ pub mod scheduler;
 pub mod selection;
 pub mod slo;
 
-pub use engine::{Engine, EngineCfg, Policy, RunError};
+pub use engine::{Engine, EngineCfg, Policy, RunError, TailCfg};

@@ -74,6 +74,14 @@ pub struct CalibCfg {
     /// cloud samples required before the online re-fit replaces the
     /// offline line
     pub min_samples: usize,
+    /// drift age-out threshold: a *warm-loaded* state is graded against
+    /// every live cloud observation, and a sample counts as off-world when
+    /// `max(obs, pred) / min(obs, pred)` exceeds this ratio (symmetric —
+    /// a stale-fast and a stale-slow line age out alike)
+    pub drift_ratio: f64,
+    /// consecutive off-world samples before the warm state is discarded
+    /// and the model re-learns cold
+    pub drift_samples: usize,
     /// persisted state to seed from under `CalibMode::Warm` (ignored
     /// otherwise)
     pub warm: Option<CalibState>,
@@ -89,6 +97,8 @@ impl Default for CalibCfg {
             clamp_hi: 4.0,
             decay: 0.995,
             min_samples: 16,
+            drift_ratio: 3.0,
+            drift_samples: 8,
             warm: None,
         }
     }
@@ -123,6 +133,12 @@ impl CalibCfg {
                 "calib min_samples must be >= 2 (a line needs two points), got {}",
                 self.min_samples
             ));
+        }
+        if !self.drift_ratio.is_finite() || self.drift_ratio <= 1.0 {
+            return Err(format!("calib drift_ratio must be > 1, got {}", self.drift_ratio));
+        }
+        if self.drift_samples == 0 {
+            return Err("calib drift_samples must be >= 1".into());
         }
         Ok(())
     }
@@ -459,6 +475,12 @@ pub struct Calibrated {
     /// current effective fit — recomputed on each cloud observation, read
     /// on the (much hotter) estimate path
     fit: LatencyFit,
+    /// state arrived via [`Calibrated::load_state`] — arms the drift
+    /// age-out (a cold-learned state is never aged out: it IS this world)
+    warm_loaded: bool,
+    /// consecutive cloud observations off-world by more than
+    /// `cfg.drift_ratio` (see `observe_cloud`)
+    drift_streak: usize,
 }
 
 impl Calibrated {
@@ -483,16 +505,34 @@ impl Calibrated {
                 transfer_samples: 0,
             },
             fit: base,
+            warm_loaded: false,
+            drift_streak: 0,
         }
     }
 
     /// Seed from persisted state (ignores non-finite snapshots defensively;
-    /// the store also refuses to save them).
+    /// the store also refuses to save them). Arms the drift age-out: a
+    /// warm state whose predictions stop matching the live world is
+    /// discarded (see `observe_cloud`).
     pub fn load_state(&mut self, st: &CalibState) {
         if st.is_finite() {
             self.st = st.clone();
+            self.warm_loaded = true;
+            self.drift_streak = 0;
             self.refit();
         }
+    }
+
+    /// Discard all learned state and restart cold (drift age-out): the
+    /// accumulators zero, every correction returns to identity, and the
+    /// effective line falls back to the offline fit until `min_samples`
+    /// fresh observations arrive.
+    fn reset_cold(&mut self) {
+        let fresh = Calibrated::new(self.base, self.base_c, self.cfg.clone());
+        self.st = fresh.st;
+        self.fit = self.base;
+        self.warm_loaded = false;
+        self.drift_streak = 0;
     }
 
     /// Recompute the effective line from the accumulators: activate only
@@ -565,6 +605,23 @@ impl CostModel for Calibrated {
     fn observe_cloud(&mut self, sim_tokens: usize, observed_s: SimTime) {
         if !observed_s.is_finite() || observed_s < 0.0 {
             return;
+        }
+        if self.warm_loaded {
+            // Drift age-out (ROADMAP item-2 follow-up): grade the
+            // warm-started line against the live world. A sustained
+            // mismatch means the persisted state describes a world that no
+            // longer exists — discard it and re-learn cold rather than
+            // slow-walking the decayed accumulators back over hundreds of
+            // samples. The triggering sample is absorbed below, as the
+            // first observation of the cold restart.
+            let pred = self.fit.eval(sim_tokens);
+            let off = pred > 1e-9
+                && observed_s > 1e-9
+                && (pred / observed_s).max(observed_s / pred) > self.cfg.drift_ratio;
+            self.drift_streak = if off { self.drift_streak + 1 } else { 0 };
+            if self.drift_streak >= self.cfg.drift_samples {
+                self.reset_cold();
+            }
         }
         let x = sim_tokens as f64;
         // residual against the *current* line, before this sample updates it
@@ -651,6 +708,9 @@ mod tests {
             CalibCfg { decay: 0.0, ..Default::default() },
             CalibCfg { decay: 1.1, ..Default::default() },
             CalibCfg { min_samples: 1, ..Default::default() },
+            CalibCfg { drift_ratio: 1.0, ..Default::default() },
+            CalibCfg { drift_ratio: f64::INFINITY, ..Default::default() },
+            CalibCfg { drift_samples: 0, ..Default::default() },
         ] {
             assert!(bad.validate().is_err(), "{bad:?} should not validate");
         }
@@ -777,6 +837,55 @@ mod tests {
         heir.observe_cloud(300, 2.0);
         donor.observe_cloud(300, 2.0);
         assert_eq!(heir.state().unwrap(), donor.state().unwrap());
+    }
+
+    #[test]
+    fn warm_state_ages_out_under_sustained_drift() {
+        // donor learns a much slower world than the offline base; its
+        // persisted state warm-starts an heir that actually lives in the
+        // base world — sustained off-world residuals must discard the
+        // stale state and re-learn cold
+        let mut donor = Calibrated::new(base(), 0.35, on_cfg());
+        let slow = LatencyFit { a: 2.0, b: 0.5 };
+        for i in 0..60usize {
+            let l = 32 + (i % 6) * 128;
+            donor.observe_cloud(l, slow.eval(l));
+        }
+        let st = donor.state().unwrap();
+        let mut heir = Calibrated::new(base(), 0.35, on_cfg());
+        heir.load_state(&st);
+        assert!(heir.f_cloud().b > base().b * 1.5, "warm line should be the slow world");
+        let n_drift = heir.cfg.drift_samples;
+        for _ in 0..(n_drift + 4) {
+            heir.observe_cloud(256, base().eval(256));
+        }
+        let after = heir.state().unwrap();
+        assert!(
+            after.cloud_samples < st.cloud_samples,
+            "stale accumulators survived: {} samples",
+            after.cloud_samples
+        );
+        assert!(!heir.warm_loaded, "age-out must disarm the warm flag");
+        // below min_samples again -> effective line is the offline fit
+        let f = heir.f_cloud();
+        assert_eq!((f.a.to_bits(), f.b.to_bits()), (base().a.to_bits(), base().b.to_bits()));
+
+        // control: an heir whose live world MATCHES the warm state keeps it
+        let mut keeper = Calibrated::new(base(), 0.35, on_cfg());
+        keeper.load_state(&st);
+        let warm_fit = keeper.f_cloud();
+        for _ in 0..20 {
+            keeper.observe_cloud(256, warm_fit.eval(256));
+        }
+        assert!(keeper.state().unwrap().cloud_samples >= st.cloud_samples);
+        assert!(keeper.warm_loaded, "matching world must not age out");
+
+        // a cold-learning model is never aged out, however wild the world
+        let mut cold = Calibrated::new(base(), 0.35, on_cfg());
+        for _ in 0..40 {
+            cold.observe_cloud(256, 500.0);
+        }
+        assert!(cold.state().unwrap().cloud_samples == 40);
     }
 
     #[test]

@@ -46,6 +46,22 @@ pub struct SlowdownSpec {
     pub mult: f64,
 }
 
+/// Whole-node-set blackout windows: every edge of the engine crashes at the
+/// window start and recovers `dur_s` later — the shard-level failure mode a
+/// fleet must survive by re-dispatching to healthy shards. Window starts are
+/// an exponential renewal process with mean gap `mtbb_s` (minimum gap
+/// `0.25 x mtbb_s` so consecutive windows never pile on top of each other),
+/// drawn from its own RNG stream so it composes with MTBF churn without
+/// perturbing it. Pure in `seed`: fleet shards (whose dynamics seeds differ
+/// by shard index) black out at *different* times, leaving healthy peers.
+#[derive(Clone, Copy, Debug)]
+pub struct BlackoutSpec {
+    /// mean time between blackout-window starts (exponential, min gap 25%)
+    pub mtbb_s: f64,
+    /// window length: paired per-edge recovers land at `start + dur_s`
+    pub dur_s: f64,
+}
+
 /// The failure-injection schedule of a scenario. Default = no faults.
 #[derive(Clone, Debug)]
 pub struct FaultSpec {
@@ -57,6 +73,8 @@ pub struct FaultSpec {
     pub mttr_s: f64,
     /// stochastic straggler process; None = no slowdowns
     pub slowdown: Option<SlowdownSpec>,
+    /// stochastic whole-node-set blackout windows; None = no blackouts
+    pub blackout: Option<BlackoutSpec>,
     /// stochastic injections stop at this sim time (recovers may land past
     /// it); bounds the timeline so `Engine::run` always reaches quiescence
     pub horizon_s: f64,
@@ -69,6 +87,7 @@ impl Default for FaultSpec {
             mtbf_s: None,
             mttr_s: 30.0,
             slowdown: None,
+            blackout: None,
             horizon_s: 3600.0,
         }
     }
@@ -78,7 +97,10 @@ impl FaultSpec {
     /// Any fault source configured? (Gates the engine's in-flight tracking
     /// so the static world pays nothing for the failover machinery.)
     pub fn any(&self) -> bool {
-        !self.events.is_empty() || self.mtbf_s.is_some() || self.slowdown.is_some()
+        !self.events.is_empty()
+            || self.mtbf_s.is_some()
+            || self.slowdown.is_some()
+            || self.blackout.is_some()
     }
 
     /// The full deterministic event timeline, sorted by `(t, eid)` with
@@ -120,6 +142,26 @@ impl FaultSpec {
                     t += rng.exp(1.0 / dur);
                     evs.push(EdgeEvent { t, eid, fault: EdgeFault::Slowdown { mult: 1.0 } });
                 }
+            }
+        }
+        if let Some(bl) = self.blackout {
+            let mtbb = bl.mtbb_s.max(1e-3);
+            let dur = bl.dur_s.max(1e-3);
+            let mut rng = Rng::new(seed ^ 0xA076_1D64_78BD_642F);
+            let mut t = 0.0;
+            loop {
+                t += 0.25 * mtbb + rng.exp(1.0 / (0.75 * mtbb));
+                if t >= self.horizon_s {
+                    break;
+                }
+                for eid in 0..n_edges {
+                    evs.push(EdgeEvent { t, eid, fault: EdgeFault::Crash });
+                    // paired recover: a blackout is always transient, so the
+                    // engine sees pending_recovers > 0 and parks/backs off
+                    // instead of declaring the world dead
+                    evs.push(EdgeEvent { t: t + dur, eid, fault: EdgeFault::Recover });
+                }
+                t += dur;
             }
         }
         // stable sort: equal (t, eid) keep generation order, so the
@@ -202,6 +244,39 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn blackout_windows_crash_every_edge_and_pair_recovers() {
+        let f = FaultSpec {
+            blackout: Some(BlackoutSpec { mtbb_s: 120.0, dur_s: 20.0 }),
+            horizon_s: 900.0,
+            ..Default::default()
+        };
+        assert!(f.any());
+        for seed in [31u64, 32, 33, 34] {
+            let tl = f.timeline(4, seed);
+            let crashes: Vec<&EdgeEvent> =
+                tl.iter().filter(|e| e.fault == EdgeFault::Crash).collect();
+            assert!(!crashes.is_empty(), "seed {seed}: horizon 900 / mtbb 120 must black out");
+            assert_eq!(crashes.len() % 4, 0, "seed {seed}: partial blackout");
+            assert_eq!(FaultSpec::recover_count(&tl), crashes.len());
+            // each window takes all 4 edges down at the same instant and the
+            // paired recovers land exactly dur_s later
+            for w in crashes.chunks(4) {
+                assert!(w.iter().all(|e| e.t.to_bits() == w[0].t.to_bits()));
+                let eids: Vec<usize> = w.iter().map(|e| e.eid).collect();
+                assert_eq!(eids, vec![0, 1, 2, 3]);
+                assert!(tl.iter().any(|e| {
+                    e.fault == EdgeFault::Recover && e.eid == 0 && e.t == w[0].t + 20.0
+                }));
+            }
+        }
+        // different seeds stagger the windows — the fleet's healthy-peer story
+        let a = f.timeline(4, 31);
+        let b = f.timeline(4, 32);
+        let first = |tl: &[EdgeEvent]| tl.iter().find(|e| e.fault == EdgeFault::Crash).map(|e| e.t);
+        assert_ne!(first(&a), first(&b), "blackout windows must differ across shard seeds");
     }
 
     #[test]

@@ -19,7 +19,7 @@
 pub mod fault;
 pub mod link;
 
-pub use fault::{EdgeEvent, EdgeFault, FaultSpec, SlowdownSpec};
+pub use fault::{BlackoutSpec, EdgeEvent, EdgeFault, FaultSpec, SlowdownSpec};
 pub use link::{BandwidthWalk, CongestionSpikes, LinkDynamics, LinkPhase};
 
 /// A scenario's environment-dynamics schedule. Carried by
@@ -49,7 +49,13 @@ impl DynamicsSpec {
     /// * `edge-churn` — a deterministic front-loaded churn pattern (edges
     ///   0-2 crash and recover inside the first minute, so even short smoke
     ///   runs exercise the failover path) followed by a stochastic
-    ///   MTBF/MTTR tail plus straggler windows, on a stable WAN.
+    ///   MTBF/MTTR tail plus straggler windows, on a stable WAN;
+    /// * `shard-blackout` — whole-node-set blackout windows (every edge of
+    ///   the engine crashes together, recovers together): the shard-level
+    ///   failure mode for fleet failover and the backoff-retry path. Window
+    ///   times are pure in the dynamics seed, so fleet shards (seeded
+    ///   `seed + shard`) black out at different times and healthy peers
+    ///   exist to steal the displaced sessions.
     pub fn preset(name: &str) -> Option<DynamicsSpec> {
         match name {
             "stable" => Some(DynamicsSpec::default()),
@@ -85,12 +91,21 @@ impl DynamicsSpec {
                 },
                 seed: 23,
             }),
+            "shard-blackout" => Some(DynamicsSpec {
+                link: LinkDynamics::default(),
+                faults: FaultSpec {
+                    blackout: Some(fault::BlackoutSpec { mtbb_s: 90.0, dur_s: 20.0 }),
+                    horizon_s: 900.0,
+                    ..Default::default()
+                },
+                seed: 31,
+            }),
             _ => None,
         }
     }
 
     pub fn preset_names() -> &'static [&'static str] {
-        &["stable", "flaky-wan", "edge-churn"]
+        &["stable", "flaky-wan", "edge-churn", "shard-blackout"]
     }
 }
 
@@ -125,6 +140,20 @@ mod tests {
             tl.iter().any(|e| e.fault == EdgeFault::Crash),
             "edge-churn must crash at least one edge within its horizon"
         );
+    }
+
+    #[test]
+    fn shard_blackout_preset_blacks_out_within_the_horizon() {
+        let d = DynamicsSpec::preset("shard-blackout").unwrap();
+        assert!(!d.is_static());
+        // the preset seed and the fleet-derived seeds (seed + shard) must
+        // all hit at least one window, or smoke runs would test nothing
+        for shard in 0..4u64 {
+            let tl = d.faults.timeline(4, d.seed + shard);
+            let crashes = tl.iter().filter(|e| e.fault == EdgeFault::Crash).count();
+            assert!(crashes >= 4, "shard {shard}: no blackout window in the horizon");
+            assert_eq!(FaultSpec::recover_count(&tl), crashes, "unpaired blackout");
+        }
     }
 
     #[test]

@@ -50,6 +50,7 @@ use crate::coordinator::{Engine, EngineCfg, RunError};
 use crate::metrics::RequestTrace;
 use crate::serve::{ResponseEvent, ResponseEventKind};
 use crate::simclock::SimTime;
+use std::collections::HashMap;
 
 /// Fleet shape: how many engine shards, and how sessions are placed.
 #[derive(Clone, Copy, Debug)]
@@ -88,6 +89,18 @@ pub struct Fleet<'a> {
     routes: Vec<(usize, usize)>,
     /// per shard: shard-local rid -> global rid
     global_of: Vec<Vec<usize>>,
+    /// cross-shard re-dispatch (work stealing) enabled — opt-in, because a
+    /// steal's timing depends on when the caller pumps, which is outside
+    /// the strict hash-placement determinism contract (same carve-out as
+    /// [`Placement::LeastLoaded`]). Enabled by the serve layer when tail
+    /// tolerance is on.
+    rebalance_on: bool,
+    /// global rid -> (original arrival, re-dispatch count) for every
+    /// session a [`Fleet::rebalance`] moved off a dead shard. The adopting
+    /// shard records its *resubmission* time as the arrival; surfaced
+    /// traces/events are rewritten back to the client-true arrival and the
+    /// moves are counted as failovers.
+    redispatched: HashMap<usize, (SimTime, usize)>,
 }
 
 impl<'a> Fleet<'a> {
@@ -102,7 +115,18 @@ impl<'a> Fleet<'a> {
             placement,
             routes: Vec::new(),
             global_of: vec![Vec::new(); n],
+            rebalance_on: false,
+            redispatched: HashMap::new(),
         }
+    }
+
+    /// Opt in to cross-shard re-dispatch: after every pump, sessions a dead
+    /// shard (zero live edges) holds in a displaced state — parked, in
+    /// backoff, or queued-but-unstarted — are evicted and resubmitted to
+    /// the healthiest live shard. Off by default: stealing timing depends
+    /// on the caller's pump cadence (see `rebalance_on`).
+    pub fn enable_rebalance(&mut self) {
+        self.rebalance_on = true;
     }
 
     pub fn n_shards(&self) -> usize {
@@ -214,7 +238,8 @@ impl<'a> Fleet<'a> {
             if any_healthy && !healthy(&self.shards[s]) {
                 continue;
             }
-            let inflight = self.shards[s].submitted() - self.shards[s].completed();
+            let inflight =
+                self.shards[s].submitted() - self.shards[s].completed() - self.shards[s].evicted();
             let key = (self.shards[s].backlog_estimate_s(), inflight, s);
             let better = match &best {
                 None => true,
@@ -238,15 +263,91 @@ impl<'a> Fleet<'a> {
         for e in &mut self.shards {
             e.pump_until(horizon)?;
         }
+        if self.rebalance_on {
+            // a stolen session enters its adopter before the horizon; pump
+            // again so the caller observes the post-steal state, and repeat
+            // until no shard is both dead and holding displaced work
+            while self.rebalance()? > 0 {
+                for e in &mut self.shards {
+                    e.pump_until(horizon)?;
+                }
+            }
+        }
         Ok(())
     }
 
     /// Drain every shard to quiescence.
     pub fn pump_all(&mut self) -> Result<(), RunError> {
-        for e in &mut self.shards {
-            e.pump_all()?;
+        loop {
+            for e in &mut self.shards {
+                e.pump_all()?;
+            }
+            if !self.rebalance_on || self.rebalance()? == 0 {
+                return Ok(());
+            }
         }
-        Ok(())
+    }
+
+    /// One work-stealing sweep (no-op unless [`Fleet::enable_rebalance`]):
+    /// every *dead* shard — zero live edges right now — donates the
+    /// sessions it cannot make progress on to the live shard with the
+    /// smallest in-flight depth. The donor closes each moved request
+    /// without a terminal event ([`Engine::evict_displaced`]), the adopter
+    /// issues a fresh local rid, and the global routing tables are
+    /// remapped — so the fleet still emits exactly one terminal event per
+    /// request and global ids never change. Returns the number of sessions
+    /// moved. Work already escalated to a donor's cloud path is not moved:
+    /// it completes regardless of edge health.
+    fn rebalance(&mut self) -> Result<usize, RunError> {
+        let n = self.shards.len();
+        let live: Vec<usize> = (0..n).filter(|&s| self.shards[s].up_edges() > 0).collect();
+        if live.is_empty() {
+            return Ok(0);
+        }
+        let mut moved = 0usize;
+        for d in 0..n {
+            if self.shards[d].up_edges() > 0 {
+                continue;
+            }
+            let displaced = self.shards[d].evict_displaced();
+            if displaced.is_empty() {
+                continue;
+            }
+            // the steal is observed fleet-wide at the latest shard clock;
+            // each adopter clamps to its own (Engine::submit semantics)
+            let t_steal = self.now();
+            for (local, question_id, arrival) in displaced {
+                let global = self.global_of[d][local];
+                // record the client-true arrival once (the first eviction
+                // still carries it); count every subsequent move
+                let entry = self.redispatched.entry(global).or_insert((arrival, 0));
+                entry.1 += 1;
+                let target = *live
+                    .iter()
+                    .min_by_key(|&&s| {
+                        self.shards[s].submitted()
+                            - self.shards[s].completed()
+                            - self.shards[s].evicted()
+                    })
+                    .expect("non-empty live set");
+                let new_local = self.shards[target].submit(question_id, t_steal)?;
+                debug_assert_eq!(new_local, self.global_of[target].len());
+                self.routes[global] = (target, new_local);
+                self.global_of[target].push(global);
+                moved += 1;
+            }
+        }
+        Ok(moved)
+    }
+
+    /// Rewrite a surfaced trace of a re-dispatched session: the arrival
+    /// reverts to the client-true instant (the adopting shard only saw the
+    /// steal time) and each move counts as a failover.
+    fn rewrite_redispatched(&self, t: &mut RequestTrace) {
+        if let Some(&(arrival, moves)) = self.redispatched.get(&t.rid) {
+            t.arrival = arrival;
+            t.failovers += moves;
+        }
     }
 
     /// Drain and merge the shards' streaming events into one globally
@@ -276,6 +377,7 @@ impl<'a> Fleet<'a> {
             ev.rid = self.global_of[s][ev.rid];
             if let ResponseEventKind::Final { trace } = &mut ev.kind {
                 trace.rid = ev.rid;
+                self.rewrite_redispatched(trace);
             }
             out.push(ev);
         }
@@ -286,9 +388,10 @@ impl<'a> Fleet<'a> {
     /// sorted by global id (fleet submission order).
     pub fn take_traces(&mut self) -> Vec<RequestTrace> {
         let mut out: Vec<RequestTrace> = Vec::new();
-        for (s, e) in self.shards.iter_mut().enumerate() {
-            for mut t in e.take_traces() {
+        for s in 0..self.shards.len() {
+            for mut t in self.shards[s].take_traces() {
                 t.rid = self.global_of[s][t.rid];
+                self.rewrite_redispatched(&mut t);
                 out.push(t);
             }
         }
@@ -301,10 +404,11 @@ impl<'a> Fleet<'a> {
     /// [`crate::metrics::aggregate_shards`] input.
     pub fn take_shard_traces(&mut self) -> Vec<Vec<RequestTrace>> {
         let mut out: Vec<Vec<RequestTrace>> = Vec::with_capacity(self.shards.len());
-        for (s, e) in self.shards.iter_mut().enumerate() {
-            let mut traces = e.take_traces();
+        for s in 0..self.shards.len() {
+            let mut traces = self.shards[s].take_traces();
             for t in &mut traces {
                 t.rid = self.global_of[s][t.rid];
+                self.rewrite_redispatched(t);
             }
             out.push(traces);
         }

@@ -4,9 +4,10 @@
 //! ```text
 //! pice serve   [--model llama70b-sim] [--rpm 30] [--n 60] [--policy pice|cloud|edge|routing]
 //!              [--seed 11] [--max-inflight 256] [--stream]
-//!              [--dynamics stable|flaky-wan|edge-churn] [--deadline <s>]
+//!              [--dynamics stable|flaky-wan|edge-churn|shard-blackout] [--deadline <s>]
 //!              [--shards 4] [--placement hash|least-loaded]
 //!              [--calibrate on|off|warm]
+//!              [--hedge <quantile|off>] [--slot-timeout-mult <x>]
 //! pice models
 //! pice profile [--edges 4]
 //! pice finetune [--pairs 8] [--steps 30]
@@ -52,6 +53,8 @@ SUBCOMMANDS
                                       flaky-wan  bandwidth walk + congestion spikes
                                       edge-churn edge crash/recover + stragglers,
                                                  with failover re-dispatch
+                                      shard-blackout  whole-shard blackout windows
+                                                 (fleet failover / backoff drill)
               --stream              print the live per-request response-event log
                                     (Admitted / SketchReady / ExpansionChunk / Final)
               --shards <int>        serve through a fleet of N engine shards,
@@ -72,6 +75,19 @@ SUBCOMMANDS
                                             store (cold start when absent);
                                             learned state is deposited back
                                     prints a calibration summary with the metrics
+              --hedge <q|off>       tail tolerance (PERF.md §Tail tolerance):
+                                    arm a watchdog at the q-th quantile (q in
+                                    (0,1), e.g. 0.95) of each expansion pull's
+                                    Eq. 2 estimate; on expiry the straggling
+                                    pull is hedged — still-pending slots are
+                                    speculatively re-dispatched to another up
+                                    edge or the cloud, first completion wins.
+                                    Also turns on blackout backoff retries and
+                                    (with --shards) cross-shard re-dispatch of
+                                    a dead shard's queued sessions.
+                                    off = default: bit-identical legacy traces
+              --slot-timeout-mult <x>  multiplier on the hedge timeout
+                                    (default 1.0; requires --hedge <q>)
   models    print the model registry (speed, memory, MMLU, eval accuracy)
   profile   offline latency fits f(l) per (device, model)
               --edges <int>         edge count of the profiled testbed (default 4)
@@ -134,6 +150,8 @@ fn main() {
                     "shards",
                     "placement",
                     "calibrate",
+                    "hedge",
+                    "slot-timeout-mult",
                 ],
                 &with_global_flags(&["stream"]),
             )
@@ -175,6 +193,32 @@ fn serve(args: &Args) -> Result<(), String> {
                 DynamicsSpec::preset_names().join(", ")
             )
         })?;
+    }
+    match args.opt("hedge") {
+        None | Some("off") => {}
+        Some(v) => {
+            let q: f64 = v.parse().map_err(|_| {
+                format!("--hedge expects `off` or a quantile in (0, 1), got `{v}` (e.g. --hedge 0.95)")
+            })?;
+            // q = 0 never fires and q = 1 gives an infinite timeout; both are
+            // spelled `off`, and anything outside is a user error
+            if !q.is_finite() || q <= 0.0 || q >= 1.0 {
+                return Err(format!("--hedge quantile must be strictly inside (0, 1), got `{v}`"));
+            }
+            cfg.tail.hedge_quantile = Some(q);
+        }
+    }
+    if let Some(v) = args.opt("slot-timeout-mult") {
+        if cfg.tail.hedge_quantile.is_none() {
+            return Err("--slot-timeout-mult only scales the --hedge watchdog; pass --hedge <quantile> too".to_string());
+        }
+        let x: f64 = v.parse().map_err(|_| {
+            format!("--slot-timeout-mult expects a number, got `{v}` (e.g. --slot-timeout-mult 1.5)")
+        })?;
+        if !x.is_finite() || x <= 0.0 {
+            return Err(format!("--slot-timeout-mult must be a positive finite number, got `{v}`"));
+        }
+        cfg.tail.slot_timeout_mult = x;
     }
     let calib_mode = match args.opt("calibrate") {
         None | Some("off") => CalibMode::Off,
@@ -278,7 +322,10 @@ fn serve(args: &Args) -> Result<(), String> {
         .filter_map(|t| corpus.get(t.question_id).map(|q| judge.score(q, &t.answer).overall))
         .collect();
     println!("throughput      {:.2} queries/min", m.throughput_qpm);
-    println!("avg latency     {:.2} s (p50 {:.2}, p95 {:.2})", m.avg_latency_s, m.p50_latency_s, m.p95_latency_s);
+    println!(
+        "avg latency     {:.2} s (p50 {:.2}, p95 {:.2}, p99.9 {:.2})",
+        m.avg_latency_s, m.p50_latency_s, m.p95_latency_s, m.p999_latency_s
+    );
     println!("first sketch    p50 {:.2} s, p99 {:.2} s", m.p50_ttfs_s, m.p99_ttfs_s);
     println!("first expansion p50 {:.2} s, p99 {:.2} s", m.p50_ttfe_s, m.p99_ttfe_s);
     println!("judge quality   {:.2} / 10", stats::mean(&scores));
@@ -298,6 +345,12 @@ fn serve(args: &Args) -> Result<(), String> {
     );
     if m.salvaged_slots > 0 {
         println!("salvaged        {} expansion slots kept across edge crashes", m.salvaged_slots);
+    }
+    if m.hedges > 0 {
+        println!("hedges          {} straggling pulls duplicated ({} slots re-dispatched)", m.hedges, m.hedged_slots);
+    }
+    if m.requeue_retries > 0 {
+        println!("requeue retries {} deferred admissions under queue pressure", m.requeue_retries);
     }
     if let Some((summaries, states)) = calib_out {
         if summaries.len() == 1 {

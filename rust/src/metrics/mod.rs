@@ -57,6 +57,15 @@ pub struct RequestTrace {
     /// sentence-slots whose completed expansion was salvaged across an
     /// edge crash instead of re-queued (partial-result salvage)
     pub salvaged_slots: usize,
+    /// "queue full: retry shortly" deferrals this request ate before its
+    /// expansion job entered the dispatch queue (queue-pressure signal:
+    /// saturation degrades answers, it never silently drops a request)
+    pub requeue_retries: usize,
+    /// hedged-dispatch watchdog firings this request survived (tail
+    /// tolerance: a straggling pull was speculatively duplicated)
+    pub hedges: usize,
+    /// expansion sentence-slots speculatively re-dispatched by those hedges
+    pub hedged_slots: usize,
 }
 
 impl RequestTrace {
@@ -85,6 +94,9 @@ pub struct RunMetrics {
     pub p50_latency_s: f64,
     pub p95_latency_s: f64,
     pub p99_latency_s: f64,
+    /// extreme-tail latency — the metric hedged dispatch exists to protect
+    /// (Edge-First: tail percentiles, not means, decide edge serving)
+    pub p999_latency_s: f64,
     /// time-to-first-sketch percentiles over progressive requests — the
     /// paper's "early response" metric, fed from the streaming event
     /// timestamps (0.0 when nothing went progressive)
@@ -94,6 +106,7 @@ pub struct RunMetrics {
     /// least one streamed expansion chunk (0.0 when none did)
     pub p50_ttfe_s: f64,
     pub p99_ttfe_s: f64,
+    pub p999_ttfe_s: f64,
     pub server_tokens: usize,
     pub edge_tokens: usize,
     pub n_requests: usize,
@@ -111,6 +124,13 @@ pub struct RunMetrics {
     /// survived at least one failover (0.0 when none did)
     pub p50_degraded_latency_s: f64,
     pub p99_degraded_latency_s: f64,
+    /// total "queue full" re-queue deferrals across the run
+    pub requeue_retries: usize,
+    /// total hedged-dispatch watchdog firings across the run (tail
+    /// tolerance; 0 with hedging off)
+    pub hedges: usize,
+    /// total expansion slots speculatively re-dispatched by those hedges
+    pub hedged_slots: usize,
 }
 
 pub fn aggregate(traces: &[RequestTrace]) -> RunMetrics {
@@ -136,10 +156,12 @@ fn aggregate_refs(traces: &[&RequestTrace]) -> RunMetrics {
         p50_latency_s: stats::percentile(&lat, 50.0),
         p95_latency_s: stats::percentile(&lat, 95.0),
         p99_latency_s: stats::percentile(&lat, 99.0),
+        p999_latency_s: stats::percentile(&lat, 99.9),
         p50_ttfs_s: stats::percentile(&ttfs, 50.0),
         p99_ttfs_s: stats::percentile(&ttfs, 99.0),
         p50_ttfe_s: stats::percentile(&ttfe, 50.0),
         p99_ttfe_s: stats::percentile(&ttfe, 99.0),
+        p999_ttfe_s: stats::percentile(&ttfe, 99.9),
         server_tokens: traces.iter().map(|t| t.cloud_tokens).sum(),
         edge_tokens: traces.iter().map(|t| t.edge_tokens).sum(),
         n_requests: traces.len(),
@@ -150,6 +172,9 @@ fn aggregate_refs(traces: &[&RequestTrace]) -> RunMetrics {
         salvaged_slots: traces.iter().map(|t| t.salvaged_slots).sum(),
         p50_degraded_latency_s: stats::percentile(&degraded, 50.0),
         p99_degraded_latency_s: stats::percentile(&degraded, 99.0),
+        requeue_retries: traces.iter().map(|t| t.requeue_retries).sum(),
+        hedges: traces.iter().map(|t| t.hedges).sum(),
+        hedged_slots: traces.iter().map(|t| t.hedged_slots).sum(),
     }
 }
 
@@ -204,6 +229,9 @@ mod tests {
             failovers: 0,
             retried_slots: 0,
             salvaged_slots: 0,
+            requeue_retries: 0,
+            hedges: 0,
+            hedged_slots: 0,
         }
     }
 
@@ -261,6 +289,25 @@ mod tests {
         let m0 = aggregate(&traces[..3]);
         assert_eq!(m0.failovers, 0);
         assert_eq!(m0.p99_degraded_latency_s, 0.0);
+    }
+
+    #[test]
+    fn tail_counters_aggregate_and_p999_orders() {
+        let mut traces: Vec<_> = (0..8).map(|i| trace(i as f64, i as f64 + 2.0)).collect();
+        traces[1].hedges = 1;
+        traces[1].hedged_slots = 3;
+        traces[4].requeue_retries = 2;
+        traces[6].done = traces[6].arrival + 30.0; // one extreme straggler
+        let m = aggregate(&traces);
+        assert_eq!(m.hedges, 1);
+        assert_eq!(m.hedged_slots, 3);
+        assert_eq!(m.requeue_retries, 2);
+        assert!(m.p999_latency_s >= m.p99_latency_s);
+        assert!(m.p999_latency_s <= 30.0 + 1e-9);
+        // static world defaults stay zero
+        let m0 = aggregate(&traces[2..4]);
+        assert_eq!(m0.hedges, 0);
+        assert_eq!(m0.requeue_retries, 0);
     }
 
     #[test]

@@ -342,7 +342,12 @@ impl Env {
                 backend,
             )?);
         }
-        let fleet = Fleet::new(shards, fleet_cfg.placement);
+        let mut fleet = Fleet::new(shards, fleet_cfg.placement);
+        if cfg.tail.on() {
+            // tail tolerance extends to the fleet tier: a dead shard's
+            // displaced sessions are stolen by healthy peers at pump time
+            fleet.enable_rebalance();
+        }
         Ok(PiceService::over_fleet(fleet, serve_cfg))
     }
 

@@ -18,7 +18,11 @@
 //! 4. **Stale stamps cold-start.** A snapshot written under a different
 //!    corpus/registry stamp is never applied, but survives as a foreign
 //!    section across saves.
-//! 5. **Router == engine.** Fleet least-loaded placement reads the shard
+//! 5. **Warm state ages out under drift.** A warm-loaded state whose
+//!    predictions stay off-world for `drift_samples` consecutive cloud
+//!    observations is discarded and the model re-learns cold — a snapshot
+//!    from changed hardware or a changed link cannot steer Eq. 2 forever.
+//! 6. **Router == engine.** Fleet least-loaded placement reads the shard
 //!    engine's own memoized `backlog_estimate_s`: at every poll point the
 //!    router sees exactly the number the shard's admission path uses, the
 //!    estimate is stable across repeated polls, and the request lands on
@@ -313,6 +317,58 @@ fn stale_stamps_cold_start_but_are_preserved() {
     let back = CalibStore::load(&path, "stamp-a");
     assert_eq!(back.get("pice/e4/pice"), Some(state), "foreign section was dropped");
     let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn warm_start_under_a_changed_world_ages_out() {
+    let (corpus, tok, reg) = setup();
+    // a donor state from an alien world: regression points (100, 900),
+    // (200, 1700), (300, 2500) give f(l) = 8 l + 100 — minutes of claimed
+    // cloud service where this world takes seconds (and positive at every
+    // length, so each observation votes off-world), far beyond any sane
+    // drift ratio
+    let alien = CalibState {
+        n: 3.0,
+        sx: 600.0,
+        sy: 5100.0,
+        sxx: 140_000.0,
+        sxy: 1_180_000.0,
+        edge_corr: 1.0,
+        transfer_corr: 1.0,
+        parallelism: 2.0,
+        resid_s: 0.5,
+        cloud_samples: 200,
+        edge_samples: 0,
+        transfer_samples: 0,
+    };
+    let wl = workload(&corpus, paper_rpm(&reg), 30, Arrival::Poisson, 29);
+    let warm = |drift_ratio: f64| {
+        let mut cfg = baselines::pice(MODEL);
+        cfg.calib.mode = CalibMode::Warm;
+        cfg.calib.warm = Some(alien.clone());
+        cfg.calib.drift_ratio = drift_ratio;
+        cfg.calib.drift_samples = 3;
+        cfg
+    };
+    // age-out disarmed (an unreachable ratio): the alien accumulators
+    // survive the whole run and every new sample stacks on top of them
+    let (_, keep) = run_closed(&warm(1e6), &wl, &corpus, &tok, &reg);
+    let keep = keep.expect("calibrated state");
+    assert!(keep.cloud_samples > alien.cloud_samples, "warm run observed nothing");
+    // age-out armed: three consecutive off-world residuals discard the
+    // warm state and re-learn cold, so the alien samples are gone from
+    // the end-of-run state (if no reset ever fired the two runs would be
+    // identical, alien samples included)
+    let (traces, aged) = run_closed(&warm(1.5), &wl, &corpus, &tok, &reg);
+    let aged = aged.expect("calibrated state");
+    assert_eq!(traces.len(), wl.requests.len(), "age-out lost requests");
+    assert!(
+        aged.cloud_samples < alien.cloud_samples.min(keep.cloud_samples),
+        "drift age-out never fired: {} cloud samples vs donor {} / kept {}",
+        aged.cloud_samples,
+        alien.cloud_samples,
+        keep.cloud_samples
+    );
 }
 
 #[test]

@@ -418,3 +418,57 @@ fn edge_crash_salvages_completed_expansion_slots() {
          at least one completed expansion slot"
     );
 }
+
+#[test]
+fn shard_blackout_rebalance_loses_no_requests() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let mut cfg = baselines::pice(MODEL)
+        .with_dynamics(DynamicsSpec::preset("shard-blackout").expect("preset"));
+    // hedging on enables the tail-tolerance tier, which includes the
+    // fleet's cross-shard re-dispatch of a dead shard's displaced queue
+    cfg.tail.hedge_quantile = Some(0.95);
+    let n_shards = 4usize;
+    // each shard's blackout windows are pure in (n_edges, seed + shard) —
+    // aim a burst of sessions at every shard just ahead of its own first
+    // window, plus arrivals inside it, so displaced queues must be
+    // re-homed onto live peers (or ride the backoff/cloud path) and the
+    // drill is guaranteed to engage whatever the sketch-phase latency
+    let qid = corpus.eval_questions()[0].id;
+    let mut subs: Vec<(usize, f64, u64)> = Vec::new();
+    for s in 0..n_shards {
+        let tl = cfg
+            .dynamics
+            .faults
+            .timeline(cfg.n_edges, cfg.dynamics.seed.wrapping_add(s as u64));
+        let t_first = tl
+            .iter()
+            .find(|e| e.fault == EdgeFault::Crash)
+            .map(|e| e.t)
+            .expect("blackout preset must crash");
+        let key = (0u64..).find(|&k| session_shard(k, n_shards) == s).unwrap();
+        for j in 0..5usize {
+            subs.push((qid, (t_first - 2.0) + 0.1 * j as f64, key));
+        }
+        subs.push((qid, t_first + 3.0, key));
+        subs.push((qid, t_first + 8.0, key));
+    }
+    subs.sort_by(|a, b| a.1.total_cmp(&b.1));
+    let drive = |subs: &[(usize, f64, u64)]| {
+        let mut fleet = build_fleet(&cfg, n_shards, Placement::Hash, &corpus, &tok, &reg, &base);
+        fleet.enable_rebalance();
+        drive_chunked(&mut fleet, subs)
+    };
+    let traces = drive(&subs);
+    assert_eq!(traces.len(), subs.len(), "shard blackout lost requests");
+    let rids: HashSet<usize> = traces.iter().map(|t| t.rid).collect();
+    assert_eq!(rids.len(), subs.len(), "duplicate terminal traces");
+    assert!(traces.iter().all(|t| !t.answer.is_empty()), "empty answer under blackout");
+    // pre-window bursts are in flight when their shard dies: the drill
+    // must displace at least one request (crash re-dispatch, the
+    // backoff/park fork, or a cross-shard eviction — all bump failovers)
+    let m = aggregate(&traces);
+    assert!(m.failovers > 0, "blackout drill displaced no request");
+    // the whole drill is pure in (cfg, subs): a replay is bit-identical
+    assert_identical("blackout fleet replay", &traces, &drive(&subs));
+}

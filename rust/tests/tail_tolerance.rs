@@ -1,0 +1,359 @@
+//! The tail-tolerance layer's contract (see `coordinator/engine.rs` and
+//! PERF.md §Tail tolerance):
+//!
+//! 1. **Inert-machinery identity** — the tail path armed but unable to fire
+//!    (an unreachably large slot-timeout-mult) is bit-identical to hedging
+//!    off, across the static world, a flaky WAN, a straggler grid and
+//!    staggered single-edge churn. Hedging off (the default) therefore
+//!    keeps every pre-existing trace byte-for-byte.
+//! 2. **Determinism** — hedged traces are bit-identical across 1/2/4 sweep
+//!    threads and across open-loop (pump-between-arrivals) vs closed-loop
+//!    (submit-all-then-drain) driving.
+//! 3. **Hedging fires** — under a straggler-heavy grid the quantile
+//!    watchdog actually re-dispatches work, the per-request hedge budget
+//!    caps it, and no request is ever lost or left with an empty answer.
+//! 4. **Salvage x hedging** — expansion slots salvaged from a straggler or
+//!    a crash are never regenerated, and salvage appears only alongside a
+//!    failover or a hedge (the two paths that can strand a pull).
+//! 5. **Blackout tolerance** — under whole-cluster blackout windows
+//!    (`shard-blackout`) every submission still reaches exactly one
+//!    terminal trace: in-flight work backs off with capped exponential
+//!    retries and ultimately completes on a recovered edge or the cloud.
+//! 6. **Queue-pressure starvation** — a saturating burst against a tiny
+//!    admission queue defers re-queues (surfaced as `requeue_retries`) but
+//!    never silently drops a request.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use pice::baselines;
+use pice::cluster::DeviceSpec;
+use pice::coordinator::backend::{SurrogateBackend, TextBackend};
+use pice::coordinator::{Engine, EngineCfg};
+use pice::corpus::synth::{synth_corpus, synth_tokenizer};
+use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use pice::corpus::Corpus;
+use pice::dynamics::{DynamicsSpec, EdgeEvent, EdgeFault, FaultSpec, SlowdownSpec};
+use pice::metrics::{aggregate, RequestTrace};
+use pice::models::Registry;
+use pice::sweep::{SweepRunner, SweepScenario};
+use pice::tokenizer::Tokenizer;
+
+const MODEL: &str = "llama70b-sim";
+
+fn setup() -> (Arc<Corpus>, Tokenizer, Registry) {
+    let tok = synth_tokenizer();
+    let corpus = Arc::new(synth_corpus(&tok, 20, 42));
+    (corpus, tok, Registry::builtin())
+}
+
+fn paper_rpm(reg: &Registry) -> f64 {
+    let info = reg.get(MODEL).expect("model");
+    let cloud = DeviceSpec::a100_cloud("c");
+    1.5 * cloud.max_batch(info, 1000) as f64
+}
+
+fn workload(corpus: &Arc<Corpus>, rpm: f64, n: usize, arrival: Arrival, seed: u64) -> Workload {
+    Workload::generate(
+        corpus,
+        WorkloadSpec { rpm, n_requests: n, arrival, categories: vec![], seed },
+    )
+}
+
+/// Straggler-heavy crash-free world: 6x slowdown windows on a flaky WAN.
+fn stragglers() -> DynamicsSpec {
+    let mut d = DynamicsSpec::preset("flaky-wan").expect("preset");
+    d.faults = FaultSpec {
+        slowdown: Some(SlowdownSpec { mtbs_s: 45.0, mean_dur_s: 30.0, mult: 6.0 }),
+        horizon_s: 1800.0,
+        ..Default::default()
+    };
+    d
+}
+
+/// Staggered single-edge churn: at most one edge down at any instant, so
+/// the full-outage park/backoff fork never runs.
+fn staggered_churn() -> DynamicsSpec {
+    let mut events = Vec::new();
+    for k in 0..30usize {
+        let t = 1.0 + 4.0 * k as f64;
+        events.push(EdgeEvent { t, eid: k % 4, fault: EdgeFault::Crash });
+        events.push(EdgeEvent { t: t + 2.0, eid: k % 4, fault: EdgeFault::Recover });
+    }
+    DynamicsSpec {
+        faults: FaultSpec { events, ..Default::default() },
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+fn hedged(base: &EngineCfg, q: f64, mult: f64) -> EngineCfg {
+    let mut cfg = base.clone();
+    cfg.tail.hedge_quantile = Some(q);
+    cfg.tail.slot_timeout_mult = mult;
+    cfg
+}
+
+fn run_closed(
+    cfg: &EngineCfg,
+    corpus: &Arc<Corpus>,
+    tok: &Tokenizer,
+    reg: &Registry,
+    backend: &SurrogateBackend,
+    wl: &Workload,
+) -> Vec<RequestTrace> {
+    let mut b = backend.clone();
+    let mut eng = Engine::new(cfg.clone(), corpus.clone(), tok, reg, &mut b).expect("engine");
+    eng.run(wl).expect("run")
+}
+
+fn assert_identical(label: &str, a: &[RequestTrace], b: &[RequestTrace]) {
+    assert_eq!(a.len(), b.len(), "{label}: trace count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(format!("{x:?}"), format!("{y:?}"), "{label}: trace rid={}", x.rid);
+    }
+}
+
+/// Salvage can only come from a stranded pull: a crash failover or a hedge.
+fn assert_salvage_provenance(label: &str, traces: &[RequestTrace]) {
+    for t in traces {
+        assert!(
+            t.salvaged_slots == 0 || t.failovers > 0 || t.hedges > 0,
+            "{label}: rid {} salvaged {} slots with no failover and no hedge",
+            t.rid,
+            t.salvaged_slots
+        );
+    }
+}
+
+#[test]
+fn inert_tail_machinery_is_bit_identical_to_hedging_off() {
+    let (corpus, tok, reg) = setup();
+    let backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let worlds = [
+        ("static", DynamicsSpec::default()),
+        ("flaky-wan", DynamicsSpec::preset("flaky-wan").expect("preset")),
+        ("stragglers", stragglers()),
+        ("staggered-churn", staggered_churn()),
+    ];
+    for (name, world) in worlds {
+        let wl = workload(&corpus, paper_rpm(&reg), 16, Arrival::Poisson, 13);
+        let off = baselines::pice(MODEL).with_dynamics(world);
+        // timeout = 1e12 x the quantile factor x the Eq. 2 estimate: no
+        // pull can overrun it, so the watchdog arms nothing — yet tail_on
+        // is true and the inflight bookkeeping runs on every pull
+        let inert = hedged(&off, 0.95, 1e12);
+        let a = run_closed(&off, &corpus, &tok, &reg, &backend, &wl);
+        let b = run_closed(&inert, &corpus, &tok, &reg, &backend, &wl);
+        assert_identical(&format!("{name}: off vs inert"), &a, &b);
+    }
+}
+
+#[test]
+fn hedged_traces_are_identical_across_sweep_threads() {
+    let (corpus, tok, reg) = setup();
+    let backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let wl = Arc::new(workload(&corpus, paper_rpm(&reg), 16, Arrival::Poisson, 17));
+    let base = baselines::pice(MODEL).with_dynamics(stragglers());
+    let mut budget1 = hedged(&base, 0.9, 0.25);
+    budget1.tail.hedge_budget = 1;
+    let grid = vec![
+        SweepScenario::new("unhedged", base.clone(), wl.clone()),
+        SweepScenario::new("aggressive", hedged(&base, 0.9, 0.25), wl.clone()),
+        SweepScenario::new("moderate", hedged(&base, 0.95, 1.0), wl.clone()),
+        SweepScenario::new("budget-1", budget1, wl.clone()),
+    ];
+    let mut reference: Option<Vec<Vec<RequestTrace>>> = None;
+    for threads in [1usize, 2, 4] {
+        let runner = SweepRunner::new(threads);
+        let results = runner.run(&grid, &corpus, &tok, &reg, |_| {
+            Box::new(backend.clone()) as Box<dyn TextBackend>
+        });
+        let traces: Vec<Vec<RequestTrace>> = results
+            .into_iter()
+            .map(|r| r.expect("scenario").1)
+            .collect();
+        match &reference {
+            None => reference = Some(traces),
+            Some(r) => {
+                for (i, (a, b)) in r.iter().zip(&traces).enumerate() {
+                    assert_identical(&format!("{threads} threads, scenario {i}"), a, b);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn open_and_closed_loop_hedged_traces_match() {
+    let (corpus, tok, reg) = setup();
+    let backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let wl = workload(&corpus, paper_rpm(&reg), 16, Arrival::Poisson, 19);
+    let cfg = hedged(&baselines::pice(MODEL).with_dynamics(stragglers()), 0.9, 0.5);
+    let closed = run_closed(&cfg, &corpus, &tok, &reg, &backend, &wl);
+    let mut b = backend.clone();
+    let mut eng = Engine::new(cfg, corpus.clone(), &tok, &reg, &mut b).expect("engine");
+    for r in &wl.requests {
+        eng.pump_until(r.arrival_s).expect("pump");
+        eng.submit(r.question_id, r.arrival_s).expect("submit");
+    }
+    eng.pump_all().expect("pump_all");
+    let open = eng.take_traces();
+    assert_identical("open vs closed loop", &closed, &open);
+}
+
+#[test]
+fn watchdog_hedges_under_stragglers_within_budget() {
+    let (corpus, tok, reg) = setup();
+    let backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let n = 16;
+    let wl = workload(&corpus, paper_rpm(&reg), n, Arrival::Poisson, 17);
+    let base = baselines::pice(MODEL).with_dynamics(stragglers());
+    // ladder from hair-trigger to conservative: the aggressive end is
+    // near-certain to overrun (timeout ~0.12x the estimate), so the grid
+    // as a whole must observe hedges even if the cost model's estimate
+    // and the simulated wall disagree by a factor
+    let mut total_hedges = 0usize;
+    for mult in [0.05, 0.25, 1.0] {
+        for budget in [1usize, 2] {
+            let mut cfg = hedged(&base, 0.9, mult);
+            cfg.tail.hedge_budget = budget;
+            let traces = run_closed(&cfg, &corpus, &tok, &reg, &backend, &wl);
+            assert_eq!(traces.len(), n, "mult {mult} budget {budget}: requests lost");
+            assert!(
+                traces.iter().all(|t| !t.answer.is_empty()),
+                "mult {mult} budget {budget}: empty answer"
+            );
+            for t in &traces {
+                assert!(
+                    t.hedges <= budget,
+                    "mult {mult}: rid {} hedged {} times past budget {budget}",
+                    t.rid,
+                    t.hedges
+                );
+            }
+            assert_salvage_provenance(&format!("mult {mult} budget {budget}"), &traces);
+            total_hedges += aggregate(&traces).hedges;
+        }
+    }
+    assert!(
+        total_hedges > 0,
+        "a hair-trigger watchdog ladder under 6x stragglers never hedged once"
+    );
+}
+
+#[test]
+fn salvage_with_hedging_never_loses_requests() {
+    let (corpus, tok, reg) = setup();
+    let backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let cfg = hedged(&baselines::pice(MODEL), 0.9, 0.25);
+    let wl = workload(&corpus, 40.0, 10, Arrival::Burst, 3);
+    // clean run bounds the window where edge expansions are in flight
+    let clean = run_closed(&cfg, &corpus, &tok, &reg, &backend, &wl);
+    let starts: Vec<f64> = clean.iter().map(|t| t.edge_start).filter(|&s| s > 0.0).collect();
+    assert!(!starts.is_empty(), "burst must reach the edges");
+    let t0 = starts.iter().fold(f64::INFINITY, |a, &b| a.min(b)) + 0.25;
+    let t1 = clean.iter().map(|t| t.done).fold(0.0f64, f64::max);
+    assert!(t1 > t0, "degenerate work window");
+    // crash edge 0 at each grid instant with hedging armed: the crash
+    // salvage path and the hedge path share the per-slot salvage marks,
+    // and a slot once salvaged must never be regenerated or recounted
+    let steps = 12;
+    for k in 0..steps {
+        let t = t0 + (t1 - t0) * k as f64 / steps as f64;
+        let dynamics = DynamicsSpec {
+            faults: FaultSpec {
+                events: vec![
+                    EdgeEvent { t, eid: 0, fault: EdgeFault::Crash },
+                    EdgeEvent { t: t + 5.0, eid: 0, fault: EdgeFault::Recover },
+                ],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let traces = run_closed(
+            &cfg.clone().with_dynamics(dynamics),
+            &corpus,
+            &tok,
+            &reg,
+            &backend,
+            &wl,
+        );
+        assert_eq!(traces.len(), 10, "crash at t={t:.2}: requests lost");
+        assert!(
+            traces.iter().all(|t| !t.answer.is_empty()),
+            "crash at t={t:.2}: empty answer"
+        );
+        assert_salvage_provenance(&format!("crash at t={t:.2}"), &traces);
+    }
+}
+
+#[test]
+fn blackout_windows_back_off_and_reach_exactly_one_terminal() {
+    let (corpus, tok, reg) = setup();
+    let backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let cfg = hedged(
+        &baselines::pice(MODEL)
+            .with_dynamics(DynamicsSpec::preset("shard-blackout").expect("preset")),
+        0.95,
+        1.0,
+    );
+    // place the load around the first blackout window, read off the pure
+    // fault timeline: a burst just before it (in-flight work displaced),
+    // arrivals inside it (the all-edges-down park/backoff fork) and
+    // arrivals after recovery
+    let tl = cfg.dynamics.faults.timeline(cfg.n_edges, cfg.dynamics.seed);
+    let t_first = tl
+        .iter()
+        .find(|e| e.fault == EdgeFault::Crash)
+        .map(|e| e.t)
+        .expect("blackout preset must crash");
+    let qid = corpus.eval_questions()[0].id;
+    let mut subs: Vec<f64> = Vec::new();
+    subs.extend(vec![t_first - 3.0; 10]);
+    subs.extend([t_first + 2.0, t_first + 5.0, t_first + 9.0, t_first + 14.0]);
+    subs.extend([t_first + 30.0, t_first + 45.0, t_first + 60.0, t_first + 75.0]);
+    let drive = || {
+        let mut b = backend.clone();
+        let mut eng =
+            Engine::new(cfg.clone(), corpus.clone(), &tok, &reg, &mut b).expect("engine");
+        for &at in &subs {
+            eng.pump_until(at).expect("pump");
+            eng.submit(qid, at).expect("submit");
+        }
+        eng.pump_all().expect("pump_all");
+        eng.take_traces()
+    };
+    let traces = drive();
+    assert_eq!(traces.len(), subs.len(), "blackout lost requests");
+    let rids: HashSet<usize> = traces.iter().map(|t| t.rid).collect();
+    assert_eq!(rids.len(), subs.len(), "duplicate terminal traces");
+    assert!(traces.iter().all(|t| !t.answer.is_empty()), "empty answer under blackout");
+    // a 10-deep burst 3 s ahead of the window plus arrivals inside it: at
+    // least some work must be in flight or arriving while every edge is
+    // down, and each displaced request is counted (backoff/park fork or
+    // crash re-dispatch — both bump `failovers`)
+    let m = aggregate(&traces);
+    assert!(m.failovers > 0, "blackout displaced no request: failovers = 0");
+    // the whole drill is pure in (cfg, subs): a replay is bit-identical
+    assert_identical("blackout replay", &traces, &drive());
+}
+
+#[test]
+fn saturating_burst_requeues_but_never_drops() {
+    let (corpus, tok, reg) = setup();
+    let backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let mut cfg = baselines::pice(MODEL);
+    // a two-deep admission queue against a 40-request burst: the re-queue
+    // path must defer (bounded) and degrade, never drop
+    cfg.queue_cap = 2;
+    let n = 40;
+    let wl = workload(&corpus, 40.0, n, Arrival::Burst, 3);
+    let traces = run_closed(&cfg, &corpus, &tok, &reg, &backend, &wl);
+    assert_eq!(traces.len(), n, "saturation dropped requests");
+    let rids: HashSet<usize> = traces.iter().map(|t| t.rid).collect();
+    assert_eq!(rids.len(), n, "duplicate terminal traces");
+    assert!(traces.iter().all(|t| !t.answer.is_empty()), "empty answer under saturation");
+    let m = aggregate(&traces);
+    assert!(m.requeue_retries > 0, "a 40-burst against queue_cap=2 never deferred a re-queue");
+}
