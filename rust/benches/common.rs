@@ -37,13 +37,14 @@ pub fn dump(name: &str, value: Json) {
 }
 
 /// Default the persistent-cache path for figure benches: if `PICE_MEMO_PATH`
-/// is unset, point it at the shared `bench_results/memo_cache.json` so the
-/// figure benches warm each other's caches across processes (the snapshot
-/// is stamp-guarded and semantically transparent, so this never changes
-/// results). Export `PICE_MEMO_PATH=` (empty) to disable persistence.
+/// is unset, point it at the shared `bench_results/memo_store` paged
+/// directory so the figure benches warm each other's caches across
+/// processes (the store is stamp-guarded and semantically transparent, so
+/// this never changes results). Export `PICE_MEMO_PATH=` (empty) to
+/// disable persistence.
 pub fn default_memo_path() {
     if std::env::var_os("PICE_MEMO_PATH").is_none() {
-        std::env::set_var("PICE_MEMO_PATH", "bench_results/memo_cache.json");
+        std::env::set_var("PICE_MEMO_PATH", "bench_results/memo_store");
     }
 }
 

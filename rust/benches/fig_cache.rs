@@ -1,0 +1,294 @@
+//! §Buffer-pool store — the paged generation store under memory pressure
+//! (PERF.md §Buffer-pool store): warm hit rate and lookup latency for a
+//! working set larger than the byte budget, with and without disk spill,
+//! plus the cross-run replay the capped in-memory cache cannot serve.
+//!
+//! Guard rows consumed by CI:
+//! * `spill_guard` — the spill-enabled pool's warm hit rate must be >= the
+//!   budget-capped in-memory pool's (spill turns evictions into faults
+//!   instead of misses).
+//! * `trace_identity` — engine traces are bit-identical across cache
+//!   budgets (off / tiny / tiny+spill / huge) and 1/2/4 sweep threads;
+//!   eviction and spill may change hit rates, never traces.
+//!
+//! Results dump to `bench_results/fig_cache.json` and the cross-PR
+//! trajectory file `BENCH_fig_cache.json` at the repo root.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use pice::baselines;
+use pice::coordinator::backend::{MemoBackend, SurrogateBackend, TextBackend};
+use pice::corpus::synth::{synth_corpus, synth_tokenizer};
+use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use pice::runtime::{GenOutput, SamplingParams};
+use pice::store::PoolCfg;
+use pice::sweep::{
+    cache::load_snapshot, ScenarioResult, SharedMemoCache, SweepRunner, SweepScenario,
+};
+use pice::util::json::{num, obj, s, Json};
+use pice::util::stats;
+
+/// Synthetic working set: `n` distinct generation entries of ~650 bytes
+/// each (64-token prompt, 24-token output), so budgets are easy to reason
+/// about as fractions of `n * ~650`.
+fn working_set(n: usize) -> Vec<(pice::sweep::cache::MemoKey, GenOutput)> {
+    (0..n as u64)
+        .map(|i| {
+            let prompt: Vec<u32> =
+                (0..64).map(|j| (i as u32).wrapping_mul(2654435761).wrapping_add(j)).collect();
+            let key = pice::sweep::cache::MemoKey::new(
+                "qwen7b-sim",
+                &prompt,
+                &SamplingParams { max_tokens: 24, seed: i, ..Default::default() },
+            );
+            let out = GenOutput {
+                tokens: (0..24).map(|j| (i as u32).wrapping_add(j)).collect(),
+                logps: (0..24).map(|j| -0.01 * (i as f64 + j as f64 + 1.0)).collect(),
+                finished: true,
+            };
+            (key, out)
+        })
+        .collect()
+}
+
+/// Fill the cache from the working set (the cold pass), then replay every
+/// key once (the warm pass), timing each warm lookup. Returns
+/// (warm_hit_rate, p50_us, p99_us).
+fn fill_and_replay(
+    cache: &SharedMemoCache,
+    set: &[(pice::sweep::cache::MemoKey, GenOutput)],
+) -> (f64, f64, f64) {
+    for (k, v) in set {
+        if cache.get(k, 0).is_none() {
+            cache.insert(k.clone(), v.clone(), 0);
+        }
+    }
+    let before = cache.stats();
+    let mut lat_us = Vec::with_capacity(set.len());
+    for (k, _) in set {
+        let t0 = Instant::now();
+        std::hint::black_box(cache.get(k, 0));
+        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let after = cache.stats();
+    let warm_hits = after.hits - before.hits;
+    let rate = warm_hits as f64 / set.len() as f64;
+    (rate, stats::percentile(&lat_us, 50.0), stats::percentile(&lat_us, 99.0))
+}
+
+fn variant_row(
+    rows: &mut Vec<Json>,
+    name: &str,
+    cache: &SharedMemoCache,
+    rate: f64,
+    p50: f64,
+    p99: f64,
+) {
+    let cs = cache.stats();
+    println!(
+        "{name:<26} {:>6.1}% warm hits   p50 {p50:>7.2} µs   p99 {p99:>8.2} µs   ({} evictions, {} spilled, {} faulted, {:.0} KiB resident)",
+        rate * 100.0,
+        cs.evictions,
+        cs.spilled_pages,
+        cs.faulted_pages,
+        cs.resident_bytes as f64 / 1024.0,
+    );
+    rows.push(obj(vec![
+        ("bench", s(&format!("warm_{name}"))),
+        ("warm_hit_rate", num(rate)),
+        ("p50_us", num(p50)),
+        ("p99_us", num(p99)),
+        ("evictions", num(cs.evictions as f64)),
+        ("spilled_pages", num(cs.spilled_pages as f64)),
+        ("faulted_pages", num(cs.faulted_pages as f64)),
+        ("resident_bytes", num(cs.resident_bytes as f64)),
+    ]));
+}
+
+fn main() -> Result<(), String> {
+    common::banner("§Buffer-pool store", "budgeted residency, disk spill, cross-run warm starts");
+    let smoke = std::env::var("PICE_BENCH_SMOKE").as_deref() == Ok("1");
+    let mut rows = Vec::new();
+
+    let n = if smoke { 1024 } else { 4096 };
+    let set = working_set(n);
+    // ~650 B/entry -> a budget holding roughly 10% of the working set
+    let budget = n * 65;
+    println!("working set: {n} entries, byte budget {budget} B (~10% resident)");
+
+    // --- in-process variants: capped, capped+spill, unbounded ---------------
+    let store_dir = std::path::Path::new("bench_results").join("fig_cache_store");
+    let _ = std::fs::remove_dir_all(&store_dir);
+
+    let capped = SharedMemoCache::with_cfg(PoolCfg::byte_budget(budget));
+    let (rate_capped, p50, p99) = fill_and_replay(&capped, &set);
+    variant_row(&mut rows, "inmem-capped", &capped, rate_capped, p50, p99);
+
+    let spill = SharedMemoCache::with_cfg(PoolCfg::byte_budget(budget));
+    let mut snap = load_snapshot(&spill, &store_dir, "fig-cache-stamp");
+    let (rate_spill, p50, p99) = fill_and_replay(&spill, &set);
+    variant_row(&mut rows, "spill", &spill, rate_spill, p50, p99);
+    snap.save(&spill)?;
+
+    let unbounded = SharedMemoCache::new(usize::MAX);
+    let (rate_unb, p50, p99) = fill_and_replay(&unbounded, &set);
+    variant_row(&mut rows, "unbounded", &unbounded, rate_unb, p50, p99);
+
+    // Guard: spill converts budget evictions into page faults, so its warm
+    // hit rate must dominate the capped in-memory pool's.
+    let spill_ok = rate_spill >= rate_capped;
+    println!(
+        "spill_guard: spill warm {:.1}% >= capped warm {:.1}%  -> {}",
+        rate_spill * 100.0,
+        rate_capped * 100.0,
+        if spill_ok { "ok" } else { "VIOLATED" }
+    );
+    rows.push(obj(vec![
+        ("bench", s("spill_guard")),
+        ("spill_warm_hit_rate", num(rate_spill)),
+        ("capped_warm_hit_rate", num(rate_capped)),
+        ("ok", num(spill_ok as usize as f64)),
+    ]));
+
+    // --- cross-run replay: a fresh process against the same store dir -------
+    // The capped cache without a store starts cold every run; the spill
+    // store sustains the warm hit rate across processes from the manifest
+    // alone (pages fault in on demand).
+    let cold = SharedMemoCache::with_cfg(PoolCfg::byte_budget(budget));
+    let (rate_cold, _, _) = {
+        let mut lat = Vec::new();
+        let before = cold.stats();
+        for (k, _) in &set {
+            let t0 = Instant::now();
+            std::hint::black_box(cold.get(k, 0));
+            lat.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        let after = cold.stats();
+        ((after.hits - before.hits) as f64 / set.len() as f64, 0.0, 0.0)
+    };
+    let warm = SharedMemoCache::with_cfg(PoolCfg::byte_budget(budget));
+    let snap2 = load_snapshot(&warm, &store_dir, "fig-cache-stamp");
+    let restored = snap2.restored_entries();
+    let mut lat_us = Vec::with_capacity(set.len());
+    let before = warm.stats();
+    for (k, _) in &set {
+        let t0 = Instant::now();
+        std::hint::black_box(warm.get(k, 0));
+        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let after = warm.stats();
+    let rate_replay = (after.hits - before.hits) as f64 / set.len() as f64;
+    let (rp50, rp99) = (stats::percentile(&lat_us, 50.0), stats::percentile(&lat_us, 99.0));
+    println!(
+        "cross-run replay: {restored} entries attached, {:.1}% warm hits (fresh capped cache: {:.1}%)   p50 {rp50:.2} µs   p99 {rp99:.2} µs   ({} pages faulted)",
+        rate_replay * 100.0,
+        rate_cold * 100.0,
+        warm.stats().faulted_pages,
+    );
+    rows.push(obj(vec![
+        ("bench", s("cross_run_replay")),
+        ("restored_entries", num(restored as f64)),
+        ("warm_hit_rate", num(rate_replay)),
+        ("fresh_capped_hit_rate", num(rate_cold)),
+        ("p50_us", num(rp50)),
+        ("p99_us", num(rp99)),
+        ("faulted_pages", num(warm.stats().faulted_pages as f64)),
+    ]));
+
+    // --- trace-identity guard: budgets x threads x arrival ------------------
+    // Engine traces must not depend on the cache budget, on spill/fault
+    // activity, or on sweep-thread interleaving. Reference: no cache at all.
+    let tok = synth_tokenizer();
+    let corpus = Arc::new(synth_corpus(&tok, 20, 42));
+    let reg = pice::models::Registry::builtin();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, pice::scenario::SURROGATE_SEED);
+    let nreq = if smoke { 12 } else { 24 };
+    let grid_for = |arrival: Arrival| -> Vec<SweepScenario> {
+        let wl = Arc::new(Workload::generate(
+            &corpus,
+            WorkloadSpec { rpm: 40.0, n_requests: nreq, arrival, categories: vec![], seed: 5 },
+        ));
+        vec![
+            SweepScenario::new("pice", baselines::pice("llama70b-sim"), wl.clone()),
+            SweepScenario::new("cloud", baselines::cloud_only("llama70b-sim"), wl.clone()),
+            SweepScenario::new("routing", baselines::routing("llama70b-sim"), wl),
+        ]
+    };
+    let same = |a: &[ScenarioResult], b: &[ScenarioResult]| {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| match (x, y) {
+                (Ok((_, ta)), Ok((_, tb))) => {
+                    ta.len() == tb.len()
+                        && ta.iter().zip(tb).all(|(u, v)| {
+                            u.answer == v.answer && u.done == v.done && u.mode == v.mode
+                        })
+                }
+                _ => false,
+            })
+    };
+    let spill_dir = std::path::Path::new("bench_results").join("fig_cache_trace_store");
+    let mut all_identical = true;
+    let mut cells = 0usize;
+    for (arr_name, arrival) in [("open", Arrival::Poisson), ("closed", Arrival::Burst)] {
+        let grid = grid_for(arrival);
+        let reference = SweepRunner::new(1).run(&grid, &corpus, &tok, &reg, |_| {
+            Box::new(base.clone()) as Box<dyn TextBackend>
+        });
+        for (budget_name, cfg) in [
+            ("off", None),
+            ("tiny", Some(PoolCfg::byte_budget(2048))),
+            ("tiny-spill", Some(PoolCfg::byte_budget(2048))),
+            ("huge", Some(PoolCfg::byte_budget(usize::MAX))),
+        ] {
+            for threads in [1usize, 2, 4] {
+                let cache = cfg.map(|c| Arc::new(SharedMemoCache::with_cfg(c)));
+                if budget_name == "tiny-spill" {
+                    let _ = std::fs::remove_dir_all(&spill_dir);
+                    if let Some(c) = &cache {
+                        load_snapshot(c, &spill_dir, "trace-stamp");
+                    }
+                }
+                let got = SweepRunner::new(threads).run(&grid, &corpus, &tok, &reg, |i| {
+                    match &cache {
+                        Some(c) => Box::new(MemoBackend::shared(base.clone(), c.clone(), i as u32))
+                            as Box<dyn TextBackend>,
+                        None => Box::new(base.clone()) as Box<dyn TextBackend>,
+                    }
+                });
+                let ok = same(&reference, &got);
+                all_identical &= ok;
+                cells += 1;
+                if !ok {
+                    println!(
+                        "trace MISMATCH: budget={budget_name} threads={threads} loop={arr_name}"
+                    );
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&spill_dir);
+    println!(
+        "trace_identity: {cells} cells (budget off/tiny/tiny-spill/huge x 1/2/4 threads x open/closed) -> {}",
+        if all_identical { "all identical" } else { "MISMATCH (BUG)" }
+    );
+    rows.push(obj(vec![
+        ("bench", s("trace_identity")),
+        ("cells", num(cells as f64)),
+        ("identical", num(all_identical as usize as f64)),
+    ]));
+
+    let json = Json::Arr(rows);
+    common::dump("fig_cache", json.clone());
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(std::path::Path::to_path_buf)
+        .unwrap_or_default();
+    let path = root.join("BENCH_fig_cache.json");
+    if std::fs::write(&path, json.to_string()).is_ok() {
+        println!("[saved {}]", path.display());
+    }
+    Ok(())
+}

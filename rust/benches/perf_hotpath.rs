@@ -337,6 +337,25 @@ fn main() -> Result<(), String> {
             ("restored_entries", num(restored as f64)),
         ]));
         pmemo.save().map_err(|e| format!("persist memo cache: {e}"))?;
+        let cs = pmemo.cache_stats();
+        println!(
+            "{:<44} {:>12}  ({} pages spilled, {} faulted, {:.1} KiB resident, {} non-finite skipped)",
+            "  buffer-pool evictions",
+            cs.evictions,
+            cs.spilled_pages,
+            cs.faulted_pages,
+            cs.resident_bytes as f64 / 1024.0,
+            cs.skipped_nonfinite,
+        );
+        rows.push(obj(vec![
+            ("bench", s("cache_pool")),
+            ("evictions", num(cs.evictions as f64)),
+            ("spilled_pages", num(cs.spilled_pages as f64)),
+            ("faulted_pages", num(cs.faulted_pages as f64)),
+            ("resident_bytes", num(cs.resident_bytes as f64)),
+            ("resident_entries", num(cs.resident_entries as f64)),
+            ("skipped_nonfinite", num(cs.skipped_nonfinite as f64)),
+        ]));
         println!("[persistent cache at {cache_path}]");
     } else {
         println!("(PICE_MEMO_PATH exported empty — skipping persistent-cache bench)");

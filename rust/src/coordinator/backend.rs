@@ -17,12 +17,15 @@
 //!  * [`MemoBackend`] adds a bounded memo-cache keyed by
 //!    (model, prompt, sampling params) — bench workloads replay the same
 //!    questions across figures, so repeated generations become lookups.
-//!    The store itself is a lock-sharded, `Arc`-shareable
-//!    [`SharedMemoCache`](crate::sweep::cache::SharedMemoCache): N
-//!    concurrent engines (sweep scenarios) can hit ONE in-process cache.
+//!    The store itself is an `Arc`-shareable
+//!    [`SharedMemoCache`](crate::sweep::cache::SharedMemoCache) — a façade
+//!    over the paged buffer pool in [`crate::store`] (budgeted residency,
+//!    clock eviction, disk spill): N concurrent engines (sweep scenarios)
+//!    can hit ONE in-process cache.
 //!  * [`PersistentMemoBackend`] extends the memo-cache across *processes*:
-//!    the cache is restored from a versioned, stamp-guarded JSON snapshot at
-//!    construction and written back on save/drop, so separate bench runs
+//!    the cache binds to a versioned, stamp-guarded paged store directory
+//!    at construction (only the manifest is read; pages fault in on
+//!    demand) and flushes dirty pages on save/drop, so separate bench runs
 //!    share one cache.
 
 use std::collections::HashMap;
@@ -458,17 +461,19 @@ impl<B: TextBackend> TextBackend for MemoBackend<B> {
 // Persistent memo backend (cross-run generation cache)
 // ---------------------------------------------------------------------------
 
-/// A [`MemoBackend`] whose contents survive the process: the bounded cache
-/// is restored from a versioned JSON snapshot at construction and written
-/// back on [`PersistentMemoBackend::save`] (or drop). Figure benches replay
-/// the same questions across separate processes, so one bench warms the
-/// cache for the next.
+/// A [`MemoBackend`] whose contents survive the process: the cache is
+/// attached to a paged on-disk store at construction (only the manifest is
+/// read — pages fault in on demand) and dirty pages are written back on
+/// [`PersistentMemoBackend::save`] (or drop). Figure benches replay the
+/// same questions across separate processes, so one bench warms the cache
+/// for the next.
 ///
-/// The snapshot machinery (entry serde, per-stamp sections, temp+rename
-/// writes) lives in [`crate::sweep::cache`] — this type is the standalone
-/// wrapper binding one private cache to one file. `Env::load` instead binds
-/// its process-wide [`SharedMemoCache`] to the snapshot directly, so a
-/// whole sweep costs ONE load and ONE save.
+/// The store machinery (paged files, versioned stamped headers, temp+rename
+/// writes, one-time v1 snapshot migration) lives in [`crate::store`] behind
+/// [`crate::sweep::cache`] — this type is the standalone wrapper binding
+/// one private cache to one store directory. `Env::load` instead binds its
+/// process-wide [`SharedMemoCache`] to the store directly, so a whole sweep
+/// costs ONE attach and ONE save.
 pub struct PersistentMemoBackend<B: TextBackend> {
     memo: MemoBackend<B>,
     snapshot: SnapshotState,
@@ -504,6 +509,12 @@ impl<B: TextBackend> PersistentMemoBackend<B> {
 
     pub fn hit_rate(&self) -> f64 {
         self.memo.hit_rate()
+    }
+
+    /// Full pool-level counter snapshot (evictions, spilled pages, resident
+    /// bytes, non-finite skips, …) — superset of [`Self::stats`].
+    pub fn cache_stats(&self) -> crate::sweep::CacheStats {
+        self.memo.cache().stats()
     }
 
     pub fn len(&self) -> usize {

@@ -16,6 +16,8 @@
 //! * online serving: [`serve`] (streaming progressive-response sessions
 //!   over the step-driven engine core, with admission control), [`fleet`]
 //!   (N engine shards behind a hash / least-loaded placement router)
+//! * storage: [`store`] (paged buffer-pool generation store — budgeted
+//!   residency, clock eviction, disk spill; [`sweep::cache`] is its façade)
 //! * evaluation scale-out: [`sweep`] (shared generation cache + the
 //!   concurrent scenario-sweep runner), [`scenario`] (env wiring)
 
@@ -40,6 +42,7 @@ pub mod scenario;
 pub mod serve;
 pub mod simclock;
 pub mod sketch;
+pub mod store;
 pub mod sweep;
 pub mod testkit;
 pub mod tokenizer;

@@ -107,8 +107,12 @@ ENVIRONMENT KNOBS (serve/bench execution layer — see PERF.md)
   PICE_ARTIFACTS=<dir>     artifacts directory (default ./artifacts)
   PICE_WORKERS=<n>         backend worker pool (unset: auto-size, cap 8)
   PICE_SWEEP_THREADS=<n>   scenario-sweep pool for grid benches (unset: auto)
-  PICE_MEMO_CAP=<n>        generation memo-cache bound (default 4096, 0 = off)
-  PICE_MEMO_PATH=<path>    persist the memo cache across processes
+  PICE_MEMO_CAP=<n>        generation memo-cache entry cap (default 4096, 0 = off)
+  PICE_CACHE_BUDGET=<b>    resident-byte budget for the cache's buffer pool
+                           (k/m/g suffixes; 0 = off; overrides PICE_MEMO_CAP;
+                           cold pages spill to PICE_MEMO_PATH when set)
+  PICE_MEMO_PATH=<path>    persist the memo cache across processes (paged
+                           store directory; v1 snapshot files auto-migrate)
   PICE_BENCH_N=<n>         requests per bench scenario (default 60)
   PICE_BENCH_SMOKE=1       tiny CI sizing for benches
   PICE_SINGLE_FIFO=1       ablate Algorithm 1 into one FIFO list
@@ -351,6 +355,25 @@ fn serve(args: &Args) -> Result<(), String> {
     }
     if m.requeue_retries > 0 {
         println!("requeue retries {} deferred admissions under queue pressure", m.requeue_retries);
+    }
+    if let Some(cs) = env.cache_stats() {
+        if cs.lookups() > 0 {
+            let skipped = if cs.skipped_nonfinite > 0 {
+                format!(" | {} non-finite skipped", cs.skipped_nonfinite)
+            } else {
+                String::new()
+            };
+            println!(
+                "memo cache      {:.0}% hit ({:.0}% cross) | {} evictions, {} pages spilled, \
+                 {} faulted | {:.1} MiB resident{skipped}",
+                cs.hit_rate() * 100.0,
+                cs.cross_hit_rate() * 100.0,
+                cs.evictions,
+                cs.spilled_pages,
+                cs.faulted_pages,
+                cs.resident_bytes as f64 / (1024.0 * 1024.0),
+            );
+        }
     }
     if let Some((summaries, states)) = calib_out {
         if summaries.len() == 1 {

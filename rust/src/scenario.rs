@@ -34,8 +34,9 @@ type ReplicaFactory = dyn Fn() -> Box<dyn TextBackend + Send> + Send + Sync;
 /// scenario all hit the same store, so cross-variant replays (Fig. 6's four
 /// systems answering the same questions with the same derived seeds) are
 /// hits no matter which variant generated first. With `PICE_MEMO_PATH` set
-/// the snapshot is loaded ONCE here and saved ONCE when the `Env` drops —
-/// not once per run.
+/// the paged store is attached ONCE here (manifest only — pages fault in on
+/// demand) and dirty pages are saved ONCE when the `Env` drops — not once
+/// per run.
 pub struct Env {
     pub tok: Tokenizer,
     pub corpus: Arc<Corpus>,
@@ -72,11 +73,20 @@ impl Env {
     ///   unparsable) auto-sizes from the host — see [`auto_workers`].
     /// * `PICE_SWEEP_THREADS=N` — scenario-sweep pool size for
     ///   [`Env::run_sweep`] (unset auto-sizes the same way).
-    /// * `PICE_MEMO_CAP=N` (default 4096; 0 disables) — bound of the shared
-    ///   generation memo-cache.
+    /// * `PICE_MEMO_CAP=N` (default 4096; 0 disables) — entry-count bound
+    ///   of the shared generation memo-cache.
+    /// * `PICE_CACHE_BUDGET=bytes` (optional `k`/`m`/`g` suffix; 0
+    ///   disables the cache) — hard RESIDENT-BYTE budget for the cache's
+    ///   buffer pool instead of the entry cap; cold pages are evicted by a
+    ///   clock policy and, with `PICE_MEMO_PATH` set, spilled to disk
+    ///   rather than discarded (see PERF.md §Buffer-pool store). Takes
+    ///   precedence over `PICE_MEMO_CAP`; an unparsable value is an error.
     /// * `PICE_MEMO_PATH=path` — persist the shared cache to a
-    ///   stamp-guarded snapshot at `path`, so separate bench processes
-    ///   share one cache (see PERF.md §Persistent cache).
+    ///   stamp-guarded paged store at `path` (a directory), so separate
+    ///   bench processes share one cache; only the manifest is read at
+    ///   load, pages fault in on demand (see PERF.md §Persistent cache).
+    ///   A pre-existing v1 monolithic snapshot file at `path` is imported
+    ///   once and converted in place.
     /// * `PICE_CALIB_PATH=path` — persist learned cost-model calibration
     ///   to a stamp-guarded store at `path`; `--calibrate warm` /
     ///   [`Env::apply_calib`] warm-start from it (PERF.md §Calibrated cost
@@ -93,6 +103,17 @@ impl Env {
             std::env::var("PICE_WORKERS").ok().and_then(|v| v.parse().ok());
         let workers = explicit_workers.unwrap_or_else(auto_workers);
         let memo_cap = env_usize("PICE_MEMO_CAP", 4096);
+        // strict parse: a typo'd budget silently falling back to the entry
+        // cap would be a memory-limit violation, not a degraded mode
+        let cache_budget = match std::env::var("PICE_CACHE_BUDGET") {
+            Ok(v) => Some(crate::store::parse_byte_size(&v).ok_or_else(|| {
+                format!(
+                    "PICE_CACHE_BUDGET: unparsable byte size {v:?} \
+                     (use e.g. 4096, 512k, 64m, 2g; 0 disables the cache)"
+                )
+            })?),
+            Err(_) => None,
+        };
         let memo_path = std::env::var("PICE_MEMO_PATH").ok().filter(|p| !p.is_empty());
 
         let (tok, corpus, registry, real, stamp, first, replica) = if have_artifacts
@@ -125,7 +146,14 @@ impl Env {
             (tok, corpus, registry, false, stamp, first, replica)
         };
 
-        let cache = (memo_cap > 0).then(|| Arc::new(SharedMemoCache::new(memo_cap)));
+        let cache = match cache_budget {
+            // byte budget wins over the entry cap; 0 = cache off
+            Some(0) => None,
+            Some(bytes) => {
+                Some(Arc::new(SharedMemoCache::with_cfg(crate::store::PoolCfg::byte_budget(bytes))))
+            }
+            None => (memo_cap > 0).then(|| Arc::new(SharedMemoCache::new(memo_cap))),
+        };
         let snapshot = match (&cache, memo_path) {
             (Some(c), Some(p)) => Some(load_snapshot(c, p, &stamp)),
             _ => None,

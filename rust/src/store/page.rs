@@ -1,0 +1,264 @@
+//! Pages: the buffer pool's unit of residency, eviction, and disk I/O.
+//!
+//! A page is an append-ordered group of up to [`PAGE_ENTRIES`] memo entries.
+//! Pages are immutable once sealed (the pool only ever appends to its
+//! current tail page and entries themselves never mutate), which is what
+//! makes spill-while-readable safe: an evictor can serialize a sealed page
+//! to disk while readers keep hitting it, then drop the payload under the
+//! pool lock.
+//!
+//! The on-disk page format is a versioned JSON object (`version`, `stamp`,
+//! `entries`) reusing the v1 snapshot's exact-bit entry serde: u64 fields
+//! (seed, temperature bit pattern) are hex strings because JSON numbers are
+//! f64 and cannot represent all 64-bit patterns; f64 logps round-trip
+//! exactly through Rust's shortest-representation formatter. Entries whose
+//! logps are non-finite (e.g. `-inf` from a zero-probability token) have no
+//! JSON representation and are **skipped at write time** — the skip is
+//! counted and surfaced as `CacheStats::skipped_nonfinite` so a shrinking
+//! store is diagnosable rather than silent.
+
+use std::sync::Arc;
+
+use super::{MemoKey, SNAPSHOT_OWNER};
+use crate::runtime::GenOutput;
+use crate::util::json::{self, Json};
+
+/// Entries per page. Small enough that a fault-in reads a few KiB, large
+/// enough that the per-page file and index overheads amortize. The default
+/// 4096-entry cache is 64 pages.
+pub const PAGE_ENTRIES: usize = 64;
+
+/// One resident entry: the full key, the cached output, and the cache-owner
+/// id that produced it (cross-variant hit accounting).
+#[derive(Clone)]
+pub struct PageEntry {
+    pub key: Arc<MemoKey>,
+    pub out: GenOutput,
+    pub owner: u32,
+}
+
+/// A page's in-memory payload: entries in insertion order plus the running
+/// byte estimate the pool's budget accounting uses.
+#[derive(Clone, Default)]
+pub struct PageData {
+    pub entries: Vec<PageEntry>,
+    pub bytes: usize,
+}
+
+impl PageData {
+    pub fn find(&self, key: &MemoKey) -> Option<&PageEntry> {
+        // pages are small (<= PAGE_ENTRIES); a linear exact-key scan beats
+        // a per-page map and is collision-proof where the hash index isn't
+        self.entries.iter().find(|e| *e.key == *key)
+    }
+
+    /// Append an entry; returns its byte estimate (already added to
+    /// `self.bytes`).
+    pub fn push(&mut self, key: Arc<MemoKey>, out: GenOutput, owner: u32) -> usize {
+        let eb = entry_bytes(&key, &out);
+        self.bytes += eb;
+        self.entries.push(PageEntry { key, out, owner });
+        eb
+    }
+}
+
+/// Heap-byte estimate of one entry: key payload (model string, prompt
+/// tokens) + output payload (tokens, logps) + fixed per-entry overhead for
+/// the structs, `Arc` header, and index slot. An estimate, not an exact
+/// allocator measurement — the budget is a target, not an audit.
+pub fn entry_bytes(key: &MemoKey, out: &GenOutput) -> usize {
+    key.model.len() + key.prompt.len() * 4 + out.tokens.len() * 4 + out.logps.len() * 8 + 96
+}
+
+fn u64_hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn parse_u64_hex(j: &Json) -> Option<u64> {
+    u64::from_str_radix(j.as_str()?, 16).ok()
+}
+
+fn u32s_json(v: &[u32]) -> Json {
+    Json::Arr(v.iter().map(|&t| Json::Num(t as f64)).collect())
+}
+
+fn parse_u32s(j: &Json) -> Option<Vec<u32>> {
+    j.as_arr()?.iter().map(|x| x.as_f64().map(|f| f as u32)).collect()
+}
+
+/// One on-disk entry: the full memo key + the cached output + the owner id.
+/// u64 fields (seed, temperature bit pattern) are hex strings — JSON
+/// numbers are f64 and can't represent all 64-bit patterns exactly.
+pub fn entry_json(key: &MemoKey, out: &GenOutput, owner: u32) -> Json {
+    json::obj(vec![
+        ("model", json::s(&key.model)),
+        ("prompt", u32s_json(&key.prompt)),
+        ("t_bits", u64_hex(key.temperature_bits)),
+        ("max_tokens", json::num(key.max_tokens as f64)),
+        (
+            "stop",
+            match key.stop_token {
+                Some(t) => json::num(t as f64),
+                None => Json::Null,
+            },
+        ),
+        ("seed", u64_hex(key.seed)),
+        ("tokens", u32s_json(&out.tokens)),
+        ("logps", Json::Arr(out.logps.iter().map(|&x| Json::Num(x)).collect())),
+        ("finished", Json::Bool(out.finished)),
+        ("owner", json::num(owner as f64)),
+    ])
+}
+
+/// Parse one entry. The `owner` field is absent in v1 snapshot entries;
+/// those default to [`SNAPSHOT_OWNER`] (they were produced by some earlier
+/// process, which is exactly what the snapshot owner means).
+pub fn entry_from_json(j: &Json) -> Option<(MemoKey, GenOutput, u32)> {
+    let key = MemoKey {
+        model: j.get("model")?.as_str()?.to_string(),
+        prompt: parse_u32s(j.get("prompt")?)?,
+        temperature_bits: parse_u64_hex(j.get("t_bits")?)?,
+        max_tokens: j.get("max_tokens")?.as_usize()?,
+        stop_token: match j.get("stop")? {
+            Json::Null => None,
+            x => Some(x.as_f64()? as u32),
+        },
+        seed: parse_u64_hex(j.get("seed")?)?,
+    };
+    let out = GenOutput {
+        tokens: parse_u32s(j.get("tokens")?)?,
+        logps: j.get("logps")?.as_arr()?.iter().map(Json::as_f64).collect::<Option<Vec<f64>>>()?,
+        finished: j.get("finished")?.as_bool()?,
+    };
+    let owner = match j.get("owner") {
+        Some(o) => o.as_f64()? as u32,
+        None => SNAPSHOT_OWNER,
+    };
+    Some((key, out, owner))
+}
+
+/// Serialize a page for disk. Entries with non-finite logps are skipped
+/// (second element of the return: how many); the page header carries the
+/// store version and the invalidation stamp so a reader can reject foreign
+/// or torn files outright.
+pub fn page_json(stamp: &str, data: &PageData) -> (Json, u64) {
+    let mut skipped = 0u64;
+    let mut entries = Vec::with_capacity(data.entries.len());
+    for e in &data.entries {
+        if e.out.logps.iter().all(|x| x.is_finite()) {
+            entries.push(entry_json(&e.key, &e.out, e.owner));
+        } else {
+            skipped += 1;
+        }
+    }
+    let j = json::obj(vec![
+        ("version", json::num(super::STORE_VERSION as f64)),
+        ("stamp", json::s(stamp)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    (j, skipped)
+}
+
+/// Parse a page file's text back into a [`PageData`]. `None` on any
+/// mismatch — wrong version, wrong stamp, torn/corrupt JSON, malformed
+/// entry — the caller treats the page as lost (a cold page, never an
+/// error).
+pub fn parse_page(text: &str, stamp: &str) -> Option<PageData> {
+    let j = Json::parse(text).ok()?;
+    if j.get("version").and_then(Json::as_usize) != Some(super::STORE_VERSION) {
+        return None;
+    }
+    if j.get("stamp").and_then(Json::as_str) != Some(stamp) {
+        return None;
+    }
+    let mut data = PageData::default();
+    for e in j.get("entries")?.as_arr()? {
+        let (key, out, owner) = entry_from_json(e)?;
+        data.push(Arc::new(key), out, owner);
+    }
+    Some(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_json_round_trip_exact() {
+        // direct serde check, including u64 bit patterns beyond 2^53 and
+        // negative fractional logps
+        let key = MemoKey {
+            model: "m".to_string(),
+            prompt: vec![1, 2, 4_000_000_000],
+            temperature_bits: 0.7f64.to_bits(),
+            max_tokens: 24,
+            stop_token: Some(7),
+            seed: u64::MAX - 12345,
+        };
+        let out = GenOutput {
+            tokens: vec![9, 8, 7],
+            logps: vec![-0.123456789012345, -3.5e-7, 0.0],
+            finished: true,
+        };
+        let j = entry_json(&key, &out, 3);
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        let (k2, o2, owner) = entry_from_json(&reparsed).unwrap();
+        assert_eq!(k2, key);
+        assert_eq!(o2.tokens, out.tokens);
+        assert_eq!(o2.logps, out.logps);
+        assert_eq!(o2.finished, out.finished);
+        assert_eq!(owner, 3);
+    }
+
+    #[test]
+    fn v1_entry_without_owner_defaults_to_snapshot_owner() {
+        let key = MemoKey {
+            model: "m".into(),
+            prompt: vec![4],
+            temperature_bits: 0,
+            max_tokens: 8,
+            stop_token: None,
+            seed: 5,
+        };
+        let out = GenOutput { tokens: vec![1], logps: vec![-0.5], finished: true };
+        let mut j = entry_json(&key, &out, 9);
+        if let Json::Obj(m) = &mut j {
+            m.remove("owner");
+        }
+        let (_, _, owner) = entry_from_json(&j).unwrap();
+        assert_eq!(owner, SNAPSHOT_OWNER);
+    }
+
+    #[test]
+    fn page_write_skips_nonfinite_and_counts() {
+        let mk = |seed: u64, logp: f64| {
+            (
+                MemoKey {
+                    model: "m".into(),
+                    prompt: vec![seed as u32],
+                    temperature_bits: 0,
+                    max_tokens: 8,
+                    stop_token: None,
+                    seed,
+                },
+                GenOutput { tokens: vec![seed as u32], logps: vec![logp], finished: true },
+            )
+        };
+        let mut data = PageData::default();
+        let (k1, o1) = mk(1, -0.25);
+        let (k2, o2) = mk(2, f64::NEG_INFINITY);
+        let (k3, o3) = mk(3, f64::NAN);
+        data.push(Arc::new(k1.clone()), o1, 0);
+        data.push(Arc::new(k2), o2, 0);
+        data.push(Arc::new(k3), o3, 0);
+        let (j, skipped) = page_json("st", &data);
+        assert_eq!(skipped, 2);
+        let back = parse_page(&j.to_string(), "st").unwrap();
+        assert_eq!(back.entries.len(), 1);
+        assert_eq!(*back.entries[0].key, k1);
+        // stamp / version mismatches reject the whole page
+        assert!(parse_page(&j.to_string(), "other").is_none());
+        assert!(parse_page("{\"version\":99}", "st").is_none());
+        assert!(parse_page("torn{", "st").is_none());
+    }
+}

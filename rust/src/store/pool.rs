@@ -1,0 +1,765 @@
+//! The buffer pool: resident pages under a hard budget, clock eviction,
+//! pin-while-reading, and demand fault-in from the spill store.
+//!
+//! One `Mutex<Inner>` guards all frame state; **no disk I/O ever happens
+//! under that lock**. The two slow paths both pin their frame, release the
+//! lock, do the I/O, and re-lock to publish:
+//!
+//! * **fault-in** (`Spilled` → `Resident`): the frame moves to `Faulting`
+//!   so concurrent readers of the same page wait on a condvar instead of
+//!   issuing duplicate reads, and concurrent evictors skip it.
+//! * **spill** (`Resident` → `Spilled`): the victim page stays fully
+//!   readable while its bytes are serialized — pages are append-only and
+//!   sealed once full, so the pinned snapshot the writer serializes can
+//!   only go stale in the harmless direction (it IS the page).
+//!
+//! Eviction is clock (second-chance): every hit sets the frame's ref bit,
+//! the clock hand clears it on first pass and evicts on second, skipping
+//! the tail page (still accepting appends), pinned frames, and non-resident
+//! frames. A victim with a clean disk copy just drops its payload; a dirty
+//! victim spills first (or, with no store attached, is dropped — cache
+//! semantics allow it: eviction changes hit rates, never traces).
+//!
+//! Budgets come in two shapes ([`PoolCfg`]): the legacy entry cap
+//! (`PICE_MEMO_CAP`, where caps below one page shrink the page size so
+//! tiny caches keep exact FIFO retention) and the byte budget
+//! (`PICE_CACHE_BUDGET`) that this PR adds.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use super::page::{PageData, PAGE_ENTRIES};
+use super::spill::{self, DiskPage, SpillStore};
+use super::{stable_key_hash, MemoKey, SNAPSHOT_OWNER};
+use crate::runtime::GenOutput;
+
+/// Residency budget for a [`BufferPool`]. Exactly one of the two limits is
+/// finite in the stock configurations, but both are enforced.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolCfg {
+    /// Max resident entries (the legacy `PICE_MEMO_CAP` semantics).
+    pub max_entries: usize,
+    /// Max resident payload bytes (`PICE_CACHE_BUDGET`).
+    pub byte_budget: usize,
+    /// Entries per page before the tail seals and a new one is allocated.
+    pub page_entries: usize,
+}
+
+impl PoolCfg {
+    /// The legacy entry-count bound. Caps below one full page shrink the
+    /// page to the cap so retention is exact (a cap of 2 keeps exactly the
+    /// 2 newest entries, not "whatever survives page-granular eviction").
+    pub fn entry_capped(capacity: usize) -> PoolCfg {
+        let cap = capacity.max(1);
+        PoolCfg { max_entries: cap, byte_budget: usize::MAX, page_entries: cap.min(PAGE_ENTRIES) }
+    }
+
+    /// A hard byte budget on resident payload; entry count unbounded.
+    pub fn byte_budget(bytes: usize) -> PoolCfg {
+        PoolCfg { max_entries: usize::MAX, byte_budget: bytes.max(1), page_entries: PAGE_ENTRIES }
+    }
+}
+
+/// Monotone pool counters, snapshot by [`BufferPool::counters`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub cross_hits: u64,
+    pub insertions: u64,
+    /// pages whose payload was dropped from memory (spilled or discarded)
+    pub evictions: u64,
+    /// page files written by the evictor (flush writes are not evictions)
+    pub spilled_pages: u64,
+    /// pages read back from disk on demand
+    pub faulted_pages: u64,
+    /// entries with non-finite logps skipped by page writes (no JSON
+    /// representation; the store shrinks by this many entries)
+    pub skipped_nonfinite: u64,
+    /// current resident payload byte estimate
+    pub resident_bytes: u64,
+    /// current resident entry count
+    pub resident_entries: u64,
+}
+
+enum FrameState {
+    /// Payload in memory. `Arc` so a spill writer can serialize the sealed
+    /// page outside the lock while readers keep hitting it.
+    Resident(Arc<PageData>),
+    /// Payload only on disk (`disk`/`hashes`/`n` describe the file).
+    Spilled,
+    /// A fault-in is reading the file; readers wait on the pool condvar.
+    Faulting,
+    /// Gone entirely (evicted with no store, or the file was torn).
+    Dropped,
+}
+
+struct Frame {
+    state: FrameState,
+    /// page file name under the spill dir, if a disk copy exists
+    disk: Option<String>,
+    /// key hashes of the DISK copy (manifest data) — maintained only while
+    /// the payload is off-memory; recomputed from the payload on spill
+    hashes: Vec<u64>,
+    /// entry count: payload len while resident, disk count while spilled
+    n: usize,
+    /// payload byte estimate (kept across spill as the disk estimate)
+    bytes: usize,
+    /// resident payload differs from (or doesn't have) a disk copy
+    dirty: bool,
+    /// attached from a prior process: owners rewritten to
+    /// [`SNAPSHOT_OWNER`] at fault-in so warm hits count as cross hits
+    foreign: bool,
+    ref_bit: bool,
+    pins: u32,
+}
+
+impl Frame {
+    fn fresh() -> Frame {
+        Frame {
+            state: FrameState::Resident(Arc::new(PageData::default())),
+            disk: None,
+            hashes: Vec::new(),
+            n: 0,
+            bytes: 0,
+            dirty: false,
+            foreign: false,
+            ref_bit: false,
+            pins: 0,
+        }
+    }
+
+    fn attached(dp: &DiskPage) -> Frame {
+        Frame {
+            state: FrameState::Spilled,
+            disk: Some(dp.file.clone()),
+            hashes: dp.hashes.clone(),
+            n: dp.n,
+            bytes: dp.bytes,
+            dirty: false,
+            foreign: true,
+            ref_bit: false,
+            pins: 0,
+        }
+    }
+}
+
+struct Inner {
+    frames: Vec<Frame>,
+    /// stable key hash -> frames that (may) hold the key; exact match is
+    /// re-checked inside the page, so collisions and stale slots only cost
+    /// a probe, never a wrong answer
+    index: HashMap<u64, Vec<u32>>,
+    /// frame currently accepting appends (always resident, never evicted)
+    tail: Option<u32>,
+    /// clock hand (frame index, wrapping)
+    hand: usize,
+    resident_entries: usize,
+    resident_bytes: usize,
+    spill: Option<SpillStore>,
+    evictions: u64,
+    spilled_pages: u64,
+    faulted_pages: u64,
+    skipped_nonfinite: u64,
+}
+
+/// The paged, budgeted, spill-backed generation store. All methods take
+/// `&self`; share it via `Arc`.
+pub struct BufferPool {
+    cfg: PoolCfg,
+    inner: Mutex<Inner>,
+    cond: Condvar,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    cross_hits: AtomicU64,
+    insertions: AtomicU64,
+    /// insertion watermark at the last successful flush — the dirty check
+    flushed: AtomicU64,
+}
+
+impl BufferPool {
+    pub fn new(cfg: PoolCfg) -> BufferPool {
+        BufferPool {
+            cfg,
+            inner: Mutex::new(Inner {
+                frames: Vec::new(),
+                index: HashMap::new(),
+                tail: None,
+                hand: 0,
+                resident_entries: 0,
+                resident_bytes: 0,
+                spill: None,
+                evictions: 0,
+                spilled_pages: 0,
+                faulted_pages: 0,
+                skipped_nonfinite: 0,
+            }),
+            cond: Condvar::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            cross_hits: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            flushed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn cfg(&self) -> PoolCfg {
+        self.cfg
+    }
+
+    /// Look up `key` on behalf of `owner`, faulting the page in from disk
+    /// if needed; counts hit/miss and cross-owner provenance.
+    pub fn get(&self, key: &MemoKey, owner: u32) -> Option<GenOutput> {
+        let h = stable_key_hash(key);
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let cands: Vec<u32> = inner.index.get(&h).cloned().unwrap_or_default();
+            let mut fault_target: Option<usize> = None;
+            let mut waiting = false;
+            for fid in cands {
+                let fid = fid as usize;
+                let found = match &inner.frames[fid].state {
+                    FrameState::Resident(data) => {
+                        data.find(key).map(|e| (e.out.clone(), e.owner))
+                    }
+                    FrameState::Spilled => {
+                        if fault_target.is_none() {
+                            fault_target = Some(fid);
+                        }
+                        None
+                    }
+                    FrameState::Faulting => {
+                        waiting = true;
+                        None
+                    }
+                    FrameState::Dropped => None,
+                };
+                if let Some((out, e_owner)) = found {
+                    inner.frames[fid].ref_bit = true;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    if e_owner != owner {
+                        self.cross_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Some(out);
+                }
+            }
+            if let Some(fid) = fault_target {
+                inner = self.fault_in(inner, fid);
+                continue; // re-probe: the page is resident (or dropped) now
+            }
+            if waiting {
+                inner = self.cond.wait(inner).unwrap();
+                continue;
+            }
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+    }
+
+    /// Insert an entry produced by `owner`, appending to the tail page and
+    /// enforcing the budget. Duplicate keys (already resident) are no-ops —
+    /// entries are pure in the key, so the resident copy is the same bytes.
+    pub fn insert(&self, key: MemoKey, out: GenOutput, owner: u32) {
+        let h = stable_key_hash(&key);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(cands) = inner.index.get(&h) {
+            let cands = cands.clone();
+            for fid in cands {
+                if let FrameState::Resident(data) = &inner.frames[fid as usize].state {
+                    if data.find(&key).is_some() {
+                        return;
+                    }
+                }
+            }
+        }
+        let open_tail = inner.tail.filter(|&t| match &inner.frames[t as usize].state {
+            FrameState::Resident(d) => d.entries.len() < self.cfg.page_entries,
+            _ => false,
+        });
+        let t = match open_tail {
+            Some(t) => t,
+            None => {
+                let t = inner.frames.len() as u32;
+                inner.frames.push(Frame::fresh());
+                inner.tail = Some(t);
+                t
+            }
+        };
+        let eb;
+        {
+            let f = &mut inner.frames[t as usize];
+            let FrameState::Resident(arc) = &mut f.state else {
+                unreachable!("tail page is always resident")
+            };
+            // the tail Arc is never cloned (spill skips the tail), so this
+            // never deep-copies
+            let data = Arc::make_mut(arc);
+            eb = data.push(Arc::new(key), out, owner);
+            f.n = data.entries.len();
+            f.bytes = data.bytes;
+            f.dirty = true;
+        }
+        inner.resident_entries += 1;
+        inner.resident_bytes += eb;
+        inner.index.entry(h).or_default().push(t);
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        let _ = self.enforce_budget(inner, None);
+    }
+
+    /// Bind the pool to the paged on-disk store at `root` for `stamp`:
+    /// register each on-disk page as a non-resident frame (nothing is read
+    /// beyond the manifest), or — if `root` holds a v1 monolithic snapshot
+    /// — import it once and convert it to the paged layout. Returns how
+    /// many entries became available. Never an error.
+    pub fn attach_store(&self, root: impl Into<PathBuf>, stamp: &str) -> usize {
+        let att = SpillStore::attach(root, stamp);
+        let mut restored = 0usize;
+        {
+            let mut inner = self.inner.lock().unwrap();
+            for dp in &att.pages {
+                let fid = inner.frames.len() as u32;
+                for &h in &dp.hashes {
+                    inner.index.entry(h).or_default().push(fid);
+                }
+                restored += dp.n;
+                inner.frames.push(Frame::attached(dp));
+            }
+            inner.spill = Some(att.store);
+        }
+        if !att.imported.is_empty() {
+            // v1 migration: the old file is already gone — flush right away
+            // so the imported entries exist in the new layout even if this
+            // process never saves
+            for (key, out, owner) in att.imported {
+                restored += 1;
+                self.insert(key, out, owner);
+            }
+            let _ = self.flush();
+        }
+        restored
+    }
+
+    /// Write every dirty resident page and a manifest covering all
+    /// disk-backed frames; prior page files no longer referenced are
+    /// removed. No-op without an attached store. This is the end-of-process
+    /// save path (the old monolithic snapshot write), so it runs under the
+    /// pool lock.
+    pub fn flush(&self) -> Result<(), String> {
+        let watermark = self.insertions.load(Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        let Some(mut spill) = inner.spill.take() else { return Ok(()) };
+        let mut result = Ok(());
+        let mut manifest: Vec<DiskPage> = Vec::new();
+        for fid in 0..inner.frames.len() {
+            let write_needed = {
+                let f = &inner.frames[fid];
+                matches!(f.state, FrameState::Resident(_)) && f.dirty && f.n > 0
+            };
+            if write_needed {
+                let file = match inner.frames[fid].disk.clone() {
+                    Some(f) => f,
+                    None => {
+                        let f = spill.alloc_file();
+                        inner.frames[fid].disk = Some(f.clone());
+                        f
+                    }
+                };
+                let wrote = {
+                    let FrameState::Resident(data) = &inner.frames[fid].state else {
+                        unreachable!()
+                    };
+                    spill.write_page(&file, data)
+                };
+                match wrote {
+                    Ok((dp, skipped)) => {
+                        inner.skipped_nonfinite += skipped;
+                        inner.frames[fid].dirty = false;
+                        manifest.push(dp);
+                    }
+                    Err(e) => {
+                        result = Err(e);
+                        break;
+                    }
+                }
+                continue;
+            }
+            // clean frames with a disk copy still belong in the manifest
+            let f = &inner.frames[fid];
+            if f.disk.is_none() {
+                continue;
+            }
+            match &f.state {
+                FrameState::Resident(data) => {
+                    // clean resident page: disk content == finite subset of
+                    // the payload; rebuild its manifest row from the payload
+                    let mut hashes = Vec::with_capacity(data.entries.len());
+                    for e in &data.entries {
+                        if e.out.logps.iter().all(|x| x.is_finite()) {
+                            hashes.push(stable_key_hash(&e.key));
+                        }
+                    }
+                    manifest.push(DiskPage {
+                        file: f.disk.clone().unwrap(),
+                        n: hashes.len(),
+                        bytes: data.bytes,
+                        hashes,
+                    });
+                }
+                FrameState::Spilled => {
+                    manifest.push(DiskPage {
+                        file: f.disk.clone().unwrap(),
+                        n: f.n,
+                        bytes: f.bytes,
+                        hashes: f.hashes.clone(),
+                    });
+                }
+                // Faulting can't coexist with flush's lock hold beyond the
+                // I/O window; its frame keeps its manifest row next flush.
+                // Dropped/torn frames fall out of the manifest (and their
+                // files are GC'd by write_manifest).
+                _ => {}
+            }
+        }
+        if result.is_ok() {
+            result = spill.write_manifest(&manifest);
+        }
+        inner.spill = Some(spill);
+        if result.is_ok() {
+            self.flushed.store(watermark, Ordering::Relaxed);
+        }
+        result
+    }
+
+    /// Have entries been inserted since the last successful flush?
+    pub fn dirty(&self) -> bool {
+        self.insertions.load(Ordering::Relaxed) != self.flushed.load(Ordering::Relaxed)
+    }
+
+    /// Total distinct keys ever inserted (monotone).
+    pub fn insertions(&self) -> u64 {
+        self.insertions.load(Ordering::Relaxed)
+    }
+
+    /// Entries available (resident + on disk). Excludes dropped pages.
+    pub fn len(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .frames
+            .iter()
+            .map(|f| match &f.state {
+                FrameState::Resident(data) => data.entries.len(),
+                FrameState::Spilled | FrameState::Faulting => f.n,
+                FrameState::Dropped => 0,
+            })
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn counters(&self) -> PoolCounters {
+        let inner = self.inner.lock().unwrap();
+        PoolCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            cross_hits: self.cross_hits.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: inner.evictions,
+            spilled_pages: inner.spilled_pages,
+            faulted_pages: inner.faulted_pages,
+            skipped_nonfinite: inner.skipped_nonfinite,
+            resident_bytes: inner.resident_bytes as u64,
+            resident_entries: inner.resident_entries as u64,
+        }
+    }
+
+    /// All resident entries in page/append order (deterministic for a
+    /// deterministic fill sequence). Diagnostics and tests; spilled pages
+    /// are not faulted in.
+    pub fn export(&self) -> Vec<(MemoKey, GenOutput)> {
+        let inner = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for f in &inner.frames {
+            if let FrameState::Resident(data) = &f.state {
+                for e in &data.entries {
+                    out.push(((*e.key).clone(), e.out.clone()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Read a spilled page back in. Called with the pool locked; the I/O
+    /// itself runs unlocked with the frame in `Faulting` (readers wait,
+    /// evictors skip). Returns the re-acquired guard.
+    fn fault_in<'a>(
+        &'a self,
+        mut inner: MutexGuard<'a, Inner>,
+        fid: usize,
+    ) -> MutexGuard<'a, Inner> {
+        let (path, stamp) = {
+            let spill = inner.spill.as_ref().expect("spilled frame without a store");
+            let file = inner.frames[fid].disk.as_ref().expect("spilled frame without a file");
+            (spill.page_path(file), spill.stamp().to_string())
+        };
+        inner.frames[fid].state = FrameState::Faulting;
+        inner.frames[fid].pins += 1;
+        drop(inner);
+        let read = spill::read_page_file(&path, &stamp);
+        let mut inner = self.inner.lock().unwrap();
+        inner.frames[fid].pins -= 1;
+        match read {
+            Ok(mut data) => {
+                if inner.frames[fid].foreign {
+                    // entries written by a prior process: any hit on them is
+                    // cross-provenance, exactly like the old snapshot restore
+                    for e in &mut data.entries {
+                        e.owner = SNAPSHOT_OWNER;
+                    }
+                    inner.frames[fid].foreign = false;
+                }
+                let (n, bytes) = (data.entries.len(), data.bytes);
+                inner.resident_entries += n;
+                inner.resident_bytes += bytes;
+                inner.faulted_pages += 1;
+                let f = &mut inner.frames[fid];
+                f.n = n;
+                f.bytes = bytes;
+                f.dirty = false;
+                f.ref_bit = true;
+                f.state = FrameState::Resident(Arc::new(data));
+            }
+            Err(_) => {
+                // torn or vanished file: the page is lost, not an error;
+                // the next manifest write garbage-collects the file
+                let f = &mut inner.frames[fid];
+                f.state = FrameState::Dropped;
+                f.disk = None;
+                f.hashes = Vec::new();
+                f.n = 0;
+                f.bytes = 0;
+            }
+        }
+        self.cond.notify_all();
+        // the faulted page is exempt: the caller is about to read it
+        self.enforce_budget(inner, Some(fid))
+    }
+
+    fn over_budget(&self, inner: &Inner) -> bool {
+        inner.resident_entries > self.cfg.max_entries || inner.resident_bytes > self.cfg.byte_budget
+    }
+
+    /// Evict until within budget (or nothing evictable remains). Spill
+    /// writes drop the lock with the victim pinned; see the module docs.
+    fn enforce_budget<'a>(
+        &'a self,
+        mut inner: MutexGuard<'a, Inner>,
+        exempt: Option<usize>,
+    ) -> MutexGuard<'a, Inner> {
+        while self.over_budget(&inner) {
+            let n = inner.frames.len();
+            if n == 0 {
+                break;
+            }
+            // clock scan: first pass clears ref bits, second evicts; bound
+            // the scan so an all-pinned/all-exempt pool terminates
+            let mut victim = None;
+            let mut scanned = 0;
+            while scanned < 2 * n + 2 {
+                let i = inner.hand % n;
+                inner.hand = inner.hand.wrapping_add(1);
+                scanned += 1;
+                if exempt == Some(i) || inner.tail == Some(i as u32) {
+                    continue;
+                }
+                let f = &mut inner.frames[i];
+                if f.pins > 0 || !matches!(f.state, FrameState::Resident(_)) {
+                    continue;
+                }
+                if f.ref_bit {
+                    f.ref_bit = false;
+                    continue;
+                }
+                victim = Some(i);
+                break;
+            }
+            let Some(v) = victim else { break };
+            if !inner.frames[v].dirty && inner.frames[v].disk.is_some() {
+                // clean with a disk copy: just drop the payload
+                drop_payload(&mut inner, v, true);
+                continue;
+            }
+            if inner.spill.is_none() {
+                // no store: discard (hit rates change, traces can't)
+                drop_payload(&mut inner, v, false);
+                continue;
+            }
+            // dirty + store: spill outside the lock with a pin held; the
+            // page stays resident and readable until the write lands
+            let data = match &inner.frames[v].state {
+                FrameState::Resident(d) => d.clone(),
+                _ => continue,
+            };
+            let file = match inner.frames[v].disk.clone() {
+                Some(f) => f,
+                None => {
+                    let f = inner.spill.as_mut().unwrap().alloc_file();
+                    inner.frames[v].disk = Some(f.clone());
+                    f
+                }
+            };
+            let (path, stamp) = {
+                let sp = inner.spill.as_ref().unwrap();
+                (sp.page_path(&file), sp.stamp().to_string())
+            };
+            inner.frames[v].pins += 1;
+            drop(inner);
+            let wrote = spill::write_page_file(&path, &stamp, &data);
+            inner = self.inner.lock().unwrap();
+            inner.frames[v].pins -= 1;
+            match wrote {
+                Ok(skipped) => {
+                    inner.skipped_nonfinite += skipped;
+                    inner.spilled_pages += 1;
+                    inner.frames[v].dirty = false;
+                    drop_payload(&mut inner, v, true);
+                }
+                Err(_) => {
+                    // disk refused the page: discard it rather than retry
+                    // forever against a full disk
+                    inner.frames[v].disk = None;
+                    drop_payload(&mut inner, v, false);
+                }
+            }
+        }
+        inner
+    }
+}
+
+/// Drop frame `v`'s resident payload: to `Spilled` (disk copy exists; the
+/// manifest hashes are recomputed from the payload's finite subset, which
+/// is exactly what the disk file holds) or to `Dropped` (gone). No-op on
+/// non-resident frames.
+fn drop_payload(inner: &mut Inner, v: usize, to_spilled: bool) {
+    let (n_res, b_res, disk_hashes) = match &inner.frames[v].state {
+        FrameState::Resident(data) => {
+            let mut hashes = Vec::new();
+            if to_spilled {
+                hashes.reserve(data.entries.len());
+                for e in &data.entries {
+                    if e.out.logps.iter().all(|x| x.is_finite()) {
+                        hashes.push(stable_key_hash(&e.key));
+                    }
+                }
+            }
+            (data.entries.len(), data.bytes, hashes)
+        }
+        _ => return,
+    };
+    let f = &mut inner.frames[v];
+    if to_spilled {
+        f.n = disk_hashes.len();
+        f.hashes = disk_hashes;
+        f.dirty = false;
+        f.state = FrameState::Spilled;
+    } else {
+        f.n = 0;
+        f.bytes = 0;
+        f.hashes = Vec::new();
+        f.disk = None;
+        f.dirty = false;
+        f.state = FrameState::Dropped;
+    }
+    inner.resident_entries -= n_res;
+    inner.resident_bytes -= b_res;
+    inner.evictions += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(seed: u64) -> MemoKey {
+        MemoKey {
+            model: "m".into(),
+            prompt: vec![seed as u32, 7],
+            temperature_bits: 0.7f64.to_bits(),
+            max_tokens: 16,
+            stop_token: None,
+            seed,
+        }
+    }
+
+    fn out(t: u32) -> GenOutput {
+        GenOutput { tokens: vec![t], logps: vec![-0.25], finished: true }
+    }
+
+    #[test]
+    fn entry_cap_without_store_discards_oldest() {
+        let pool = BufferPool::new(PoolCfg::entry_capped(4));
+        for i in 0..10u64 {
+            pool.insert(key(i), out(i as u32), 0);
+        }
+        let c = pool.counters();
+        assert!(c.resident_entries <= 4, "resident {}", c.resident_entries);
+        assert!(c.evictions > 0 && c.spilled_pages == 0);
+        // newest survive (pages of 4, clock walks oldest-first on cold bits)
+        assert!(pool.get(&key(9), 0).is_some());
+        assert!(pool.get(&key(0), 0).is_none());
+    }
+
+    #[test]
+    fn byte_budget_spills_and_faults_back() {
+        let root =
+            std::env::temp_dir().join(format!("pice_pool_spill_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        // budget below two pages' worth with 64-entry pages: force spill
+        let mut cfg = PoolCfg::byte_budget(4 * 1024);
+        cfg.page_entries = 8;
+        let pool = BufferPool::new(cfg);
+        assert_eq!(pool.attach_store(&root, "st"), 0);
+        for i in 0..64u64 {
+            pool.insert(key(i), out(i as u32), 0);
+        }
+        let c = pool.counters();
+        assert!(c.spilled_pages > 0, "expected spills, got {c:?}");
+        assert!(c.resident_bytes <= 4 * 1024 + 512);
+        // an evicted early key faults back in from disk — and counts as a
+        // SAME-owner hit (same process wrote it)
+        assert_eq!(pool.get(&key(0), 0).unwrap().tokens, vec![0u32]);
+        let c = pool.counters();
+        assert!(c.faulted_pages > 0);
+        assert_eq!(c.cross_hits, 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn flush_attach_round_trip_is_cross_process_warm() {
+        let root =
+            std::env::temp_dir().join(format!("pice_pool_warm_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        {
+            let pool = BufferPool::new(PoolCfg::entry_capped(256));
+            pool.attach_store(&root, "st");
+            for i in 0..10u64 {
+                pool.insert(key(i), out(i as u32), 3);
+            }
+            assert!(pool.dirty());
+            pool.flush().unwrap();
+            assert!(!pool.dirty());
+        }
+        // "next process": attach reads only the manifest, then faults
+        let pool = BufferPool::new(PoolCfg::entry_capped(256));
+        let restored = pool.attach_store(&root, "st");
+        assert_eq!(restored, 10);
+        assert_eq!(pool.len(), 10);
+        assert_eq!(pool.counters().resident_entries, 0, "attach must not read pages");
+        // hits on prior-process entries are cross hits, whoever asks
+        assert_eq!(pool.get(&key(4), 3).unwrap().tokens, vec![4u32]);
+        assert_eq!(pool.counters().cross_hits, 1);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,412 @@
+//! The paged on-disk store: where cold pages go instead of dying.
+//!
+//! Layout under one store root (the `PICE_MEMO_PATH` directory):
+//!
+//! ```text
+//! <root>/
+//!   <stamp>/                  one directory per invalidation stamp
+//!     manifest.json           {version, stamp, pages:[{file, n, bytes, hashes}]}
+//!     page-000000.json        {version, stamp, entries:[...]}   (temp+rename)
+//!     page-000001.json
+//!   <other-stamp>/...         foreign stamps' stores, never touched
+//! ```
+//!
+//! A process **attaches** by reading only the manifest — a few hundred
+//! bytes per page of key hashes — and registers each on-disk page with the
+//! buffer pool as a non-resident frame. Page payloads fault in one file at
+//! a time on first use, so there is no monolithic snapshot load spike and
+//! the cross-run cache is bounded by disk, not RAM.
+//!
+//! Every page and manifest write is temp-file + rename, so a crashed
+//! process never leaves a torn file in place of a good one; a file that IS
+//! torn (partial JSON, wrong stamp, wrong version) parses to "page lost" —
+//! a cold page, never an error.
+//!
+//! **v1 migration:** if the store path holds a monolithic v1 JSON snapshot
+//! (the pre-buffer-pool format), [`SpillStore::attach`] imports the
+//! matching stamp's entries once, converts foreign stamps' sections into
+//! their own paged directories, and replaces the file with the directory
+//! layout. Any failure along the way degrades to a cold start.
+
+use std::path::{Path, PathBuf};
+
+use super::page::{self, PageData};
+use super::{stable_key_hash, MemoKey};
+use crate::runtime::GenOutput;
+use crate::util::json::{self, Json};
+
+/// On-disk store format version; bump when the page/manifest layout
+/// changes. Version 1 was the monolithic JSON snapshot (import-only).
+pub const STORE_VERSION: usize = 2;
+
+/// Foreign-stamp directories retained under one store root — bounds disk
+/// growth when many differently-stamped runs share one path (the v1
+/// snapshot kept the same bound on foreign sections).
+const FOREIGN_STAMP_LIMIT: usize = 8;
+
+/// Manifest record of one on-disk page: its file name, entry count, byte
+/// estimate, and the stable hash of every key it holds — enough to route
+/// lookups to the page without reading it.
+#[derive(Clone, Debug)]
+pub struct DiskPage {
+    pub file: String,
+    pub n: usize,
+    pub bytes: usize,
+    pub hashes: Vec<u64>,
+}
+
+/// Result of [`SpillStore::attach`]: the store handle, the on-disk pages to
+/// register with the pool (v2 layout), and entries imported from a v1
+/// monolithic snapshot (at most one of `pages`/`imported` is non-empty).
+pub struct Attached {
+    pub store: SpillStore,
+    pub pages: Vec<DiskPage>,
+    pub imported: Vec<(MemoKey, GenOutput, u32)>,
+}
+
+/// One stamp's paged directory under a store root.
+pub struct SpillStore {
+    root: PathBuf,
+    dir: PathBuf,
+    stamp: String,
+    next_file: u64,
+}
+
+impl SpillStore {
+    /// Open (or create lazily) the store at `root` for `stamp`. A missing
+    /// root, a stale stamp, or an unreadable manifest is a cold start; a v1
+    /// snapshot file at `root` is imported once and converted in place.
+    /// Never an error.
+    pub fn attach(root: impl Into<PathBuf>, stamp: &str) -> Attached {
+        let root = root.into();
+        let dir = root.join(stamp);
+        let mut store =
+            SpillStore { root: root.clone(), dir, stamp: stamp.to_string(), next_file: 0 };
+        if root.is_file() {
+            let imported = store.import_v1();
+            return Attached { store, pages: Vec::new(), imported };
+        }
+        let pages = store.read_manifest();
+        store.next_file = pages
+            .iter()
+            .filter_map(|p| parse_page_index(&p.file))
+            .max()
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        Attached { store, pages, imported: Vec::new() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn stamp(&self) -> &str {
+        &self.stamp
+    }
+
+    pub fn page_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Reserve the next on-disk page file name.
+    pub fn alloc_file(&mut self) -> String {
+        let f = format!("page-{:06}.json", self.next_file);
+        self.next_file += 1;
+        f
+    }
+
+    /// Write one page to `file` (temp+rename). Returns the manifest record
+    /// and how many non-finite-logp entries were skipped.
+    pub fn write_page(&self, file: &str, data: &PageData) -> Result<(DiskPage, u64), String> {
+        let skipped = write_page_file(&self.page_path(file), &self.stamp, data)?;
+        let mut hashes = Vec::with_capacity(data.entries.len());
+        let mut n = 0usize;
+        for e in &data.entries {
+            if e.out.logps.iter().all(|x| x.is_finite()) {
+                hashes.push(stable_key_hash(&e.key));
+                n += 1;
+            }
+        }
+        Ok((DiskPage { file: file.to_string(), n, bytes: data.bytes, hashes }, skipped))
+    }
+
+    /// Write the manifest over `pages` (temp+rename), delete page files the
+    /// manifest no longer references, and prune foreign stamp directories
+    /// beyond [`FOREIGN_STAMP_LIMIT`] (oldest-modified first).
+    pub fn write_manifest(&self, pages: &[DiskPage]) -> Result<(), String> {
+        let rows: Vec<Json> = pages
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("file", json::s(&p.file)),
+                    ("n", json::num(p.n as f64)),
+                    ("bytes", json::num(p.bytes as f64)),
+                    (
+                        "hashes",
+                        Json::Arr(
+                            p.hashes.iter().map(|h| Json::Str(format!("{h:016x}"))).collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let j = json::obj(vec![
+            ("version", json::num(STORE_VERSION as f64)),
+            ("stamp", json::s(&self.stamp)),
+            ("pages", Json::Arr(rows)),
+        ]);
+        write_atomic(&self.dir, &self.dir.join("manifest.json"), &j.to_string())?;
+        self.gc_orphans(pages);
+        self.prune_foreign();
+        Ok(())
+    }
+
+    /// Read our stamp's manifest; empty on any miss (cold start).
+    fn read_manifest(&self) -> Vec<DiskPage> {
+        let Ok(text) = std::fs::read_to_string(self.dir.join("manifest.json")) else {
+            return Vec::new();
+        };
+        let Ok(j) = Json::parse(&text) else { return Vec::new() };
+        if j.get("version").and_then(Json::as_usize) != Some(STORE_VERSION)
+            || j.get("stamp").and_then(Json::as_str) != Some(self.stamp.as_str())
+        {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for p in j.get("pages").and_then(Json::as_arr).unwrap_or(&[]) {
+            let (Some(file), Some(n), Some(bytes), Some(hj)) = (
+                p.get("file").and_then(Json::as_str),
+                p.get("n").and_then(Json::as_usize),
+                p.get("bytes").and_then(Json::as_usize),
+                p.get("hashes").and_then(Json::as_arr),
+            ) else {
+                continue;
+            };
+            let hashes: Option<Vec<u64>> =
+                hj.iter().map(|h| u64::from_str_radix(h.as_str()?, 16).ok()).collect();
+            let Some(hashes) = hashes else { continue };
+            out.push(DiskPage { file: file.to_string(), n, bytes, hashes });
+        }
+        out
+    }
+
+    /// Delete `page-*.json` files the manifest no longer references —
+    /// rewritten stores (two handles bound to one root, last save wins)
+    /// would otherwise leak dead page files forever.
+    fn gc_orphans(&self, pages: &[DiskPage]) {
+        let live: std::collections::HashSet<&str> = pages.iter().map(|p| p.file.as_str()).collect();
+        let Ok(rd) = std::fs::read_dir(&self.dir) else { return };
+        for e in rd.flatten() {
+            let name = e.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if name.starts_with("page-") && name.ends_with(".json") && !live.contains(name) {
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+    }
+
+    /// Keep at most [`FOREIGN_STAMP_LIMIT`] other stamps' directories under
+    /// the root, dropping the oldest-modified beyond it.
+    fn prune_foreign(&self) {
+        let Ok(rd) = std::fs::read_dir(&self.root) else { return };
+        let mut foreign: Vec<(std::time::SystemTime, PathBuf)> = Vec::new();
+        for e in rd.flatten() {
+            let p = e.path();
+            if !p.is_dir() || p == self.dir {
+                continue;
+            }
+            let t = e
+                .metadata()
+                .and_then(|m| m.modified())
+                .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            foreign.push((t, p));
+        }
+        if foreign.len() <= FOREIGN_STAMP_LIMIT {
+            return;
+        }
+        foreign.sort_by_key(|(t, _)| *t);
+        for (_, p) in foreign.iter().take(foreign.len() - FOREIGN_STAMP_LIMIT) {
+            let _ = std::fs::remove_dir_all(p);
+        }
+    }
+
+    /// One-time import of a v1 monolithic snapshot found at the store root:
+    /// parse it fully, replace the file with the directory layout, write
+    /// foreign stamps' sections as their own paged stores, and hand our
+    /// stamp's entries back for insertion into the pool (the caller flushes
+    /// them to pages, completing the conversion). Any failure → cold start.
+    fn import_v1(&mut self) -> Vec<(MemoKey, GenOutput, u32)> {
+        let Ok(text) = std::fs::read_to_string(&self.root) else { return Vec::new() };
+        let Ok(snap) = Json::parse(&text) else { return Vec::new() };
+        if snap.get("version").and_then(Json::as_usize) != Some(1) {
+            return Vec::new();
+        }
+        let Some(Json::Obj(caches)) = snap.get("caches") else { return Vec::new() };
+        let mut mine = Vec::new();
+        let mut foreign: Vec<(String, Vec<(MemoKey, GenOutput, u32)>)> = Vec::new();
+        for (st, entries) in caches {
+            let parsed: Vec<(MemoKey, GenOutput, u32)> = entries
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(page::entry_from_json)
+                .collect();
+            if st == &self.stamp {
+                mine = parsed;
+            } else if foreign.len() < FOREIGN_STAMP_LIMIT {
+                foreign.push((st.clone(), parsed));
+            }
+        }
+        // the parse is complete and in memory — now (and only now) swap the
+        // file for the directory layout
+        if std::fs::remove_file(&self.root).is_err() {
+            return Vec::new();
+        }
+        for (st, entries) in foreign {
+            let fstore = SpillStore {
+                root: self.root.clone(),
+                dir: self.root.join(&st),
+                stamp: st,
+                next_file: 0,
+            };
+            let _ = fstore.write_entry_chunks(&entries);
+        }
+        mine
+    }
+
+    /// Write `entries` as sealed pages + a manifest (the foreign-stamp
+    /// conversion path).
+    fn write_entry_chunks(&self, entries: &[(MemoKey, GenOutput, u32)]) -> Result<(), String> {
+        let mut pages = Vec::new();
+        let mut next = 0u64;
+        for chunk in entries.chunks(page::PAGE_ENTRIES.max(1)) {
+            let mut data = PageData::default();
+            for (k, o, owner) in chunk {
+                data.push(std::sync::Arc::new(k.clone()), o.clone(), *owner);
+            }
+            let file = format!("page-{next:06}.json");
+            next += 1;
+            let (dp, _) = self.write_page(&file, &data)?;
+            pages.push(dp);
+        }
+        self.write_manifest(&pages)
+    }
+}
+
+/// Parse the numeric index out of a `page-NNNNNN.json` file name.
+fn parse_page_index(file: &str) -> Option<u64> {
+    file.strip_prefix("page-")?.strip_suffix(".json")?.parse().ok()
+}
+
+/// Serialize one page to `path` (temp+rename). A free function so the
+/// pool's evictor can write outside its lock with just a cloned path and
+/// stamp. Returns the count of non-finite-logp entries skipped.
+pub fn write_page_file(path: &Path, stamp: &str, data: &PageData) -> Result<u64, String> {
+    let (j, skipped) = page::page_json(stamp, data);
+    let dir = path.parent().unwrap_or(Path::new("")).to_path_buf();
+    write_atomic(&dir, path, &j.to_string())?;
+    Ok(skipped)
+}
+
+/// Read one page file and parse it against `stamp`. A free function (not a
+/// method) so the pool can read outside its lock with just a cloned path.
+pub fn read_page_file(path: &Path, stamp: &str) -> Result<PageData, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    page::parse_page(&text, stamp)
+        .ok_or_else(|| format!("torn or foreign page file {}", path.display()))
+}
+
+/// Temp-file + rename write, creating `dir` on demand. Temp names carry the
+/// pid AND a process-wide counter: two threads writing the same page (an
+/// evictor racing a flush) must not share a temp file.
+fn write_atomic(dir: &Path, path: &Path, text: &str) -> Result<(), String> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    if !dir.as_os_str().is_empty() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp{}-{seq}", std::process::id()));
+    std::fs::write(&tmp, text).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path).map_err(|e| format!("rename to {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn tmp_root(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("pice_spill_{}_{name}", std::process::id()))
+    }
+
+    fn entry(seed: u64) -> (MemoKey, GenOutput) {
+        (
+            MemoKey {
+                model: "m".into(),
+                prompt: vec![seed as u32, 7],
+                temperature_bits: 0.7f64.to_bits(),
+                max_tokens: 16,
+                stop_token: None,
+                seed,
+            },
+            GenOutput { tokens: vec![seed as u32], logps: vec![-0.25], finished: true },
+        )
+    }
+
+    #[test]
+    fn page_and_manifest_round_trip() {
+        let root = tmp_root("roundtrip");
+        let _ = std::fs::remove_dir_all(&root);
+        let att = SpillStore::attach(&root, "st");
+        assert!(att.pages.is_empty() && att.imported.is_empty());
+        let mut store = att.store;
+        let mut data = PageData::default();
+        for i in 0..5u64 {
+            let (k, o) = entry(i);
+            data.push(Arc::new(k), o, 2);
+        }
+        let f = store.alloc_file();
+        let (dp, skipped) = store.write_page(&f, &data).unwrap();
+        assert_eq!((dp.n, skipped), (5, 0));
+        store.write_manifest(&[dp.clone()]).unwrap();
+
+        // fresh attach sees the page without reading it; fault-in matches
+        let att2 = SpillStore::attach(&root, "st");
+        assert_eq!(att2.pages.len(), 1);
+        assert_eq!(att2.pages[0].n, 5);
+        assert_eq!(att2.pages[0].hashes, dp.hashes);
+        let back = read_page_file(&att2.store.page_path(&att2.pages[0].file), "st").unwrap();
+        assert_eq!(back.entries.len(), 5);
+        assert_eq!(*back.entries[0].key, entry(0).0);
+        assert_eq!(back.entries[0].owner, 2);
+        // next_file skips past existing pages
+        let mut s2 = att2.store;
+        assert_eq!(s2.alloc_file(), "page-000001.json");
+
+        // stale stamp: attach under another stamp sees nothing
+        let att3 = SpillStore::attach(&root, "other");
+        assert!(att3.pages.is_empty());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn orphan_pages_are_garbage_collected() {
+        let root = tmp_root("gc");
+        let _ = std::fs::remove_dir_all(&root);
+        let mut store = SpillStore::attach(&root, "st").store;
+        let mut data = PageData::default();
+        let (k, o) = entry(1);
+        data.push(Arc::new(k), o, 0);
+        let f0 = store.alloc_file();
+        let (dp0, _) = store.write_page(&f0, &data).unwrap();
+        let f1 = store.alloc_file();
+        let (_dp1, _) = store.write_page(&f1, &data).unwrap();
+        // manifest references only page 0 -> page 1 is deleted
+        store.write_manifest(&[dp0]).unwrap();
+        assert!(store.page_path(&f0).exists());
+        assert!(!store.page_path(&f1).exists());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

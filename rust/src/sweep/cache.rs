@@ -1,68 +1,47 @@
-//! The shared in-process generation cache: the bounded memo store factored
-//! out of `MemoBackend`/`PersistentMemoBackend` into a lock-sharded,
-//! `Arc`-shared structure, so N concurrent engines (sweep scenarios, worker
-//! pools, the `Env` sequential path) all hit ONE cache.
+//! The shared in-process generation cache — now a façade over the paged
+//! buffer pool in [`crate::store`].
 //!
-//! Soundness is unchanged from the single-owner memo cache: every entry is
-//! keyed by the full generation request ([`MemoKey`]: model, prompt tokens,
-//! sampling params) and both shipped backends are pure functions of that
-//! key, so a hit — no matter which scenario inserted the entry or in which
-//! order threads interleave — returns exactly the bytes a live generation
-//! would. That purity is what makes the cache *transparent*: parallel sweep
-//! results stay bit-identical to the sequential loop with the cache on,
-//! off, or shared.
+//! [`SharedMemoCache`] keeps the API every call site was built against
+//! (`get`/`insert`/`stats`, owner ids, cross-variant hit accounting,
+//! `Arc`-shared across N concurrent engines), but the storage underneath is
+//! [`BufferPool`]: fixed-size pages under a hard budget (the legacy
+//! `PICE_MEMO_CAP` entry cap or the `PICE_CACHE_BUDGET` byte budget), clock
+//! eviction with pin-while-reading, and cold pages spilled to a paged
+//! on-disk store instead of silently discarded.
+//!
+//! Soundness is unchanged: every entry is keyed by the full generation
+//! request ([`MemoKey`]: model, prompt tokens, sampling params) and both
+//! shipped backends are pure functions of that key, so a hit — whichever
+//! scenario inserted the entry, whatever got evicted, spilled, or faulted
+//! back in between — returns exactly the bytes a live generation would.
+//! Eviction and spill may change hit rates and load times, never traces.
 //!
 //! Each handle is tagged with an `owner` id (one per sweep scenario); a hit
 //! on an entry inserted under a different owner is a **cross-variant hit**
-//! — the Fig. 6 variants replay the same questions with the same derived
-//! seeds, so cross-variant hits are the common case and are reported as
-//! `cross_variant_hit_rate` in the perf bench.
+//! (`cross_variant_hit_rate` in the perf bench). Entries faulted in from a
+//! prior process's pages carry [`SNAPSHOT_OWNER`], so warm-start hits also
+//! count as cross hits.
 //!
-//! The on-disk snapshot (previously private to `PersistentMemoBackend`)
-//! also lives here, as [`load_snapshot`]/[`SnapshotState::save`] over a
-//! cache — so a process loads the snapshot ONCE into the shared cache and
-//! saves ONCE at exit, instead of one round-trip per run.
+//! Cross-process persistence is [`load_snapshot`]/[`SnapshotState::save`],
+//! same names as the old monolithic-JSON layer — but `load` now only reads
+//! the store's **manifest** (pages fault in on demand, killing the
+//! per-process snapshot load spike) and `save` writes dirty pages + the
+//! manifest. A v1 monolithic snapshot found at the path is imported once
+//! and converted in place; see [`crate::store::spill`].
 
-use std::collections::{HashMap, VecDeque};
-use std::hash::{Hash, Hasher};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
 
-use crate::runtime::{GenOutput, SamplingParams};
-use crate::util::json::{self, Json};
+use crate::runtime::GenOutput;
+use crate::store::{BufferPool, PoolCfg, PoolCounters};
 
-/// Full generation-request identity: the memo key. f64 sampling fields are
-/// stored as exact bit patterns so keys hash/compare exactly.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
-pub struct MemoKey {
-    pub model: String,
-    pub prompt: Vec<u32>,
-    pub temperature_bits: u64,
-    pub max_tokens: usize,
-    pub stop_token: Option<u32>,
-    pub seed: u64,
-}
+pub use crate::store::{MemoKey, SNAPSHOT_OWNER};
 
-impl MemoKey {
-    pub fn new(model: &str, prompt: &[u32], sp: &SamplingParams) -> MemoKey {
-        MemoKey {
-            model: model.to_string(),
-            prompt: prompt.to_vec(),
-            temperature_bits: sp.temperature.to_bits(),
-            max_tokens: sp.max_tokens,
-            stop_token: sp.stop_token,
-            seed: sp.seed,
-        }
-    }
-}
+/// The monolithic-snapshot format version this layer can still *import*
+/// (one-time migration); the paged store writes
+/// [`crate::store::STORE_VERSION`].
+pub const CACHE_VERSION: usize = 1;
 
-/// Owner id recorded on entries restored from a snapshot — distinct from
-/// every live scenario id, so warm-start hits also count as cross hits
-/// (they were produced outside the requesting scenario).
-pub const SNAPSHOT_OWNER: u32 = u32::MAX;
-
-/// Lookup counters of a [`SharedMemoCache`] since construction.
+/// Counters of a [`SharedMemoCache`] since construction.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CacheStats {
     pub hits: u64,
@@ -71,6 +50,20 @@ pub struct CacheStats {
     /// the requester's — cross-variant (or cross-process, for restored
     /// entries) sharing
     pub cross_hits: u64,
+    /// pages whose payload was evicted from memory (spilled or discarded)
+    pub evictions: u64,
+    /// page files written by the evictor (budget pressure, not saves)
+    pub spilled_pages: u64,
+    /// pages read back from disk on demand
+    pub faulted_pages: u64,
+    /// entries with non-finite logps dropped by page writes — they have no
+    /// JSON representation, so the store shrinks by this many entries
+    /// (previously a silent drop in the snapshot writer)
+    pub skipped_nonfinite: u64,
+    /// current resident payload byte estimate
+    pub resident_bytes: u64,
+    /// current resident entry count
+    pub resident_entries: u64,
 }
 
 impl CacheStats {
@@ -96,168 +89,98 @@ impl CacheStats {
     }
 }
 
-struct Entry {
-    out: GenOutput,
-    owner: u32,
+impl From<PoolCounters> for CacheStats {
+    fn from(c: PoolCounters) -> CacheStats {
+        CacheStats {
+            hits: c.hits,
+            misses: c.misses,
+            cross_hits: c.cross_hits,
+            evictions: c.evictions,
+            spilled_pages: c.spilled_pages,
+            faulted_pages: c.faulted_pages,
+            skipped_nonfinite: c.skipped_nonfinite,
+            resident_bytes: c.resident_bytes,
+            resident_entries: c.resident_entries,
+        }
+    }
 }
 
-/// One lock domain: a bounded FIFO map, exactly the old `MemoBackend`
-/// store. Keys are `Arc`-shared between the map and the eviction queue so
-/// prompt token vectors are stored once.
-struct Shard {
-    map: HashMap<Arc<MemoKey>, Entry>,
-    order: VecDeque<Arc<MemoKey>>,
-}
-
-/// Shard scaling: one lock domain per [`SHARD_GRAIN`] entries of capacity,
-/// capped at [`MAX_SHARDS`]. Small caches collapse to a single shard —
-/// exact global-FIFO semantics, matching the old single-owner memo store
-/// (a per-shard bound of 1-2 entries would let same-shard keys evict each
-/// other far below nominal capacity) — while large ones spread contention.
-/// Each shard holds `capacity / shards` entries, so the resident total
-/// never exceeds `capacity`.
-const SHARD_GRAIN: usize = 64;
-const MAX_SHARDS: usize = 16;
-
-/// Lock-sharded bounded generation cache, shared via `Arc` across every
-/// engine in the process. All methods take `&self`; contention is bounded
-/// to one shard per lookup.
+/// The process-wide generation cache, shared via `Arc` across every engine.
+/// All methods take `&self`. A façade over [`BufferPool`].
 pub struct SharedMemoCache {
-    shards: Vec<Mutex<Shard>>,
-    per_shard_cap: usize,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    cross_hits: AtomicU64,
-    insertions: AtomicU64,
+    pool: BufferPool,
 }
 
 impl SharedMemoCache {
+    /// Legacy constructor: an entry-count bound (`PICE_MEMO_CAP`
+    /// semantics — a cap of N keeps the N newest entries resident).
     pub fn new(capacity: usize) -> Self {
-        let cap = capacity.max(1);
-        let n = (cap / SHARD_GRAIN).clamp(1, MAX_SHARDS);
-        SharedMemoCache {
-            shards: (0..n)
-                .map(|_| Mutex::new(Shard { map: HashMap::new(), order: VecDeque::new() }))
-                .collect(),
-            per_shard_cap: cap / n,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            cross_hits: AtomicU64::new(0),
-            insertions: AtomicU64::new(0),
-        }
+        SharedMemoCache::with_cfg(PoolCfg::entry_capped(capacity))
     }
 
-    fn shard_of(&self, key: &MemoKey) -> usize {
-        // DefaultHasher::new() uses fixed keys — deterministic within a
-        // process, which keeps export order reproducible
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        key.hash(&mut h);
-        (h.finish() as usize) % self.shards.len()
+    /// Construct with an explicit pool budget (entry cap or byte budget).
+    pub fn with_cfg(cfg: PoolCfg) -> Self {
+        SharedMemoCache { pool: BufferPool::new(cfg) }
+    }
+
+    /// The pool underneath, for store attachment and pool-level counters.
+    pub fn pool(&self) -> &BufferPool {
+        &self.pool
     }
 
     /// Look up `key` on behalf of scenario `owner`; counts hit/miss and
-    /// cross-variant provenance.
+    /// cross-variant provenance. May fault a spilled page in from disk.
     pub fn get(&self, key: &MemoKey, owner: u32) -> Option<GenOutput> {
-        let shard = self.shards[self.shard_of(key)].lock().unwrap();
-        match shard.map.get(key) {
-            Some(e) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                if e.owner != owner {
-                    self.cross_hits.fetch_add(1, Ordering::Relaxed);
-                }
-                Some(e.out.clone())
-            }
-            None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
-        }
+        self.pool.get(key, owner)
     }
 
-    /// Insert an entry produced by scenario `owner`; FIFO-evicts within the
-    /// key's shard beyond the per-shard bound.
+    /// Insert an entry produced by scenario `owner`; evicts (spilling when
+    /// a store is attached) beyond the pool budget.
     pub fn insert(&self, key: MemoKey, out: GenOutput, owner: u32) {
-        let si = self.shard_of(&key);
-        let mut shard = self.shards[si].lock().unwrap();
-        let key = Arc::new(key);
-        if shard.map.insert(key.clone(), Entry { out, owner }).is_none() {
-            shard.order.push_back(key);
-            self.insertions.fetch_add(1, Ordering::Relaxed);
-        }
-        while shard.map.len() > self.per_shard_cap {
-            let Some(old) = shard.order.pop_front() else { break };
-            shard.map.remove(&old);
-        }
+        self.pool.insert(key, out, owner)
     }
 
     pub fn stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            cross_hits: self.cross_hits.load(Ordering::Relaxed),
-        }
+        self.pool.counters().into()
     }
 
     /// Total distinct keys ever inserted (monotone; drives dirty checks for
-    /// the snapshot layer).
+    /// the persistence layer).
     pub fn insertions(&self) -> u64 {
-        self.insertions.load(Ordering::Relaxed)
+        self.pool.insertions()
     }
 
+    /// Entries available: resident plus spilled-on-disk.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+        self.pool.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.pool.is_empty()
     }
 
-    /// All resident entries, shard-major in per-shard FIFO order — the
-    /// snapshot serialization order. Deterministic for a deterministic fill
-    /// sequence.
+    /// All resident entries in page/append order — deterministic for a
+    /// deterministic fill sequence. Spilled pages are not faulted in.
     pub fn export(&self) -> Vec<(MemoKey, GenOutput)> {
-        let mut out = Vec::new();
-        for s in &self.shards {
-            let shard = s.lock().unwrap();
-            for key in &shard.order {
-                if let Some(e) = shard.map.get(key) {
-                    out.push(((**key).clone(), e.out.clone()));
-                }
-            }
-        }
-        out
+        self.pool.export()
     }
 }
 
 // ---------------------------------------------------------------------------
-// On-disk snapshot (cross-process persistence)
+// Cross-process persistence (the paged store behind the old snapshot API)
 // ---------------------------------------------------------------------------
 
-/// On-disk snapshot format version; bump when the entry layout changes.
-pub const CACHE_VERSION: usize = 1;
-
-/// Foreign-stamp sections retained in a snapshot file — bounds file growth
-/// when many differently-stamped runs share one path.
-const FOREIGN_STAMP_LIMIT: usize = 8;
-
-/// One process-wide binding of a [`SharedMemoCache`] to a snapshot file:
-/// where to save, which stamp section is ours, the other stamps' sections
-/// to re-emit verbatim, and the insertion watermark for dirty checks.
+/// One process-wide binding of a [`SharedMemoCache`] to its on-disk store.
 /// Produced by [`load_snapshot`]; call [`SnapshotState::save`] (typically
-/// once, at process exit) to write back.
+/// once, at process exit) to write dirty pages + the manifest back.
 pub struct SnapshotState {
     path: PathBuf,
-    stamp: String,
-    /// entry sections of OTHER stamps found in the snapshot, preserved
-    /// across save (bounded at [`FOREIGN_STAMP_LIMIT`])
-    foreign: Vec<(String, Json)>,
     restored: usize,
-    /// cache insertion count at load / after the last save
-    clean_insertions: u64,
 }
 
 impl SnapshotState {
-    /// Entries restored from disk at construction (0 on a cold start).
+    /// Entries available from disk at attach time (0 on a cold start).
+    /// These are *not* read into memory — pages fault in on first use.
     pub fn restored_entries(&self) -> usize {
         self.restored
     }
@@ -266,153 +189,39 @@ impl SnapshotState {
         &self.path
     }
 
-    /// Has the cache gained entries since load / the last save?
+    /// Have entries been inserted since the last flush? (Eviction-spilled
+    /// pages are already durable; this tracks unsaved insertions.)
     pub fn dirty(&self, cache: &SharedMemoCache) -> bool {
-        cache.insertions() != self.clean_insertions
+        cache.pool().dirty()
     }
 
-    /// Snapshot `cache` to `self.path` (shard-major FIFO order, so a
-    /// restored cache evicts in the same order a live one would); other
-    /// stamps' sections are written back untouched. Temp-file + rename, so
-    /// a crashed process never leaves a torn snapshot.
+    /// Write all dirty resident pages and the manifest. Pages the evictor
+    /// already spilled are not rewritten.
     pub fn save(&mut self, cache: &SharedMemoCache) -> Result<(), String> {
-        let insertions = cache.insertions();
-        let mut entries = Vec::new();
-        for (key, out) in cache.export() {
-            // a non-finite logp (e.g. -inf from a zero-probability token)
-            // has no JSON representation — skip the entry rather than write
-            // an unparseable file
-            if out.logps.iter().all(|x| x.is_finite()) {
-                entries.push(entry_json(&key, &out));
-            }
-        }
-        let mut caches = std::collections::BTreeMap::new();
-        for (st, ent) in &self.foreign {
-            caches.insert(st.clone(), ent.clone());
-        }
-        caches.insert(self.stamp.clone(), Json::Arr(entries));
-        let snap = json::obj(vec![
-            ("version", json::num(CACHE_VERSION as f64)),
-            ("caches", Json::Obj(caches)),
-        ]);
-        if let Some(dir) = self.path.parent() {
-            if !dir.as_os_str().is_empty() {
-                let _ = std::fs::create_dir_all(dir);
-            }
-        }
-        let tmp = self.path.with_extension(format!("tmp{}", std::process::id()));
-        std::fs::write(&tmp, snap.to_string())
-            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, &self.path)
-            .map_err(|e| format!("rename to {}: {e}", self.path.display()))?;
-        self.clean_insertions = insertions;
-        Ok(())
+        cache.pool().flush()
     }
 }
 
-/// Restore `stamp`'s section of any matching-version snapshot at `path`
-/// into `cache` (entries land under [`SNAPSHOT_OWNER`]); other stamps'
-/// sections are retained for re-emission on save. A missing, unreadable,
-/// or stale snapshot just means a cold start — never an error.
+/// Attach `cache` to the paged store at `path` (a directory; one stamp
+/// subdirectory per invalidation stamp). Only the manifest is read —
+/// entries become *available* and fault in page-at-a-time on demand,
+/// landing under [`SNAPSHOT_OWNER`]. A v1 monolithic snapshot file found at
+/// `path` is imported once and converted to the paged layout. A missing,
+/// unreadable, or stale store just means a cold start — never an error.
 pub fn load_snapshot(
     cache: &SharedMemoCache,
     path: impl Into<PathBuf>,
     stamp: &str,
 ) -> SnapshotState {
     let path = path.into();
-    let mut restored = 0usize;
-    let mut foreign: Vec<(String, Json)> = Vec::new();
-    if let Ok(text) = std::fs::read_to_string(&path) {
-        if let Ok(snap) = Json::parse(&text) {
-            if snap.get("version").and_then(Json::as_usize) == Some(CACHE_VERSION) {
-                if let Some(Json::Obj(caches)) = snap.get("caches") {
-                    for (st, entries) in caches {
-                        if st == stamp {
-                            for e in entries.as_arr().unwrap_or(&[]) {
-                                if let Some((key, out)) = entry_from_json(e) {
-                                    cache.insert(key, out, SNAPSHOT_OWNER);
-                                    restored += 1;
-                                }
-                            }
-                        } else if foreign.len() < FOREIGN_STAMP_LIMIT {
-                            foreign.push((st.clone(), entries.clone()));
-                        }
-                    }
-                }
-            }
-        }
-    }
-    SnapshotState {
-        path,
-        stamp: stamp.to_string(),
-        foreign,
-        restored,
-        clean_insertions: cache.insertions(),
-    }
-}
-
-fn u64_hex(v: u64) -> Json {
-    Json::Str(format!("{v:016x}"))
-}
-
-fn parse_u64_hex(j: &Json) -> Option<u64> {
-    u64::from_str_radix(j.as_str()?, 16).ok()
-}
-
-fn u32s_json(v: &[u32]) -> Json {
-    Json::Arr(v.iter().map(|&t| Json::Num(t as f64)).collect())
-}
-
-fn parse_u32s(j: &Json) -> Option<Vec<u32>> {
-    j.as_arr()?.iter().map(|x| x.as_f64().map(|f| f as u32)).collect()
-}
-
-/// One snapshot entry: the full memo key + the cached output. u64 fields
-/// (seed, temperature bit pattern) are hex strings — JSON numbers are f64
-/// and can't represent all 64-bit patterns exactly.
-fn entry_json(key: &MemoKey, out: &GenOutput) -> Json {
-    json::obj(vec![
-        ("model", json::s(&key.model)),
-        ("prompt", u32s_json(&key.prompt)),
-        ("t_bits", u64_hex(key.temperature_bits)),
-        ("max_tokens", json::num(key.max_tokens as f64)),
-        (
-            "stop",
-            match key.stop_token {
-                Some(t) => json::num(t as f64),
-                None => Json::Null,
-            },
-        ),
-        ("seed", u64_hex(key.seed)),
-        ("tokens", u32s_json(&out.tokens)),
-        ("logps", Json::Arr(out.logps.iter().map(|&x| Json::Num(x)).collect())),
-        ("finished", Json::Bool(out.finished)),
-    ])
-}
-
-fn entry_from_json(j: &Json) -> Option<(MemoKey, GenOutput)> {
-    let key = MemoKey {
-        model: j.get("model")?.as_str()?.to_string(),
-        prompt: parse_u32s(j.get("prompt")?)?,
-        temperature_bits: parse_u64_hex(j.get("t_bits")?)?,
-        max_tokens: j.get("max_tokens")?.as_usize()?,
-        stop_token: match j.get("stop")? {
-            Json::Null => None,
-            x => Some(x.as_f64()? as u32),
-        },
-        seed: parse_u64_hex(j.get("seed")?)?,
-    };
-    let out = GenOutput {
-        tokens: parse_u32s(j.get("tokens")?)?,
-        logps: j.get("logps")?.as_arr()?.iter().map(Json::as_f64).collect::<Option<Vec<f64>>>()?,
-        finished: j.get("finished")?.as_bool()?,
-    };
-    Some((key, out))
+    let restored = cache.pool().attach_store(&path, stamp);
+    SnapshotState { path, restored }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::SamplingParams;
 
     fn key(model: &str, seed: u64) -> MemoKey {
         MemoKey::new(model, &[seed as u32, 7], &SamplingParams { seed, ..Default::default() })
@@ -423,27 +232,27 @@ mod tests {
     }
 
     #[test]
-    fn capacity_bounded_across_shards() {
-        // 256 -> 4 shards x 64: the resident total stays under the nominal
-        // capacity no matter how keys hash
+    fn capacity_bounded() {
+        // page-granular eviction still respects the nominal entry cap
         let c = SharedMemoCache::new(256);
         for i in 0..1000u64 {
             c.insert(key("m", i), out(i as u32), 0);
         }
         assert!(c.len() <= 256, "cache grew to {}", c.len());
         assert_eq!(c.insertions(), 1000);
+        assert!(c.stats().evictions > 0);
     }
 
     #[test]
-    fn tiny_capacity_single_shard_exact_fifo() {
-        // caps below the shard grain collapse to ONE shard, so a cap of 2
-        // holds exactly the 2 newest entries (old global-FIFO semantics) —
-        // not one entry per shard with hash-dependent thrashing
+    fn tiny_capacity_exact_fifo() {
+        // caps below one page shrink the page size, so a cap of 2 holds
+        // exactly the 2 newest entries (old global-FIFO semantics) — not
+        // whatever survives page-granular eviction
         let c = SharedMemoCache::new(2);
         for i in 0..10u64 {
             c.insert(key("m", i), out(i as u32), 0);
         }
-        assert_eq!(c.len(), 2, "single-shard cap must be exact");
+        assert_eq!(c.len(), 2, "tiny cap must be exact");
         assert!(c.get(&key("m", 8), 0).is_some());
         assert!(c.get(&key("m", 9), 0).is_some());
         assert!(c.get(&key("m", 0), 0).is_none());
@@ -485,8 +294,8 @@ mod tests {
     #[test]
     fn snapshot_round_trip() {
         let path =
-            std::env::temp_dir().join(format!("pice_sweep_cache_{}.json", std::process::id()));
-        let _ = std::fs::remove_file(&path);
+            std::env::temp_dir().join(format!("pice_sweep_cache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&path);
         let c = SharedMemoCache::new(256);
         for i in 0..10u64 {
             c.insert(key("m", i), out(i as u32), 3);
@@ -500,36 +309,13 @@ mod tests {
         let c2 = SharedMemoCache::new(256);
         let st2 = load_snapshot(&c2, &path, "stamp-x");
         assert_eq!(st2.restored_entries(), 10);
+        // nothing resident until a lookup faults the page in
+        assert_eq!(c2.stats().resident_entries, 0);
         // restored entries carry the snapshot owner, so any scenario's hit
         // on them counts as a cross hit
         assert_eq!(c2.get(&key("m", 4), 3).unwrap().tokens, vec![4]);
         assert_eq!(c2.stats().cross_hits, 1);
-        let _ = std::fs::remove_file(&path);
-    }
-
-    #[test]
-    fn entry_json_round_trip_exact() {
-        // direct serde check, including u64 bit patterns beyond 2^53 and
-        // negative fractional logps
-        let key = MemoKey {
-            model: "m".to_string(),
-            prompt: vec![1, 2, 4_000_000_000],
-            temperature_bits: 0.7f64.to_bits(),
-            max_tokens: 24,
-            stop_token: Some(7),
-            seed: u64::MAX - 12345,
-        };
-        let out = GenOutput {
-            tokens: vec![9, 8, 7],
-            logps: vec![-0.123456789012345, -3.5e-7, 0.0],
-            finished: true,
-        };
-        let j = entry_json(&key, &out);
-        let reparsed = Json::parse(&j.to_string()).unwrap();
-        let (k2, o2) = entry_from_json(&reparsed).unwrap();
-        assert_eq!(k2, key);
-        assert_eq!(o2.tokens, out.tokens);
-        assert_eq!(o2.logps, out.logps);
-        assert_eq!(o2.finished, out.finished);
+        assert_eq!(c2.stats().faulted_pages, 1);
+        let _ = std::fs::remove_dir_all(&path);
     }
 }

@@ -3,10 +3,11 @@
 //! Fig. 13, Table I), and this module makes the grid itself a first-class
 //! parallel subsystem instead of a `for` loop:
 //!
-//! * [`cache::SharedMemoCache`] — the bounded generation memo store,
-//!   factored out of the backend wrappers into a lock-sharded `Arc`-shared
-//!   structure, so N concurrent engines hit ONE in-process cache (and the
-//!   on-disk snapshot is loaded/saved once per process, not per run).
+//! * [`cache::SharedMemoCache`] — the generation memo store, an
+//!   `Arc`-shared façade over the paged buffer pool in [`crate::store`]
+//!   (budgeted residency, clock eviction, disk spill), so N concurrent
+//!   engines hit ONE in-process cache and its paged on-disk store is
+//!   attached once per process, with pages faulting in on demand.
 //! * [`SweepRunner`] — runs independent `(EngineCfg, Workload)` scenarios
 //!   over an OS-thread pool with submission-order result collection;
 //!   results are bit-identical to the sequential loop at any thread count.

@@ -1,0 +1,136 @@
+//! The buffer-pool house rule, enforced end to end: cache budgets change
+//! hit rates and load times, **never traces**. Engine traces must be
+//! bit-identical across cache budgets (off / tiny / tiny+spill / huge),
+//! 1/2/4 sweep threads, and open- vs closed-loop arrivals — eviction,
+//! spill, and fault-in are invisible to results because every entry is
+//! keyed by the full generation request and the backends are pure in it.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pice::baselines;
+use pice::coordinator::backend::{MemoBackend, SurrogateBackend, TextBackend};
+use pice::corpus::synth::{synth_corpus, synth_tokenizer};
+use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use pice::corpus::Corpus;
+use pice::models::Registry;
+use pice::store::PoolCfg;
+use pice::sweep::cache::load_snapshot;
+use pice::sweep::{ScenarioResult, SharedMemoCache, SweepRunner, SweepScenario};
+use pice::tokenizer::Tokenizer;
+
+fn setup() -> (Arc<Corpus>, Tokenizer, Registry) {
+    let tok = synth_tokenizer();
+    let corpus = Arc::new(synth_corpus(&tok, 20, 42));
+    let reg = Registry::builtin();
+    (corpus, tok, reg)
+}
+
+fn grid(corpus: &Arc<Corpus>, arrival: Arrival) -> Vec<SweepScenario> {
+    let wl = Arc::new(Workload::generate(
+        corpus,
+        WorkloadSpec { rpm: 40.0, n_requests: 16, arrival, categories: vec![], seed: 5 },
+    ));
+    vec![
+        SweepScenario::new("pice", baselines::pice("llama70b-sim"), wl.clone()),
+        SweepScenario::new("cloud", baselines::cloud_only("llama70b-sim"), wl.clone()),
+        SweepScenario::new("routing", baselines::routing("llama70b-sim"), wl),
+    ]
+}
+
+fn assert_identical(label: &str, a: &[ScenarioResult], b: &[ScenarioResult]) {
+    assert_eq!(a.len(), b.len(), "{label}: result count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        match (x, y) {
+            (Ok((_, ta)), Ok((_, tb))) => {
+                assert_eq!(ta.len(), tb.len(), "{label} scenario {i}: trace count");
+                for (u, v) in ta.iter().zip(tb) {
+                    assert_eq!(u.rid, v.rid, "{label} {i}: rid");
+                    assert_eq!(u.answer, v.answer, "{label} {i}: answer rid={}", u.rid);
+                    assert_eq!(u.mode, v.mode, "{label} {i}: mode rid={}", u.rid);
+                    assert_eq!(
+                        u.winner_model, v.winner_model,
+                        "{label} {i}: winner rid={}",
+                        u.rid
+                    );
+                    assert!(u.done == v.done, "{label} {i}: done time rid={}", u.rid);
+                    assert!(
+                        u.confidence == v.confidence,
+                        "{label} {i}: confidence rid={}",
+                        u.rid
+                    );
+                }
+            }
+            (Err(ea), Err(eb)) => {
+                assert_eq!(ea.to_string(), eb.to_string(), "{label} {i}: error text")
+            }
+            _ => panic!("{label} {i}: Ok/Err mismatch"),
+        }
+    }
+}
+
+fn tmp_root() -> PathBuf {
+    std::env::temp_dir().join(format!("pice_budget_det_{}", std::process::id()))
+}
+
+/// Small pages + a tiny byte budget: pages seal and evict constantly under
+/// an engine workload, so the matrix actually exercises eviction (and, with
+/// a store attached, spill + fault-in), not just a big cache that never
+/// fills.
+fn tiny_cfg() -> PoolCfg {
+    PoolCfg { max_entries: usize::MAX, byte_budget: 2048, page_entries: 8 }
+}
+
+#[test]
+fn traces_identical_across_budgets_threads_and_arrivals() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, pice::scenario::SURROGATE_SEED);
+    let spill_root = tmp_root();
+    for arrival in [Arrival::Poisson, Arrival::Burst] {
+        let arr_name = match arrival {
+            Arrival::Poisson => "open",
+            _ => "closed",
+        };
+        let grid = grid(&corpus, arrival);
+        // the reference semantics: no cache layer at all, one thread
+        let reference = SweepRunner::new(1).run(&grid, &corpus, &tok, &reg, |_| {
+            Box::new(base.clone()) as Box<dyn TextBackend>
+        });
+        for budget in ["off", "tiny", "tiny-spill", "huge"] {
+            for threads in [1usize, 2, 4] {
+                let label = format!("budget={budget} threads={threads} loop={arr_name}");
+                let cache = match budget {
+                    "off" => None,
+                    "tiny" => Some(Arc::new(SharedMemoCache::with_cfg(tiny_cfg()))),
+                    "tiny-spill" => {
+                        let _ = std::fs::remove_dir_all(&spill_root);
+                        let c = Arc::new(SharedMemoCache::with_cfg(tiny_cfg()));
+                        load_snapshot(&c, &spill_root, "det-stamp");
+                        Some(c)
+                    }
+                    _ => Some(Arc::new(SharedMemoCache::with_cfg(PoolCfg::byte_budget(
+                        usize::MAX,
+                    )))),
+                };
+                let got = SweepRunner::new(threads).run(&grid, &corpus, &tok, &reg, |i| {
+                    match &cache {
+                        Some(c) => Box::new(MemoBackend::shared(base.clone(), c.clone(), i as u32))
+                            as Box<dyn TextBackend>,
+                        None => Box::new(base.clone()) as Box<dyn TextBackend>,
+                    }
+                });
+                assert_identical(&label, &reference, &got);
+                if let Some(c) = &cache {
+                    let s = c.stats();
+                    if budget == "tiny" || budget == "tiny-spill" {
+                        assert!(s.evictions > 0, "{label}: matrix is vacuous, nothing evicted");
+                    }
+                    if budget == "tiny-spill" {
+                        assert!(s.spilled_pages > 0, "{label}: store attached but nothing spilled");
+                    }
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&spill_root);
+}

@@ -1,0 +1,240 @@
+//! Integration tests for the paged buffer-pool generation store
+//! (`pice::store`): pin-while-reading under concurrent evictors, bit-exact
+//! spill round trips, stale-stamp / torn-page cold starts, and the one-time
+//! v1 monolithic-snapshot migration.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pice::runtime::{GenOutput, SamplingParams};
+use pice::store::{page, BufferPool, MemoKey, PoolCfg};
+use pice::util::json::{self, Json};
+
+fn tmp_root(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pice_store_pool_{}_{name}", std::process::id()))
+}
+
+fn key(seed: u64) -> MemoKey {
+    MemoKey::new(
+        "qwen7b-sim",
+        &[seed as u32, (seed >> 8) as u32, 7],
+        &SamplingParams { max_tokens: 16, seed, ..Default::default() },
+    )
+}
+
+/// Per-key output so a cross-contaminated read (wrong page, torn write,
+/// racing evictor) is detectable, not just a hit-rate blip.
+fn out(seed: u64) -> GenOutput {
+    GenOutput {
+        tokens: vec![seed as u32, (seed as u32).wrapping_mul(31)],
+        logps: vec![-0.25 - seed as f64 * 1e-3, -1.5],
+        finished: true,
+    }
+}
+
+#[test]
+fn pinned_reads_survive_concurrent_evictors() {
+    let root = tmp_root("pins");
+    let _ = std::fs::remove_dir_all(&root);
+    // tiny budget + small pages: every reader get() faults pages back in
+    // while the writers' inserts drive the clock evictor over them
+    let cfg = PoolCfg { max_entries: usize::MAX, byte_budget: 2 * 1024, page_entries: 4 };
+    let pool = Arc::new(BufferPool::new(cfg));
+    pool.attach_store(&root, "st");
+    const N: u64 = 160;
+    for i in 0..N {
+        pool.insert(key(i), out(i), 0);
+    }
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let p = pool.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..3 {
+                for i in 0..N {
+                    if let Some(o) = p.get(&key(i), 0) {
+                        let want = out(i);
+                        assert_eq!(o.tokens, want.tokens, "corrupted read for key {i}");
+                        assert_eq!(
+                            o.logps[0].to_bits(),
+                            want.logps[0].to_bits(),
+                            "corrupted logp for key {i}"
+                        );
+                    }
+                }
+            }
+        }));
+    }
+    for t in 0..2u64 {
+        let p = pool.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..N {
+                p.insert(key(1000 + t * N + i), out(1000 + t * N + i), 1);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("reader/writer thread panicked");
+    }
+    // the store was attached before any insert, so every eviction spilled:
+    // after the dust settles every key is still servable, bit-exactly
+    for i in 0..N {
+        let o = pool.get(&key(i), 0).unwrap_or_else(|| panic!("key {i} lost"));
+        assert_eq!(o.tokens, out(i).tokens);
+    }
+    let c = pool.counters();
+    assert!(c.evictions > 0 && c.spilled_pages > 0 && c.faulted_pages > 0, "vacuous stress: {c:?}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn spill_round_trip_is_bit_exact() {
+    let root = tmp_root("bits");
+    let _ = std::fs::remove_dir_all(&root);
+    // adversarial f64 bit patterns (subnormals, extremes, repeating binary
+    // fractions) and u64 key fields beyond 2^53
+    let nasty: [f64; 8] = [
+        5e-324,                  // smallest subnormal
+        -5e-324,
+        f64::MIN_POSITIVE,
+        -f64::MIN_POSITIVE,
+        -0.1,                    // repeating binary fraction
+        -1.0 / 3.0,
+        -1e300,
+        f64::MAX,
+    ];
+    let mk_key = |i: u64| {
+        MemoKey {
+            model: "m".into(),
+            prompt: vec![i as u32],
+            temperature_bits: 0.7f64.to_bits(),
+            max_tokens: 8,
+            stop_token: None,
+            seed: u64::MAX - 12345 - i,
+        }
+    };
+    // one entry per page (entry cap 1), so inserting the next entry spills
+    // the previous one — every lookup below is a disk round trip
+    let pool = BufferPool::new(PoolCfg::entry_capped(1));
+    pool.attach_store(&root, "st");
+    for (i, &lp) in nasty.iter().enumerate() {
+        let o = GenOutput { tokens: vec![i as u32], logps: vec![lp, lp / 2.0], finished: true };
+        pool.insert(mk_key(i as u64), o, 0);
+    }
+    for (i, &lp) in nasty.iter().enumerate() {
+        let o = pool.get(&mk_key(i as u64), 0).unwrap_or_else(|| panic!("entry {i} lost"));
+        assert_eq!(o.logps[0].to_bits(), lp.to_bits(), "logp bits for {lp:?}");
+        assert_eq!(o.logps[1].to_bits(), (lp / 2.0).to_bits(), "half logp bits for {lp:?}");
+        assert_eq!(o.tokens, vec![i as u32]);
+    }
+    let c = pool.counters();
+    assert!(c.faulted_pages >= nasty.len() as u64 - 1, "reads were not disk round trips: {c:?}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn stale_stamp_is_cold_start_and_preserves_the_store() {
+    let root = tmp_root("stale");
+    let _ = std::fs::remove_dir_all(&root);
+    {
+        let pool = BufferPool::new(PoolCfg::entry_capped(64));
+        pool.attach_store(&root, "stamp-a");
+        for i in 0..5u64 {
+            pool.insert(key(i), out(i), 0);
+        }
+        pool.flush().unwrap();
+    }
+    // a different stamp sees nothing — and must not disturb stamp-a's pages
+    let pool_b = BufferPool::new(PoolCfg::entry_capped(64));
+    assert_eq!(pool_b.attach_store(&root, "stamp-b"), 0);
+    assert!(pool_b.get(&key(0), 0).is_none());
+    assert!(root.join("stamp-a").join("manifest.json").exists());
+    // re-attaching under the original stamp still restores everything
+    let pool_a = BufferPool::new(PoolCfg::entry_capped(64));
+    assert_eq!(pool_a.attach_store(&root, "stamp-a"), 5);
+    assert_eq!(pool_a.get(&key(3), 0).unwrap().tokens, out(3).tokens);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn torn_page_is_a_cold_page_never_an_error() {
+    let root = tmp_root("torn");
+    let _ = std::fs::remove_dir_all(&root);
+    {
+        // three entries per page -> keys 0-2, 3-5, 6-8 on pages 0, 1, 2
+        let cfg = PoolCfg { max_entries: usize::MAX, byte_budget: usize::MAX, page_entries: 3 };
+        let pool = BufferPool::new(cfg);
+        pool.attach_store(&root, "st");
+        for i in 0..9u64 {
+            pool.insert(key(i), out(i), 0);
+        }
+        pool.flush().unwrap();
+    }
+    // tear the middle page: a crash mid-write never leaves this (writes are
+    // temp+rename), but disk corruption can
+    std::fs::write(root.join("st").join("page-000001.json"), "torn{").unwrap();
+    let pool = BufferPool::new(PoolCfg::entry_capped(64));
+    assert_eq!(pool.attach_store(&root, "st"), 9, "attach reads only the manifest");
+    assert_eq!(pool.get(&key(0), 0).unwrap().tokens, out(0).tokens);
+    assert!(pool.get(&key(4), 0).is_none(), "torn page must read as a miss");
+    assert_eq!(pool.get(&key(7), 0).unwrap().tokens, out(7).tokens);
+    assert_eq!(pool.len(), 6, "the torn page's entries are gone, the rest intact");
+
+    // a torn manifest is a whole-store cold start, same contract
+    std::fs::write(root.join("st").join("manifest.json"), "{not json").unwrap();
+    let pool2 = BufferPool::new(PoolCfg::entry_capped(64));
+    assert_eq!(pool2.attach_store(&root, "st"), 0);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn v1_snapshot_migrates_once_and_in_place() {
+    let root = tmp_root("v1");
+    let _ = std::fs::remove_dir_all(&root);
+    // build a faithful v1 monolithic snapshot: {version:1, caches:{stamp:
+    // [entries...]}} with no per-entry owner field
+    let v1_entry = |k: &MemoKey, o: &GenOutput| {
+        let mut e = page::entry_json(k, o, 0);
+        if let Json::Obj(m) = &mut e {
+            m.remove("owner");
+        }
+        e
+    };
+    let mine: Vec<Json> = (0..5u64).map(|i| v1_entry(&key(i), &out(i))).collect();
+    let other: Vec<Json> = (0..2u64).map(|i| v1_entry(&key(100 + i), &out(100 + i))).collect();
+    let snap = json::obj(vec![
+        ("version", json::num(1.0)),
+        (
+            "caches",
+            json::obj(vec![("st", Json::Arr(mine)), ("other-stamp", Json::Arr(other))]),
+        ),
+    ]);
+    std::fs::write(&root, snap.to_string()).unwrap();
+
+    let pool = BufferPool::new(PoolCfg::entry_capped(64));
+    assert_eq!(pool.attach_store(&root, "st"), 5);
+    // the monolithic file is gone, replaced by the paged layout — for BOTH
+    // stamps (the foreign section became its own store directory)
+    assert!(root.is_dir(), "v1 file must be converted to the directory layout");
+    assert!(root.join("st").join("manifest.json").exists());
+    assert!(root.join("other-stamp").join("manifest.json").exists());
+    // imported entries carry the snapshot owner: any scenario's hit on them
+    // is a cross hit
+    assert_eq!(pool.get(&key(2), 7).unwrap().tokens, out(2).tokens);
+    assert_eq!(pool.counters().cross_hits, 1);
+
+    // second process: reads the paged store, not the (gone) v1 file
+    let pool2 = BufferPool::new(PoolCfg::entry_capped(64));
+    assert_eq!(pool2.attach_store(&root, "st"), 5);
+    // the foreign stamp's converted store is directly attachable too
+    let pool3 = BufferPool::new(PoolCfg::entry_capped(64));
+    assert_eq!(pool3.attach_store(&root, "other-stamp"), 2);
+    assert_eq!(pool3.get(&key(101), 0).unwrap().tokens, out(101).tokens);
+    let _ = std::fs::remove_dir_all(&root);
+
+    // an unparsable v1 snapshot is a cold start, never an error
+    std::fs::write(&root, "{\"version\":1,\"caches\":7}").unwrap();
+    let pool4 = BufferPool::new(PoolCfg::entry_capped(64));
+    assert_eq!(pool4.attach_store(&root, "st"), 0);
+    let _ = std::fs::remove_file(&root);
+    let _ = std::fs::remove_dir_all(&root);
+}
