@@ -410,6 +410,73 @@ fn main() -> Result<(), String> {
         ]));
     }
 
+    // --- telemetry overhead (PERF.md §Telemetry) ----------------------------
+    // Off must be free: telemetry lives behind one Option and an untouched
+    // f64 store, so off-traces are bit-identical to the pre-telemetry
+    // engine (CI asserts traces_identical == 1). On is bounded: spans are
+    // plain pushes of already-computed sim times, no extra events.
+    {
+        let n = if smoke { 20 } else { 60 };
+        let wl = Workload::generate(
+            &corpus,
+            WorkloadSpec {
+                rpm: 40.0,
+                n_requests: n,
+                arrival: Arrival::Poisson,
+                categories: vec![],
+                seed: 3,
+            },
+        );
+        let run = |telemetry: bool| {
+            let mut backend = base.clone();
+            let mut engine = Engine::new(
+                baselines::pice("llama70b-sim"),
+                corpus.clone(),
+                &tok,
+                &reg,
+                &mut backend,
+            )
+            .expect("engine");
+            if telemetry {
+                engine.enable_telemetry(0);
+            }
+            let traces = engine.run(&wl).expect("run");
+            let spans = engine.take_spans();
+            (traces, spans)
+        };
+        let iters = if smoke { 1 } else { 3 };
+        let (ref_off, _) = run(false); // warm the backend path
+        let t_off = time_it(iters, || {
+            std::hint::black_box(run(false));
+        });
+        let t_on = time_it(iters, || {
+            std::hint::black_box(run(true));
+        });
+        let (on_traces, spans) = run(true);
+        let identical = ref_off.len() == on_traces.len()
+            && ref_off
+                .iter()
+                .zip(&on_traces)
+                .all(|(x, y)| x.answer == y.answer && x.done == y.done);
+        let ratio = t_on / t_off.max(1e-12);
+        report(&mut rows, &format!("engine.run {n} reqs, telemetry off"), t_off / n as f64, "per request");
+        report(&mut rows, &format!("engine.run {n} reqs, telemetry on"), t_on / n as f64, "per request");
+        println!(
+            "{:<44} {ratio:>11.2}x  ({} spans, identical: {})",
+            "  telemetry on/off wall ratio",
+            spans.len(),
+            if identical { "yes" } else { "NO (BUG)" }
+        );
+        rows.push(obj(vec![
+            ("bench", s("telemetry_overhead")),
+            ("off_s_per_req", num(t_off / n as f64)),
+            ("on_s_per_req", num(t_on / n as f64)),
+            ("overhead_ratio", num(ratio)),
+            ("spans", num(spans.len() as f64)),
+            ("traces_identical", num(identical as usize as f64)),
+        ]));
+    }
+
     println!("batched expansion 4-worker speedup: {speedup4:.2}x (target >= 1.5x)");
 
     // --- legacy Env-driven event loop (coordinator cost only) ---------------

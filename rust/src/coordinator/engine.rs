@@ -76,6 +76,7 @@ use crate::runtime::SamplingParams;
 use crate::serve::{ResponseEvent, ResponseEventKind};
 use crate::simclock::{EventQueue, FIRST_CLASS, SimTime};
 use crate::sketch::{compress, split_sketch, Prompts};
+use crate::telemetry::{MetricsRegistry, Span, SpanKind, Telemetry};
 use crate::tokenizer::Tokenizer;
 use crate::util::rng::Rng;
 
@@ -345,6 +346,9 @@ struct Pending {
     predicted_len: usize,
     mode: Mode,
     sketch_level: usize,
+    /// sim time this request last entered the cloud queue — start of the
+    /// telemetry `QueueWait` span closed at admission
+    cloud_enq: SimTime,
     cloud_start: SimTime,
     cloud_done: SimTime,
     /// first time an edge began serving this request; None until then (a
@@ -425,6 +429,12 @@ struct Core {
     /// streaming sink: Some = emit client-visible [`ResponseEvent`]s
     /// (enabled by [`Engine::enable_events`]); None = zero-cost
     events: Option<Vec<ResponseEvent>>,
+    /// telemetry sink: Some = stamp request spans + registry metrics from
+    /// the event stream (enabled by [`Engine::enable_telemetry`]); None
+    /// (default) = zero-cost, bit-identical to an engine without the
+    /// subsystem. Stamps reuse already-computed sim-time values only — no
+    /// extra scheduled events, no RNG draws.
+    telem: Option<Box<Telemetry>>,
     /// fault injection configured (gates the in-flight tracking so the
     /// static world stays allocation-free on the pull path)
     faults_on: bool,
@@ -560,6 +570,7 @@ fn make_core(
         jobq: MultiListQueue::new(bounds, cfg.queue_cap),
         edge_oom,
         events: None,
+        telem: None,
         faults_on: cfg.dynamics.faults.any(),
         tail_on: cfg.tail.on(),
         track_inflight: cfg.dynamics.faults.any() || cfg.tail.on(),
@@ -770,6 +781,56 @@ impl<'a> Engine<'a> {
         self.core.events.as_mut().map(std::mem::take).unwrap_or_default()
     }
 
+    /// Turn on the telemetry sink (request spans + metrics registry) with
+    /// this engine tagged as `shard` (0 for a standalone engine; the fleet
+    /// passes the shard index so exported traces carry per-shard `pid`s).
+    /// Off by default — the off path is bit-identical to a build without
+    /// the subsystem.
+    pub fn enable_telemetry(&mut self, shard: usize) {
+        if self.core.telem.is_none() {
+            self.core.telem = Some(Box::new(Telemetry::new(shard)));
+        }
+    }
+
+    /// Telemetry sink enabled?
+    pub fn telemetry_on(&self) -> bool {
+        self.core.telem.is_some()
+    }
+
+    /// Drain every span stamped since the last call (empty when telemetry
+    /// is off). Spans are in emission order: pure in `(cfg, workload,
+    /// seed)`, so the log is bit-identical across sweep thread counts and
+    /// open vs closed loop.
+    pub fn take_spans(&mut self) -> Vec<Span> {
+        self.core.telem.as_mut().map(|t| std::mem::take(&mut t.spans)).unwrap_or_default()
+    }
+
+    /// The engine's metrics registry (None when telemetry is off).
+    pub fn metrics_registry(&self) -> Option<&MetricsRegistry> {
+        self.core.telem.as_deref().map(|t| &t.registry)
+    }
+
+    /// Stamp a durationful span, if telemetry is on.
+    fn tspan(&mut self, rid: usize, kind: SpanKind, start: SimTime, end: SimTime) {
+        if let Some(t) = self.core.telem.as_mut() {
+            t.span(rid, kind, start, end);
+        }
+    }
+
+    /// Stamp an instant mark, if telemetry is on.
+    fn tmark(&mut self, rid: usize, kind: SpanKind, t: SimTime) {
+        if let Some(tl) = self.core.telem.as_mut() {
+            tl.mark(rid, kind, t);
+        }
+    }
+
+    /// Bump a registry counter, if telemetry is on.
+    fn tcount(&mut self, name: &str, by: u64) {
+        if let Some(t) = self.core.telem.as_mut() {
+            t.registry.inc(name, by);
+        }
+    }
+
     /// Submit one request arriving at simulated time `arrival` (clamped to
     /// `now()` if in the past) and return its request id. Re-entrant: call
     /// while earlier requests are mid-flight. A submission at time t orders
@@ -799,6 +860,7 @@ impl<'a> Engine<'a> {
             predicted_len: 0,
             mode: Mode::CloudFull,
             sketch_level: 0,
+            cloud_enq: 0.0,
             cloud_start: 0.0,
             cloud_done: 0.0,
             edge_start: None,
@@ -824,6 +886,7 @@ impl<'a> Engine<'a> {
         self.core.traces.push(None);
         self.core.q.schedule_class(arrival, FIRST_CLASS, Ev::Arrive(rid));
         self.core.virgin = false;
+        self.tcount("submitted", 1);
         Ok(rid)
     }
 
@@ -879,10 +942,14 @@ impl<'a> Engine<'a> {
     /// independent, exactly like the pre-refactor per-run locals.
     pub fn reset(&mut self) {
         let events_on = self.core.events.is_some();
+        let telem_shard = self.core.telem.as_deref().map(|t| t.shard);
         self.core =
             make_core(&self.cfg, self.registry, &self.cluster, &self.profile, self.cost_coeff);
         if events_on {
             self.core.events = Some(Vec::new());
+        }
+        if let Some(shard) = telem_shard {
+            self.core.telem = Some(Box::new(Telemetry::new(shard)));
         }
     }
 
@@ -920,6 +987,10 @@ impl<'a> Engine<'a> {
         let qid = self.core.pend[rid].question_id;
         let predicted = self.predict_len(qid);
         self.core.pend[rid].predicted_len = predicted;
+        // every ev_arrive cloud enqueue happens at `now` — stamp once here
+        // (maintained unconditionally: a plain f64 store, no telemetry gate)
+        self.core.pend[rid].cloud_enq = now;
+        self.tcount("arrivals", 1);
         let policy = self.cfg.policy.clone();
         match &policy {
             Policy::CloudOnly => {
@@ -1044,7 +1115,14 @@ impl<'a> Engine<'a> {
         let cloud_info = self.cloud_info();
         for (k, ((rid, kind), out)) in admitted.into_iter().zip(outs).enumerate() {
             let out = out.map_err(RunError::Backend)?;
-            self.core.pend[rid].cloud_start = now;
+            // A cloud RESCUE of a progressive request must not overwrite the
+            // sketch phase's cloud_start/cloud_done in the trace — rescues
+            // only originate post-sketch (from displaced expansion jobs), so
+            // an unguarded stamp here reported the rescue window and silently
+            // folded sketch+transfer+edge time into apparent queue wait.
+            if !self.core.pend[rid].cloud_rescue {
+                self.core.pend[rid].cloud_start = now;
+            }
             let prompt_sim = (reqs[k].prompt.len() as f64 * scale) as usize;
             let dur = match &kind {
                 CloudJobKind::Full => {
@@ -1115,6 +1193,17 @@ impl<'a> Engine<'a> {
                 let n_sim = self.core.pend[rid].cloud_tokens;
                 self.core.cost_model.observe_cloud(n_sim, dur);
             }
+            if self.core.telem.is_some() {
+                let enq = self.core.pend[rid].cloud_enq;
+                let skind = match &kind {
+                    CloudJobKind::Full => SpanKind::CloudFull,
+                    CloudJobKind::Sketch { .. } => SpanKind::CloudSketch,
+                };
+                let t = self.core.telem.as_mut().unwrap();
+                t.span(rid, SpanKind::QueueWait, enq, now);
+                t.span(rid, skind, now, now + dur);
+                t.registry.inc("cloud_jobs", 1);
+            }
             self.core.cloud_inflight += 1;
             self.core.q.schedule(now + dur, Ev::CloudDone { rid, kind });
         }
@@ -1123,7 +1212,12 @@ impl<'a> Engine<'a> {
 
     fn ev_cloud_done(&mut self, now: SimTime, rid: usize, kind: CloudJobKind) {
         self.core.cloud_inflight = self.core.cloud_inflight.saturating_sub(1);
-        self.core.pend[rid].cloud_done = now;
+        // see ev_cloud_admit: a rescue regeneration keeps the sketch phase's
+        // trace timestamps; `sketch_ready == cloud_done` stays invariant for
+        // every progressive request
+        if !self.core.pend[rid].cloud_rescue {
+            self.core.pend[rid].cloud_done = now;
+        }
         self.core.q.schedule(now, Ev::CloudAdmit);
         match kind {
             CloudJobKind::Full => {
@@ -1146,6 +1240,7 @@ impl<'a> Engine<'a> {
                     // WAN drift between scheduling and the sketch landing
                     self.core.cost_model.observe_transfer(tm.eval(sim_len), delta);
                 }
+                self.tspan(rid, SpanKind::Transfer, now, now + delta);
                 self.core.q.schedule(now + delta, Ev::JobArriveAtQueue { rid });
             }
         }
@@ -1165,6 +1260,8 @@ impl<'a> Engine<'a> {
             // the sketch-fallback terminal below — saturation degrades
             // answers, it never silently drops a request.
             self.core.pend[rid].requeue_retries = attempts + 1;
+            self.tspan(rid, SpanKind::RequeueWait, now, now + 2.0);
+            self.tcount("requeue_deferrals", 1);
             self.core.q.schedule_in(2.0, Ev::JobArriveAtQueue { rid });
             return;
         }
@@ -1192,6 +1289,8 @@ impl<'a> Engine<'a> {
             // the degraded-mode percentiles see park-then-recover
             // survivors too, not only cloud rescues.
             self.core.pend[rid].failovers += 1;
+            self.tmark(rid, SpanKind::Failover, now);
+            self.tcount("failovers", 1);
             if self.core.pending_recovers > 0 {
                 if self.core.tail_on {
                     self.backoff_displaced(now, job, 0);
@@ -1264,6 +1363,11 @@ impl<'a> Engine<'a> {
             };
             if self.core.track_inflight {
                 self.core.edges[eid].inflight = EdgeInflight::Full(rid);
+            }
+            if let Some(t) = self.core.telem.as_mut() {
+                t.span(rid, SpanKind::EdgeFull { eid }, now, now + dur);
+                t.registry.inc("edge_full_jobs", 1);
+                t.registry.gauge_add(&format!("edge{eid}_busy_s"), dur);
             }
             let epoch = self.core.edges[eid].epoch;
             self.core.q.schedule(now + dur, Ev::EdgeDone { eid, epoch, work });
@@ -1496,6 +1600,18 @@ impl<'a> Engine<'a> {
             plans.iter().map(Vec::len).collect::<Vec<_>>(),
             sel.switch_cost_s
         );
+        if let Some(t) = self.core.telem.as_mut() {
+            for (job, fresh) in batch.iter().zip(&fresh_idx) {
+                t.span(
+                    job.rid,
+                    SpanKind::EdgeExpand { eid, slots: fresh.len() },
+                    now,
+                    now + total_dur,
+                );
+            }
+            t.registry.inc("edge_pulls", 1);
+            t.registry.gauge_add(&format!("edge{eid}_busy_s"), total_dur);
+        }
         if self.core.track_inflight {
             // Retained so a crash can re-enter these slots into dispatch
             // with their sketch context intact (Job clones are Arc bumps).
@@ -1548,6 +1664,7 @@ impl<'a> Engine<'a> {
             // completion of work that died with a crashed incarnation: the
             // slots were re-dispatched at crash time — drop it entirely
             // (touching busy/pull state here would race the new incarnation)
+            self.tcount("stale_edge_completions", 1);
             return;
         }
         self.core.edges[eid].busy = false;
@@ -1645,6 +1762,7 @@ impl<'a> Engine<'a> {
                 if !self.core.edges[eid].up {
                     return;
                 }
+                self.tcount("edge_crashes", 1);
                 self.core.edges[eid].up = false;
                 self.core.edges[eid].busy = false;
                 self.core.edges[eid].speed_mult = 1.0;
@@ -1670,6 +1788,7 @@ impl<'a> Engine<'a> {
                             }
                             if newly > 0 && !self.core.pend[job.rid].done {
                                 self.core.pend[job.rid].salvaged_slots += newly;
+                                self.tcount("salvaged_slots", newly as u64);
                             }
                             self.redispatch_job(now, job);
                         }
@@ -1677,6 +1796,8 @@ impl<'a> Engine<'a> {
                     EdgeInflight::Full(rid) => {
                         if !self.core.pend[rid].done {
                             self.core.pend[rid].failovers += 1;
+                            self.tmark(rid, SpanKind::Failover, now);
+                            self.tcount("failovers", 1);
                             self.dispatch_full(now, rid);
                         }
                     }
@@ -1686,6 +1807,8 @@ impl<'a> Engine<'a> {
                 for rid in waiting {
                     if !self.core.pend[rid].done {
                         self.core.pend[rid].failovers += 1;
+                        self.tmark(rid, SpanKind::Failover, now);
+                        self.tcount("failovers", 1);
                         self.dispatch_full(now, rid);
                     }
                 }
@@ -1703,6 +1826,8 @@ impl<'a> Engine<'a> {
                             let p = &self.core.pend[job.rid];
                             if !p.done && !p.cloud_rescue {
                                 self.core.pend[job.rid].failovers += 1;
+                                self.tmark(job.rid, SpanKind::Failover, now);
+                                self.tcount("failovers", 1);
                                 self.fail_to_cloud(now, job.rid);
                             }
                         }
@@ -1728,6 +1853,7 @@ impl<'a> Engine<'a> {
             EdgeFault::Recover => {
                 // every Recover in the timeline is consumed exactly once,
                 // whether or not the edge was actually down
+                self.tcount("edge_recovers", 1);
                 self.core.pending_recovers = self.core.pending_recovers.saturating_sub(1);
                 if !self.core.edges[eid].up {
                     self.core.edges[eid].up = true;
@@ -1754,6 +1880,7 @@ impl<'a> Engine<'a> {
                 self.core.q.schedule(now, Ev::EdgePull { eid });
             }
             EdgeFault::Slowdown { mult } => {
+                self.tcount("edge_slowdowns", 1);
                 if self.core.edges[eid].up {
                     // applies to work STARTED after this instant; in-flight
                     // work keeps the duration it was scheduled with
@@ -1782,6 +1909,7 @@ impl<'a> Engine<'a> {
             // no edge will ever come back: the cloud is the answer of last
             // resort (degrades the edge-only baseline honestly)
             self.core.pend[rid].mode = Mode::CloudFull;
+            self.core.pend[rid].cloud_enq = now;
             self.core.cloud_pending.push_back((rid, CloudJobKind::Full));
             self.core.q.schedule(now, Ev::CloudAdmit);
         }
@@ -1795,8 +1923,13 @@ impl<'a> Engine<'a> {
             return;
         }
         self.core.pend[rid].failovers += 1;
+        self.tmark(rid, SpanKind::Failover, now);
         // salvaged slots ride along — only genuinely lost work is a retry
         self.core.pend[rid].retried_slots += job.unsalvaged();
+        if let Some(t) = self.core.telem.as_mut() {
+            t.registry.inc("failovers", 1);
+            t.registry.inc("retried_slots", job.unsalvaged() as u64);
+        }
         job.enqueued_at = now;
         if self.core.up_edges > 0 {
             if self.core.jobq.push(job) {
@@ -1829,6 +1962,8 @@ impl<'a> Engine<'a> {
     fn backoff_displaced(&mut self, now: SimTime, job: Job, attempt: usize) {
         let rid = job.rid;
         let delay = self.cfg.tail.backoff_base_s * (1u64 << attempt.min(32)) as f64;
+        self.tspan(rid, SpanKind::BackoffWait { attempt: attempt as u32 }, now, now + delay);
+        self.tcount("backoff_waits", 1);
         self.core.backoff_jobs.push(job);
         self.core.q.schedule(now + delay, Ev::BackoffRetry { rid, attempt });
     }
@@ -1851,6 +1986,13 @@ impl<'a> Engine<'a> {
                 // still blacked out: double the delay, job stays pooled
                 let delay =
                     self.cfg.tail.backoff_base_s * (1u64 << (attempt + 1).min(32)) as f64;
+                self.tspan(
+                    rid,
+                    SpanKind::BackoffWait { attempt: attempt as u32 + 1 },
+                    now,
+                    now + delay,
+                );
+                self.tcount("backoff_waits", 1);
                 self.core.q.schedule(now + delay, Ev::BackoffRetry { rid, attempt: attempt + 1 });
             } else {
                 // retry cap hit (or no recover is ever coming): bound the
@@ -1922,9 +2064,15 @@ impl<'a> Engine<'a> {
             }
             if newly > 0 {
                 self.core.pend[rid].salvaged_slots += newly;
+                self.tcount("salvaged_slots", newly as u64);
             }
             self.core.pend[rid].hedges += 1;
             self.core.pend[rid].hedged_slots += job.unsalvaged();
+            self.tmark(rid, SpanKind::HedgeDup { eid }, now);
+            if let Some(t) = self.core.telem.as_mut() {
+                t.registry.inc("hedges", 1);
+                t.registry.inc("hedged_slots", job.unsalvaged() as u64);
+            }
             job.enqueued_at = now;
             if self.core.jobq.push(job) {
                 for e2 in 0..self.core.edges.len() {
@@ -1978,6 +2126,7 @@ impl<'a> Engine<'a> {
             self.core.evicted += 1;
             out.push((rid, p.question_id, p.arrival));
         }
+        self.tcount("evicted", out.len() as u64);
         out
     }
 
@@ -1991,6 +2140,9 @@ impl<'a> Engine<'a> {
             return;
         }
         self.core.pend[rid].cloud_rescue = true;
+        self.core.pend[rid].cloud_enq = now;
+        self.tmark(rid, SpanKind::CloudRescue, now);
+        self.tcount("cloud_rescues", 1);
         self.core.cloud_pending.push_back((rid, CloudJobKind::Full));
         self.core.q.schedule(now, Ev::CloudAdmit);
     }
@@ -2010,6 +2162,7 @@ impl<'a> Engine<'a> {
             };
             self.core.pend[rid].candidates = vec![sketch_cand];
         }
+        self.tcount("sketch_fallbacks", 1);
         self.finalize(rid, now);
     }
 
@@ -2066,6 +2219,13 @@ impl<'a> Engine<'a> {
                 hedged_slots: p.hedged_slots,
             }
         };
+        if let Some(t) = self.core.telem.as_mut() {
+            // exactly one root span per completed request — finalize is
+            // idempotent and fleet-evicted requests never reach it locally
+            t.span(rid, SpanKind::Request, trace.arrival, now);
+            t.registry.inc("completed", 1);
+            t.registry.observe("latency_s", now - trace.arrival);
+        }
         self.core.traces[rid] = Some(trace);
         self.core.completed += 1;
         if self.core.events.is_some() {

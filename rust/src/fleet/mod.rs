@@ -50,6 +50,7 @@ use crate::coordinator::{Engine, EngineCfg, RunError};
 use crate::metrics::RequestTrace;
 use crate::serve::{ResponseEvent, ResponseEventKind};
 use crate::simclock::SimTime;
+use crate::telemetry::{MetricsRegistry, Span};
 use std::collections::HashMap;
 
 /// Fleet shape: how many engine shards, and how sessions are placed.
@@ -163,6 +164,52 @@ impl<'a> Fleet<'a> {
         for e in &mut self.shards {
             e.enable_events();
         }
+    }
+
+    /// Enable the telemetry sink on every shard, each tagged with its shard
+    /// index (exported Chrome traces get per-shard `pid`s).
+    pub fn enable_telemetry(&mut self) {
+        for (s, e) in self.shards.iter_mut().enumerate() {
+            e.enable_telemetry(s);
+        }
+    }
+
+    /// Drain the shards' span logs, rids rewritten to fleet-global ids,
+    /// sorted by `(start, shard, rid)` into one global timeline. Shards are
+    /// drained in shard order and the sort key is total, so the result is
+    /// identical at any sweep thread count and under any pump chunking that
+    /// drains at the same instants. A session moved by [`Fleet::rebalance`]
+    /// contributes spans from both shards but exactly ONE `Request` root
+    /// span — the donor evicted it without finalizing.
+    pub fn take_spans(&mut self) -> Vec<Span> {
+        let mut out: Vec<Span> = Vec::new();
+        for s in 0..self.shards.len() {
+            for mut sp in self.shards[s].take_spans() {
+                sp.rid = self.global_of[s][sp.rid];
+                out.push(sp);
+            }
+        }
+        out.sort_by(|a, b| {
+            a.start.total_cmp(&b.start).then(a.shard.cmp(&b.shard)).then(a.rid.cmp(&b.rid))
+        });
+        out
+    }
+
+    /// Fleet-level metrics: the deterministic element-wise merge of every
+    /// shard's registry (shard 0..N order — mirrors
+    /// [`crate::metrics::aggregate_shards`]), plus the per-shard registries.
+    /// `None` when telemetry is off.
+    pub fn metrics_registries(&self) -> Option<(MetricsRegistry, Vec<MetricsRegistry>)> {
+        let per_shard: Vec<MetricsRegistry> =
+            self.shards.iter().filter_map(|e| e.metrics_registry().cloned()).collect();
+        if per_shard.len() != self.shards.len() {
+            return None;
+        }
+        let mut fleet = MetricsRegistry::default();
+        for r in &per_shard {
+            fleet.merge(r);
+        }
+        Some((fleet, per_shard))
     }
 
     /// The shard a submission with this session key would land on *now*

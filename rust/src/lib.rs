@@ -20,6 +20,8 @@
 //!   residency, clock eviction, disk spill; [`sweep::cache`] is its façade)
 //! * evaluation scale-out: [`sweep`] (shared generation cache + the
 //!   concurrent scenario-sweep runner), [`scenario`] (env wiring)
+//! * observability: [`telemetry`] (deterministic request spans, metrics
+//!   registry, Chrome-trace / snapshot exporters — zero-cost when off)
 
 pub mod baselines;
 pub mod cli;
@@ -44,6 +46,7 @@ pub mod simclock;
 pub mod sketch;
 pub mod store;
 pub mod sweep;
+pub mod telemetry;
 pub mod testkit;
 pub mod tokenizer;
 pub mod util;

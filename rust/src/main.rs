@@ -8,6 +8,7 @@
 //!              [--shards 4] [--placement hash|least-loaded]
 //!              [--calibrate on|off|warm]
 //!              [--hedge <quantile|off>] [--slot-timeout-mult <x>]
+//!              [--trace-out <path>] [--metrics-out <path>] [--watch]
 //! pice models
 //! pice profile [--edges 4]
 //! pice finetune [--pairs 8] [--steps 30]
@@ -26,7 +27,10 @@ use pice::models::ModelInfo;
 use pice::profiler::OfflineProfile;
 use pice::quality::judge::Judge;
 use pice::scenario::Env;
-use pice::serve::{ResponseEventKind, ServeCfg};
+use pice::serve::{PiceService, ResponseEventKind, ServeCfg};
+use pice::sweep::cache::CacheStats;
+use pice::telemetry::{self, MetricsRegistry, SnapshotWriter};
+use pice::util::json::{num, obj, Json};
 use pice::util::stats;
 use pice::{baselines, info};
 
@@ -88,6 +92,19 @@ SUBCOMMANDS
                                     off = default: bit-identical legacy traces
               --slot-timeout-mult <x>  multiplier on the hedge timeout
                                     (default 1.0; requires --hedge <q>)
+              --trace-out <path>    telemetry (PERF.md §Telemetry): write the
+                                    request-span log as Chrome-trace JSONL
+                                    (Perfetto ingests it directly; pid = shard,
+                                    tid = request id) and print the per-phase
+                                    latency breakdown with the metrics
+              --metrics-out <path>  telemetry: write sim-time-paced metrics
+                                    snapshots as JSONL, one line every 5
+                                    sim-seconds plus a final end-of-run line
+                                    folding in cache / calibration / run stats;
+                                    each push atomically rewrites the file, so
+                                    an interrupted run keeps its last snapshot
+              --watch               telemetry: print a one-line human summary
+                                    at every snapshot instant (no file needed)
   models    print the model registry (speed, memory, MMLU, eval accuracy)
   profile   offline latency fits f(l) per (device, model)
               --edges <int>         edge count of the profiled testbed (default 4)
@@ -156,8 +173,10 @@ fn main() {
                     "calibrate",
                     "hedge",
                     "slot-timeout-mult",
+                    "trace-out",
+                    "metrics-out",
                 ],
-                &with_global_flags(&["stream"]),
+                &with_global_flags(&["stream", "watch"]),
             )
             .and_then(|()| serve(&args)),
         Some("models") => args.validate(&[], GLOBAL_FLAGS).and_then(|()| models()),
@@ -182,6 +201,13 @@ fn serve(args: &Args) -> Result<(), String> {
     let model = args.opt_str("model", "llama70b-sim").to_string();
     let n = args.opt_usize("n", 60);
     let stream = args.has_flag("stream");
+    // Telemetry knobs (PERF.md §Telemetry). Any of them turns the span /
+    // registry machinery on; all absent leaves the engines bit-identical
+    // to a build without the telemetry module.
+    let trace_out = args.opt("trace-out").map(std::path::PathBuf::from);
+    let metrics_out = args.opt("metrics-out").map(std::path::PathBuf::from);
+    let watch = args.has_flag("watch");
+    let telemetry_on = trace_out.is_some() || metrics_out.is_some() || watch;
     let mut env = Env::load()?;
     let rpm = args.opt_f64("rpm", env.paper_rpm(&model));
     let mut cfg = match args.opt_str("policy", "pice") {
@@ -276,12 +302,15 @@ fn serve(args: &Args) -> Result<(), String> {
 
     // The service (open-loop) path runs when its knobs are engaged: --stream
     // for the live log, an explicit --max-inflight for admission control, an
-    // SLO --deadline, a fleet shape, or calibration (the summary and the
-    // persistable state live on the service's engines). Without any, the
+    // SLO --deadline, a fleet shape, calibration (the summary and the
+    // persistable state live on the service's engines), or telemetry (the
+    // snapshot exporter paces itself on the service clock). Without any, the
     // closed-loop driver produces bit-identical traces with no event
     // machinery.
-    let (traces, rejected, shard_routes, calib_out) = if fleet_mode
+    let mut snap = metrics_out.as_ref().map(SnapshotWriter::new);
+    let (traces, rejected, shard_routes, calib_out, telem) = if fleet_mode
         || stream
+        || telemetry_on
         || args.opt("max-inflight").is_some()
         || deadline_s.is_some()
         || calib_mode != CalibMode::Off
@@ -294,7 +323,18 @@ fn serve(args: &Args) -> Result<(), String> {
         } else {
             env.service(cfg, serve_cfg).map_err(|e| e.to_string())?
         };
+        if telemetry_on {
+            svc.enable_telemetry();
+        }
+        let mut next_snap = SNAPSHOT_EVERY_S;
         for r in &wl.requests {
+            // Pace the snapshot exporter on sim time: stop at every
+            // 5-sim-second boundary the next arrival would jump over.
+            while telemetry_on && next_snap <= r.arrival_s {
+                svc.pump_until(next_snap).map_err(|e| e.to_string())?;
+                snapshot_tick(&mut svc, next_snap, &mut snap, watch)?;
+                next_snap += SNAPSHOT_EVERY_S;
+            }
             svc.pump_until(r.arrival_s).map_err(|e| e.to_string())?;
             svc.submit(r.question_id, r.arrival_s).map_err(|e| e.to_string())?;
             if stream {
@@ -313,14 +353,23 @@ fn serve(args: &Args) -> Result<(), String> {
         let routes = svc.shard_routes().to_vec();
         let calib_out = (calib_mode != CalibMode::Off)
             .then(|| (svc.calib_summaries(), svc.calib_states()));
-        (svc.finish().map_err(|e| e.to_string())?, rejected, routes, calib_out)
+        // Drain the telemetry before `finish` consumes the service; the
+        // final snapshot is written after the run so it can fold in the
+        // cache / calibration / run stats (satellite: an interrupted run
+        // still has the last periodic snapshot on disk).
+        let telem = telemetry_on
+            .then(|| (svc.take_spans(), svc.metrics_registries(), svc.shard_gauges()));
+        (svc.finish().map_err(|e| e.to_string())?, rejected, routes, calib_out, telem)
     } else {
         // closed-loop batch driver (same traces, no event machinery)
         let (_, traces) = env.run(cfg, &wl).map_err(|e| e.to_string())?;
-        (traces, 0, Vec::new(), None)
+        (traces, 0, Vec::new(), None, None)
     };
 
-    let m = pice::metrics::aggregate(&traces);
+    let mut m = pice::metrics::aggregate(&traces);
+    if let Some((spans, _, _)) = &telem {
+        m.phases = telemetry::phase_breakdown(spans);
+    }
     let scores: Vec<f64> = traces
         .iter()
         .filter_map(|t| corpus.get(t.question_id).map(|q| judge.score(q, &t.answer).overall))
@@ -330,6 +379,22 @@ fn serve(args: &Args) -> Result<(), String> {
         "avg latency     {:.2} s (p50 {:.2}, p95 {:.2}, p99.9 {:.2})",
         m.avg_latency_s, m.p50_latency_s, m.p95_latency_s, m.p999_latency_s
     );
+    if let Some(pb) = &m.phases {
+        println!(
+            "phase p50/p99   queue {:.2}/{:.2} | cloud {:.2}/{:.2} | transfer {:.2}/{:.2} \
+             | edge {:.2}/{:.2} | tail {:.2}/{:.2} s",
+            pb.queue.p50_s,
+            pb.queue.p99_s,
+            pb.cloud.p50_s,
+            pb.cloud.p99_s,
+            pb.transfer.p50_s,
+            pb.transfer.p99_s,
+            pb.edge.p50_s,
+            pb.edge.p99_s,
+            pb.tail.p50_s,
+            pb.tail.p99_s
+        );
+    }
     println!("first sketch    p50 {:.2} s, p99 {:.2} s", m.p50_ttfs_s, m.p99_ttfs_s);
     println!("first expansion p50 {:.2} s, p99 {:.2} s", m.p50_ttfe_s, m.p99_ttfe_s);
     println!("judge quality   {:.2} / 10", stats::mean(&scores));
@@ -375,6 +440,37 @@ fn serve(args: &Args) -> Result<(), String> {
             );
         }
     }
+    // Telemetry exporters: the span log as Chrome-trace JSONL, and one
+    // final snapshot line folding in the end-of-run cache / calibration /
+    // run stats — so a metrics file always closes with a complete summary.
+    if let Some((spans, regs, gauges)) = &telem {
+        let t_final = traces.iter().map(|t| t.done).fold(0.0, f64::max);
+        if let Some(path) = &trace_out {
+            telemetry::write_chrome_trace(path, spans).map_err(|e| e.to_string())?;
+            info!("wrote {} trace events to {}", spans.len(), path.display());
+        }
+        let cache = env.cache_stats();
+        let line = snapshot_json(
+            t_final,
+            true,
+            regs.as_ref(),
+            gauges,
+            0,
+            rejected,
+            cache.as_ref(),
+            calib_out.as_ref().map(|(sm, _)| sm.as_slice()),
+            Some(&m),
+        );
+        if let Some(w) = &mut snap {
+            w.push(line).map_err(|e| e.to_string())?;
+            if let Some(path) = &metrics_out {
+                info!("wrote {} metrics snapshots to {}", w.len(), path.display());
+            }
+        }
+        if watch {
+            print_watch(t_final, regs.as_ref(), gauges, 0);
+        }
+    }
     if let Some((summaries, states)) = calib_out {
         if summaries.len() == 1 {
             println!("calibration     {}", summaries[0]);
@@ -412,6 +508,132 @@ fn serve(args: &Args) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+/// Sim-seconds between periodic telemetry snapshots (`--metrics-out`).
+const SNAPSHOT_EVERY_S: f64 = 5.0;
+
+/// Emit one snapshot at instant `t` (the service has already been pumped
+/// to it): a JSONL line into `snap` and/or the `--watch` summary line.
+fn snapshot_tick(
+    svc: &mut PiceService<'_>,
+    t: f64,
+    snap: &mut Option<SnapshotWriter>,
+    watch: bool,
+) -> Result<(), String> {
+    let regs = svc.metrics_registries();
+    let gauges = svc.shard_gauges();
+    let inflight = svc.inflight();
+    let line =
+        snapshot_json(t, false, regs.as_ref(), &gauges, inflight, svc.rejected(), None, None, None);
+    if let Some(w) = snap {
+        w.push(line).map_err(|e| e.to_string())?;
+    }
+    if watch {
+        print_watch(t, regs.as_ref(), &gauges, inflight);
+    }
+    Ok(())
+}
+
+/// One snapshot object (the `--metrics-out` JSONL schema — PERF.md
+/// §Telemetry). `regs` is the `(fleet-merged, per-shard)` registry pair;
+/// `cache` / `calib` / `run` are folded into the final line only.
+#[allow(clippy::too_many_arguments)]
+fn snapshot_json(
+    t: f64,
+    is_final: bool,
+    regs: Option<&(MetricsRegistry, Vec<MetricsRegistry>)>,
+    gauges: &[(f64, usize)],
+    inflight: usize,
+    rejected: usize,
+    cache: Option<&CacheStats>,
+    calib: Option<&[pice::costmodel::CalibSummary]>,
+    run: Option<&pice::metrics::RunMetrics>,
+) -> Json {
+    let mut fields = vec![
+        ("t", num(t)),
+        ("final", Json::Bool(is_final)),
+        ("inflight", num(inflight as f64)),
+        ("rejected", num(rejected as f64)),
+        (
+            "shards",
+            Json::Arr(
+                gauges
+                    .iter()
+                    .enumerate()
+                    .map(|(shard, (backlog_s, up_edges))| {
+                        obj(vec![
+                            ("shard", num(shard as f64)),
+                            ("backlog_s", num(*backlog_s)),
+                            ("up_edges", num(*up_edges as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Some((fleet, per_shard)) = regs {
+        fields.push(("metrics", fleet.to_json()));
+        if per_shard.len() > 1 {
+            fields
+                .push(("per_shard", Json::Arr(per_shard.iter().map(|r| r.to_json()).collect())));
+        }
+    }
+    if let Some(cs) = cache {
+        fields.push((
+            "cache",
+            obj(vec![
+                ("lookups", num(cs.lookups() as f64)),
+                ("hit_rate", num(cs.hit_rate())),
+                ("cross_hit_rate", num(cs.cross_hit_rate())),
+                ("evictions", num(cs.evictions as f64)),
+                ("spilled_pages", num(cs.spilled_pages as f64)),
+                ("faulted_pages", num(cs.faulted_pages as f64)),
+                ("resident_bytes", num(cs.resident_bytes as f64)),
+            ]),
+        ));
+    }
+    if let Some(summaries) = calib {
+        fields.push((
+            "calib",
+            Json::Arr(summaries.iter().map(|c| pice::util::json::s(&c.to_string())).collect()),
+        ));
+    }
+    if let Some(m) = run {
+        let mut runf = vec![
+            ("throughput_qpm", num(m.throughput_qpm)),
+            ("p50_latency_s", num(m.p50_latency_s)),
+            ("p99_latency_s", num(m.p99_latency_s)),
+            ("n_requests", num(m.n_requests as f64)),
+            ("failovers", num(m.failovers as f64)),
+            ("hedges", num(m.hedges as f64)),
+            ("hedged_slots", num(m.hedged_slots as f64)),
+            ("requeue_retries", num(m.requeue_retries as f64)),
+        ];
+        if let Some(pb) = &m.phases {
+            runf.push(("phases", pb.to_json()));
+        }
+        fields.push(("run", obj(runf)));
+    }
+    obj(fields)
+}
+
+/// `--watch`: one human summary line per snapshot instant.
+fn print_watch(
+    t: f64,
+    regs: Option<&(MetricsRegistry, Vec<MetricsRegistry>)>,
+    gauges: &[(f64, usize)],
+    inflight: usize,
+) {
+    let (completed, failovers, hedges) = regs
+        .map(|(f, _)| (f.counter("completed"), f.counter("failovers"), f.counter("hedges")))
+        .unwrap_or((0, 0, 0));
+    let backlog: f64 = gauges.iter().map(|(b, _)| *b).sum();
+    let up: usize = gauges.iter().map(|(_, u)| *u).sum();
+    println!(
+        "[watch t={t:7.2}] inflight {inflight:>3} | done {completed:>4} | backlog {backlog:6.2}s \
+         | up edges {up} | failovers {failovers} | hedges {hedges}"
+    );
 }
 
 /// One line per streamed response event (`--stream`).

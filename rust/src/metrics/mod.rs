@@ -131,6 +131,11 @@ pub struct RunMetrics {
     pub hedges: usize,
     /// total expansion slots speculatively re-dispatched by those hedges
     pub hedged_slots: usize,
+    /// per-phase latency breakdown (queueing vs cloud vs transfer vs edge
+    /// vs tail waits) from telemetry request spans — `None` when telemetry
+    /// was off or the caller never attached one; [`aggregate`] does not
+    /// fill it because traces alone carry no span data
+    pub phases: Option<crate::telemetry::PhaseBreakdown>,
 }
 
 pub fn aggregate(traces: &[RequestTrace]) -> RunMetrics {
@@ -175,6 +180,7 @@ fn aggregate_refs(traces: &[&RequestTrace]) -> RunMetrics {
         requeue_retries: traces.iter().map(|t| t.requeue_retries).sum(),
         hedges: traces.iter().map(|t| t.hedges).sum(),
         hedged_slots: traces.iter().map(|t| t.hedged_slots).sum(),
+        phases: None,
     }
 }
 

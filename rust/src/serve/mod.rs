@@ -36,6 +36,7 @@ use crate::coordinator::{Engine, RunError};
 use crate::fleet::Fleet;
 use crate::metrics::{Mode, RequestTrace};
 use crate::simclock::SimTime;
+use crate::telemetry::{MetricsRegistry, Span};
 
 /// One streamed serving event for a request session.
 #[derive(Clone, Debug)]
@@ -205,6 +206,44 @@ impl<'a> ServeCore<'a> {
             ServeCore::Engine(e) => vec![(e.calib_key(), e.calib_state())],
             ServeCore::Fleet(f) => (0..f.n_shards())
                 .map(|s| (f.shard(s).calib_key(), f.shard(s).calib_state()))
+                .collect(),
+        }
+    }
+
+    fn enable_telemetry(&mut self) {
+        match self {
+            ServeCore::Engine(e) => e.enable_telemetry(0),
+            ServeCore::Fleet(f) => f.enable_telemetry(),
+        }
+    }
+
+    fn take_spans(&mut self) -> Vec<Span> {
+        match self {
+            ServeCore::Engine(e) => e.take_spans(),
+            ServeCore::Fleet(f) => f.take_spans(),
+        }
+    }
+
+    fn metrics_registries(&self) -> Option<(MetricsRegistry, Vec<MetricsRegistry>)> {
+        match self {
+            ServeCore::Engine(e) => {
+                let r = e.metrics_registry()?.clone();
+                Some((r.clone(), vec![r]))
+            }
+            ServeCore::Fleet(f) => f.metrics_registries(),
+        }
+    }
+
+    /// Per-shard `(backlog estimate, live edges)` at this instant — the
+    /// snapshot exporter's gauges (one entry over an engine core).
+    fn shard_gauges(&mut self) -> Vec<(SimTime, usize)> {
+        match self {
+            ServeCore::Engine(e) => vec![(e.backlog_estimate_s(), e.up_edges())],
+            ServeCore::Fleet(f) => (0..f.n_shards())
+                .map(|s| {
+                    let e = f.shard_mut(s);
+                    (e.backlog_estimate_s(), e.up_edges())
+                })
                 .collect(),
         }
     }
@@ -443,6 +482,36 @@ impl<'a> PiceService<'a> {
     /// are for the caller to skip.
     pub fn calib_states(&self) -> Vec<(String, Option<crate::costmodel::CalibState>)> {
         self.core.calib_states()
+    }
+
+    /// Turn on deterministic request-span tracing and the metrics registry
+    /// on every underlying engine shard. Off by default; enabling changes
+    /// nothing about scheduling — see [`crate::telemetry`].
+    pub fn enable_telemetry(&mut self) {
+        self.core.enable_telemetry();
+    }
+
+    /// Drain the telemetry spans recorded so far, with each span's `rid`
+    /// remapped to its session id (the same remap [`PiceService::finish`]
+    /// applies to traces).
+    pub fn take_spans(&mut self) -> Vec<Span> {
+        let mut spans = self.core.take_spans();
+        for sp in &mut spans {
+            sp.rid = self.rid_to_sid[sp.rid];
+        }
+        spans
+    }
+
+    /// `(merged, per-shard)` metrics registries, or `None` until
+    /// [`PiceService::enable_telemetry`] has been called.
+    pub fn metrics_registries(&self) -> Option<(MetricsRegistry, Vec<MetricsRegistry>)> {
+        self.core.metrics_registries()
+    }
+
+    /// Per-shard `(backlog estimate in seconds, live edges)` at this
+    /// instant — the snapshot exporter's gauges.
+    pub fn shard_gauges(&mut self) -> Vec<(SimTime, usize)> {
+        self.core.shard_gauges()
     }
 
     /// Finish serving: drain the engine and return the completed traces,

@@ -19,4 +19,4 @@ pub mod cache;
 pub mod runner;
 
 pub use cache::{CacheStats, SharedMemoCache};
-pub use runner::{sweep_threads, ScenarioResult, SweepRunner, SweepScenario};
+pub use runner::{sweep_threads, ScenarioResult, SweepRunner, SweepScenario, TracedResult};

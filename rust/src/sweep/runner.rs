@@ -24,6 +24,7 @@ use crate::corpus::workload::Workload;
 use crate::corpus::Corpus;
 use crate::metrics::{aggregate, RequestTrace, RunMetrics};
 use crate::models::Registry;
+use crate::telemetry::{phase_breakdown, Span};
 use crate::tokenizer::Tokenizer;
 
 /// One cell of a sweep grid. Workloads are `Arc`-shared: a grid typically
@@ -33,15 +34,30 @@ pub struct SweepScenario {
     pub label: String,
     pub cfg: EngineCfg,
     pub workload: Arc<Workload>,
+    /// enable the engine's telemetry sink for this cell (spans come back
+    /// via [`SweepRunner::run_traced`]; `run` drops them)
+    pub telemetry: bool,
 }
 
 impl SweepScenario {
     pub fn new(label: impl Into<String>, cfg: EngineCfg, workload: Arc<Workload>) -> Self {
-        SweepScenario { label: label.into(), cfg, workload }
+        SweepScenario { label: label.into(), cfg, workload, telemetry: false }
+    }
+
+    /// Record request spans and metrics while this cell runs. Telemetry is
+    /// pure in `(cfg, workload, seed)`, so the sweep stays bit-identical
+    /// to the sequential loop at any thread count.
+    pub fn with_telemetry(mut self) -> Self {
+        self.telemetry = true;
+        self
     }
 }
 
 pub type ScenarioResult = Result<(RunMetrics, Vec<RequestTrace>), RunError>;
+
+/// [`ScenarioResult`] plus the scenario's telemetry span log (empty unless
+/// the cell asked for telemetry via [`SweepScenario::with_telemetry`]).
+pub type TracedResult = Result<(RunMetrics, Vec<RequestTrace>, Vec<Span>), RunError>;
 
 /// Sweep-pool size: `PICE_SWEEP_THREADS` when set and parsable (min 1),
 /// else auto-sized from the host like the backend worker pool
@@ -94,6 +110,25 @@ impl SweepRunner {
     where
         F: Fn(usize) -> Box<dyn TextBackend> + Sync,
     {
+        self.run_traced(scenarios, corpus, tok, registry, factory)
+            .into_iter()
+            .map(|r| r.map(|(m, t, _)| (m, t)))
+            .collect()
+    }
+
+    /// [`SweepRunner::run`] but keeping each cell's telemetry span log
+    /// (empty for cells without [`SweepScenario::with_telemetry`]).
+    pub fn run_traced<F>(
+        &self,
+        scenarios: &[SweepScenario],
+        corpus: &Arc<Corpus>,
+        tok: &Tokenizer,
+        registry: &Registry,
+        factory: F,
+    ) -> Vec<TracedResult>
+    where
+        F: Fn(usize) -> Box<dyn TextBackend> + Sync,
+    {
         let n = scenarios.len();
         if self.threads <= 1 || n <= 1 {
             return scenarios
@@ -103,7 +138,7 @@ impl SweepRunner {
                 .collect();
         }
         let cursor = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<ScenarioResult>>> =
+        let slots: Vec<Mutex<Option<TracedResult>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
         std::thread::scope(|s| {
             for _ in 0..self.threads.min(n) {
@@ -131,8 +166,16 @@ fn run_one(
     tok: &Tokenizer,
     registry: &Registry,
     backend: &mut dyn TextBackend,
-) -> ScenarioResult {
+) -> TracedResult {
     let mut engine = Engine::new(sc.cfg.clone(), corpus.clone(), tok, registry, backend)?;
+    if sc.telemetry {
+        engine.enable_telemetry(0);
+    }
     let traces = engine.run(&sc.workload)?;
-    Ok((aggregate(&traces), traces))
+    let spans = if sc.telemetry { engine.take_spans() } else { Vec::new() };
+    let mut m = aggregate(&traces);
+    if sc.telemetry {
+        m.phases = phase_breakdown(&spans);
+    }
+    Ok((m, traces, spans))
 }

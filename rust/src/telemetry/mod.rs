@@ -1,0 +1,613 @@
+//! Deterministic observability: request spans, a typed metrics registry,
+//! and exporters (Chrome-trace JSONL, periodic snapshot JSONL).
+//!
+//! House rules (enforced by `tests/telemetry_determinism.rs`):
+//!
+//! - **Zero-cost when off.** The engine carries telemetry as
+//!   `Option<Telemetry>` (same pattern as its `events` stream); with the
+//!   option `None` no span is allocated, no counter bumped, no event
+//!   scheduled — runs are bit-identical to a build without this module.
+//! - **Pure when on.** Spans are stamped from the engine's existing
+//!   sim-time event stream only: no wall clocks, no RNG draws, no
+//!   allocation that feeds back into scheduling. Span logs are therefore
+//!   bit-identical across 1/2/4 sweep threads and open vs closed loop.
+//!
+//! The span vocabulary mirrors the request lifecycle: `QueueWait`
+//! (cloud-queue admission wait), `CloudSketch`/`CloudFull` (LLM service
+//! window), `Transfer` (sketch shipping over the WAN), `EdgeExpand`
+//! (per-dispatch SLM expansion window, one span per batched job),
+//! `EdgeFull` (edge-only full answers), plus the tail machinery:
+//! `RequeueWait`, `BackoffWait`, and instant marks for `Failover`,
+//! `HedgeDup`, and `CloudRescue`. Every completed request closes with one
+//! `Request` root span covering arrival→done.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{num, obj, s, Json};
+use crate::util::stats;
+
+/// Sim-time seconds (same convention as the coordinator's `SimTime`).
+pub type SimTime = f64;
+
+/// Latency phase a span's duration is attributed to in the per-request
+/// breakdown. Instant marks carry no duration and attribute to nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Queue,
+    Cloud,
+    Transfer,
+    Edge,
+    Tail,
+    None,
+}
+
+/// What a span measures. Durationful kinds cover `[start, end]`; mark
+/// kinds are instants (`start == end`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SpanKind {
+    /// Root span: arrival → terminal, exactly one per completed request.
+    Request,
+    /// Waiting in the cloud queue for an LLM service slot.
+    QueueWait,
+    /// Cloud LLM producing a semantic sketch (progressive path).
+    CloudSketch,
+    /// Cloud LLM producing a full answer (cloud-only / fallback path).
+    CloudFull,
+    /// Sketch bits on the WAN, cloud → edge job queue.
+    Transfer,
+    /// One edge dispatch expanding `slots` sketch slots on edge `eid`.
+    EdgeExpand { eid: usize, slots: usize },
+    /// Edge-only full answer on edge `eid`.
+    EdgeFull { eid: usize },
+    /// Job deferred because every edge was down; waiting to re-probe.
+    RequeueWait,
+    /// Displaced job in exponential backoff before re-dispatch.
+    BackoffWait { attempt: u32 },
+    /// Mark: displaced work re-entered the queue (crash/blackout/evict).
+    Failover,
+    /// Mark: hedge watchdog duplicated a straggler onto edge `eid`.
+    HedgeDup { eid: usize },
+    /// Mark: request gave up on the edges and was rescued by the cloud.
+    CloudRescue,
+}
+
+impl SpanKind {
+    /// Stable event name (Chrome-trace `name` field, snapshot keys).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::CloudSketch => "cloud_sketch",
+            SpanKind::CloudFull => "cloud_full",
+            SpanKind::Transfer => "transfer",
+            SpanKind::EdgeExpand { .. } => "edge_expand",
+            SpanKind::EdgeFull { .. } => "edge_full",
+            SpanKind::RequeueWait => "requeue_wait",
+            SpanKind::BackoffWait { .. } => "backoff_wait",
+            SpanKind::Failover => "failover",
+            SpanKind::HedgeDup { .. } => "hedge_dup",
+            SpanKind::CloudRescue => "cloud_rescue",
+        }
+    }
+
+    /// Which latency phase the span's duration belongs to.
+    pub fn phase(&self) -> Phase {
+        match self {
+            SpanKind::QueueWait => Phase::Queue,
+            SpanKind::CloudSketch | SpanKind::CloudFull => Phase::Cloud,
+            SpanKind::Transfer => Phase::Transfer,
+            SpanKind::EdgeExpand { .. } | SpanKind::EdgeFull { .. } => Phase::Edge,
+            SpanKind::RequeueWait | SpanKind::BackoffWait { .. } => Phase::Tail,
+            _ => Phase::None,
+        }
+    }
+
+    /// True for instant marks (rendered as Chrome-trace `ph: "i"`).
+    pub fn is_mark(&self) -> bool {
+        matches!(self, SpanKind::Failover | SpanKind::HedgeDup { .. } | SpanKind::CloudRescue)
+    }
+}
+
+/// One timed interval (or instant mark) in a request's lifecycle, stamped
+/// in sim time. `shard` is the engine shard that emitted it (0 for a
+/// single engine); `rid` is shard-local until the fleet rewrites it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    pub rid: usize,
+    pub shard: usize,
+    pub kind: SpanKind,
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+impl Span {
+    pub fn dur(&self) -> SimTime {
+        (self.end - self.start).max(0.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics registry
+// ---------------------------------------------------------------------------
+
+/// Fixed-bucket histogram: `counts[i]` holds observations `<= bounds[i]`,
+/// with one overflow bucket past the last bound. Fixed bounds make the
+/// shard merge a plain element-wise sum.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hist {
+    pub bounds: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub n: u64,
+}
+
+impl Hist {
+    pub fn new(bounds: Vec<f64>) -> Self {
+        let n_buckets = bounds.len() + 1;
+        Hist { bounds, counts: vec![0; n_buckets], sum: 0.0, n: 0 }
+    }
+
+    /// Default latency buckets (seconds): 0.25 → 512 doubling.
+    pub fn latency() -> Self {
+        Hist::new((0..12).map(|i| 0.25 * (1u64 << i) as f64).collect())
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let idx = self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.n += 1;
+    }
+
+    fn merge(&mut self, other: &Hist) {
+        debug_assert_eq!(self.bounds, other.bounds, "histogram bounds must match to merge");
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.sum += other.sum;
+        self.n += other.n;
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("bounds", Json::Arr(self.bounds.iter().map(|b| num(*b)).collect())),
+            ("counts", Json::Arr(self.counts.iter().map(|c| num(*c as f64)).collect())),
+            ("sum", num(self.sum)),
+            ("n", num(self.n as f64)),
+        ])
+    }
+}
+
+/// Typed counters/gauges/histograms for one engine shard. All maps are
+/// `BTreeMap` so iteration (and therefore every exported snapshot) is
+/// deterministic; `merge` mirrors `metrics::aggregate_shards` — counters
+/// and histogram buckets sum, gauges sum (they are extensive quantities:
+/// backlog seconds, busy seconds, up-edge counts).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsRegistry {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub hists: BTreeMap<String, Hist>,
+}
+
+impl MetricsRegistry {
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge_add(&mut self, name: &str, v: f64) {
+        *self.gauges.entry(name.to_string()).or_insert(0.0) += v;
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists.entry(name.to_string()).or_insert_with(Hist::latency).observe(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Element-wise deterministic merge (shard 0..N order in the fleet).
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            *self.gauges.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_insert_with(|| Hist::new(h.bounds.clone())).merge(h);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "counters",
+                Json::Obj(
+                    self.counters.iter().map(|(k, v)| (k.clone(), num(*v as f64))).collect(),
+                ),
+            ),
+            ("gauges", Json::Obj(self.gauges.iter().map(|(k, v)| (k.clone(), num(*v))).collect())),
+            (
+                "hists",
+                Json::Obj(self.hists.iter().map(|(k, h)| (k.clone(), h.to_json())).collect()),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-engine telemetry sink
+// ---------------------------------------------------------------------------
+
+/// The per-engine sink: a span log plus a metrics registry. Lives inside
+/// the engine core as `Option<Box<Telemetry>>` — `None` (the default) is
+/// the zero-cost off state.
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    pub shard: usize,
+    pub spans: Vec<Span>,
+    pub registry: MetricsRegistry,
+}
+
+impl Telemetry {
+    pub fn new(shard: usize) -> Self {
+        Telemetry { shard, ..Default::default() }
+    }
+
+    pub fn span(&mut self, rid: usize, kind: SpanKind, start: SimTime, end: SimTime) {
+        self.spans.push(Span { rid, shard: self.shard, kind, start, end });
+    }
+
+    pub fn mark(&mut self, rid: usize, kind: SpanKind, t: SimTime) {
+        self.span(rid, kind, t, t);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-phase latency breakdown
+// ---------------------------------------------------------------------------
+
+/// p50/p99/mean of one phase's per-request time (interval-union seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseStats {
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub mean_s: f64,
+}
+
+/// Where completed requests' time goes: per-phase percentiles over the
+/// union of that phase's span intervals per request (parallel slot
+/// expansions on one request count wall-clock coverage, not slot-seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    pub queue: PhaseStats,
+    pub cloud: PhaseStats,
+    pub transfer: PhaseStats,
+    pub edge: PhaseStats,
+    pub tail: PhaseStats,
+    pub n_requests: usize,
+}
+
+/// Total covered seconds of a set of (possibly overlapping) intervals.
+fn union_seconds(ivs: &mut Vec<(f64, f64)>) -> f64 {
+    if ivs.is_empty() {
+        return 0.0;
+    }
+    ivs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let (mut lo, mut hi) = ivs[0];
+    let mut total = 0.0;
+    for &(s0, e0) in ivs.iter().skip(1) {
+        if s0 > hi {
+            total += hi - lo;
+            lo = s0;
+            hi = e0;
+        } else if e0 > hi {
+            hi = e0;
+        }
+    }
+    total + (hi - lo)
+}
+
+/// Compute the per-phase breakdown from a span log. Requests are keyed by
+/// `(shard, rid)` of their `Request` root span; spans of requests that
+/// never completed are ignored. Returns `None` for an empty log.
+pub fn phase_breakdown(spans: &[Span]) -> Option<PhaseBreakdown> {
+    let mut per_req: BTreeMap<(usize, usize), [Vec<(f64, f64)>; 5]> = BTreeMap::new();
+    for sp in spans {
+        if sp.kind == SpanKind::Request {
+            per_req.entry((sp.shard, sp.rid)).or_default();
+        }
+    }
+    if per_req.is_empty() {
+        return None;
+    }
+    for sp in spans {
+        let idx = match sp.kind.phase() {
+            Phase::Queue => 0,
+            Phase::Cloud => 1,
+            Phase::Transfer => 2,
+            Phase::Edge => 3,
+            Phase::Tail => 4,
+            Phase::None => continue,
+        };
+        if let Some(phases) = per_req.get_mut(&(sp.shard, sp.rid)) {
+            phases[idx].push((sp.start, sp.end));
+        }
+    }
+    let mut cols: [Vec<f64>; 5] = Default::default();
+    for (_, mut phases) in per_req.iter_mut().map(|(k, v)| (*k, std::mem::take(v))) {
+        for (i, col) in cols.iter_mut().enumerate() {
+            col.push(union_seconds(&mut phases[i]));
+        }
+    }
+    let stat = |xs: &[f64]| PhaseStats {
+        p50_s: stats::percentile(xs, 50.0),
+        p99_s: stats::percentile(xs, 99.0),
+        mean_s: stats::mean(xs),
+    };
+    Some(PhaseBreakdown {
+        queue: stat(&cols[0]),
+        cloud: stat(&cols[1]),
+        transfer: stat(&cols[2]),
+        edge: stat(&cols[3]),
+        tail: stat(&cols[4]),
+        n_requests: cols[0].len(),
+    })
+}
+
+impl PhaseStats {
+    pub fn to_json(&self) -> Json {
+        obj(vec![("p50_s", num(self.p50_s)), ("p99_s", num(self.p99_s)), ("mean_s", num(self.mean_s))])
+    }
+}
+
+impl PhaseBreakdown {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("queue", self.queue.to_json()),
+            ("cloud", self.cloud.to_json()),
+            ("transfer", self.transfer.to_json()),
+            ("edge", self.edge.to_json()),
+            ("tail", self.tail.to_json()),
+            ("n_requests", num(self.n_requests as f64)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome-trace export
+// ---------------------------------------------------------------------------
+
+/// Render one span as a Chrome-trace/Perfetto event object (`ph:"X"`
+/// complete events, `ph:"i"` instants; µs timestamps; `pid` = shard,
+/// `tid` = request id).
+pub fn chrome_trace_event(sp: &Span) -> Json {
+    let us = |t: f64| (t * 1e6).round();
+    let mut fields = vec![
+        ("name", s(sp.kind.name())),
+        ("cat", s(phase_name(sp.kind.phase()))),
+        ("ph", s(if sp.kind.is_mark() { "i" } else { "X" })),
+        ("ts", num(us(sp.start))),
+        ("pid", num(sp.shard as f64)),
+        ("tid", num(sp.rid as f64)),
+    ];
+    if sp.kind.is_mark() {
+        fields.push(("s", s("t")));
+    } else {
+        fields.push(("dur", num(us(sp.end) - us(sp.start))));
+    }
+    let args = match sp.kind {
+        SpanKind::EdgeExpand { eid, slots } => {
+            vec![("eid", num(eid as f64)), ("slots", num(slots as f64))]
+        }
+        SpanKind::EdgeFull { eid } | SpanKind::HedgeDup { eid } => vec![("eid", num(eid as f64))],
+        SpanKind::BackoffWait { attempt } => vec![("attempt", num(attempt as f64))],
+        _ => vec![],
+    };
+    if !args.is_empty() {
+        fields.push(("args", obj(args)));
+    }
+    obj(fields)
+}
+
+fn phase_name(p: Phase) -> &'static str {
+    match p {
+        Phase::Queue => "queue",
+        Phase::Cloud => "cloud",
+        Phase::Transfer => "transfer",
+        Phase::Edge => "edge",
+        Phase::Tail => "tail",
+        Phase::None => "mark",
+    }
+}
+
+/// Write a span log as Chrome-trace JSONL (one event object per line —
+/// Perfetto ingests this directly; wrap in `[...]` for legacy
+/// `chrome://tracing`). Atomic temp+rename, same pattern as `CalibStore`.
+pub fn write_chrome_trace(path: &Path, spans: &[Span]) -> io::Result<()> {
+    let mut out = String::new();
+    for sp in spans {
+        out.push_str(&chrome_trace_event(sp).to_string());
+        out.push('\n');
+    }
+    atomic_write(path, &out)
+}
+
+fn atomic_write(path: &Path, contents: &str) -> io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, path)
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot exporter
+// ---------------------------------------------------------------------------
+
+/// Periodic snapshot sink: accumulates JSONL lines and rewrites the whole
+/// file via temp+rename on every push, so a crashed or interrupted run
+/// still leaves the last snapshot on disk (satellite of ISSUE 10).
+#[derive(Debug)]
+pub struct SnapshotWriter {
+    path: PathBuf,
+    lines: Vec<String>,
+}
+
+impl SnapshotWriter {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        SnapshotWriter { path: path.into(), lines: Vec::new() }
+    }
+
+    /// Append one snapshot object and flush the full file atomically.
+    pub fn push(&mut self, snapshot: Json) -> io::Result<()> {
+        self.lines.push(snapshot.to_string());
+        let mut out = self.lines.join("\n");
+        out.push('\n');
+        atomic_write(&self.path, &out)
+    }
+
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_buckets_and_merge() {
+        let mut a = Hist::latency();
+        a.observe(0.1); // first bucket (<= 0.25)
+        a.observe(3.0); // <= 4.0
+        a.observe(1e9); // overflow
+        assert_eq!(a.n, 3);
+        assert_eq!(a.counts[0], 1);
+        assert_eq!(*a.counts.last().unwrap(), 1);
+        let b = a.clone();
+        a.merge(&b);
+        assert_eq!(a.n, 6);
+        assert_eq!(a.counts[0], 2);
+        assert!((a.sum - 2.0 * b.sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_merge_is_elementwise() {
+        let mut a = MetricsRegistry::default();
+        a.inc("completed", 3);
+        a.gauge_set("backlog_s", 1.5);
+        a.observe("latency_s", 2.0);
+        let mut b = MetricsRegistry::default();
+        b.inc("completed", 4);
+        b.inc("failovers", 1);
+        b.gauge_set("backlog_s", 0.5);
+        b.observe("latency_s", 8.0);
+        a.merge(&b);
+        assert_eq!(a.counter("completed"), 7);
+        assert_eq!(a.counter("failovers"), 1);
+        assert!((a.gauges["backlog_s"] - 2.0).abs() < 1e-12);
+        assert_eq!(a.hists["latency_s"].n, 2);
+    }
+
+    #[test]
+    fn union_seconds_merges_overlaps() {
+        let mut ivs = vec![(0.0, 2.0), (1.0, 3.0), (5.0, 6.0)];
+        assert!((union_seconds(&mut ivs) - 4.0).abs() < 1e-12);
+        let mut nested = vec![(0.0, 10.0), (2.0, 3.0)];
+        assert!((union_seconds(&mut nested) - 10.0).abs() < 1e-12);
+        let mut empty: Vec<(f64, f64)> = vec![];
+        assert_eq!(union_seconds(&mut empty), 0.0);
+    }
+
+    #[test]
+    fn breakdown_unions_parallel_edge_slots() {
+        let spans = vec![
+            Span { rid: 0, shard: 0, kind: SpanKind::Request, start: 0.0, end: 10.0 },
+            Span { rid: 0, shard: 0, kind: SpanKind::QueueWait, start: 0.0, end: 1.0 },
+            Span { rid: 0, shard: 0, kind: SpanKind::CloudSketch, start: 1.0, end: 3.0 },
+            // two overlapping expansions: edge coverage is 4s, not 6s
+            Span {
+                rid: 0,
+                shard: 0,
+                kind: SpanKind::EdgeExpand { eid: 0, slots: 2 },
+                start: 4.0,
+                end: 8.0,
+            },
+            Span {
+                rid: 0,
+                shard: 0,
+                kind: SpanKind::EdgeExpand { eid: 1, slots: 1 },
+                start: 5.0,
+                end: 7.0,
+            },
+            // span of a request with no root: ignored
+            Span { rid: 9, shard: 0, kind: SpanKind::CloudFull, start: 0.0, end: 50.0 },
+        ];
+        let b = phase_breakdown(&spans).expect("breakdown");
+        assert_eq!(b.n_requests, 1);
+        assert!((b.queue.p50_s - 1.0).abs() < 1e-12);
+        assert!((b.cloud.p50_s - 2.0).abs() < 1e-12);
+        assert!((b.edge.p50_s - 4.0).abs() < 1e-12);
+        assert_eq!(b.transfer.p50_s, 0.0);
+    }
+
+    #[test]
+    fn chrome_trace_event_shapes() {
+        let x = chrome_trace_event(&Span {
+            rid: 3,
+            shard: 1,
+            kind: SpanKind::EdgeExpand { eid: 2, slots: 4 },
+            start: 1.0,
+            end: 1.5,
+        })
+        .to_string();
+        assert!(x.contains("\"ph\":\"X\""), "{x}");
+        assert!(x.contains("\"ts\":1000000"), "{x}");
+        assert!(x.contains("\"dur\":500000"), "{x}");
+        assert!(x.contains("\"pid\":1"), "{x}");
+        assert!(x.contains("\"tid\":3"), "{x}");
+        assert!(x.contains("\"slots\":4"), "{x}");
+        let m = chrome_trace_event(&Span {
+            rid: 0,
+            shard: 0,
+            kind: SpanKind::Failover,
+            start: 2.0,
+            end: 2.0,
+        })
+        .to_string();
+        assert!(m.contains("\"ph\":\"i\""), "{m}");
+        assert!(!m.contains("dur"), "{m}");
+    }
+
+    #[test]
+    fn snapshot_writer_survives_interruption() {
+        let dir = std::env::temp_dir().join(format!("pice_telem_test_{}", std::process::id()));
+        let path = dir.join("snap.jsonl");
+        let mut w = SnapshotWriter::new(&path);
+        w.push(obj(vec![("t", num(0.0))])).expect("push");
+        w.push(obj(vec![("t", num(5.0))])).expect("push");
+        // every push leaves a complete, parseable file on disk
+        let body = std::fs::read_to_string(&path).expect("read");
+        assert_eq!(body.lines().count(), 2);
+        for line in body.lines() {
+            Json::parse(line).expect("valid json line");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

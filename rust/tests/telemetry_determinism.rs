@@ -1,0 +1,339 @@
+//! The telemetry subsystem's house rules (see `telemetry/mod.rs`), end to
+//! end:
+//!
+//! 1. **Zero-cost when off** — an engine that never enables telemetry has
+//!    no span log and no registry, and a run with telemetry ON produces
+//!    traces bit-identical to one with it off: observing never perturbs
+//!    scheduling.
+//! 2. **Pure when on** — the span log is a pure function of
+//!    `(cfg, workload, seed)`: bit-identical across the SweepRunner at
+//!    1/2/4 threads and across open-loop service driving vs the
+//!    closed-loop `Engine::run`, under churn-heavy dynamics.
+//! 3. **Exactly one root span per request** — even when a shard blackout
+//!    forces cross-shard re-dispatch (donor evicts without finalizing, the
+//!    adopter completes), every request keeps exactly one `Request` span.
+//! 4. **Timestamp attribution** — a cloud rescue must not overwrite the
+//!    sketch phase's trace timestamps: `sketch_ready == cloud_done` stays
+//!    invariant (regression test for the rescue-overwrite bug).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use pice::baselines;
+use pice::coordinator::backend::{SurrogateBackend, TextBackend};
+use pice::coordinator::{Engine, EngineCfg};
+use pice::corpus::synth::{synth_corpus, synth_tokenizer};
+use pice::corpus::workload::{Arrival, Workload, WorkloadSpec};
+use pice::corpus::Corpus;
+use pice::dynamics::{DynamicsSpec, EdgeEvent, EdgeFault, FaultSpec};
+use pice::fleet::{session_shard, shard_cfg, Fleet, Placement};
+use pice::metrics::RequestTrace;
+use pice::models::Registry;
+use pice::serve::{PiceService, ServeCfg};
+use pice::sweep::{SweepRunner, SweepScenario};
+use pice::telemetry::{phase_breakdown, Span, SpanKind};
+use pice::tokenizer::Tokenizer;
+
+const MODEL: &str = "llama70b-sim";
+
+fn setup() -> (Arc<Corpus>, Tokenizer, Registry) {
+    let tok = synth_tokenizer();
+    let corpus = Arc::new(synth_corpus(&tok, 20, 42));
+    (corpus, tok, Registry::builtin())
+}
+
+fn workload(
+    corpus: &Arc<Corpus>,
+    rpm: f64,
+    n: usize,
+    arrival: Arrival,
+    seed: u64,
+) -> Arc<Workload> {
+    Arc::new(Workload::generate(
+        corpus,
+        WorkloadSpec { rpm, n_requests: n, arrival, categories: vec![], seed },
+    ))
+}
+
+/// The churn-heavy composite from the dynamics suite: edge-churn faults +
+/// flaky-wan link.
+fn churn_heavy() -> DynamicsSpec {
+    let churn = DynamicsSpec::preset("edge-churn").unwrap();
+    let flaky = DynamicsSpec::preset("flaky-wan").unwrap();
+    DynamicsSpec { link: flaky.link, faults: churn.faults, seed: 23 }
+}
+
+fn run_closed_loop(
+    cfg: &EngineCfg,
+    wl: &Workload,
+    corpus: &Arc<Corpus>,
+    tok: &Tokenizer,
+    reg: &Registry,
+    telemetry: bool,
+) -> (Vec<RequestTrace>, Vec<Span>) {
+    let mut backend = SurrogateBackend::new(corpus.clone(), tok, reg, 9);
+    let mut engine =
+        Engine::new(cfg.clone(), corpus.clone(), tok, reg, &mut backend).expect("engine");
+    if telemetry {
+        engine.enable_telemetry(0);
+    }
+    let traces = engine.run(wl).expect("run");
+    let spans = engine.take_spans();
+    (traces, spans)
+}
+
+fn assert_traces_identical(label: &str, a: &[RequestTrace], b: &[RequestTrace]) {
+    assert_eq!(a.len(), b.len(), "{label}: trace count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(format!("{x:?}"), format!("{y:?}"), "{label}: trace rid={}", x.rid);
+    }
+}
+
+fn assert_spans_identical(label: &str, a: &[Span], b: &[Span]) {
+    assert_eq!(a.len(), b.len(), "{label}: span count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(format!("{x:?}"), format!("{y:?}"), "{label}: span #{i}");
+    }
+}
+
+/// rid -> number of `Request` root spans.
+fn root_counts(spans: &[Span]) -> HashMap<usize, usize> {
+    let mut counts: HashMap<usize, usize> = HashMap::new();
+    for sp in spans.iter().filter(|sp| matches!(sp.kind, SpanKind::Request)) {
+        *counts.entry(sp.rid).or_insert(0) += 1;
+    }
+    counts
+}
+
+#[test]
+fn telemetry_off_is_inert_and_on_changes_no_traces() {
+    let (corpus, tok, reg) = setup();
+    let cfg = baselines::pice(MODEL).with_dynamics(churn_heavy());
+    let wl = workload(&corpus, 40.0, 20, Arrival::Poisson, 11);
+
+    // off: no sink exists at all
+    let mut backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let mut off_engine =
+        Engine::new(cfg.clone(), corpus.clone(), &tok, &reg, &mut backend).expect("engine");
+    assert!(!off_engine.telemetry_on());
+    assert!(off_engine.metrics_registry().is_none());
+    let off_traces = off_engine.run(&wl).expect("run");
+    assert!(off_engine.take_spans().is_empty(), "spans recorded with telemetry off");
+    assert!(off_engine.metrics_registry().is_none());
+
+    // on: same traces to the bit — observing never perturbs scheduling
+    let (on_traces, spans) = run_closed_loop(&cfg, &wl, &corpus, &tok, &reg, true);
+    assert_traces_identical("telemetry on vs off", &off_traces, &on_traces);
+    assert!(!spans.is_empty(), "telemetry on must record spans");
+    let roots = root_counts(&spans);
+    assert_eq!(roots.len(), on_traces.len(), "one root span per completed request");
+    assert!(roots.values().all(|&c| c == 1), "duplicate root spans: {roots:?}");
+    for sp in &spans {
+        assert!(sp.end >= sp.start, "negative span {sp:?}");
+    }
+    // the breakdown sees every completed request and attributes real time
+    let pb = phase_breakdown(&spans).expect("breakdown");
+    assert_eq!(pb.n_requests, on_traces.len());
+    assert!(pb.cloud.p50_s > 0.0, "cloud phase must carry time: {pb:?}");
+}
+
+#[test]
+fn span_log_identical_across_1_2_4_sweep_threads() {
+    let (corpus, tok, reg) = setup();
+    let wl = workload(&corpus, 40.0, 24, Arrival::Poisson, 5);
+    let bursty =
+        workload(&corpus, 40.0, 18, Arrival::BurstyPoisson { burst_factor: 4.0, burst_len: 6 }, 7);
+    let pice = || baselines::pice(MODEL).with_dynamics(churn_heavy());
+    let cloud = baselines::cloud_only(MODEL).with_dynamics(churn_heavy());
+    let grid = vec![
+        SweepScenario::new("pice-churn", pice(), wl.clone()).with_telemetry(),
+        SweepScenario::new("cloud-churn", cloud, wl).with_telemetry(),
+        SweepScenario::new("pice-bursty", pice(), bursty).with_telemetry(),
+    ];
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    // reference: plain sequential engines, no sweep machinery
+    let reference: Vec<(Vec<RequestTrace>, Vec<Span>)> = grid
+        .iter()
+        .map(|sc| run_closed_loop(&sc.cfg, &sc.workload, &corpus, &tok, &reg, true))
+        .collect();
+    for threads in [1usize, 2, 4] {
+        let runner = SweepRunner::new(threads);
+        let results = runner.run_traced(&grid, &corpus, &tok, &reg, |_| {
+            Box::new(base.clone()) as Box<dyn TextBackend>
+        });
+        for (i, res) in results.into_iter().enumerate() {
+            let (m, traces, spans) = res.expect("scenario");
+            let label = format!("{} @{} threads", grid[i].label, threads);
+            assert_traces_identical(&label, &reference[i].0, &traces);
+            assert_spans_identical(&label, &reference[i].1, &spans);
+            assert!(m.phases.is_some(), "{label}: traced cells must carry a phase breakdown");
+        }
+    }
+}
+
+#[test]
+fn open_loop_span_log_identical_to_closed_loop() {
+    let (corpus, tok, reg) = setup();
+    let cfg = baselines::pice(MODEL).with_dynamics(churn_heavy());
+    let wl = workload(&corpus, 40.0, 20, Arrival::Poisson, 11);
+    let (closed_traces, closed_spans) = run_closed_loop(&cfg, &wl, &corpus, &tok, &reg, true);
+    let mut backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let engine =
+        Engine::new(cfg.clone(), corpus.clone(), &tok, &reg, &mut backend).expect("engine");
+    let mut svc =
+        PiceService::new(engine, ServeCfg { max_inflight: usize::MAX, deadline_s: None });
+    svc.enable_telemetry();
+    for r in &wl.requests {
+        svc.pump_until(r.arrival_s).expect("pump");
+        svc.submit(r.question_id, r.arrival_s).expect("submit");
+    }
+    svc.pump_all().expect("pump_all");
+    let open_spans = svc.take_spans();
+    let open_traces = svc.finish().expect("finish");
+    assert_traces_identical("open vs closed traces", &closed_traces, &open_traces);
+    assert_spans_identical("open vs closed span log", &closed_spans, &open_spans);
+}
+
+#[test]
+fn exactly_one_root_span_per_request_under_churn_and_blackout() {
+    let (corpus, tok, reg) = setup();
+    let base = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    // shard 0: crash/recover churn; shard 1: every edge dies at t=0.5 and
+    // never recovers, so its displaced sessions must be re-homed by the
+    // fleet's rebalance sweep (donor evicts WITHOUT finalizing)
+    let healthy = baselines::pice(MODEL).with_dynamics({
+        let mut events = Vec::new();
+        for k in 0..20usize {
+            let t = 1.0 + 4.0 * k as f64;
+            events.push(EdgeEvent { t, eid: k % 4, fault: EdgeFault::Crash });
+            events.push(EdgeEvent { t: t + 2.0, eid: k % 4, fault: EdgeFault::Recover });
+        }
+        DynamicsSpec { faults: FaultSpec { events, ..Default::default() }, ..Default::default() }
+    });
+    let dead_events: Vec<EdgeEvent> = (0..healthy.n_edges)
+        .map(|eid| EdgeEvent { t: 0.5 + 0.01 * eid as f64, eid, fault: EdgeFault::Crash })
+        .collect();
+    let dead = baselines::pice(MODEL).with_dynamics(DynamicsSpec {
+        faults: FaultSpec { events: dead_events, ..Default::default() },
+        ..Default::default()
+    });
+    let drive = || {
+        let e0 = Engine::new_owned(
+            shard_cfg(&healthy, 0),
+            corpus.clone(),
+            &tok,
+            &reg,
+            Box::new(base.clone()),
+        )
+        .expect("healthy shard");
+        let e1 =
+            Engine::new_owned(shard_cfg(&dead, 1), corpus.clone(), &tok, &reg, Box::new(base.clone()))
+                .expect("dead shard");
+        let mut fleet = Fleet::new(vec![e0, e1], Placement::Hash);
+        fleet.enable_rebalance();
+        fleet.enable_telemetry();
+        // aim half the sessions at each shard, with arrivals straddling the
+        // t=0.5 blackout so the dead shard holds both in-flight and queued
+        // work when it dies
+        let qid = corpus.eval_questions()[0].id;
+        let key = |s: usize| (0u64..).find(|&k| session_shard(k, 2) == s).unwrap();
+        let mut subs: Vec<(f64, u64)> = Vec::new();
+        for j in 0..6usize {
+            subs.push((0.1 * j as f64, key(0)));
+            subs.push((0.1 * j as f64, key(1)));
+        }
+        for j in 0..3usize {
+            subs.push((1.0 + j as f64, key(1)));
+        }
+        subs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for &(at, k) in &subs {
+            fleet.pump_until(at).expect("pump");
+            fleet.submit(qid, at, k).expect("submit");
+        }
+        fleet.pump_all().expect("drain");
+        let spans = fleet.take_spans();
+        let traces = fleet.take_traces();
+        (subs.len(), traces, spans)
+    };
+    let (n, traces, spans) = drive();
+    assert_eq!(traces.len(), n, "blackout lost requests");
+    // exactly one Request root per global rid, even for re-homed sessions
+    let roots = root_counts(&spans);
+    assert_eq!(roots.len(), n, "root span per request: {roots:?}");
+    assert!(roots.values().all(|&c| c == 1), "duplicate root spans: {roots:?}");
+    for t in &traces {
+        assert!(roots.contains_key(&t.rid), "trace rid {} has no root span", t.rid);
+    }
+    // the drill actually displaced work across shards
+    assert!(
+        traces.iter().any(|t| t.failovers > 0),
+        "blackout drill displaced no request"
+    );
+    assert!(
+        spans.iter().any(|sp| matches!(sp.kind, SpanKind::Failover)),
+        "no failover marks recorded"
+    );
+    // the whole drill (span log included) is pure in (cfg, subs)
+    let (_, traces2, spans2) = drive();
+    assert_traces_identical("blackout replay traces", &traces, &traces2);
+    assert_spans_identical("blackout replay span log", &spans, &spans2);
+}
+
+#[test]
+fn cloud_rescue_preserves_sketch_phase_timestamps() {
+    let (corpus, tok, reg) = setup();
+    // both edges die at t=1 and never recover: progressive requests are
+    // rescued by the cloud. Before the attribution fix, the rescue job's
+    // admit/done events overwrote cloud_start/cloud_done, detaching them
+    // from the sketch phase the trace claims to describe.
+    let spec = DynamicsSpec {
+        faults: FaultSpec {
+            events: vec![
+                EdgeEvent { t: 1.0, eid: 0, fault: EdgeFault::Crash },
+                EdgeEvent { t: 1.0, eid: 1, fault: EdgeFault::Crash },
+            ],
+            ..Default::default()
+        },
+        seed: 1,
+        ..Default::default()
+    };
+    let mut cfg = baselines::pice(MODEL).with_dynamics(spec);
+    cfg.n_edges = 2;
+    let wl = workload(&corpus, 40.0, 8, Arrival::Burst, 9);
+    let mut backend = SurrogateBackend::new(corpus.clone(), &tok, &reg, 9);
+    let mut engine =
+        Engine::new(cfg.clone(), corpus.clone(), &tok, &reg, &mut backend).expect("engine");
+    engine.enable_telemetry(0);
+    let traces = engine.run(&wl).expect("run");
+    let spans = engine.take_spans();
+    let reg_counters = engine.metrics_registry().expect("registry").clone();
+    assert!(
+        reg_counters.counter("cloud_rescues") > 0,
+        "a permanent blackout at t=1 must trigger cloud rescues"
+    );
+    assert!(
+        spans.iter().any(|sp| matches!(sp.kind, SpanKind::CloudRescue)),
+        "no cloud-rescue marks recorded"
+    );
+    for t in &traces {
+        if let Some(sr) = t.sketch_ready {
+            // the sketch phase's completion instant IS cloud_done; a rescue
+            // regeneration must not move it
+            assert_eq!(
+                sr, t.cloud_done,
+                "rid {}: rescue overwrote the sketch-phase cloud_done",
+                t.rid
+            );
+            assert!(
+                t.cloud_start <= t.cloud_done,
+                "rid {}: cloud_start after cloud_done",
+                t.rid
+            );
+            assert!(t.cloud_done <= t.done, "rid {}: cloud_done after completion", t.rid);
+        }
+    }
+    assert!(
+        traces.iter().any(|t| t.sketch_ready.is_some()),
+        "scenario produced no progressive sketches to check"
+    );
+}
